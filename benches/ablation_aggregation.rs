@@ -1,0 +1,79 @@
+//! Ablation — why N→M aggregation: the same BP4 engine driven at the three
+//! corner points of the aggregation space at 8 nodes / 288 ranks:
+//!
+//! * M = ranks  (36 aggs/node → 288 sub-files): the split-NetCDF failure
+//!   mode (MDS storm + stream thrash) inside ADIOS2;
+//! * M = nodes  (1 agg/node → 8 sub-files): the ADIOS2 default/optimum;
+//! * M = 1-ish  (1 agg on one node): the serial-funnel failure mode
+//!   (single client stream).
+//!
+//! Plus the PnetCDF N-1 reference.  This isolates the paper's core claim:
+//! the win comes from the *aggregation topology*, not merely from "a new
+//! library".
+
+use stormio::adios::{Adios, Codec, OperatorConfig};
+use stormio::io::adios2::Adios2Backend;
+use stormio::io::pnetcdf::PnetCdfBackend;
+use stormio::metrics::Table;
+use stormio::sim::CostModel;
+use stormio::workload::{bench_write, Workload};
+
+fn main() {
+    let wl = Workload::conus_proxy();
+    let reps: usize = std::env::var("STORMIO_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let tmp = std::env::temp_dir().join(format!("stormio_abl_agg_{}", std::process::id()));
+    let nodes = 8;
+
+    let mut table = Table::new(
+        "Ablation: aggregation topology at 8 nodes / 288 ranks",
+        &["topology", "sub-files", "write time [s]", "dominant phase"],
+    );
+
+    for (label, aggs_per_node) in [("N-N (36 aggs/node)", 36usize), ("N-M (1 agg/node)", 1)] {
+        let dir = tmp.join(format!("a{aggs_per_node}"));
+        let d2 = dir.clone();
+        let hw = wl.hardware(nodes);
+        let b = bench_write(&wl, nodes, 36, reps, move |_| {
+            let mut adios = Adios::default();
+            let io = adios.declare_io("hist");
+            io.params
+                .insert("NumAggregatorsPerNode".into(), aggs_per_node.to_string());
+            io.operator = OperatorConfig::blosc(Codec::None);
+            Box::new(
+                Adios2Backend::new(adios, "hist", d2.join("pfs"), d2.join("bb"), CostModel::new(hw.clone())).unwrap(),
+            )
+        })
+        .expect("bench");
+        let dominant = ["write-pfs", "chain", "mds", "metadata"]
+            .into_iter()
+            .max_by(|a, b2| b.mean_phase(a).total_cmp(&b.mean_phase(b2)))
+            .unwrap();
+        table.row(&[
+            label.to_string(),
+            (aggs_per_node * nodes).to_string(),
+            format!("{:.2}", b.mean_perceived()),
+            dominant.to_string(),
+        ]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // PnetCDF N-1 reference.
+    let dir = tmp.join("pnc");
+    let hw = wl.hardware(nodes);
+    let pnc = bench_write(&wl, nodes, 36, reps, move |_| {
+        Box::new(PnetCdfBackend::new(dir.clone(), CostModel::new(hw.clone())))
+    })
+    .expect("bench");
+    table.row(&[
+        "N-1 (PnetCDF shared file)".into(),
+        "1".into(),
+        format!("{:.2}", pnc.mean_perceived()),
+        "write-locked".into(),
+    ]);
+
+    table.emit(Some(std::path::Path::new("bench_results/ablation_aggregation.csv")));
+    let _ = std::fs::remove_dir_all(&tmp);
+}

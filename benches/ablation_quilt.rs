@@ -1,0 +1,74 @@
+//! Ablation — WRF quilt servers vs ADIOS2 (paper §III-A lists quilting as
+//! the legacy answer to I/O stalls and defers its comparison to future
+//! work; we run it).
+//!
+//! Quilt servers hide the write behind dedicated I/O ranks, so *perceived*
+//! time is only the funnel send — but they burn compute ranks and the
+//! data still reaches the PFS at serial-ish bandwidth in the background
+//! (durability lag), while ADIOS2+BB is both fast *and* durable quickly.
+
+use stormio::adios::{Adios, Codec, OperatorConfig};
+use stormio::io::adios2::Adios2Backend;
+use stormio::io::quilt::QuiltBackend;
+use stormio::metrics::Table;
+use stormio::sim::CostModel;
+use stormio::workload::{bench_write, Workload};
+
+fn main() {
+    let wl = Workload::conus_proxy();
+    let reps: usize = std::env::var("STORMIO_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let tmp = std::env::temp_dir().join(format!("stormio_abl_q_{}", std::process::id()));
+    let nodes = 8;
+
+    let mut table = Table::new(
+        "Ablation: quilt servers vs ADIOS2 (8 nodes)",
+        &["config", "perceived [s]", "durable [s]", "compute ranks lost"],
+    );
+
+    // Quilt: 36 extra ranks would be a whole node in WRF practice; we model
+    // 8 servers (1/node) carved out of the 288.
+    let dir = tmp.join("quilt");
+    let hw = wl.hardware(nodes);
+    let q = bench_write(&wl, nodes, 36, reps, move |_| {
+        Box::new(QuiltBackend::new(dir.clone(), CostModel::new(hw.clone()), 8))
+    })
+    .expect("quilt bench");
+    let qp = q.reports.first().map(|r| r.cost.perceived()).unwrap_or(0.0);
+    let qd = q.reports.first().map(|r| r.cost.durable()).unwrap_or(0.0);
+    table.row(&[
+        "Quilt (8 servers)".into(),
+        format!("{qp:.2}"),
+        format!("{qd:.2}"),
+        "8".into(),
+    ]);
+
+    for (label, bb, codec) in [
+        ("ADIOS2 (PFS)", false, Codec::None),
+        ("ADIOS2+BB+Zstd", true, Codec::Zstd),
+    ] {
+        let dir = tmp.join(label.replace(['+', ' ', '(', ')'], "_"));
+        let hw = wl.hardware(nodes);
+        let b = bench_write(&wl, nodes, 36, reps, move |_| {
+            let mut adios = Adios::default();
+            let io = adios.declare_io("hist");
+            io.params.insert("NumAggregatorsPerNode".into(), "1".into());
+            if bb {
+                io.params.insert("Target".into(), "burstbuffer".into());
+                io.params.insert("DrainBB".into(), "true".into());
+            }
+            io.operator = OperatorConfig::blosc(codec);
+            Box::new(
+                Adios2Backend::new(adios, "hist", dir.join("pfs"), dir.join("bb"), CostModel::new(hw.clone())).unwrap(),
+            )
+        })
+        .expect("bench");
+        let p = b.reports.first().map(|r| r.cost.perceived()).unwrap_or(0.0);
+        let d = b.reports.first().map(|r| r.cost.durable()).unwrap_or(0.0);
+        table.row(&[label.into(), format!("{p:.2}"), format!("{d:.2}"), "0".into()]);
+    }
+    table.emit(Some(std::path::Path::new("bench_results/ablation_quilt.csv")));
+    let _ = std::fs::remove_dir_all(&tmp);
+}

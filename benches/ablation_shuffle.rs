@@ -1,0 +1,86 @@
+//! Ablation — Blosc byte-shuffle on/off per codec (real sizes + real
+//! single-thread throughput on actual model fields).
+//!
+//! The paper uses Blosc's default shuffle; this ablation shows why: for
+//! smooth f32 meteorological fields, shuffling the exponent/sign bytes
+//! into contiguous planes is what unlocks byte-LZ compression.
+
+use stormio::adios::operator::{self, Codec, OperatorConfig};
+use stormio::metrics::Table;
+use stormio::model::state::RankState;
+use stormio::model::Decomp;
+use stormio::util::human_bytes;
+
+fn main() {
+    // Real model field bytes: θ from the CONUS-proxy initial condition.
+    let d = Decomp::new(192, 384, 1, 1).unwrap();
+    let st = RankState::init(&d, 0, 4, 2, 2022);
+    let interior = st.interior();
+    let plane = 4 * 192 * 384;
+    let theta = &interior[3 * plane..4 * plane];
+    let bytes = stormio::util::f32_slice_as_bytes(theta);
+
+    let mut table = Table::new(
+        "Ablation: byte-shuffle effect per codec (THETA field, 4x192x384 f32)",
+        &["codec", "shuffle", "stored", "ratio", "compress MB/s"],
+    );
+    for codec in [Codec::BloscLz, Codec::Lz4, Codec::Zlib, Codec::Zstd] {
+        for shuffle in [false, true] {
+            let cfg = OperatorConfig {
+                codec,
+                shuffle,
+                elem_size: 4,
+            keep_bits: None,
+            };
+            let t = operator::measure_throughput(bytes, cfg).unwrap();
+            let stored = (bytes.len() as f64 / t.ratio) as u64;
+            table.row(&[
+                codec.name().to_string(),
+                if shuffle { "on" } else { "off" }.to_string(),
+                human_bytes(stored),
+                format!("{:.2}x", t.ratio),
+                format!("{:.0}", t.compress_bps / 1e6),
+            ]);
+        }
+    }
+    table.emit(Some(std::path::Path::new(
+        "bench_results/ablation_shuffle.csv",
+    )));
+
+    // ---- extension: lossy bit rounding (paper §VI future work) ------------
+    // "The additional effective I/O throughput achievable by lossy
+    // compression, versus the loss in numerical accuracy, needs to be
+    // carefully studied" — here is that study on the real THETA field.
+    let vals = stormio::util::bytes_to_f32_vec(bytes).unwrap();
+    let mut lossy = Table::new(
+        "Extension: lossy bit rounding + zstd (THETA field)",
+        &["keep mantissa bits", "stored", "ratio", "max rel err", "max abs err [K]"],
+    );
+    for keep in [23u8, 16, 12, 10, 8, 6] {
+        let cfg = if keep == 23 {
+            OperatorConfig::blosc(Codec::Zstd)
+        } else {
+            OperatorConfig::blosc_lossy(Codec::Zstd, keep)
+        };
+        let frame = stormio::adios::operator::compress(bytes, cfg).unwrap();
+        let back =
+            stormio::util::bytes_to_f32_vec(&stormio::adios::operator::decompress(&frame).unwrap())
+                .unwrap();
+        let mut max_rel = 0.0f32;
+        let mut max_abs = 0.0f32;
+        for (a, b) in vals.iter().zip(&back) {
+            max_abs = max_abs.max((a - b).abs());
+            max_rel = max_rel.max(((a - b) / a.abs().max(1e-30)).abs());
+        }
+        lossy.row(&[
+            if keep == 23 { "lossless".into() } else { keep.to_string() },
+            human_bytes(frame.len() as u64),
+            format!("{:.2}x", bytes.len() as f64 / frame.len() as f64),
+            format!("{max_rel:.2e}"),
+            format!("{max_abs:.4}"),
+        ]);
+    }
+    lossy.emit(Some(std::path::Path::new(
+        "bench_results/ablation_lossy.csv",
+    )));
+}

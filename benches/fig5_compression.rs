@@ -1,0 +1,71 @@
+//! Fig 5 — ADIOS2 write time with in-line Blosc compression: uncompressed
+//! vs BloscLZ / LZ4 / Zlib / Zstd codecs across node counts (PFS target).
+//!
+//! Paper result: ~50% lower average write time with compression across
+//! the node range; Zstd takes the crown in 3 of 4 tests.  The compression
+//! here is *real* (our from-scratch LZ4/BloscLZ + vendored Zlib/Zstd on
+//! real model fields); the time model charges the measured per-rank codec
+//! throughput plus the smaller PFS write.
+
+use stormio::adios::{Adios, Codec, OperatorConfig};
+use stormio::io::adios2::Adios2Backend;
+use stormio::metrics::Table;
+use stormio::sim::CostModel;
+use stormio::workload::{bench_write, Workload};
+
+fn main() {
+    let wl = Workload::conus_proxy();
+    let reps: usize = std::env::var("STORMIO_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let tmp = std::env::temp_dir().join(format!("stormio_fig5_{}", std::process::id()));
+
+    let codecs = [
+        Codec::None,
+        Codec::BloscLz,
+        Codec::Lz4,
+        Codec::Zlib,
+        Codec::Zstd,
+    ];
+    let mut table = Table::new(
+        "Fig 5: ADIOS2 write time [s] by compression codec (PFS, 1 agg/node)",
+        &["nodes", "none", "blosclz", "lz4", "zlib", "zstd", "best"],
+    );
+    for nodes in [1usize, 2, 4, 8] {
+        let mut cells = vec![nodes.to_string()];
+        let mut best = ("none", f64::INFINITY);
+        for codec in codecs {
+            let dir = tmp.join(format!("c{}n{nodes}", codec.name()));
+            let hw = wl.hardware(nodes);
+            let b = bench_write(&wl, nodes, 36, reps, move |_| {
+                let mut adios = Adios::default();
+                let io = adios.declare_io("hist");
+                io.params.insert("NumAggregatorsPerNode".into(), "1".into());
+                io.operator = OperatorConfig::blosc(codec);
+                Box::new(
+                    Adios2Backend::new(
+                        adios,
+                        "hist",
+                        dir.join("pfs"),
+                        dir.join("bb"),
+                        CostModel::new(hw.clone()),
+                    )
+                    .unwrap(),
+                )
+            })
+            .expect("bench");
+            let t = b.mean_perceived();
+            if t < best.1 && codec != Codec::None {
+                best = (codec.name(), t);
+            }
+            cells.push(format!("{t:.2}"));
+            let _ = std::fs::remove_dir_all(&tmp.join(format!("c{}n{nodes}", codec.name())));
+        }
+        cells.push(best.0.to_string());
+        table.row(&cells);
+    }
+    table.emit(Some(std::path::Path::new("bench_results/fig5.csv")));
+    println!("paper: compression cuts write time ~50% across the range; Zstd fastest in 3 of 4 node counts.");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

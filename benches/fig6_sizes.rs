@@ -1,0 +1,82 @@
+//! Fig 6 — Output data size of one history frame: ADIOS2 uncompressed vs
+//! the four Blosc codecs, plus the legacy WRF options (serial NetCDF4 with
+//! Zlib deflate; PnetCDF uncompressed).
+//!
+//! Paper result: compression ratio ≈ 4 for both ADIOS2-Blosc (Zstd/Zlib)
+//! and NetCDF4; PnetCDF has no compression path.  Sizes below are **real
+//! measured bytes** of real model fields through the real codecs — no
+//! virtual scaling (the CONUS-scale column just multiplies by the grid
+//! ratio for reference).
+
+use stormio::adios::{Adios, Codec, OperatorConfig};
+use stormio::io::adios2::Adios2Backend;
+use stormio::io::pnetcdf::PnetCdfBackend;
+use stormio::io::serial_nc::SerialNcBackend;
+use stormio::metrics::Table;
+use stormio::sim::CostModel;
+use stormio::util::human_bytes;
+use stormio::workload::{bench_write, Workload, PAPER_FRAME_BYTES};
+
+fn main() {
+    let wl = Workload::conus_proxy();
+    let tmp = std::env::temp_dir().join(format!("stormio_fig6_{}", std::process::id()));
+    let nodes = 2; // size is node-count independent; keep the world small
+    let hw = wl.hardware(nodes);
+
+    let mut table = Table::new(
+        "Fig 6: single history frame output size (real bytes; CONUS-scale in parens)",
+        &["config", "stored", "ratio", "CONUS-scale est."],
+    );
+    let raw = wl.frame_bytes();
+    let scale = PAPER_FRAME_BYTES / raw as f64;
+
+    let mut row = |name: &str, stored: u64| {
+        table.row(&[
+            name.to_string(),
+            human_bytes(stored),
+            format!("{:.2}x", raw as f64 / stored as f64),
+            human_bytes((stored as f64 * scale) as u64),
+        ]);
+    };
+
+    // ADIOS2, uncompressed + each codec.
+    for codec in [Codec::None, Codec::BloscLz, Codec::Lz4, Codec::Zlib, Codec::Zstd] {
+        let dir = tmp.join(format!("a_{}", codec.name()));
+        let hwc = hw.clone();
+        let b = bench_write(&wl, nodes, 36, 1, move |_| {
+            let mut adios = Adios::default();
+            let io = adios.declare_io("hist");
+            io.operator = OperatorConfig::blosc(codec);
+            Box::new(
+                Adios2Backend::new(adios, "hist", dir.join("pfs"), dir.join("bb"), CostModel::new(hwc.clone())).unwrap(),
+            )
+        })
+        .expect("bench");
+        row(&format!("ADIOS2 ({})", codec.name()), b.stored_bytes());
+        let _ = std::fs::remove_dir_all(&tmp.join(format!("a_{}", codec.name())));
+    }
+
+    // Serial NetCDF4 (Zlib deflate through the funnel path).
+    let dir = tmp.join("snc");
+    let hwc = hw.clone();
+    let snc = bench_write(&wl, nodes, 36, 1, move |_| {
+        Box::new(SerialNcBackend::new(dir.clone(), CostModel::new(hwc.clone())))
+    })
+    .expect("serial nc bench");
+    row("NetCDF4 serial (zlib)", snc.stored_bytes());
+    let _ = std::fs::remove_dir_all(&tmp.join("snc"));
+
+    // PnetCDF (uncompressed shared file).
+    let dir = tmp.join("pnc");
+    let hwc = hw.clone();
+    let pnc = bench_write(&wl, nodes, 36, 1, move |_| {
+        Box::new(PnetCdfBackend::new(dir.clone(), CostModel::new(hwc.clone())))
+    })
+    .expect("pnetcdf bench");
+    row("PnetCDF (uncompressed)", pnc.stored_bytes());
+    let _ = std::fs::remove_dir_all(&tmp.join("pnc"));
+
+    table.emit(Some(std::path::Path::new("bench_results/fig6.csv")));
+    println!("paper: ratio ~4 for ADIOS2-Blosc (zstd/zlib) and NetCDF4; zstd smallest among fast Blosc codecs.");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -1,0 +1,182 @@
+//! §Perf — measured wall-clock throughput of every L3 hot path on this
+//! host (these are *real* MB/s, not virtual-time numbers; they feed both
+//! the cost model's compression phases and EXPERIMENTS.md §Perf).
+//!
+//! Paths: compression codecs (with/without shuffle), shuffle filter alone,
+//! BP block packing (serialize + frame), SST TCP transport, halo exchange,
+//! CDF-lite serial write, BP end-to-end engine write (physical).
+
+use std::time::Instant;
+
+use stormio::adios::operator::{self, Codec, OperatorConfig};
+use stormio::adios::{Adios, OperatorConfig as OpCfg};
+use stormio::io::adios2::Adios2Backend;
+use stormio::metrics::Table;
+use stormio::model::state::RankState;
+use stormio::model::Decomp;
+use stormio::sim::CostModel;
+use stormio::workload::{bench_write, Workload};
+
+fn mbps(bytes: usize, secs: f64) -> String {
+    format!("{:.0}", bytes as f64 / secs.max(1e-9) / 1e6)
+}
+
+fn time<F: FnMut()>(mut f: F) -> f64 {
+    // Warm up once, then measure enough reps for ≥50 ms.
+    f();
+    let t0 = Instant::now();
+    let mut reps = 0u32;
+    while t0.elapsed().as_secs_f64() < 0.05 || reps == 0 {
+        f();
+        reps += 1;
+        if reps > 1000 {
+            break;
+        }
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let mut table = Table::new(
+        "perf_hotpath: measured single-thread throughput (this host)",
+        &["path", "payload", "MB/s"],
+    );
+
+    // Real smooth field payload.
+    let d = Decomp::new(192, 384, 1, 1).unwrap();
+    let st = RankState::init(&d, 0, 4, 2, 2022);
+    let interior = st.interior();
+    let plane = 4 * 192 * 384;
+    let theta = &interior[3 * plane..4 * plane];
+    let bytes = stormio::util::f32_slice_as_bytes(theta);
+
+    // Shuffle filter alone.
+    let secs = time(|| {
+        std::hint::black_box(operator::shuffle::shuffle(bytes, 4));
+    });
+    table.row(&["shuffle (byte transpose)".into(), "1.2 MiB".into(), mbps(bytes.len(), secs)]);
+    let shuffled = operator::shuffle::shuffle(bytes, 4);
+    let secs = time(|| {
+        std::hint::black_box(operator::shuffle::unshuffle(&shuffled, 4));
+    });
+    table.row(&["unshuffle".into(), "1.2 MiB".into(), mbps(bytes.len(), secs)]);
+
+    // Codecs compress + decompress.
+    for codec in [Codec::BloscLz, Codec::Lz4, Codec::Zlib, Codec::Zstd] {
+        let cfg = OperatorConfig::blosc(codec);
+        let secs = time(|| {
+            std::hint::black_box(operator::compress(bytes, cfg).unwrap());
+        });
+        table.row(&[
+            format!("compress {} (+shuffle)", codec.name()),
+            "1.2 MiB".into(),
+            mbps(bytes.len(), secs),
+        ]);
+        let frame = operator::compress(bytes, cfg).unwrap();
+        let secs = time(|| {
+            std::hint::black_box(operator::decompress(&frame).unwrap());
+        });
+        table.row(&[
+            format!("decompress {}", codec.name()),
+            "1.2 MiB".into(),
+            mbps(bytes.len(), secs),
+        ]);
+    }
+
+    // BP engine end-to-end physical write (per frame, wall time).
+    let wl = Workload::conus_proxy();
+    let tmp = std::env::temp_dir().join(format!("stormio_perf_{}", std::process::id()));
+    for codec in [Codec::None, Codec::Zstd] {
+        let dir = tmp.join(format!("bp_{}", codec.name()));
+        let hw = wl.hardware(2);
+        let b = bench_write(&wl, 2, 8, 2, move |_| {
+            let mut adios = Adios::default();
+            let io = adios.declare_io("hist");
+            io.operator = OpCfg::blosc(codec);
+            Box::new(
+                Adios2Backend::new(adios, "hist", dir.join("pfs"), dir.join("bb"), CostModel::new(hw.clone())).unwrap(),
+            )
+        })
+        .unwrap();
+        table.row(&[
+            format!("BP4 engine e2e physical ({})", codec.name()),
+            stormio::util::human_bytes(b.raw_bytes()),
+            mbps(b.raw_bytes() as usize, b.mean_real()),
+        ]);
+        let _ = std::fs::remove_dir_all(&tmp.join(format!("bp_{}", codec.name())));
+    }
+
+    // SST transport end-to-end over localhost TCP.
+    {
+        use stormio::adios::engine::sst::SstConsumer;
+        use stormio::adios::engine::Engine;
+        use stormio::adios::Variable;
+        use stormio::cluster::run_world;
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let n = 4 * 1024 * 1024 / 4; // 4 MiB steps
+        let consumer = std::thread::spawn(move || {
+            let mut c = listener.accept().unwrap();
+            let mut total = 0u64;
+            while let Some(s) = c.next_step().unwrap() {
+                total += s.wire_bytes();
+            }
+            total
+        });
+        let reps = 16;
+        let t0 = Instant::now();
+        run_world(1, 1, |mut comm| {
+            let mut eng = stormio::adios::engine::sst::SstEngine::open(
+                &addr,
+                OperatorConfig::none(),
+                CostModel::new(wl.hardware(1)),
+                &comm,
+                std::time::Duration::from_secs(5),
+            )
+            .unwrap();
+            let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            for _ in 0..reps {
+                eng.begin_step().unwrap();
+                eng.put_f32(Variable::whole("X", &[n as u64]).unwrap(), data.clone())
+                    .unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap();
+        });
+        let total = consumer.join().unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            "SST transport e2e (TCP localhost)".into(),
+            "16 × 4 MiB".into(),
+            mbps(total as usize, secs),
+        ]);
+    }
+
+    // Halo exchange rate (4 ranks, demo patch).
+    {
+        use stormio::cluster::run_world;
+        let d = Decomp::new(192, 192, 2, 2).unwrap();
+        let t0 = Instant::now();
+        let reps = 50;
+        let sent: u64 = run_world(4, 2, |mut comm| {
+            let mut st = RankState::init(&d, comm.rank(), 4, 2, 1);
+            let mut total = 0u64;
+            let mut tag = 0;
+            for _ in 0..reps {
+                total += st.halo_exchange(&mut comm, &d, tag).unwrap();
+                tag += 4;
+            }
+            total
+        })
+        .iter()
+        .sum();
+        table.row(&[
+            "halo exchange (4 ranks, 96² patch ×4z ×5f)".into(),
+            format!("{} reps", reps),
+            mbps(sent as usize, t0.elapsed().as_secs_f64()),
+        ]);
+    }
+
+    table.emit(Some(std::path::Path::new("bench_results/perf_hotpath.csv")));
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -1,0 +1,87 @@
+//! Table I — Progression of optimizations at 8 nodes / 288 ranks:
+//!
+//! | Configuration    | paper write time | paper speedup |
+//! |------------------|------------------|---------------|
+//! | PnetCDF          | 93 s             | 1×            |
+//! | ADIOS2           | 8.2 s            | 11×           |
+//! | ADIOS2+BB        | 1.1 s            | 84×           |
+//! | ADIOS2+BB+Zstd   | 0.52 s           | 179×          |
+//!
+//! Each row reuses the same real write path as Figs 1/2/5 with the
+//! corresponding configuration switched on cumulatively.
+
+use stormio::adios::{Adios, Codec, OperatorConfig};
+use stormio::io::adios2::Adios2Backend;
+use stormio::io::pnetcdf::PnetCdfBackend;
+use stormio::metrics::Table;
+use stormio::sim::CostModel;
+use stormio::workload::{bench_write, Workload};
+
+fn adios_time(wl: &Workload, tmp: &std::path::Path, tag: &str, bb: bool, codec: Codec, reps: usize) -> f64 {
+    let dir = tmp.join(tag);
+    let hw = wl.hardware(8);
+    let b = bench_write(wl, 8, 36, reps, move |_| {
+        let mut adios = Adios::default();
+        let io = adios.declare_io("hist");
+        io.params.insert("NumAggregatorsPerNode".into(), "1".into());
+        if bb {
+            io.params.insert("Target".into(), "burstbuffer".into());
+        }
+        io.operator = OperatorConfig::blosc(codec);
+        Box::new(
+            Adios2Backend::new(
+                adios,
+                "hist",
+                dir.join("pfs"),
+                dir.join("bb"),
+                CostModel::new(hw.clone()),
+            )
+            .unwrap(),
+        )
+    })
+    .expect("bench");
+    b.mean_perceived()
+}
+
+fn main() {
+    let wl = Workload::conus_proxy();
+    let reps: usize = std::env::var("STORMIO_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let tmp = std::env::temp_dir().join(format!("stormio_t1_{}", std::process::id()));
+
+    let hw = wl.hardware(8);
+    let dir = tmp.join("pnc");
+    let pnc = bench_write(&wl, 8, 36, reps, move |_| {
+        Box::new(PnetCdfBackend::new(dir.clone(), CostModel::new(hw.clone())))
+    })
+    .expect("pnetcdf bench")
+    .mean_perceived();
+
+    let adios2 = adios_time(&wl, &tmp, "a", false, Codec::None, reps);
+    let adios2_bb = adios_time(&wl, &tmp, "ab", true, Codec::None, reps);
+    let adios2_bb_zstd = adios_time(&wl, &tmp, "abz", true, Codec::Zstd, reps);
+
+    let mut table = Table::new(
+        "Table I: progression of optimizations (8 nodes, 288 ranks)",
+        &["configuration", "write time [s]", "speedup", "paper [s]", "paper speedup"],
+    );
+    let rows = [
+        ("PnetCDF", pnc, "93", "1X"),
+        ("ADIOS2", adios2, "8.2", "11X"),
+        ("ADIOS2+BB", adios2_bb, "1.1", "84X"),
+        ("ADIOS2+BB+Zstd", adios2_bb_zstd, "0.52", "179X"),
+    ];
+    for (name, t, p, ps) in rows {
+        table.row(&[
+            name.to_string(),
+            format!("{t:.2}"),
+            format!("{:.0}X", pnc / t),
+            p.to_string(),
+            ps.to_string(),
+        ]);
+    }
+    table.emit(Some(std::path::Path::new("bench_results/table1.csv")));
+    let _ = std::fs::remove_dir_all(&tmp);
+}

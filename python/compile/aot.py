@@ -1,0 +1,110 @@
+"""AOT compile path: lower the L2/L1 model to HLO text artifacts.
+
+Runs once at build time (``make artifacts``); Python never runs on the Rust
+request path.  For each compiled patch decomposition this emits
+
+  artifacts/model_p{NYP}x{NXP}.hlo.txt   — one rank_step per patch shape
+  artifacts/analysis_{NY}x{NX}.hlo.txt   — in-situ consumer computation
+  artifacts/manifest.txt                 — shapes/constants for the Rust side
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate links) rejects
+(``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import HALO
+
+#: Patch decompositions compiled by default.  Each entry is
+#: (tag, nz, nyp, nxp) — the Rust coordinator picks the artifact whose patch
+#: shape matches the decomposition requested in namelist.input.
+#: 96x96 serves the 2x2-rank demo global grid (192x192); 48x48 serves both
+#: the 4x4-rank demo and the CONUS-proxy I/O-bench grids.
+PATCHES = [
+    ("p96x96", 4, 96, 96),
+    ("p48x48", 4, 48, 48),
+    ("p24x24", 4, 24, 24),
+]
+
+#: Analysis (consumer-side) global grids to compile.
+ANALYSIS_GRIDS = [(4, 192, 192)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_rank_step(nz: int, nyp: int, nxp: int) -> str:
+    spec = jax.ShapeDtypeStruct(
+        (model.NF, nz, nyp + 2 * HALO, nxp + 2 * HALO), jnp.float32
+    )
+    # donate_argnums lets XLA reuse the (large) state buffer for the output.
+    lowered = jax.jit(lambda s: (model.rank_step(s),), donate_argnums=0).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def lower_analysis(nz: int, ny: int, nx: int) -> str:
+    spec = jax.ShapeDtypeStruct((nz, ny, nx), jnp.float32)
+    lowered = jax.jit(lambda t: tuple(model.analysis_fn(t))).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="legacy single-output path (ignored)")
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out:
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = [
+        "# stormio artifact manifest — parsed by rust/src/runtime/manifest.rs",
+        f"halo {HALO}",
+        f"nf {model.NF}",
+        "fields " + ",".join(model.FIELDS),
+        f"dt {model.DEFAULTS['dt']}",
+    ]
+
+    for tag, nz, nyp, nxp in PATCHES:
+        path = os.path.join(outdir, f"model_{tag}.hlo.txt")
+        text = lower_rank_step(nz, nyp, nxp)
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest.append(f"model {tag} nz={nz} nyp={nyp} nxp={nxp} file=model_{tag}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for nz, ny, nx in ANALYSIS_GRIDS:
+        path = os.path.join(outdir, f"analysis_{ny}x{nx}.hlo.txt")
+        text = lower_analysis(nz, ny, nx)
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest.append(
+            f"analysis nz={nz} ny={ny} nx={nx} file=analysis_{ny}x{nx}.hlo.txt"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

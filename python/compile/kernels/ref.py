@@ -1,0 +1,108 @@
+"""Pure-jnp oracle for the L1 Pallas shallow-water stencil kernel.
+
+This module is the ground truth for ``kernels/sw_stencil.py``: the same
+forward-backward Arakawa-A finite-difference update, written as plain
+``jax.numpy`` slicing with no Pallas machinery.  pytest (including the
+hypothesis sweeps in ``python/tests/test_kernel.py``) asserts the Pallas
+kernel matches this reference to float32 tolerance across shapes.
+
+Grid conventions
+----------------
+All fields are ``(NZ, NYP + 2*HALO, NXP + 2*HALO)`` float32 patches: a stack
+of ``NZ`` independent shallow-water levels (the WRF-proxy "atmosphere"),
+padded with a ``HALO``-deep ring filled by the coordinator from neighbouring
+ranks before every step.  The update writes only the interior
+``(NZ, NYP, NXP)`` region.
+
+The scheme is the classic forward-backward shallow-water step:
+
+  1. continuity first:   h' = h - dt * div(h u, h v)        (needs halo 1)
+  2. momentum backward:  u' = u + dt * (f v - g dh'/dx - adv(u)) + diff
+                         v' = v + dt * (-f u - g dh'/dy - adv(v)) + diff
+
+Step 2 needs ``h'`` one ring beyond the interior, hence ``HALO = 2``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+HALO = 2
+
+
+def _ddx(a, dx):
+    """Centered x-derivative, consuming one halo ring in x."""
+    return (a[:, :, 2:] - a[:, :, :-2]) / (2.0 * dx)
+
+
+def _ddy(a, dy):
+    """Centered y-derivative, consuming one halo ring in y."""
+    return (a[:, 2:, :] - a[:, :-2, :]) / (2.0 * dy)
+
+
+def _lap(a, dx, dy):
+    """5-point Laplacian on the interior of a (..., Y, X) array."""
+    return (a[:, 1:-1, 2:] - 2.0 * a[:, 1:-1, 1:-1] + a[:, 1:-1, :-2]) / (
+        dx * dx
+    ) + (a[:, 2:, 1:-1] - 2.0 * a[:, 1:-1, 1:-1] + a[:, :-2, 1:-1]) / (dy * dy)
+
+
+def sw_step_ref(h, u, v, *, dt, dx, dy, g, f, nu):
+    """One forward-backward shallow-water step on a 2-halo padded patch.
+
+    Args:
+      h, u, v: ``(NZ, NYP+4, NXP+4)`` float32 padded fields.
+      dt, dx, dy, g, f, nu: scheme constants (python floats, baked at trace
+        time exactly as the Pallas kernel bakes them).
+
+    Returns:
+      ``(h_new, u_new, v_new)`` interior patches of shape ``(NZ, NYP, NXP)``.
+    """
+    # ---- continuity (forward): h' on interior + 1 ring -------------------
+    # Strip one ring off the 2-halo patch so every centered difference below
+    # lands on the interior+1 ring.
+    hs = h[:, 1:-1, 1:-1]
+    us = u[:, 1:-1, 1:-1]
+    vs = v[:, 1:-1, 1:-1]
+    hu = h * u
+    hv = h * v
+    div = _ddx(hu[:, 1:-1, :], dx) + _ddy(hv[:, :, 1:-1], dy)
+    h_prime = hs - dt * div  # shape (NZ, NYP+2, NXP+2): interior + 1 ring
+
+    # ---- momentum (backward, uses h') ------------------------------------
+    ui = u[:, HALO:-HALO, HALO:-HALO]
+    vi = v[:, HALO:-HALO, HALO:-HALO]
+
+    dhdx = _ddx(h_prime[:, 1:-1, :], dx)
+    dhdy = _ddy(h_prime[:, :, 1:-1], dy)
+
+    adv_u = ui * _ddx(us[:, 1:-1, :], dx) + vi * _ddy(us[:, :, 1:-1], dy)
+    adv_v = ui * _ddx(vs[:, 1:-1, :], dx) + vi * _ddy(vs[:, :, 1:-1], dy)
+
+    u_new = ui + dt * (f * vi - g * dhdx - adv_u + nu * _lap(us, dx, dy))
+    v_new = vi + dt * (-f * ui - g * dhdy - adv_v + nu * _lap(vs, dx, dy))
+    h_new = h_prime[:, 1:-1, 1:-1]
+    return h_new, u_new, v_new
+
+
+def advect_tracer_ref(c, u_new, v_new, *, dt, dx, dy, kappa):
+    """First-order upwind advection + diffusion of a tracer patch.
+
+    Args:
+      c: ``(NZ, NYP+4, NXP+4)`` padded tracer.
+      u_new, v_new: interior ``(NZ, NYP, NXP)`` advecting velocities.
+      dt, dx, dy, kappa: constants.
+
+    Returns:
+      Interior ``(NZ, NYP, NXP)`` updated tracer.
+    """
+    ci = c[:, HALO:-HALO, HALO:-HALO]
+    cxp = c[:, HALO:-HALO, HALO + 1 : -(HALO - 1)]
+    cxm = c[:, HALO:-HALO, HALO - 1 : -(HALO + 1)]
+    cyp = c[:, HALO + 1 : -(HALO - 1), HALO:-HALO]
+    cym = c[:, HALO - 1 : -(HALO + 1), HALO:-HALO]
+
+    flux_x = jnp.where(u_new > 0.0, u_new * (ci - cxm), u_new * (cxp - ci)) / dx
+    flux_y = jnp.where(v_new > 0.0, v_new * (ci - cym), v_new * (cyp - ci)) / dy
+    lap = (cxp - 2.0 * ci + cxm) / (dx * dx) + (cyp - 2.0 * ci + cym) / (dy * dy)
+    return ci - dt * (flux_x + flux_y) + dt * kappa * lap

@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: forward-backward shallow-water stencil update.
+
+This is the WRF-analog's compute hot-spot, written as a Pallas kernel so it
+lowers into the same HLO module as the surrounding L2 jax model
+(``compile/model.py``) and runs from the Rust PJRT runtime with no Python on
+the request path.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation)
+------------------------------------------------
+* The Pallas ``grid`` iterates over the NZ vertical levels; each program
+  instance owns one full ``(NYP+2H, NXP+2H)`` level plane.  For the patch
+  sizes this repo compiles (≤ 128×128 + halo, f32) a full plane is ≤ 70 KiB,
+  so three input planes + three output planes sit comfortably in the ~16 MiB
+  VMEM budget of a TPU core — the BlockSpec *is* the HBM↔VMEM schedule that
+  a CUDA port would express with threadblocks + shared-memory staging.
+* A stencil has no matmul, so the MXU is idle by construction; the update is
+  pure VPU (8×128 vector lanes) work.  Everything below is written as whole-
+  plane vectorized ops — no scalar loops — so the VPU lanes stay full.
+* ``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+  Mosaic custom-calls.  Interpret mode lowers the kernel to plain HLO ops,
+  which is exactly what the Rust runtime loads.
+
+Correctness is pinned to the pure-jnp oracle in ``kernels/ref.py`` by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes and flow regimes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import HALO
+
+
+def _sw_kernel(h_ref, u_ref, v_ref, oh_ref, ou_ref, ov_ref, *, dt, dx, dy, g, f, nu):
+    """Kernel body for one vertical level.
+
+    Refs are ``(1, NYP+2H, NXP+2H)`` blocks (inputs) and ``(1, NYP, NXP)``
+    blocks (outputs).  The math mirrors ``ref.sw_step_ref`` exactly; keeping
+    the two in lockstep is enforced by the test suite, so any scheme change
+    must land in both files.
+    """
+    h = h_ref[...]
+    u = u_ref[...]
+    v = v_ref[...]
+
+    inv2dx = 1.0 / (2.0 * dx)
+    inv2dy = 1.0 / (2.0 * dy)
+
+    # ---- continuity (forward): h' on interior + 1 ring -------------------
+    hu = h * u
+    hv = h * v
+    div = (hu[:, 1:-1, 2:] - hu[:, 1:-1, :-2]) * inv2dx + (
+        hv[:, 2:, 1:-1] - hv[:, :-2, 1:-1]
+    ) * inv2dy
+    h_prime = h[:, 1:-1, 1:-1] - dt * div  # (1, NYP+2, NXP+2)
+
+    # ---- momentum (backward) ---------------------------------------------
+    us = u[:, 1:-1, 1:-1]
+    vs = v[:, 1:-1, 1:-1]
+    ui = u[:, HALO:-HALO, HALO:-HALO]
+    vi = v[:, HALO:-HALO, HALO:-HALO]
+
+    dhdx = (h_prime[:, 1:-1, 2:] - h_prime[:, 1:-1, :-2]) * inv2dx
+    dhdy = (h_prime[:, 2:, 1:-1] - h_prime[:, :-2, 1:-1]) * inv2dy
+
+    dudx = (us[:, 1:-1, 2:] - us[:, 1:-1, :-2]) * inv2dx
+    dudy = (us[:, 2:, 1:-1] - us[:, :-2, 1:-1]) * inv2dy
+    dvdx = (vs[:, 1:-1, 2:] - vs[:, 1:-1, :-2]) * inv2dx
+    dvdy = (vs[:, 2:, 1:-1] - vs[:, :-2, 1:-1]) * inv2dy
+
+    lap_u = (us[:, 1:-1, 2:] - 2.0 * us[:, 1:-1, 1:-1] + us[:, 1:-1, :-2]) / (
+        dx * dx
+    ) + (us[:, 2:, 1:-1] - 2.0 * us[:, 1:-1, 1:-1] + us[:, :-2, 1:-1]) / (dy * dy)
+    lap_v = (vs[:, 1:-1, 2:] - 2.0 * vs[:, 1:-1, 1:-1] + vs[:, 1:-1, :-2]) / (
+        dx * dx
+    ) + (vs[:, 2:, 1:-1] - 2.0 * vs[:, 1:-1, 1:-1] + vs[:, :-2, 1:-1]) / (dy * dy)
+
+    adv_u = ui * dudx + vi * dudy
+    adv_v = ui * dvdx + vi * dvdy
+
+    ou_ref[...] = ui + dt * (f * vi - g * dhdx - adv_u + nu * lap_u)
+    ov_ref[...] = vi + dt * (-f * ui - g * dhdy - adv_v + nu * lap_v)
+    oh_ref[...] = h_prime[:, 1:-1, 1:-1]
+
+
+def sw_step_pallas(h, u, v, *, dt, dx, dy, g, f, nu, interpret=True):
+    """One shallow-water step over all NZ levels via a Pallas grid.
+
+    Args:
+      h, u, v: ``(NZ, NYP+2H, NXP+2H)`` float32 padded patches.
+      interpret: keep True for CPU PJRT (see module docstring).
+
+    Returns:
+      ``(h_new, u_new, v_new)`` interior ``(NZ, NYP, NXP)`` arrays.
+    """
+    nz, ypad, xpad = h.shape
+    nyp, nxp = ypad - 2 * HALO, xpad - 2 * HALO
+    kern = functools.partial(_sw_kernel, dt=dt, dx=dx, dy=dy, g=g, f=f, nu=nu)
+
+    in_spec = pl.BlockSpec((1, ypad, xpad), lambda z: (z, 0, 0))
+    out_spec = pl.BlockSpec((1, nyp, nxp), lambda z: (z, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((nz, nyp, nxp), h.dtype)
+
+    return pl.pallas_call(
+        kern,
+        grid=(nz,),
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=interpret,
+    )(h, u, v)
+
+
+def vmem_bytes_estimate(nz_block, ypad, xpad, nyp, nxp, itemsize=4):
+    """Static VMEM footprint estimate for one program instance.
+
+    Used by DESIGN/EXPERIMENTS §Perf to argue the block shape respects the
+    ~16 MiB/core VMEM budget: 3 input planes + 3 output planes + the ~6
+    intermediate interior+ring temporaries the scheduler must hold live.
+    """
+    inputs = 3 * nz_block * ypad * xpad * itemsize
+    outputs = 3 * nz_block * nyp * nxp * itemsize
+    temps = 6 * nz_block * (nyp + 2) * (nxp + 2) * itemsize
+    return inputs + outputs + temps

@@ -1,0 +1,96 @@
+"""L2 model tests: rank_step semantics, stability, physics sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import HALO
+
+
+def pad_periodic(interior):
+    """Periodic halo fill of a (NF, NZ, NY, NX) global state."""
+    return jnp.pad(
+        interior, ((0, 0), (0, 0), (HALO, HALO), (HALO, HALO)), mode="wrap"
+    )
+
+
+def test_rank_step_shapes_dtype():
+    nz, ny, nx = 2, 16, 20
+    state = model.initial_global_state(nz, ny, nx, seed=1)
+    out = model.rank_step(pad_periodic(state))
+    assert out.shape == (model.NF, nz, ny, nx)
+    assert out.dtype == jnp.float32
+
+
+def test_rank_step_matches_ref_twin():
+    nz, ny, nx = 2, 12, 12
+    state = pad_periodic(model.initial_global_state(nz, ny, nx, seed=2))
+    np.testing.assert_allclose(
+        model.rank_step(state),
+        model.rank_step_ref(state),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_stability_200_steps_no_nan():
+    """The demo configuration must integrate stably (the end-to-end run)."""
+    nz, ny, nx = 2, 32, 32
+    s = model.initial_global_state(nz, ny, nx, seed=3)
+    step = jax.jit(lambda x: model.rank_step(pad_periodic(x)))
+    for _ in range(200):
+        s = step(s)
+    assert bool(jnp.isfinite(s).all())
+    # Flow should still be moving, not diffused to rest.
+    assert float(jnp.abs(s[1]).max()) > 1e-3
+
+
+def test_mass_conservation_periodic():
+    """With periodic halos, total mass sum(h) drifts only at fp roundoff."""
+    nz, ny, nx = 1, 24, 24
+    s = model.initial_global_state(nz, ny, nx, seed=4)
+    m0 = float(s[0].sum())
+    step = jax.jit(lambda x: model.rank_step(pad_periodic(x)))
+    for _ in range(50):
+        s = step(s)
+    m1 = float(s[0].sum())
+    assert abs(m1 - m0) / abs(m0) < 1e-4
+
+
+def test_moisture_nonnegative():
+    nz, ny, nx = 2, 24, 24
+    s = model.initial_global_state(nz, ny, nx, seed=5)
+    step = jax.jit(lambda x: model.rank_step(pad_periodic(x)))
+    for _ in range(50):
+        s = step(s)
+    assert float(s[4].min()) >= 0.0
+
+
+def test_initial_state_realistic_ranges():
+    s = model.initial_global_state(4, 48, 48, seed=6)
+    h, u, v, th, qv = (np.asarray(s[i]) for i in range(model.NF))
+    assert h.min() > 0.5 and h.max() < 3.0
+    assert 250.0 < th.min() and th.max() < 340.0
+    assert qv.min() >= 0.0
+    # Fields must be smooth (compressible): neighbour deltas small vs range.
+    d = np.abs(np.diff(th[0], axis=-1)).mean()
+    assert d < 0.1 * (th[0].max() - th[0].min())
+
+
+def test_analysis_fn_outputs():
+    nz, ny, nx = 4, 64, 64
+    th = model.initial_global_state(nz, ny, nx, seed=7)[3]
+    ds, lmean, lmin, lmax, hist = model.analysis_fn(th)
+    assert ds.shape == (ny // 4, nx // 4)
+    assert lmean.shape == (nz,)
+    assert int(hist.sum()) == ny * nx
+    assert bool((lmin <= lmean).all()) and bool((lmean <= lmax).all())
+
+
+def test_analysis_fn_constant_field():
+    th = jnp.full((2, 16, 16), 300.0, jnp.float32)
+    ds, lmean, lmin, lmax, hist = model.analysis_fn(th)
+    np.testing.assert_allclose(ds, 300.0)
+    assert int(hist.sum()) == 16 * 16

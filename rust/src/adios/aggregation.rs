@@ -1,0 +1,164 @@
+//! N→M aggregation planning (the paper's primary tuning knob, §V-C).
+//!
+//! ADIOS2 designates `M` ranks as *aggregators*, each writing one sub-file
+//! while collecting blocks from its assigned ranks in a streaming fashion.
+//! The default (and the paper's 8-node optimum) is one aggregator per
+//! node; Fig 4 sweeps aggregators-per-node, which this plan supports at
+//! run time exactly like the `namelist.input` option the paper added.
+
+use crate::{Error, Result};
+
+/// Mapping of ranks to aggregators/sub-files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregationPlan {
+    pub nranks: usize,
+    pub ranks_per_node: usize,
+    /// Aggregator rank for every rank (aggregators map to themselves).
+    pub agg_of_rank: Vec<usize>,
+    /// Sub-file index for every aggregator rank (dense 0..M).
+    pub subfile_of_agg: Vec<(usize, u32)>,
+}
+
+impl AggregationPlan {
+    /// Build a plan with `aggs_per_node` aggregators on each node.
+    ///
+    /// Aggregators are spread evenly through each node's ranks (ADIOS2
+    /// places them at stride `ranks_per_node / aggs_per_node`), and every
+    /// rank is assigned to an aggregator *on its own node* so collection
+    /// traffic stays intra-node.
+    pub fn per_node(nranks: usize, ranks_per_node: usize, aggs_per_node: usize) -> Result<Self> {
+        if nranks == 0 || ranks_per_node == 0 {
+            return Err(Error::config("empty world in aggregation plan"));
+        }
+        if nranks % ranks_per_node != 0 {
+            return Err(Error::config(format!(
+                "ranks {nranks} not divisible by ranks/node {ranks_per_node}"
+            )));
+        }
+        let aggs_per_node = aggs_per_node.clamp(1, ranks_per_node);
+        let nodes = nranks / ranks_per_node;
+        let stride = ranks_per_node / aggs_per_node;
+        let mut agg_of_rank = vec![0usize; nranks];
+        let mut subfile_of_agg = Vec::with_capacity(nodes * aggs_per_node);
+        let mut subfile = 0u32;
+        for node in 0..nodes {
+            let base = node * ranks_per_node;
+            // Aggregator ranks on this node.
+            let aggs: Vec<usize> = (0..aggs_per_node).map(|a| base + a * stride).collect();
+            for a in &aggs {
+                subfile_of_agg.push((*a, subfile));
+                subfile += 1;
+            }
+            for local in 0..ranks_per_node {
+                // Assign each rank to the aggregator owning its stride bucket.
+                let bucket = (local / stride).min(aggs_per_node - 1);
+                agg_of_rank[base + local] = aggs[bucket];
+            }
+        }
+        Ok(AggregationPlan {
+            nranks,
+            ranks_per_node,
+            agg_of_rank,
+            subfile_of_agg,
+        })
+    }
+
+    /// Number of aggregators (sub-files).
+    pub fn num_aggregators(&self) -> usize {
+        self.subfile_of_agg.len()
+    }
+
+    /// Is `rank` an aggregator?
+    pub fn is_aggregator(&self, rank: usize) -> bool {
+        self.agg_of_rank[rank] == rank
+    }
+
+    /// Sub-file index of an aggregator rank.
+    pub fn subfile(&self, agg_rank: usize) -> Option<u32> {
+        self.subfile_of_agg
+            .iter()
+            .find(|(r, _)| *r == agg_rank)
+            .map(|(_, s)| *s)
+    }
+
+    /// Ranks assigned to an aggregator (including itself), in rank order —
+    /// the collection "chain".
+    pub fn members(&self, agg_rank: usize) -> Vec<usize> {
+        (0..self.nranks)
+            .filter(|r| self.agg_of_rank[*r] == agg_rank)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_one_per_node() {
+        let p = AggregationPlan::per_node(288, 36, 1).unwrap();
+        assert_eq!(p.num_aggregators(), 8);
+        // Aggregator of node k is rank k*36.
+        for r in 0..288 {
+            assert_eq!(p.agg_of_rank[r], (r / 36) * 36);
+        }
+        assert!(p.is_aggregator(72));
+        assert!(!p.is_aggregator(73));
+        assert_eq!(p.members(36).len(), 36);
+    }
+
+    #[test]
+    fn many_per_node() {
+        let p = AggregationPlan::per_node(72, 36, 4).unwrap();
+        assert_eq!(p.num_aggregators(), 8);
+        // every member's aggregator lives on the same node
+        for r in 0..72 {
+            assert_eq!(p.agg_of_rank[r] / 36, r / 36, "rank {r} crossed nodes");
+        }
+        // members are balanced: 9 per aggregator
+        for (a, _) in &p.subfile_of_agg {
+            assert_eq!(p.members(*a).len(), 9);
+        }
+    }
+
+    #[test]
+    fn all_ranks_aggregate_themselves_at_max() {
+        let p = AggregationPlan::per_node(36, 36, 36).unwrap();
+        assert_eq!(p.num_aggregators(), 36);
+        for r in 0..36 {
+            assert!(p.is_aggregator(r));
+            assert_eq!(p.members(r), vec![r]);
+        }
+    }
+
+    #[test]
+    fn aggs_clamped_to_ranks_per_node() {
+        let p = AggregationPlan::per_node(8, 4, 100).unwrap();
+        assert_eq!(p.num_aggregators(), 8);
+    }
+
+    #[test]
+    fn subfiles_dense_and_unique() {
+        let p = AggregationPlan::per_node(144, 36, 2).unwrap();
+        let mut subs: Vec<u32> = p.subfile_of_agg.iter().map(|(_, s)| *s).collect();
+        subs.sort_unstable();
+        assert_eq!(subs, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn indivisible_world_rejected() {
+        assert!(AggregationPlan::per_node(10, 4, 1).is_err());
+    }
+
+    #[test]
+    fn every_rank_covered_exactly_once() {
+        let p = AggregationPlan::per_node(72, 24, 3).unwrap();
+        let mut seen = vec![0; 72];
+        for (a, _) in &p.subfile_of_agg {
+            for m in p.members(*a) {
+                seen[m] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+}

@@ -1,0 +1,356 @@
+//! BP4-lite: ADIOS2's sub-file container format, reimplemented.
+//!
+//! A BP "file" is a directory (`foo.bp/`) holding
+//!
+//! * `data.0 … data.{M-1}` — one sub-file per aggregator, each a plain
+//!   concatenation of compressed block frames written in streaming order
+//!   (this is what kills file-lock contention vs. N-1 formats);
+//! * `md.idx` — the global metadata index written by rank 0: for every
+//!   step / variable / block, the producing rank, sub-file id, offset,
+//!   stored & raw lengths, the block's `start`/`count` selection, and
+//!   min/max statistics (ADIOS2's "smart metadata" that lets readers
+//!   reconstitute global arrays without touching every byte).
+//!
+//! The module owns the index record model ([`BlockRecord`], [`VarIndex`],
+//! [`StepIndex`]) and its serialization; the write path lives in
+//! `adios::engine::bp4`, the read path in [`reader`].
+
+pub mod reader;
+
+use crate::util::byteio::{Reader, Writer};
+use crate::{Error, Result};
+
+pub const MD_MAGIC: u32 = 0x42504C54; // "BPLT"
+pub const MD_VERSION: u32 = 1;
+
+/// One written block of one variable at one step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockRecord {
+    pub producer_rank: u32,
+    pub subfile: u32,
+    /// Byte offset of the frame within the sub-file.
+    pub offset: u64,
+    /// Stored (compressed frame) length in bytes.
+    pub stored: u64,
+    /// Raw (decompressed payload) length in bytes.
+    pub raw: u64,
+    pub start: Vec<u64>,
+    pub count: Vec<u64>,
+    pub min: f32,
+    pub max: f32,
+}
+
+impl BlockRecord {
+    pub fn write(&self, w: &mut Writer) {
+        w.u32(self.producer_rank);
+        w.u32(self.subfile);
+        w.u64(self.offset);
+        w.u64(self.stored);
+        w.u64(self.raw);
+        w.dims(&self.start);
+        w.dims(&self.count);
+        w.f32(self.min);
+        w.f32(self.max);
+    }
+
+    pub fn read(r: &mut Reader) -> Result<Self> {
+        Ok(BlockRecord {
+            producer_rank: r.u32()?,
+            subfile: r.u32()?,
+            offset: r.u64()?,
+            stored: r.u64()?,
+            raw: r.u64()?,
+            start: r.dims()?,
+            count: r.dims()?,
+            min: r.f32()?,
+            max: r.f32()?,
+        })
+    }
+}
+
+/// All blocks of one variable at one step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VarIndex {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub blocks: Vec<BlockRecord>,
+}
+
+impl VarIndex {
+    pub fn write(&self, w: &mut Writer) {
+        w.str(&self.name);
+        w.dims(&self.shape);
+        w.u32(self.blocks.len() as u32);
+        for b in &self.blocks {
+            b.write(w);
+        }
+    }
+
+    pub fn read(r: &mut Reader) -> Result<Self> {
+        let name = r.str()?;
+        let shape = r.dims()?;
+        let n = r.u32()? as usize;
+        let mut blocks = Vec::with_capacity(n);
+        for _ in 0..n {
+            blocks.push(BlockRecord::read(r)?);
+        }
+        Ok(VarIndex { name, shape, blocks })
+    }
+
+    /// Aggregate min/max across blocks.
+    pub fn minmax(&self) -> (f32, f32) {
+        self.blocks.iter().fold(
+            (f32::INFINITY, f32::NEG_INFINITY),
+            |(mn, mx), b| (mn.min(b.min), mx.max(b.max)),
+        )
+    }
+}
+
+/// The index of one step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepIndex {
+    pub vars: Vec<VarIndex>,
+}
+
+impl StepIndex {
+    pub fn write(&self, w: &mut Writer) {
+        w.u32(self.vars.len() as u32);
+        for v in &self.vars {
+            v.write(w);
+        }
+    }
+
+    pub fn read(r: &mut Reader) -> Result<Self> {
+        let n = r.u32()? as usize;
+        let mut vars = Vec::with_capacity(n);
+        for _ in 0..n {
+            vars.push(VarIndex::read(r)?);
+        }
+        Ok(StepIndex { vars })
+    }
+
+    pub fn var(&self, name: &str) -> Option<&VarIndex> {
+        self.vars.iter().find(|v| v.name == name)
+    }
+}
+
+/// Serialize the whole `md.idx` (all steps + sub-file count + global
+/// attributes — WRF stamps TITLE/START_DATE/etc. on every history file).
+pub fn write_metadata(steps: &[StepIndex], subfiles: u32, attrs: &[(String, String)]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MD_MAGIC);
+    w.u32(MD_VERSION);
+    w.u32(subfiles);
+    w.u32(attrs.len() as u32);
+    for (k, v) in attrs {
+        w.str(k);
+        w.str(v);
+    }
+    w.u32(steps.len() as u32);
+    for s in steps {
+        s.write(&mut w);
+    }
+    w.into_vec()
+}
+
+/// Parse `md.idx`; returns (steps, subfile count, attributes).
+pub fn read_metadata(bytes: &[u8]) -> Result<(Vec<StepIndex>, u32, Vec<(String, String)>)> {
+    let mut r = Reader::new(bytes);
+    if r.u32()? != MD_MAGIC {
+        return Err(Error::bp("bad md.idx magic"));
+    }
+    let ver = r.u32()?;
+    if ver != MD_VERSION {
+        return Err(Error::bp(format!("unsupported md.idx version {ver}")));
+    }
+    let subfiles = r.u32()?;
+    let nattrs = r.u32()? as usize;
+    let mut attrs = Vec::with_capacity(nattrs);
+    for _ in 0..nattrs {
+        attrs.push((r.str()?, r.str()?));
+    }
+    let nsteps = r.u32()? as usize;
+    let mut steps = Vec::with_capacity(nsteps);
+    for _ in 0..nsteps {
+        steps.push(StepIndex::read(&mut r)?);
+    }
+    Ok((steps, subfiles, attrs))
+}
+
+/// Does block `[start, start+count)` intersect selection `[s0, s0+c0)`?
+/// Returns the per-dim overlap `(lo, hi)` in global coordinates, or None.
+pub fn block_intersection(
+    b_start: &[u64],
+    b_count: &[u64],
+    s_start: &[u64],
+    s_count: &[u64],
+) -> Option<Vec<(u64, u64)>> {
+    let mut out = Vec::with_capacity(b_start.len());
+    for d in 0..b_start.len() {
+        let lo = b_start[d].max(s_start[d]);
+        let hi = (b_start[d] + b_count[d]).min(s_start[d] + s_count[d]);
+        if lo >= hi {
+            return None;
+        }
+        out.push((lo, hi));
+    }
+    Some(out)
+}
+
+/// Scatter a block into its place within a row-major global array.
+pub fn scatter_block(
+    global: &mut [f32],
+    shape: &[u64],
+    start: &[u64],
+    count: &[u64],
+    block: &[f32],
+) -> Result<()> {
+    if shape.len() != start.len() || shape.len() != count.len() {
+        return Err(Error::bp("scatter: rank mismatch"));
+    }
+    let want: u64 = count.iter().product();
+    if block.len() as u64 != want {
+        return Err(Error::bp(format!(
+            "scatter: block has {} elems, selection {want}",
+            block.len()
+        )));
+    }
+    // Row-major strides of the global array.
+    let nd = shape.len();
+    let mut strides = vec![1u64; nd];
+    for d in (0..nd.saturating_sub(1)).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    // Copy contiguous rows along the last dimension.
+    let row = count[nd - 1] as usize;
+    let rows: u64 = count[..nd - 1].iter().product();
+    let mut idx = vec![0u64; nd - 1];
+    for r_i in 0..rows.max(1) {
+        let mut off = start[nd - 1];
+        for d in 0..nd - 1 {
+            off += (start[d] + idx[d]) * strides[d];
+        }
+        let src = &block[r_i as usize * row..(r_i as usize + 1) * row];
+        global[off as usize..off as usize + row].copy_from_slice(src);
+        // Increment multi-index.
+        for d in (0..nd - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < count[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(rank: u32) -> BlockRecord {
+        BlockRecord {
+            producer_rank: rank,
+            subfile: rank / 4,
+            offset: 100 * rank as u64,
+            stored: 50,
+            raw: 200,
+            start: vec![0, (rank * 10) as u64],
+            count: vec![4, 10],
+            min: -1.0,
+            max: rank as f32,
+        }
+    }
+
+    #[test]
+    fn metadata_roundtrip() {
+        let steps = vec![
+            StepIndex {
+                vars: vec![VarIndex {
+                    name: "T".into(),
+                    shape: vec![4, 40],
+                    blocks: (0..4).map(rec).collect(),
+                }],
+            },
+            StepIndex {
+                vars: vec![VarIndex {
+                    name: "QVAPOR".into(),
+                    shape: vec![4, 40],
+                    blocks: (0..2).map(rec).collect(),
+                }],
+            },
+        ];
+        let attrs = vec![("TITLE".to_string(), "stormio".to_string())];
+        let bytes = write_metadata(&steps, 2, &attrs);
+        let (back, subfiles, back_attrs) = read_metadata(&bytes).unwrap();
+        assert_eq!(subfiles, 2);
+        assert_eq!(back, steps);
+        assert_eq!(back_attrs, attrs);
+        assert_eq!(back[0].var("T").unwrap().minmax(), (-1.0, 3.0));
+    }
+
+    #[test]
+    fn block_intersection_cases() {
+        // full overlap
+        assert_eq!(
+            block_intersection(&[0, 0], &[4, 4], &[0, 0], &[4, 4]),
+            Some(vec![(0, 4), (0, 4)])
+        );
+        // partial corner
+        assert_eq!(
+            block_intersection(&[0, 0], &[4, 4], &[2, 3], &[4, 4]),
+            Some(vec![(2, 4), (3, 4)])
+        );
+        // disjoint
+        assert_eq!(block_intersection(&[0, 0], &[2, 2], &[2, 0], &[2, 2]), None);
+        // touching edges are disjoint
+        assert_eq!(block_intersection(&[0], &[5], &[5], &[3]), None);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(read_metadata(&[0u8; 16]).is_err());
+    }
+
+    #[test]
+    fn scatter_2d() {
+        let shape = [4u64, 6];
+        let mut g = vec![0.0f32; 24];
+        // block covering rows 1..3, cols 2..5
+        let block: Vec<f32> = (0..6).map(|i| (i + 1) as f32).collect();
+        scatter_block(&mut g, &shape, &[1, 2], &[2, 3], &block).unwrap();
+        assert_eq!(g[1 * 6 + 2], 1.0);
+        assert_eq!(g[1 * 6 + 4], 3.0);
+        assert_eq!(g[2 * 6 + 2], 4.0);
+        assert_eq!(g[2 * 6 + 4], 6.0);
+        assert_eq!(g.iter().filter(|&&v| v != 0.0).count(), 6);
+    }
+
+    #[test]
+    fn scatter_3d_full_tiling() {
+        // 2x4x4 global tiled by 4 blocks of 2x2x2: every cell written once.
+        let shape = [2u64, 4, 4];
+        let mut g = vec![-1.0f32; 32];
+        let mut val = 0.0;
+        for sy in [0u64, 2] {
+            for sx in [0u64, 2] {
+                let block: Vec<f32> = (0..8).map(|_| { val += 1.0; val }).collect();
+                scatter_block(&mut g, &shape, &[0, sy, sx], &[2, 2, 2], &block).unwrap();
+            }
+        }
+        assert!(g.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn scatter_size_mismatch_rejected() {
+        let mut g = vec![0.0f32; 8];
+        assert!(scatter_block(&mut g, &[2, 4], &[0, 0], &[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn scatter_1d() {
+        let mut g = vec![0.0f32; 5];
+        scatter_block(&mut g, &[5], &[3], &[2], &[7.0, 8.0]).unwrap();
+        assert_eq!(g, vec![0.0, 0.0, 0.0, 7.0, 8.0]);
+    }
+}

@@ -1,0 +1,232 @@
+//! BP4-lite read path: open a `.bp` directory, browse steps/variables,
+//! reconstitute global arrays from sub-file block frames.
+//!
+//! This is what the paper's §IV converter and post-processing consumers
+//! use: the metadata index tells us exactly which byte ranges of which
+//! sub-files hold each block, so reads touch only what they need.
+
+use std::fs;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use super::{read_metadata, StepIndex};
+use crate::adios::operator;
+use crate::{Error, Result};
+
+/// Reader over a BP4-lite directory.
+pub struct BpReader {
+    dir: PathBuf,
+    steps: Vec<StepIndex>,
+    subfiles: u32,
+    /// Global attributes recorded at write time.
+    pub attrs: Vec<(String, String)>,
+}
+
+impl BpReader {
+    pub fn open(dir: impl AsRef<Path>) -> Result<BpReader> {
+        let dir = dir.as_ref().to_path_buf();
+        let md = fs::read(dir.join("md.idx"))
+            .map_err(|e| Error::bp(format!("cannot read {}/md.idx: {e}", dir.display())))?;
+        let (steps, subfiles, attrs) = read_metadata(&md)?;
+        Ok(BpReader {
+            dir,
+            steps,
+            subfiles,
+            attrs,
+        })
+    }
+
+    /// Attribute lookup.
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn num_subfiles(&self) -> u32 {
+        self.subfiles
+    }
+
+    pub fn step(&self, i: usize) -> Result<&StepIndex> {
+        self.steps
+            .get(i)
+            .ok_or_else(|| Error::bp(format!("step {i} out of range ({})", self.steps.len())))
+    }
+
+    /// Variable names available at a step.
+    pub fn var_names(&self, step: usize) -> Result<Vec<&str>> {
+        Ok(self.step(step)?.vars.iter().map(|v| v.name.as_str()).collect())
+    }
+
+    /// Global shape of a variable at a step.
+    pub fn var_shape(&self, step: usize, name: &str) -> Result<Vec<u64>> {
+        let v = self
+            .step(step)?
+            .var(name)
+            .ok_or_else(|| Error::bp(format!("no variable `{name}` at step {step}")))?;
+        Ok(v.shape.clone())
+    }
+
+    /// Global min/max from the index alone (no data read — the "smart
+    /// metadata" query path).
+    pub fn var_minmax(&self, step: usize, name: &str) -> Result<(f32, f32)> {
+        let v = self
+            .step(step)?
+            .var(name)
+            .ok_or_else(|| Error::bp(format!("no variable `{name}` at step {step}")))?;
+        Ok(v.minmax())
+    }
+
+    /// Read one block's frame bytes from its sub-file.
+    fn read_frame(&self, subfile: u32, offset: u64, stored: u64) -> Result<Vec<u8>> {
+        let path = self.dir.join(format!("data.{subfile}"));
+        let mut f = fs::File::open(&path)
+            .map_err(|e| Error::bp(format!("cannot open {}: {e}", path.display())))?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; stored as usize];
+        f.read_exact(&mut buf)
+            .map_err(|e| Error::bp(format!("short read in {}: {e}", path.display())))?;
+        Ok(buf)
+    }
+
+    /// Reconstitute the full global array of `name` at `step`.
+    pub fn read_var_global(&self, step: usize, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
+        let v = self
+            .step(step)?
+            .var(name)
+            .ok_or_else(|| Error::bp(format!("no variable `{name}` at step {step}")))?
+            .clone();
+        let total: u64 = v.shape.iter().product();
+        let mut global = vec![0.0f32; total as usize];
+        for b in &v.blocks {
+            let frame = self.read_frame(b.subfile, b.offset, b.stored)?;
+            let raw = operator::decompress(&frame)?;
+            if raw.len() as u64 != b.raw {
+                return Err(Error::bp(format!(
+                    "block of `{name}`: raw {} vs index {}",
+                    raw.len(),
+                    b.raw
+                )));
+            }
+            let vals = crate::util::bytes_to_f32_vec(&raw)?;
+            super::scatter_block(&mut global, &v.shape, &b.start, &b.count, &vals)?;
+        }
+        Ok((v.shape, global))
+    }
+
+    /// Read a box selection `[start, start+count)` of a variable — the
+    /// `SetSelection` path: only blocks whose extent intersects the box
+    /// are fetched and decompressed (this is what the sub-file metadata
+    /// index buys readers whose rank count ≠ writer count, §III-A).
+    ///
+    /// Returns the selection in row-major order (`count` shape).
+    pub fn read_var_selection(
+        &self,
+        step: usize,
+        name: &str,
+        start: &[u64],
+        count: &[u64],
+    ) -> Result<Vec<f32>> {
+        let v = self
+            .step(step)?
+            .var(name)
+            .ok_or_else(|| Error::bp(format!("no variable `{name}` at step {step}")))?
+            .clone();
+        let nd = v.shape.len();
+        if start.len() != nd || count.len() != nd {
+            return Err(Error::bp(format!(
+                "selection rank {} vs variable rank {nd}",
+                start.len()
+            )));
+        }
+        for d in 0..nd {
+            if count[d] == 0 || start[d] + count[d] > v.shape[d] {
+                return Err(Error::bp(format!(
+                    "selection [{}, {}) exceeds dim {d} extent {}",
+                    start[d],
+                    start[d] + count[d],
+                    v.shape[d]
+                )));
+            }
+        }
+        let total: u64 = count.iter().product();
+        let mut out = vec![0.0f32; total as usize];
+        // Row-major strides of the *selection* box.
+        let mut sel_strides = vec![1u64; nd];
+        for d in (0..nd.saturating_sub(1)).rev() {
+            sel_strides[d] = sel_strides[d + 1] * count[d + 1];
+        }
+        for b in &v.blocks {
+            let Some(overlap) = super::block_intersection(&b.start, &b.count, start, count)
+            else {
+                continue;
+            };
+            let frame = self.read_frame(b.subfile, b.offset, b.stored)?;
+            let raw = crate::adios::operator::decompress(&frame)?;
+            let vals = crate::util::bytes_to_f32_vec(&raw)?;
+            // Block-local strides.
+            let mut bl_strides = vec![1u64; nd];
+            for d in (0..nd.saturating_sub(1)).rev() {
+                bl_strides[d] = bl_strides[d + 1] * b.count[d + 1];
+            }
+            // Copy contiguous runs along the last dim; outer dims iterate
+            // via a linear counter decoded into the overlap box.
+            let (row_lo, row_hi) = overlap[nd - 1];
+            let row_len = (row_hi - row_lo) as usize;
+            let outer_rows: u64 = overlap[..nd - 1].iter().map(|(lo, hi)| hi - lo).product();
+            for r in 0..outer_rows.max(1) {
+                // Decode r into the outer multi-index (row-major).
+                let mut rem = r;
+                let mut src = (row_lo - b.start[nd - 1]) * bl_strides[nd - 1];
+                let mut dst = (row_lo - start[nd - 1]) * sel_strides[nd - 1];
+                for d in (0..nd - 1).rev() {
+                    let ext = overlap[d].1 - overlap[d].0;
+                    let coord = overlap[d].0 + rem % ext;
+                    rem /= ext;
+                    src += (coord - b.start[d]) * bl_strides[d];
+                    dst += (coord - start[d]) * sel_strides[d];
+                }
+                out[dst as usize..dst as usize + row_len]
+                    .copy_from_slice(&vals[src as usize..src as usize + row_len]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Sum of stored bytes across all blocks of a step (reporting).
+    pub fn stored_bytes(&self, step: usize) -> Result<u64> {
+        Ok(self
+            .step(step)?
+            .vars
+            .iter()
+            .flat_map(|v| v.blocks.iter())
+            .map(|b| b.stored)
+            .sum())
+    }
+}
+
+// Write-path tests live in `adios::engine::bp4` (round-trips through the
+// real engine); here we only test failure handling on malformed input.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(BpReader::open("/nonexistent/foo.bp").is_err());
+    }
+
+    #[test]
+    fn garbage_mdidx_is_error() {
+        let dir = std::env::temp_dir().join("stormio_bp_garbage.bp");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(dir.join("md.idx"), b"not an index").unwrap();
+        assert!(BpReader::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,278 @@
+//! Runtime XML configuration (`adios2.xml`), mirroring ADIOS2's surface:
+//!
+//! ```xml
+//! <adios-config>
+//!   <io name="wrf_history">
+//!     <engine type="BP4">
+//!       <parameter key="NumAggregatorsPerNode" value="1"/>
+//!       <parameter key="Target" value="burstbuffer"/>
+//!       <parameter key="DrainBB" value="true"/>
+//!     </engine>
+//!     <operator type="blosc">
+//!       <parameter key="codec" value="zstd"/>
+//!       <parameter key="shuffle" value="true"/>
+//!     </operator>
+//!   </io>
+//!   <io name="wrf_insitu">
+//!     <engine type="SST">
+//!       <parameter key="Address" value="127.0.0.1:40000"/>
+//!     </engine>
+//!   </io>
+//! </adios-config>
+//! ```
+//!
+//! The paper (§IV) notes per-variable operator entries in XML don't scale
+//! to WRF's 200+ variables, so — like their implementation — operators are
+//! configured once per IO (and overridable from `namelist.input`).
+
+use std::collections::BTreeMap;
+
+use crate::adios::engine::Target;
+use crate::adios::operator::{Codec, OperatorConfig};
+use crate::xml;
+use crate::{Error, Result};
+
+/// Which engine an IO opens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineKind {
+    Bp4,
+    Sst,
+    /// Discards data (measurement baseline, like adios2's NullEngine).
+    Null,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bp4" | "bp" | "file" | "filestream" => Ok(EngineKind::Bp4),
+            "sst" | "staging" => Ok(EngineKind::Sst),
+            "null" | "nullcore" => Ok(EngineKind::Null),
+            other => Err(Error::config(format!("unknown engine type `{other}`"))),
+        }
+    }
+}
+
+/// Parsed configuration of one `<io>` block.
+#[derive(Debug, Clone)]
+pub struct IoConfig {
+    pub name: String,
+    pub engine: EngineKind,
+    pub params: BTreeMap<String, String>,
+    pub operator: OperatorConfig,
+}
+
+impl IoConfig {
+    pub fn new(name: impl Into<String>, engine: EngineKind) -> Self {
+        IoConfig {
+            name: name.into(),
+            engine,
+            params: BTreeMap::new(),
+            operator: OperatorConfig::none(),
+        }
+    }
+
+    pub fn param(&self, key: &str) -> Option<&str> {
+        // ADIOS2 parameter keys are case-insensitive.
+        self.params
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(key))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn param_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.param(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("parameter {key}={v} is not an integer"))),
+        }
+    }
+
+    pub fn param_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.param(key).map(|v| v.to_ascii_lowercase()) {
+            None => Ok(default),
+            Some(v) => match v.as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                _ => Err(Error::config(format!("parameter {key}={v} is not a bool"))),
+            },
+        }
+    }
+
+    /// Aggregators per node (the paper's primary tuning knob).
+    pub fn aggregators_per_node(&self) -> Result<usize> {
+        self.param_usize("NumAggregatorsPerNode", 1)
+    }
+
+    /// File-engine target store.
+    pub fn target(&self) -> Result<Target> {
+        match self
+            .param("Target")
+            .unwrap_or("pfs")
+            .to_ascii_lowercase()
+            .as_str()
+        {
+            "pfs" | "filesystem" => Ok(Target::Pfs),
+            "burstbuffer" | "bb" | "nvme" => Ok(Target::BurstBuffer {
+                drain: self.param_bool("DrainBB", false)?,
+            }),
+            other => Err(Error::config(format!("unknown Target `{other}`"))),
+        }
+    }
+}
+
+/// A parsed `adios2.xml`.
+#[derive(Debug, Clone, Default)]
+pub struct AdiosConfig {
+    pub ios: Vec<IoConfig>,
+}
+
+impl AdiosConfig {
+    pub fn io(&self, name: &str) -> Option<&IoConfig> {
+        self.ios.iter().find(|io| io.name == name)
+    }
+
+    pub fn from_xml(doc: &str) -> Result<AdiosConfig> {
+        let root = xml::parse(doc)?;
+        if root.name != "adios-config" {
+            return Err(Error::config(format!(
+                "expected <adios-config> root, got <{}>",
+                root.name
+            )));
+        }
+        let mut ios = Vec::new();
+        for io_el in root.children_named("io") {
+            let name = io_el
+                .attr("name")
+                .ok_or_else(|| Error::config("<io> missing name attribute"))?;
+            let engine_el = io_el
+                .child("engine")
+                .ok_or_else(|| Error::config(format!("io `{name}` missing <engine>")))?;
+            let engine = EngineKind::parse(
+                engine_el
+                    .attr("type")
+                    .ok_or_else(|| Error::config("<engine> missing type"))?,
+            )?;
+            let mut cfg = IoConfig::new(name, engine);
+            for p in engine_el.children_named("parameter") {
+                let k = p
+                    .attr("key")
+                    .ok_or_else(|| Error::config("<parameter> missing key"))?;
+                let v = p
+                    .attr("value")
+                    .ok_or_else(|| Error::config("<parameter> missing value"))?;
+                cfg.params.insert(k.to_string(), v.to_string());
+            }
+            if let Some(op) = io_el.child("operator") {
+                let ty = op.attr("type").unwrap_or("blosc").to_ascii_lowercase();
+                if ty != "blosc" && ty != "compress" {
+                    return Err(Error::config(format!("unknown operator type `{ty}`")));
+                }
+                let mut codec = Codec::Lz4; // paper's WRF default
+                let mut shuffle = true;
+                let mut keep_bits = None;
+                for p in op.children_named("parameter") {
+                    match (p.attr("key"), p.attr("value")) {
+                        (Some("codec"), Some(v)) => codec = Codec::parse(v)?,
+                        (Some("shuffle"), Some(v)) => {
+                            shuffle = matches!(v.to_ascii_lowercase().as_str(), "true" | "1")
+                        }
+                        (Some("precision_bits"), Some(v)) => {
+                            // Lossy bit rounding (paper §VI future work).
+                            keep_bits = Some(v.parse::<u8>().map_err(|_| {
+                                Error::config(format!("precision_bits={v} is not an integer"))
+                            })?);
+                        }
+                        _ => {}
+                    }
+                }
+                cfg.operator = OperatorConfig {
+                    codec,
+                    shuffle: shuffle && codec != Codec::None,
+                    elem_size: 4,
+                    keep_bits,
+                };
+            }
+            ios.push(cfg);
+        }
+        Ok(AdiosConfig { ios })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+    <adios-config>
+      <io name="wrf_history">
+        <engine type="BP4">
+          <parameter key="NumAggregatorsPerNode" value="2"/>
+          <parameter key="Target" value="BurstBuffer"/>
+          <parameter key="DrainBB" value="true"/>
+        </engine>
+        <operator type="blosc">
+          <parameter key="codec" value="zstd"/>
+          <parameter key="shuffle" value="true"/>
+        </operator>
+      </io>
+      <io name="wrf_insitu">
+        <engine type="SST">
+          <parameter key="Address" value="127.0.0.1:40101"/>
+        </engine>
+      </io>
+    </adios-config>"#;
+
+    #[test]
+    fn parses_paper_style_config() {
+        let cfg = AdiosConfig::from_xml(DOC).unwrap();
+        let hist = cfg.io("wrf_history").unwrap();
+        assert_eq!(hist.engine, EngineKind::Bp4);
+        assert_eq!(hist.aggregators_per_node().unwrap(), 2);
+        assert_eq!(
+            hist.target().unwrap(),
+            Target::BurstBuffer { drain: true }
+        );
+        assert_eq!(hist.operator.codec, Codec::Zstd);
+        assert!(hist.operator.shuffle);
+
+        let insitu = cfg.io("wrf_insitu").unwrap();
+        assert_eq!(insitu.engine, EngineKind::Sst);
+        assert_eq!(insitu.param("Address"), Some("127.0.0.1:40101"));
+        // case-insensitive parameter lookup
+        assert_eq!(insitu.param("address"), Some("127.0.0.1:40101"));
+    }
+
+    #[test]
+    fn defaults_when_minimal() {
+        let cfg = AdiosConfig::from_xml(
+            r#"<adios-config><io name="x"><engine type="BP4"/></io></adios-config>"#,
+        )
+        .unwrap();
+        let io = cfg.io("x").unwrap();
+        assert_eq!(io.aggregators_per_node().unwrap(), 1);
+        assert_eq!(io.target().unwrap(), Target::Pfs);
+        assert_eq!(io.operator.codec, Codec::None);
+    }
+
+    #[test]
+    fn bad_engine_rejected() {
+        let r = AdiosConfig::from_xml(
+            r#"<adios-config><io name="x"><engine type="HDF5"/></io></adios-config>"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_name_rejected() {
+        let r = AdiosConfig::from_xml(
+            r#"<adios-config><io><engine type="BP4"/></io></adios-config>"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn wrong_root_rejected() {
+        assert!(AdiosConfig::from_xml("<config/>").is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Engine abstraction: the step-based write interface of ADIOS2.
+//!
+//! Engines are selected at run time (XML config / namelist), exactly like
+//! ADIOS2's `IO::Open`: `BP4` writes sub-files to the (virtual) PFS or the
+//! node-local burst buffer; `SST` streams steps to an in-situ consumer and
+//! never touches the file system.
+
+pub mod bp4;
+pub mod sst;
+
+use crate::adios::variable::Variable;
+use crate::cluster::Comm;
+use crate::sim::WriteCost;
+use crate::Result;
+
+/// Where a file engine physically lands its sub-files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Parallel file system (BeeGFS analog).
+    Pfs,
+    /// Node-local NVMe burst buffer; `drain` copies back to PFS in the
+    /// background (paper §V-B ran with drain disabled).
+    BurstBuffer { drain: bool },
+}
+
+/// Per-step write statistics (rank-0 view, CONUS-scale virtual times).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub step: usize,
+    pub bytes_raw: u64,
+    pub bytes_stored: u64,
+    pub real_secs: f64,
+    pub cost: WriteCost,
+}
+
+/// Aggregate report returned by `close` on rank 0.
+#[derive(Debug, Clone, Default)]
+pub struct EngineReport {
+    pub steps: Vec<StepStats>,
+    pub files_created: usize,
+}
+
+impl EngineReport {
+    /// Mean perceived (application-blocking) virtual write time per step.
+    pub fn mean_perceived(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.cost.perceived()).sum::<f64>() / self.steps.len() as f64
+    }
+    pub fn total_raw(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes_raw).sum()
+    }
+    pub fn total_stored(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes_stored).sum()
+    }
+    /// Mean measured wall-clock seconds per step (physical bytes).
+    pub fn mean_real(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.real_secs).sum::<f64>() / self.steps.len() as f64
+    }
+}
+
+/// Step-based writer engine (per-rank handle; collective calls take the
+/// rank's communicator).
+pub trait Engine: Send {
+    /// Attach a global attribute (WRF stamps TITLE/START_DATE/etc. on
+    /// every history file).  Engines without attribute support ignore it.
+    fn put_attr(&mut self, _key: &str, _value: &str) -> Result<()> {
+        Ok(())
+    }
+    /// Open a new output step.
+    fn begin_step(&mut self) -> Result<()>;
+    /// Queue a block put (data is consumed; engines may compress eagerly
+    /// or defer to `end_step`).
+    fn put_f32(&mut self, var: Variable, data: Vec<f32>) -> Result<()>;
+    /// Collective: flush the step through aggregation to the target.
+    fn end_step(&mut self, comm: &mut Comm) -> Result<()>;
+    /// Collective: finalize; rank 0 receives the report.
+    fn close(&mut self, comm: &mut Comm) -> Result<EngineReport>;
+}

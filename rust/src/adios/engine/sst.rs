@@ -1,0 +1,587 @@
+//! SST-lite: the Sustainable Staging Transport engine (paper §III-B, §V-F).
+//!
+//! SST connects data producers directly to consumers using the same
+//! step-based put/get API as the file engines: data bypasses the file
+//! system entirely and the producer buffers steps in memory while a
+//! background thread ships them to the consumer — so the *perceived*
+//! write time inside the application is just the buffer hand-off, and
+//! computation continues while the consumer works (Fig 8).
+//!
+//! The paper's fabric is RDMA over 100 GbE; our transport is TCP on
+//! localhost (DESIGN.md §Substitutions) with the same semantics: step
+//! framing, producer-side buffering with bounded queue back-pressure, and
+//! reader-side step iteration
+//! (`for fstep in adios2_fh` in their Python consumer).
+//!
+//! Wire protocol (little-endian):
+//! ```text
+//! frame   := u32 magic "SST1" | u8 type | u64 len | payload
+//! type    := 1 step-data | 2 bye
+//! payload := u32 nvars { str name | dims shape | u32 nblocks
+//!                        { dims start | dims count | u64 raw | bytes frame } }
+//! ```
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::adios::bp::scatter_block;
+use crate::adios::operator::{self, OperatorConfig};
+use crate::adios::variable::Variable;
+use crate::cluster::Comm;
+use crate::metrics::Stopwatch;
+use crate::sim::CostModel;
+use crate::util::byteio::{Reader, Writer};
+use crate::{Error, Result};
+
+use super::{Engine, EngineReport, StepStats};
+
+const MAGIC: u32 = 0x53535431; // "SST1"
+const TYPE_STEP: u8 = 1;
+const TYPE_BYE: u8 = 2;
+const TAG_SST_BLOCKS: u64 = 0x5353_0001;
+
+/// Producer-side queue depth before `end_step` blocks (back-pressure).
+const QUEUE_STEPS: usize = 4;
+
+fn write_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> Result<()> {
+    let mut hdr = [0u8; 13];
+    hdr[..4].copy_from_slice(&MAGIC.to_le_bytes());
+    hdr[4] = ty;
+    hdr[5..13].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    stream.write_all(&hdr)?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
+    let mut hdr = [0u8; 13];
+    stream
+        .read_exact(&mut hdr)
+        .map_err(|e| Error::sst(format!("peer closed mid-frame: {e}")))?;
+    let magic = u32::from_le_bytes(hdr[..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(Error::sst(format!("bad frame magic {magic:#x}")));
+    }
+    let ty = hdr[4];
+    let len = u64::from_le_bytes(hdr[5..13].try_into().unwrap()) as usize;
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    Ok((ty, payload))
+}
+
+/// Producer engine: rank 0 owns the socket + sender thread; all ranks
+/// funnel their step blocks to rank 0 (the aggregating-SST layout).
+pub struct SstEngine {
+    rank: usize,
+    operator: OperatorConfig,
+    cost: CostModel,
+    queue: Vec<(Variable, Vec<f32>)>,
+    in_step: bool,
+    step: usize,
+    /// rank 0 only:
+    tx: Option<SyncSender<Vec<u8>>>,
+    sender: Option<JoinHandle<Result<()>>>,
+    report: EngineReport,
+    closed: bool,
+}
+
+impl SstEngine {
+    /// Collective open: rank 0 connects to the consumer at `addr`
+    /// (retrying up to `timeout`), other ranks connect to nothing.
+    pub fn open(
+        addr: &str,
+        operator: OperatorConfig,
+        cost: CostModel,
+        comm: &Comm,
+        timeout: Duration,
+    ) -> Result<SstEngine> {
+        let mut tx = None;
+        let mut sender = None;
+        if comm.rank() == 0 {
+            let stream = connect_retry(addr, timeout)?;
+            let (s, r): (SyncSender<Vec<u8>>, Receiver<Vec<u8>>) = sync_channel(QUEUE_STEPS);
+            let handle = std::thread::spawn(move || sender_loop(stream, r));
+            tx = Some(s);
+            sender = Some(handle);
+        }
+        Ok(SstEngine {
+            rank: comm.rank(),
+            operator,
+            cost,
+            queue: Vec::new(),
+            in_step: false,
+            step: 0,
+            tx,
+            sender,
+            report: EngineReport::default(),
+            closed: false,
+        })
+    }
+}
+
+fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) if t0.elapsed() < timeout => {
+                std::thread::sleep(Duration::from_millis(20));
+                let _ = e;
+            }
+            Err(e) => return Err(Error::sst(format!("cannot connect to consumer {addr}: {e}"))),
+        }
+    }
+}
+
+fn sender_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) -> Result<()> {
+    for msg in rx {
+        if msg.is_empty() {
+            write_frame(&mut stream, TYPE_BYE, &[])?;
+            stream.flush()?;
+            return Ok(());
+        }
+        write_frame(&mut stream, TYPE_STEP, &msg)?;
+        stream.flush()?;
+    }
+    // Channel dropped without bye: still close politely.
+    let _ = write_frame(&mut stream, TYPE_BYE, &[]);
+    Ok(())
+}
+
+impl Engine for SstEngine {
+    fn begin_step(&mut self) -> Result<()> {
+        if self.in_step || self.closed {
+            return Err(Error::sst("begin_step on busy/closed engine"));
+        }
+        self.in_step = true;
+        Ok(())
+    }
+
+    fn put_f32(&mut self, var: Variable, data: Vec<f32>) -> Result<()> {
+        if !self.in_step {
+            return Err(Error::sst("put outside step"));
+        }
+        var.validate()?;
+        if var.local_len() != data.len() {
+            return Err(Error::sst(format!(
+                "put `{}`: {} elems vs selection {}",
+                var.name,
+                data.len(),
+                var.local_len()
+            )));
+        }
+        self.queue.push((var, data));
+        Ok(())
+    }
+
+    fn end_step(&mut self, comm: &mut Comm) -> Result<()> {
+        if !self.in_step {
+            return Err(Error::sst("end_step without begin_step"));
+        }
+        comm.barrier();
+        let sw = Stopwatch::start();
+        // Pack this rank's blocks (compress if an operator is configured).
+        let mut w = Writer::new();
+        w.u32(self.queue.len() as u32);
+        let mut raw = 0u64;
+        let mut stored = 0u64;
+        for (var, data) in self.queue.drain(..) {
+            let payload = crate::util::f32_slice_as_bytes(&data);
+            let frame = operator::compress(payload, self.operator)?;
+            raw += payload.len() as u64;
+            stored += frame.len() as u64;
+            w.str(&var.name);
+            w.dims(&var.shape);
+            w.dims(&var.start);
+            w.dims(&var.count);
+            w.u64(payload.len() as u64);
+            w.bytes(&frame);
+        }
+        let tag = TAG_SST_BLOCKS + self.step as u64 * 4;
+        let _ = (raw, stored); // totals recomputed exactly at rank 0
+        let gathered = comm.gather(0, w.into_vec(), tag)?;
+
+        if self.rank == 0 {
+            // Merge rank messages into one step payload, accumulating the
+            // exact raw/wire byte totals as we parse.
+            let mut out = Writer::new();
+            let mut t_raw = 0u64;
+            let mut t_stored = 0u64;
+            let mut entries: Vec<(String, Vec<u64>, Vec<(Vec<u64>, Vec<u64>, u64, Vec<u8>)>)> =
+                Vec::new();
+            for msg in &gathered {
+                let mut r = Reader::new(msg);
+                let n = r.u32()? as usize;
+                for _ in 0..n {
+                    let name = r.str()?;
+                    let shape = r.dims()?;
+                    let start = r.dims()?;
+                    let count = r.dims()?;
+                    let raw_len = r.u64()?;
+                    let frame = r.bytes()?;
+                    t_raw += raw_len;
+                    t_stored += frame.len() as u64;
+                    match entries.iter_mut().find(|(n2, _, _)| n2 == &name) {
+                        Some((_, _, blocks)) => blocks.push((start, count, raw_len, frame)),
+                        None => entries.push((name, shape, vec![(start, count, raw_len, frame)])),
+                    }
+                }
+            }
+            out.u32(entries.len() as u32);
+            for (name, shape, blocks) in &entries {
+                out.str(name);
+                out.dims(shape);
+                out.u32(blocks.len() as u32);
+                for (start, count, raw_len, frame) in blocks {
+                    out.dims(start);
+                    out.dims(count);
+                    out.u64(*raw_len);
+                    out.bytes(frame);
+                }
+            }
+            let payload = out.into_vec();
+            // Enqueue for the background sender (blocks only when the
+            // consumer is QUEUE_STEPS behind — SST back-pressure).
+            self.tx
+                .as_ref()
+                .expect("rank0 has sender")
+                .send(payload)
+                .map_err(|_| Error::sst("sender thread died"))?;
+
+            let hw = &self.cost.hw;
+            let mut cost = crate::sim::WriteCost::default();
+            cost.push("buffer", self.cost.t_buffer_copy(hw.scaled(t_raw)));
+            cost.push("sync", 1e-3);
+            cost.push_background("transfer", self.cost.t_stream_transfer(hw.scaled(t_stored)));
+            self.report.steps.push(StepStats {
+                step: self.step,
+                bytes_raw: t_raw,
+                bytes_stored: t_stored,
+                real_secs: sw.secs(),
+                cost,
+            });
+        }
+        comm.barrier();
+        self.step += 1;
+        self.in_step = false;
+        Ok(())
+    }
+
+    fn close(&mut self, comm: &mut Comm) -> Result<EngineReport> {
+        if self.closed {
+            return Err(Error::sst("double close"));
+        }
+        self.closed = true;
+        comm.barrier();
+        if self.rank == 0 {
+            if let Some(tx) = self.tx.take() {
+                tx.send(Vec::new()).ok(); // bye sentinel
+            }
+            if let Some(h) = self.sender.take() {
+                h.join()
+                    .map_err(|_| Error::sst("sender thread panicked"))??;
+            }
+            Ok(std::mem::take(&mut self.report))
+        } else {
+            Ok(EngineReport::default())
+        }
+    }
+}
+
+/// One received step on the consumer side.
+#[derive(Debug, Clone)]
+pub struct SstStep {
+    pub index: usize,
+    vars: Vec<(String, Vec<u64>, Vec<(Vec<u64>, Vec<u64>, u64, Vec<u8>)>)>,
+}
+
+impl SstStep {
+    pub fn var_names(&self) -> Vec<&str> {
+        self.vars.iter().map(|(n, _, _)| n.as_str()).collect()
+    }
+
+    pub fn var_shape(&self, name: &str) -> Option<&[u64]> {
+        self.vars
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, s, _)| s.as_slice())
+    }
+
+    /// Reconstitute the global array of one variable.
+    pub fn read_var_global(&self, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
+        let (_, shape, blocks) = self
+            .vars
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .ok_or_else(|| Error::sst(format!("step has no variable `{name}`")))?;
+        let total: u64 = shape.iter().product();
+        let mut global = vec![0.0f32; total as usize];
+        for (start, count, raw_len, frame) in blocks {
+            let rawb = operator::decompress(frame)?;
+            if rawb.len() as u64 != *raw_len {
+                return Err(Error::sst("raw length mismatch in stream block"));
+            }
+            let vals = crate::util::bytes_to_f32_vec(&rawb)?;
+            scatter_block(&mut global, shape, start, count, &vals)?;
+        }
+        Ok((shape.clone(), global))
+    }
+
+    /// Total stored (wire) bytes of this step.
+    pub fn wire_bytes(&self) -> u64 {
+        self.vars
+            .iter()
+            .flat_map(|(_, _, b)| b.iter())
+            .map(|(_, _, _, f)| f.len() as u64)
+            .sum()
+    }
+}
+
+/// Consumer: listens for one producer connection and iterates steps.
+pub struct SstConsumer {
+    stream: TcpStream,
+    next_index: usize,
+    done: bool,
+}
+
+impl SstConsumer {
+    /// Bind `addr` and return a factory that accepts the producer.
+    pub fn listen(addr: &str) -> Result<SstListener> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::sst(format!("cannot bind {addr}: {e}")))?;
+        Ok(SstListener { listener })
+    }
+
+    /// Next step, or `None` after the producer's bye.
+    pub fn next_step(&mut self) -> Result<Option<SstStep>> {
+        if self.done {
+            return Ok(None);
+        }
+        let (ty, payload) = read_frame(&mut self.stream)?;
+        match ty {
+            TYPE_BYE => {
+                self.done = true;
+                Ok(None)
+            }
+            TYPE_STEP => {
+                let mut r = Reader::new(&payload);
+                let nvars = r.u32()? as usize;
+                let mut vars = Vec::with_capacity(nvars);
+                for _ in 0..nvars {
+                    let name = r.str()?;
+                    let shape = r.dims()?;
+                    let nblocks = r.u32()? as usize;
+                    let mut blocks = Vec::with_capacity(nblocks);
+                    for _ in 0..nblocks {
+                        let start = r.dims()?;
+                        let count = r.dims()?;
+                        let raw = r.u64()?;
+                        let frame = r.bytes()?;
+                        blocks.push((start, count, raw, frame));
+                    }
+                    vars.push((name, shape, blocks));
+                }
+                let idx = self.next_index;
+                self.next_index += 1;
+                Ok(Some(SstStep { index: idx, vars }))
+            }
+            other => Err(Error::sst(format!("unexpected frame type {other}"))),
+        }
+    }
+}
+
+/// Bound listener; `accept` blocks until the producer connects.
+pub struct SstListener {
+    listener: TcpListener,
+}
+
+impl SstListener {
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(self.listener.local_addr()?.to_string())
+    }
+    pub fn accept(self) -> Result<SstConsumer> {
+        let (stream, _) = self
+            .listener
+            .accept()
+            .map_err(|e| Error::sst(format!("accept failed: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(SstConsumer {
+            stream,
+            next_index: 0,
+            done: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::operator::Codec;
+    use crate::cluster::run_world;
+    use crate::sim::HardwareSpec;
+
+    fn world_stream(codec: Codec, steps: usize) -> (Vec<SstStep>, EngineReport) {
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let consumer = std::thread::spawn(move || {
+            let mut c = listener.accept().unwrap();
+            let mut got = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                got.push(s);
+            }
+            got
+        });
+
+        let reports = run_world(4, 2, move |mut comm| {
+            let mut eng = SstEngine::open(
+                &addr,
+                OperatorConfig::blosc(codec),
+                CostModel::new(HardwareSpec::paper_testbed(2)),
+                &comm,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..steps {
+                eng.begin_step().unwrap();
+                let data: Vec<f32> = (0..8).map(|i| (s * 100) as f32 + (r * 8 + i) as f32).collect();
+                let var = Variable::global("THETA", &[4, 8], &[r, 0], &[1, 8]).unwrap();
+                eng.put_f32(var, data).unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap()
+        });
+        let got = consumer.join().unwrap();
+        (got, reports.into_iter().next().unwrap())
+    }
+
+    #[test]
+    fn stream_roundtrip_uncompressed() {
+        let (steps, report) = world_stream(Codec::None, 3);
+        assert_eq!(steps.len(), 3);
+        assert_eq!(report.steps.len(), 3);
+        for (s, step) in steps.iter().enumerate() {
+            let (shape, g) = step.read_var_global("THETA").unwrap();
+            assert_eq!(shape, vec![4, 8]);
+            for i in 0..32 {
+                assert_eq!(g[i], (s * 100) as f32 + i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip_compressed() {
+        let (steps, report) = world_stream(Codec::Zstd, 2);
+        assert_eq!(steps.len(), 2);
+        let (_, g) = steps[1].read_var_global("THETA").unwrap();
+        assert_eq!(g[5], 105.0);
+        // Compressibility on realistic payload sizes: stream a smooth
+        // 16 KiB field and check wire bytes shrink.
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let consumer = std::thread::spawn(move || {
+            let mut c = listener.accept().unwrap();
+            let mut wire = 0u64;
+            while let Some(s) = c.next_step().unwrap() {
+                wire += s.wire_bytes();
+            }
+            wire
+        });
+        let reports = run_world(1, 1, move |mut comm| {
+            let mut eng = SstEngine::open(
+                &addr,
+                OperatorConfig::blosc(Codec::Zstd),
+                CostModel::new(HardwareSpec::paper_testbed(1)),
+                &comm,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            eng.begin_step().unwrap();
+            let data: Vec<f32> = (0..4096).map(|i| 280.0 + (i as f32 * 0.01).sin()).collect();
+            let var = Variable::whole("THETA", &[4096]).unwrap();
+            eng.put_f32(var, data).unwrap();
+            eng.end_step(&mut comm).unwrap();
+            eng.close(&mut comm).unwrap()
+        });
+        let wire = consumer.join().unwrap();
+        let rep = &reports[0];
+        assert_eq!(rep.total_raw(), 4096 * 4);
+        assert!(rep.total_stored() < rep.total_raw() / 2, "zstd should halve smooth field");
+        assert_eq!(wire, rep.total_stored());
+        let _ = report;
+    }
+
+    #[test]
+    fn perceived_cost_is_buffer_not_transfer() {
+        let (_, report) = world_stream(Codec::None, 1);
+        let s = &report.steps[0];
+        let perceived = s.cost.perceived();
+        let durable = s.cost.durable();
+        assert!(perceived < durable, "transfer must be background");
+        assert!(s.cost.phases.iter().any(|p| p.name == "transfer" && !p.blocking));
+    }
+
+    #[test]
+    fn backpressure_slow_consumer_no_loss() {
+        // Producer streams more steps than QUEUE_STEPS while the consumer
+        // drains slowly: end_step must block (back-pressure), never drop.
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let nsteps = QUEUE_STEPS * 3;
+        let consumer = std::thread::spawn(move || {
+            let mut c = listener.accept().unwrap();
+            let mut sums = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                std::thread::sleep(Duration::from_millis(15)); // slow reader
+                let (_, g) = s.read_var_global("X").unwrap();
+                sums.push(g.iter().sum::<f32>());
+            }
+            sums
+        });
+        run_world(1, 1, move |mut comm| {
+            let mut eng = SstEngine::open(
+                &addr,
+                OperatorConfig::none(),
+                CostModel::new(HardwareSpec::paper_testbed(1)),
+                &comm,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            for s in 0..nsteps {
+                eng.begin_step().unwrap();
+                eng.put_f32(
+                    Variable::whole("X", &[64]).unwrap(),
+                    vec![s as f32; 64],
+                )
+                .unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap();
+        });
+        let sums = consumer.join().unwrap();
+        assert_eq!(sums.len(), nsteps);
+        for (s, sum) in sums.iter().enumerate() {
+            assert_eq!(*sum, (s * 64) as f32, "step {s} corrupted/reordered");
+        }
+    }
+
+    #[test]
+    fn connect_timeout_errors() {
+        // Nothing listens on this port.
+        let r = connect_retry("127.0.0.1:1", Duration::from_millis(50));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_var_is_error() {
+        let (steps, _) = world_stream(Codec::None, 1);
+        assert!(steps[0].read_var_global("NOPE").is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! BloscLZ-style fast LZ codec, implemented from scratch.
+//!
+//! BloscLZ (Blosc's native codec, derived from FastLZ) trades ratio for
+//! speed: tiny window, 3-byte minimum match, byte-granular control codes.
+//! This implementation keeps that profile — a 3-byte-min-match LZ77 with a
+//! 16 KiB window and run-length fast path — so that in Fig 5/6 BloscLZ
+//! lands where the paper puts it: faster but lighter compression than
+//! Zstd/Zlib, similar ballpark to LZ4.
+//!
+//! Encoding (little-endian):
+//! ```text
+//! control byte c:
+//!   c & 0x80 == 0  → literal run of (c & 0x7f) + 1 bytes follows
+//!   c & 0x80 != 0  → match: len = (c & 0x7f) + MIN_MATCH, then
+//!                    u8 extension while byte == 255 (adds 255 each),
+//!                    then u16 LE offset (1-based)
+//! ```
+
+use crate::{Error, Result};
+
+const MIN_MATCH: usize = 3;
+const WINDOW: usize = 1 << 14; // 16 KiB
+const HASH_LOG: usize = 13;
+const HASH_SIZE: usize = 1 << HASH_LOG;
+const MAX_LITERAL: usize = 128;
+
+#[inline]
+fn hash3(b: &[u8], i: usize) -> usize {
+    let v = (b[i] as u32) | ((b[i + 1] as u32) << 8) | ((b[i + 2] as u32) << 16);
+    (v.wrapping_mul(2654435761) >> (32 - HASH_LOG)) as usize % HASH_SIZE
+}
+
+fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    for chunk in lits.chunks(MAX_LITERAL) {
+        out.push((chunk.len() - 1) as u8);
+        out.extend_from_slice(chunk);
+    }
+}
+
+/// Compress with the BloscLZ-style scheme.
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let n = src.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    if n < MIN_MATCH + 2 {
+        if n > 0 {
+            flush_literals(&mut out, src);
+        }
+        return out;
+    }
+    let mut table = vec![0u32; HASH_SIZE];
+    let mut anchor = 0usize;
+    let mut i = 0usize;
+    let limit = n - MIN_MATCH - 1;
+
+    while i <= limit {
+        let h = hash3(src, i);
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if cand > 0 {
+            let cand = cand - 1;
+            let dist = i - cand;
+            if dist >= 1 && dist <= WINDOW && src[cand..cand + MIN_MATCH] == src[i..i + MIN_MATCH]
+            {
+                // Extend 8 bytes at a time (same fast path as lz4.rs).
+                let max_m = n - i;
+                let mut mlen = MIN_MATCH;
+                while mlen + 8 <= max_m {
+                    let x = u64::from_le_bytes(src[cand + mlen..cand + mlen + 8].try_into().unwrap())
+                        ^ u64::from_le_bytes(src[i + mlen..i + mlen + 8].try_into().unwrap());
+                    if x != 0 {
+                        mlen += (x.trailing_zeros() / 8) as usize;
+                        break;
+                    }
+                    mlen += 8;
+                }
+                while mlen < max_m && src[cand + mlen] == src[i + mlen] {
+                    mlen += 1;
+                }
+                flush_literals(&mut out, &src[anchor..i]);
+                // control byte + extension
+                let coded = mlen - MIN_MATCH;
+                out.push(0x80 | (coded.min(127)) as u8);
+                if coded >= 127 {
+                    let mut rest = coded - 127;
+                    while rest >= 255 {
+                        out.push(255);
+                        rest -= 255;
+                    }
+                    out.push(rest as u8);
+                }
+                out.extend_from_slice(&(dist as u16).to_le_bytes());
+                i += mlen;
+                anchor = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    flush_literals(&mut out, &src[anchor..]);
+    out
+}
+
+/// Decompress; `raw_len` is the exact decompressed size.
+pub fn decompress(src: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let err = |m: &str| Error::Compress {
+        codec: "blosclz",
+        msg: m.to_string(),
+    };
+    let mut out = Vec::with_capacity(raw_len);
+    let mut p = 0usize;
+    while p < src.len() {
+        let c = src[p];
+        p += 1;
+        if c & 0x80 == 0 {
+            let ll = (c as usize & 0x7f) + 1;
+            if p + ll > src.len() {
+                return Err(err("literal run exceeds input"));
+            }
+            out.extend_from_slice(&src[p..p + ll]);
+            p += ll;
+        } else {
+            let mut mlen = (c & 0x7f) as usize;
+            if mlen == 127 {
+                loop {
+                    let b = *src.get(p).ok_or_else(|| err("truncated length ext"))?;
+                    p += 1;
+                    mlen += b as usize;
+                    if b != 255 {
+                        break;
+                    }
+                }
+            }
+            let mlen = mlen + MIN_MATCH;
+            if p + 2 > src.len() {
+                return Err(err("truncated offset"));
+            }
+            let dist = u16::from_le_bytes([src[p], src[p + 1]]) as usize;
+            p += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(err("invalid offset"));
+            }
+            let start = out.len() - dist;
+            if dist >= mlen {
+                out.extend_from_within(start..start + mlen);
+            } else {
+                for k in 0..mlen {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    if out.len() != raw_len {
+        return Err(err(&format!(
+            "decompressed {} bytes, expected {raw_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn empty_tiny_basic() {
+        roundtrip(b"");
+        roundtrip(b"ab");
+        roundtrip(b"abcabcabcabc");
+        roundtrip(b"the quick brown fox jumps over the lazy dog");
+    }
+
+    #[test]
+    fn long_runs_compress_hard() {
+        let data = vec![0u8; 200_000];
+        let c = compress(&data);
+        assert!(c.len() < 2_000);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn long_match_extension_path() {
+        // One long literal prefix then a giant repeat > 127+255 match len.
+        let mut data = Vec::new();
+        data.extend_from_slice(b"0123456789abcdef");
+        data.extend(std::iter::repeat(b'Z').take(5000));
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn random_data_survives() {
+        let mut rng = Rng::new(77);
+        for len in [1usize, 127, 128, 129, 255, 256, 8191, 20_000] {
+            let mut d = vec![0u8; len];
+            rng.fill_bytes(&mut d);
+            roundtrip(&d);
+        }
+    }
+
+    #[test]
+    fn window_limit_respected() {
+        // Repeat a block at a distance beyond the 16 KiB window: must still
+        // round-trip (compressor simply won't find the far match).
+        let mut data = vec![0u8; 40_000];
+        let mut rng = Rng::new(3);
+        rng.fill_bytes(&mut data[..2000]);
+        let (head, tail) = data.split_at_mut(2000);
+        tail[36_000 - 2000..36_000 - 2000 + 2000].copy_from_slice(head);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn faster_but_lighter_than_zlib_on_field_data() {
+        // Profile check: blosclz (with shuffle) should compress smooth f32
+        // fields, but not as tightly as zlib — that ordering is what the
+        // paper's Fig 6 shows for BloscLZ vs Zlib.
+        let vals: Vec<f32> = (0..131072)
+            .map(|i| ((i as f32) * 0.0007).cos() * 5.0 + 280.0)
+            .collect();
+        let shuffled =
+            super::super::shuffle::shuffle(crate::util::f32_slice_as_bytes(&vals), 4);
+        let ours = compress(&shuffled).len();
+        let mut z = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::new(6));
+        use std::io::Write;
+        z.write_all(&shuffled).unwrap();
+        let zlib = z.finish().unwrap().len();
+        assert!(ours < shuffled.len(), "must actually compress");
+        assert!(zlib < ours, "zlib should be tighter: {zlib} vs {ours}");
+    }
+
+    #[test]
+    fn corrupt_input_no_panic() {
+        let data: Vec<u8> = (0..500).map(|i| (i % 40) as u8).collect();
+        let mut c = compress(&data);
+        for i in (0..c.len()).step_by(3) {
+            c[i] = c[i].wrapping_add(13);
+        }
+        let _ = decompress(&c, data.len()); // must not panic
+    }
+}

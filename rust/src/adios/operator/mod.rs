@@ -1,0 +1,412 @@
+//! In-line data operators: the Blosc meta-compressor (paper §III-B, §V-D).
+//!
+//! ADIOS2 applies "operators" to variable payloads in the write path; the
+//! paper uses the Blosc lossless meta-compressor with four codecs
+//! (BloscLZ, LZ4, Zlib, Zstd) and byte-shuffle pre-conditioning.  This
+//! module reproduces that stack:
+//!
+//! * [`shuffle`] — Blosc's byte-transpose filter;
+//! * [`lz4`] — real LZ4 block format, from scratch (no crate offline);
+//! * [`blosclz`] — a FastLZ-profile codec, from scratch;
+//! * Zlib via `flate2`, Zstd via the `zstd` crate (both in the vendor set).
+//!
+//! Every compressed buffer carries a 12-byte header
+//! `[codec u8][shuffle u8][reserved u16][raw_len u64]` so the read path is
+//! self-describing, like Blosc frames.
+
+pub mod blosclz;
+pub mod lz4;
+pub mod shuffle;
+
+use std::io::Write as _;
+
+use crate::{Error, Result};
+
+/// Compression codec selection (namelist `adios2_compression`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Codec {
+    None,
+    BloscLz,
+    Lz4,
+    Zlib,
+    Zstd,
+}
+
+impl Codec {
+    /// All real codecs (the Fig 5/6 sweep).
+    pub const ALL: [Codec; 4] = [Codec::BloscLz, Codec::Lz4, Codec::Zlib, Codec::Zstd];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::BloscLz => "blosclz",
+            Codec::Lz4 => "lz4",
+            Codec::Zlib => "zlib",
+            Codec::Zstd => "zstd",
+        }
+    }
+
+    /// Parse a namelist/XML codec name.
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s.to_ascii_lowercase().as_str() {
+            "" | "none" | "off" => Ok(Codec::None),
+            "blosclz" | "blosc" => Ok(Codec::BloscLz),
+            "lz4" => Ok(Codec::Lz4),
+            "zlib" | "deflate" => Ok(Codec::Zlib),
+            "zstd" | "zstandard" => Ok(Codec::Zstd),
+            other => Err(Error::config(format!("unknown codec `{other}`"))),
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::BloscLz => 1,
+            Codec::Lz4 => 2,
+            Codec::Zlib => 3,
+            Codec::Zstd => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Codec> {
+        Ok(match c {
+            0 => Codec::None,
+            1 => Codec::BloscLz,
+            2 => Codec::Lz4,
+            3 => Codec::Zlib,
+            4 => Codec::Zstd,
+            other => {
+                return Err(Error::Compress {
+                    codec: "frame",
+                    msg: format!("unknown codec code {other}"),
+                })
+            }
+        })
+    }
+}
+
+/// Operator configuration applied to variable payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OperatorConfig {
+    pub codec: Codec,
+    /// Byte-shuffle before compression (Blosc default: on).
+    pub shuffle: bool,
+    /// Element size for the shuffle filter (4 for f32 fields).
+    pub elem_size: usize,
+    /// Lossy mantissa bit-rounding (the paper's §VI future work): keep
+    /// only the top `keep_bits` of the f32 mantissa (round-to-nearest)
+    /// before lossless coding.  `None` = lossless.  Relative error is
+    /// bounded by `2^-(keep_bits+1)`.
+    pub keep_bits: Option<u8>,
+}
+
+impl OperatorConfig {
+    pub fn none() -> Self {
+        OperatorConfig {
+            codec: Codec::None,
+            shuffle: false,
+            elem_size: 4,
+            keep_bits: None,
+        }
+    }
+    pub fn blosc(codec: Codec) -> Self {
+        OperatorConfig {
+            codec,
+            shuffle: codec != Codec::None,
+            elem_size: 4,
+            keep_bits: None,
+        }
+    }
+    /// Lossy variant (bit-rounded to `keep_bits` mantissa bits).
+    pub fn blosc_lossy(codec: Codec, keep_bits: u8) -> Self {
+        OperatorConfig {
+            keep_bits: Some(keep_bits.min(23)),
+            ..Self::blosc(codec)
+        }
+    }
+}
+
+/// Round-to-nearest mantissa truncation of an f32 bit pattern, keeping
+/// `keep` mantissa bits (classic "bit grooming"/bit rounding — the lossy
+/// pre-filter the paper proposes studying for NWP output).
+#[inline]
+pub fn bit_round_f32(bits: u32, keep: u32) -> u32 {
+    debug_assert!(keep <= 23);
+    let drop = 23 - keep;
+    if drop == 0 {
+        return bits;
+    }
+    // NaN/Inf pass through untouched.
+    if bits & 0x7F80_0000 == 0x7F80_0000 {
+        return bits;
+    }
+    let half = 1u32 << (drop - 1);
+    let rounded = bits.wrapping_add(half);
+    // Carry into the exponent is fine (rounds magnitude up a binade).
+    rounded & !((1u32 << drop) - 1)
+}
+
+/// Apply bit rounding in-place over little-endian f32 bytes.
+fn bit_round_bytes(data: &mut [u8], keep: u32) {
+    for chunk in data.chunks_exact_mut(4) {
+        let bits = u32::from_le_bytes(chunk.try_into().unwrap());
+        chunk.copy_from_slice(&bit_round_f32(bits, keep).to_le_bytes());
+    }
+}
+
+const FRAME_HEADER: usize = 12;
+
+/// Compress `data` into a self-describing frame.
+pub fn compress(data: &[u8], cfg: OperatorConfig) -> Result<Vec<u8>> {
+    let mut frame = Vec::with_capacity(FRAME_HEADER + data.len() / 2);
+    frame.push(cfg.codec.code());
+    frame.push(if cfg.shuffle { cfg.elem_size as u8 } else { 0 });
+    frame.extend_from_slice(&[0u8, 0]);
+    frame.extend_from_slice(&(data.len() as u64).to_le_bytes());
+
+    // Optional lossy pre-filter (bit rounding), then optional shuffle.
+    let rounded;
+    let data: &[u8] = if let Some(keep) = cfg.keep_bits {
+        let mut d = data.to_vec();
+        bit_round_bytes(&mut d, keep.min(23) as u32);
+        rounded = d;
+        &rounded
+    } else {
+        data
+    };
+    let shuffled;
+    let body: &[u8] = if cfg.shuffle && cfg.codec != Codec::None {
+        shuffled = shuffle::shuffle(data, cfg.elem_size.max(1));
+        &shuffled
+    } else {
+        data
+    };
+
+    match cfg.codec {
+        Codec::None => frame.extend_from_slice(data),
+        Codec::BloscLz => frame.extend_from_slice(&blosclz::compress(body)),
+        Codec::Lz4 => frame.extend_from_slice(&lz4::compress(body)),
+        Codec::Zlib => {
+            let mut enc =
+                flate2::write::ZlibEncoder::new(&mut frame, flate2::Compression::new(4));
+            enc.write_all(body)?;
+            enc.finish()?;
+        }
+        Codec::Zstd => {
+            let c = zstd::bulk::compress(body, 3).map_err(|e| Error::Compress {
+                codec: "zstd",
+                msg: e.to_string(),
+            })?;
+            frame.extend_from_slice(&c);
+        }
+    }
+    Ok(frame)
+}
+
+/// Decompress a frame produced by [`compress`].
+pub fn decompress(frame: &[u8]) -> Result<Vec<u8>> {
+    if frame.len() < FRAME_HEADER {
+        return Err(Error::Compress {
+            codec: "frame",
+            msg: "frame shorter than header".into(),
+        });
+    }
+    let codec = Codec::from_code(frame[0])?;
+    let elem = frame[1] as usize;
+    let raw_len = u64::from_le_bytes(frame[4..12].try_into().unwrap()) as usize;
+    let body = &frame[FRAME_HEADER..];
+
+    let out = match codec {
+        Codec::None => body.to_vec(),
+        Codec::BloscLz => blosclz::decompress(body, raw_len)?,
+        Codec::Lz4 => lz4::decompress(body, raw_len)?,
+        Codec::Zlib => {
+            let mut out = Vec::with_capacity(raw_len);
+            use std::io::Read;
+            flate2::read::ZlibDecoder::new(body).read_to_end(&mut out)?;
+            out
+        }
+        Codec::Zstd => zstd::bulk::decompress(body, raw_len).map_err(|e| Error::Compress {
+            codec: "zstd",
+            msg: e.to_string(),
+        })?,
+    };
+    if out.len() != raw_len {
+        return Err(Error::Compress {
+            codec: "frame",
+            msg: format!("raw length mismatch: {} vs {raw_len}", out.len()),
+        });
+    }
+    if elem > 0 && codec != Codec::None {
+        Ok(shuffle::unshuffle(&out, elem))
+    } else {
+        Ok(out)
+    }
+}
+
+/// Measured codec throughputs (bytes/s, single thread) used to charge
+/// compression phases in the virtual-time model with *real* numbers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CodecThroughput {
+    pub compress_bps: f64,
+    pub ratio: f64,
+}
+
+/// Measure compression throughput + ratio of `cfg` on `sample`.
+pub fn measure_throughput(sample: &[u8], cfg: OperatorConfig) -> Result<CodecThroughput> {
+    let t0 = std::time::Instant::now();
+    let mut reps = 0u32;
+    let mut stored = 0usize;
+    // At least 30 ms of work for a stable estimate.
+    while t0.elapsed().as_secs_f64() < 0.03 || reps == 0 {
+        stored = compress(sample, cfg)?.len();
+        reps += 1;
+        if reps >= 64 {
+            break;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64() / reps as f64;
+    Ok(CodecThroughput {
+        compress_bps: sample.len() as f64 / secs.max(1e-9),
+        ratio: sample.len() as f64 / stored.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn field_bytes(n: usize) -> Vec<u8> {
+        // Smooth pseudo-meteorological field.
+        let vals: Vec<f32> = (0..n)
+            .map(|i| 285.0 + 10.0 * ((i as f32) * 0.002).sin() + 0.01 * (i % 13) as f32)
+            .collect();
+        crate::util::f32_slice_as_bytes(&vals).to_vec()
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_field_data() {
+        let data = field_bytes(50_000);
+        for codec in [Codec::None, Codec::BloscLz, Codec::Lz4, Codec::Zlib, Codec::Zstd] {
+            let cfg = OperatorConfig::blosc(codec);
+            let frame = compress(&data, cfg).unwrap();
+            let back = decompress(&frame).unwrap();
+            assert_eq!(back, data, "codec {codec:?}");
+        }
+    }
+
+    #[test]
+    fn compression_ratios_ordered_like_paper() {
+        // Fig 6: zstd/zlib tightest (≈4x), blosclz/lz4 lighter, none = 1.
+        let data = field_bytes(200_000);
+        let size = |c: Codec| compress(&data, OperatorConfig::blosc(c)).unwrap().len();
+        let none = size(Codec::None);
+        let lz4 = size(Codec::Lz4);
+        let blosclz = size(Codec::BloscLz);
+        let zlib = size(Codec::Zlib);
+        let zstd = size(Codec::Zstd);
+        assert!(none >= data.len());
+        assert!(lz4 < none && blosclz < none);
+        assert!(zlib < lz4, "zlib {zlib} vs lz4 {lz4}");
+        assert!(zstd < lz4, "zstd {zstd} vs lz4 {lz4}");
+        // Real WRF-like ratio ballpark for the strong codecs.
+        assert!(data.len() as f64 / zstd as f64 > 2.0);
+    }
+
+    #[test]
+    fn shuffle_improves_float_compression() {
+        let data = field_bytes(100_000);
+        let with = compress(&data, OperatorConfig { codec: Codec::Lz4, shuffle: true, elem_size: 4 ,
+            keep_bits: None,}).unwrap();
+        let without = compress(&data, OperatorConfig { codec: Codec::Lz4, shuffle: false, elem_size: 4 ,
+            keep_bits: None,}).unwrap();
+        assert!(
+            with.len() < without.len(),
+            "shuffle should help: {} vs {}",
+            with.len(),
+            without.len()
+        );
+    }
+
+    #[test]
+    fn random_data_all_codecs() {
+        let mut rng = Rng::new(42);
+        let mut data = vec![0u8; 10_000];
+        rng.fill_bytes(&mut data);
+        for codec in Codec::ALL {
+            let frame = compress(&data, OperatorConfig::blosc(codec)).unwrap();
+            assert_eq!(decompress(&frame).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn codec_parse_names() {
+        assert_eq!(Codec::parse("Zstd").unwrap(), Codec::Zstd);
+        assert_eq!(Codec::parse("none").unwrap(), Codec::None);
+        assert_eq!(Codec::parse("BLOSCLZ").unwrap(), Codec::BloscLz);
+        assert!(Codec::parse("snappy").is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let data = field_bytes(1000);
+        let frame = compress(&data, OperatorConfig::blosc(Codec::Zstd)).unwrap();
+        assert!(decompress(&frame[..8]).is_err());
+    }
+
+    #[test]
+    fn lossy_bit_rounding_error_bounded() {
+        // keep_bits = k ⇒ relative error ≤ 2^-(k+1) (round-to-nearest).
+        let data = field_bytes(50_000);
+        let vals = crate::util::bytes_to_f32_vec(&data).unwrap();
+        for keep in [8u8, 12, 16] {
+            let cfg = OperatorConfig::blosc_lossy(Codec::Zstd, keep);
+            let frame = compress(&data, cfg).unwrap();
+            let back = crate::util::bytes_to_f32_vec(&decompress(&frame).unwrap()).unwrap();
+            let bound = 2.0f32.powi(-(keep as i32 + 1)) * 1.001;
+            for (a, b) in vals.iter().zip(&back) {
+                assert!(
+                    ((a - b) / a.abs().max(1e-30)).abs() <= bound,
+                    "keep {keep}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_improves_ratio_monotonically() {
+        let data = field_bytes(200_000);
+        let size = |cfg: OperatorConfig| compress(&data, cfg).unwrap().len();
+        let lossless = size(OperatorConfig::blosc(Codec::Zstd));
+        let k16 = size(OperatorConfig::blosc_lossy(Codec::Zstd, 16));
+        let k8 = size(OperatorConfig::blosc_lossy(Codec::Zstd, 8));
+        assert!(k16 < lossless, "{k16} !< {lossless}");
+        assert!(k8 < k16, "{k8} !< {k16}");
+        // 8 mantissa bits on smooth fields: big additional win.
+        assert!((lossless as f64) / (k8 as f64) > 1.5);
+    }
+
+    #[test]
+    fn lossy_is_idempotent_and_preserves_specials() {
+        // Rounding twice = rounding once; NaN/Inf survive.
+        let vals = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0, 1.5e-40];
+        for keep in [6u32, 14] {
+            for v in vals {
+                let once = bit_round_f32(v.to_bits(), keep);
+                let twice = bit_round_f32(once, keep);
+                assert_eq!(once, twice, "keep {keep} v {v}");
+            }
+            assert!(f32::from_bits(bit_round_f32(f32::NAN.to_bits(), keep)).is_nan());
+            assert_eq!(bit_round_f32(f32::INFINITY.to_bits(), keep), f32::INFINITY.to_bits());
+        }
+    }
+
+    #[test]
+    fn throughput_measurement_sane() {
+        let data = field_bytes(100_000);
+        let t = measure_throughput(&data, OperatorConfig::blosc(Codec::Lz4)).unwrap();
+        assert!(t.compress_bps > 10e6, "lz4 slower than 10 MB/s? {}", t.compress_bps);
+        assert!(t.ratio > 1.0);
+    }
+}

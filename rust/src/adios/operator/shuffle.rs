@@ -1,0 +1,125 @@
+//! Byte-shuffle filter (Blosc's pre-conditioning stage).
+//!
+//! Transposes an array of fixed-size elements into planes of 1st bytes,
+//! 2nd bytes, …: for smooth float fields the high-order exponent/sign
+//! bytes become long nearly-constant runs, which is what lets byte-level
+//! LZ codecs reach the ~4× ratios the paper reports on WRF history data.
+
+/// Shuffle `data` composed of `elem_size`-byte elements.  A trailing
+/// remainder (len % elem_size) is appended unshuffled, matching Blosc.
+pub fn shuffle(data: &[u8], elem_size: usize) -> Vec<u8> {
+    assert!(elem_size > 0);
+    let n = data.len() / elem_size;
+    let body = n * elem_size;
+    let mut out = vec![0u8; body];
+    if elem_size == 4 {
+        // Hot path (f32 fields): one streaming pass over the input,
+        // scattering into the four byte planes — ~2× the throughput of the
+        // per-plane gather (input is read once, not four times).
+        let (p0, rest) = out.split_at_mut(n);
+        let (p1, rest) = rest.split_at_mut(n);
+        let (p2, p3) = rest.split_at_mut(n);
+        for i in 0..n {
+            let e = &data[4 * i..4 * i + 4];
+            p0[i] = e[0];
+            p1[i] = e[1];
+            p2[i] = e[2];
+            p3[i] = e[3];
+        }
+    } else {
+        for b in 0..elem_size {
+            let plane = &mut out[b * n..(b + 1) * n];
+            // Gather byte b of each element.
+            for (i, slot) in plane.iter_mut().enumerate() {
+                *slot = data[i * elem_size + b];
+            }
+        }
+    }
+    out.extend_from_slice(&data[body..]);
+    out
+}
+
+/// Inverse of [`shuffle`].
+pub fn unshuffle(data: &[u8], elem_size: usize) -> Vec<u8> {
+    assert!(elem_size > 0);
+    let n = data.len() / elem_size;
+    let body = n * elem_size;
+    let mut out = vec![0u8; data.len()];
+    if elem_size == 4 {
+        // Hot path: gather from the four planes, write one streaming pass.
+        let (p0, rest) = data[..body].split_at(n);
+        let (p1, rest) = rest.split_at(n);
+        let (p2, p3) = rest.split_at(n);
+        for i in 0..n {
+            let e = &mut out[4 * i..4 * i + 4];
+            e[0] = p0[i];
+            e[1] = p1[i];
+            e[2] = p2[i];
+            e[3] = p3[i];
+        }
+    } else {
+        for b in 0..elem_size {
+            let plane = &data[b * n..(b + 1) * n];
+            for (i, &v) in plane.iter().enumerate() {
+                out[i * elem_size + b] = v;
+            }
+        }
+    }
+    out[body..].copy_from_slice(&data[body..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_exact_multiple() {
+        let data: Vec<u8> = (0..64).collect();
+        let s = shuffle(&data, 4);
+        assert_eq!(unshuffle(&s, 4), data);
+    }
+
+    #[test]
+    fn roundtrip_with_remainder() {
+        let data: Vec<u8> = (0..67).collect();
+        let s = shuffle(&data, 4);
+        assert_eq!(s.len(), 67);
+        assert_eq!(unshuffle(&s, 4), data);
+        // remainder bytes pass through
+        assert_eq!(&s[64..], &data[64..]);
+    }
+
+    #[test]
+    fn shuffle_layout() {
+        // elements [0,1,2,3] [4,5,6,7]: plane of first bytes = [0,4]
+        let data = vec![0u8, 1, 2, 3, 4, 5, 6, 7];
+        let s = shuffle(&data, 4);
+        assert_eq!(s, vec![0, 4, 1, 5, 2, 6, 3, 7]);
+    }
+
+    #[test]
+    fn roundtrip_random_sizes() {
+        let mut rng = Rng::new(9);
+        for len in [0usize, 1, 3, 4, 5, 31, 1024, 4099] {
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            for es in [1usize, 2, 4, 8] {
+                assert_eq!(unshuffle(&shuffle(&data, es), es), data, "len={len} es={es}");
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_floats_become_runny() {
+        // The point of shuffling: smooth f32 ramps yield long constant runs.
+        let vals: Vec<f32> = (0..1024).map(|i| 1000.0 + i as f32 * 0.01).collect();
+        let bytes = crate::util::f32_slice_as_bytes(&vals);
+        let s = shuffle(bytes, 4);
+        // Count bytes equal to their predecessor in the exponent plane.
+        let plane = &s[3 * 1024..4 * 1024];
+        let runs = plane.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(runs > 1000, "exponent plane not runny: {runs}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Variable model: globally-shaped arrays with per-rank local blocks.
+//!
+//! Mirrors `adios2::Variable<T>`: a variable has a global `shape`, and each
+//! producing rank contributes one block at `start`/`count` (its patch of
+//! the domain decomposition).  Only f32 payloads are needed by the WRF
+//! analog (WRF history fields are single precision).
+
+use crate::{Error, Result};
+
+/// A variable definition plus this rank's selection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variable {
+    pub name: String,
+    /// Global array shape (e.g. `[nz, ny, nx]`).
+    pub shape: Vec<u64>,
+    /// This rank's block offset within the global array.
+    pub start: Vec<u64>,
+    /// This rank's block extent.
+    pub count: Vec<u64>,
+}
+
+impl Variable {
+    /// Define a global-array variable with this rank's selection.
+    pub fn global(
+        name: impl Into<String>,
+        shape: &[u64],
+        start: &[u64],
+        count: &[u64],
+    ) -> Result<Variable> {
+        let v = Variable {
+            name: name.into(),
+            shape: shape.to_vec(),
+            start: start.to_vec(),
+            count: count.to_vec(),
+        };
+        v.validate()?;
+        Ok(v)
+    }
+
+    /// A variable fully owned by one rank (local array / scalar-ish).
+    pub fn whole(name: impl Into<String>, shape: &[u64]) -> Result<Variable> {
+        let zeros = vec![0u64; shape.len()];
+        Variable::global(name, shape, &zeros, shape)
+    }
+
+    /// Elements in this rank's block.
+    pub fn local_len(&self) -> usize {
+        self.count.iter().product::<u64>() as usize
+    }
+
+    /// Elements in the global array.
+    pub fn global_len(&self) -> usize {
+        self.shape.iter().product::<u64>() as usize
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::adios("variable name must be non-empty"));
+        }
+        if self.shape.is_empty() {
+            return Err(Error::adios(format!("variable `{}` has no dimensions", self.name)));
+        }
+        if self.start.len() != self.shape.len() || self.count.len() != self.shape.len() {
+            return Err(Error::adios(format!(
+                "variable `{}`: start/count rank mismatch vs shape",
+                self.name
+            )));
+        }
+        for (d, ((&s, &c), &g)) in self
+            .start
+            .iter()
+            .zip(self.count.iter())
+            .zip(self.shape.iter())
+            .enumerate()
+        {
+            if c == 0 {
+                return Err(Error::adios(format!(
+                    "variable `{}`: zero count in dim {d}",
+                    self.name
+                )));
+            }
+            if s + c > g {
+                return Err(Error::adios(format!(
+                    "variable `{}`: block [{s}, {}) exceeds dim {d} extent {g}",
+                    self.name,
+                    s + c
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// min/max of a block payload (the BP statistics ADIOS2 keeps per block).
+pub fn block_minmax(data: &[f32]) -> (f32, f32) {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &v in data {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    (mn, mx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_block() {
+        let v = Variable::global("T", &[4, 288, 576], &[0, 0, 96], &[4, 48, 96]).unwrap();
+        assert_eq!(v.local_len(), 4 * 48 * 96);
+        assert_eq!(v.global_len(), 4 * 288 * 576);
+    }
+
+    #[test]
+    fn whole_variable() {
+        let v = Variable::whole("Times", &[19]).unwrap();
+        assert_eq!(v.start, vec![0]);
+        assert_eq!(v.local_len(), 19);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(Variable::global("T", &[4], &[2], &[3]).is_err());
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        assert!(Variable::global("T", &[4, 4], &[0], &[4]).is_err());
+    }
+
+    #[test]
+    fn zero_count_rejected() {
+        assert!(Variable::global("T", &[4], &[0], &[0]).is_err());
+    }
+
+    #[test]
+    fn empty_name_rejected() {
+        assert!(Variable::global("", &[1], &[0], &[1]).is_err());
+    }
+
+    #[test]
+    fn minmax() {
+        assert_eq!(block_minmax(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+    }
+}

@@ -1,0 +1,248 @@
+//! In-situ analysis consumer (paper §V-F, Fig 7).
+//!
+//! The paper's pipeline plots a temperature slice over CONUS from each
+//! history step, consuming data over SST while the model keeps running.
+//! Our consumer does the same work: for every SST step it reconstitutes
+//! the THETA field, reduces it (slice statistics + histogram — through the
+//! AOT-compiled `analysis.hlo.txt` when the grid matches, else the native
+//! fallback that mirrors it), and renders the downsampled slice as a PGM
+//! image (the matplotlib-figure stand-in).
+
+use std::path::{Path, PathBuf};
+
+use crate::adios::engine::sst::{SstConsumer, SstStep};
+use crate::metrics::Stopwatch;
+use crate::runtime::{AnalysisOutput, AnalysisStep};
+use crate::{Error, Result};
+
+/// Result of analyzing one step.
+#[derive(Debug, Clone)]
+pub struct AnalysisRecord {
+    pub step: usize,
+    pub wall_secs: f64,
+    pub surf_min: f32,
+    pub surf_max: f32,
+    pub surf_mean: f32,
+    pub image: Option<PathBuf>,
+}
+
+/// Native mirror of `python/compile/model.analysis_fn` (used when no AOT
+/// artifact matches the incoming grid, and as the test oracle for it).
+pub fn analyze_native(theta: &[f32], nz: usize, ny: usize, nx: usize) -> Result<AnalysisOutput> {
+    if theta.len() != nz * ny * nx {
+        return Err(Error::model(format!(
+            "analysis input {} elems vs {}x{}x{}",
+            theta.len(),
+            nz,
+            ny,
+            nx
+        )));
+    }
+    let plane = ny * nx;
+    let surf = &theta[..plane];
+    let mut level_mean = Vec::with_capacity(nz);
+    let mut level_min = Vec::with_capacity(nz);
+    let mut level_max = Vec::with_capacity(nz);
+    for z in 0..nz {
+        let lv = &theta[z * plane..(z + 1) * plane];
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        let mut sum = 0.0f64;
+        for &v in lv {
+            mn = mn.min(v);
+            mx = mx.max(v);
+            sum += v as f64;
+        }
+        level_mean.push((sum / plane as f64) as f32);
+        level_min.push(mn);
+        level_max.push(mx);
+    }
+    // 4× downsample of the surface.
+    let dy = ny / 4;
+    let dx = nx / 4;
+    let mut slice_ds = vec![0.0f32; dy * dx];
+    for j in 0..dy {
+        for i in 0..dx {
+            let mut s = 0.0f32;
+            for jj in 0..4 {
+                for ii in 0..4 {
+                    s += surf[(j * 4 + jj) * nx + i * 4 + ii];
+                }
+            }
+            slice_ds[j * dx + i] = s / 16.0;
+        }
+    }
+    // 32-bin histogram of the surface.
+    let (lo, hi) = (level_min[0], level_max[0]);
+    let span = (hi - lo).max(1e-6);
+    let mut hist = vec![0i32; 32];
+    for &v in surf {
+        let b = (((v - lo) / span) * 32.0) as i32;
+        hist[b.clamp(0, 31) as usize] += 1;
+    }
+    Ok(AnalysisOutput {
+        slice_ds,
+        level_mean,
+        level_min,
+        level_max,
+        hist,
+    })
+}
+
+/// Render a field as a binary PGM (P5) image, min-max normalized.
+pub fn write_pgm(path: &Path, data: &[f32], ny: usize, nx: usize) -> Result<()> {
+    if data.len() != ny * nx {
+        return Err(Error::model("pgm: size mismatch".to_string()));
+    }
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &v in data {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    let span = (mx - mn).max(1e-9);
+    let mut out = format!("P5\n{nx} {ny}\n255\n").into_bytes();
+    out.extend(data.iter().map(|&v| (255.0 * (v - mn) / span) as u8));
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// The streaming consumer loop.
+pub struct InsituAnalyzer {
+    /// AOT analysis executable (used when grid matches).
+    pub aot: Option<AnalysisStep>,
+    /// Where PGM frames land (None = skip rendering).
+    pub image_dir: Option<PathBuf>,
+    /// Which variable to analyze.
+    pub var: String,
+}
+
+impl InsituAnalyzer {
+    pub fn new(aot: Option<AnalysisStep>, image_dir: Option<PathBuf>) -> Self {
+        InsituAnalyzer {
+            aot,
+            image_dir,
+            // WRF history names: `T` is perturbation potential temperature
+            // (θ − 300 K) — the paper's plotted temperature field.
+            var: "T".to_string(),
+        }
+    }
+
+    /// Analyze one received step.
+    pub fn analyze_step(&self, step: &SstStep) -> Result<AnalysisRecord> {
+        let sw = Stopwatch::start();
+        let (shape, theta) = step.read_var_global(&self.var)?;
+        if shape.len() != 3 {
+            return Err(Error::model(format!(
+                "variable `{}` is not 3-D (shape {shape:?})",
+                self.var
+            )));
+        }
+        let (nz, ny, nx) = (shape[0] as usize, shape[1] as usize, shape[2] as usize);
+        let out = match &self.aot {
+            Some(a) if a.nz == nz && a.ny == ny && a.nx == nx => a.run(&theta)?,
+            _ => analyze_native(&theta, nz, ny, nx)?,
+        };
+        let image = if let Some(dir) = &self.image_dir {
+            std::fs::create_dir_all(dir)?;
+            let p = dir.join(format!("theta_slice_{:03}.pgm", step.index));
+            write_pgm(&p, &out.slice_ds, ny / 4, nx / 4)?;
+            Some(p)
+        } else {
+            None
+        };
+        Ok(AnalysisRecord {
+            step: step.index,
+            wall_secs: sw.secs(),
+            surf_min: out.level_min[0],
+            surf_max: out.level_max[0],
+            surf_mean: out.level_mean[0],
+            image,
+        })
+    }
+
+    /// Drain a consumer to completion (the paper's
+    /// `for fstep in adios2_fh` loop).  Returns one record per step.
+    pub fn run(&self, consumer: &mut SstConsumer) -> Result<Vec<AnalysisRecord>> {
+        let mut records = Vec::new();
+        while let Some(step) = consumer.next_step()? {
+            records.push(self.analyze_step(&step)?);
+        }
+        Ok(records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn theta(nz: usize, ny: usize, nx: usize) -> Vec<f32> {
+        (0..nz * ny * nx)
+            .map(|i| {
+                let z = i / (ny * nx);
+                280.0 + 2.0 * z as f32 + ((i % (ny * nx)) as f32 * 0.01).sin() * 5.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_analysis_invariants() {
+        let (nz, ny, nx) = (3, 32, 40);
+        let t = theta(nz, ny, nx);
+        let out = analyze_native(&t, nz, ny, nx).unwrap();
+        assert_eq!(out.slice_ds.len(), (ny / 4) * (nx / 4));
+        assert_eq!(out.hist.iter().sum::<i32>(), (ny * nx) as i32);
+        for z in 0..nz {
+            assert!(out.level_min[z] <= out.level_mean[z]);
+            assert!(out.level_mean[z] <= out.level_max[z]);
+        }
+        // Downsampled mean ≈ full mean of the surface.
+        let ds_mean: f32 = out.slice_ds.iter().sum::<f32>() / out.slice_ds.len() as f32;
+        assert!((ds_mean - out.level_mean[0]).abs() < 0.5);
+    }
+
+    #[test]
+    fn native_matches_aot_analysis_if_built() {
+        let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !art.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = crate::runtime::XlaRuntime::new().unwrap();
+        let man = crate::runtime::Manifest::load(&art).unwrap();
+        let aot = AnalysisStep::load(&rt, &man, 192, 192).unwrap();
+        let t = theta(aot.nz, 192, 192);
+        let a = aot.run(&t).unwrap();
+        let b = analyze_native(&t, aot.nz, 192, 192).unwrap();
+        for z in 0..aot.nz {
+            assert!((a.level_mean[z] - b.level_mean[z]).abs() < 1e-2);
+            assert_eq!(a.level_min[z], b.level_min[z]);
+            assert_eq!(a.level_max[z], b.level_max[z]);
+        }
+        for (x, y) in a.slice_ds.iter().zip(&b.slice_ds) {
+            assert!((x - y).abs() < 1e-3);
+        }
+        // Histograms may differ by boundary rounding; totals must match.
+        assert_eq!(a.hist.iter().sum::<i32>(), b.hist.iter().sum::<i32>());
+    }
+
+    #[test]
+    fn pgm_written() {
+        let dir = std::env::temp_dir().join(format!("stormio_pgm_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let p = dir.join("x.pgm");
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        write_pgm(&p, &data, 8, 8).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n8 8\n255\n"));
+        assert_eq!(bytes.len(), 11 + 64);
+        assert_eq!(*bytes.last().unwrap(), 255);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(analyze_native(&[1.0; 10], 1, 4, 4).is_err());
+        assert!(write_pgm(Path::new("/tmp/x.pgm"), &[1.0; 3], 2, 2).is_err());
+    }
+}

@@ -1,0 +1,341 @@
+//! In-process MPI substrate: ranks as threads, point-to-point messaging
+//! and the collectives the I/O layers use.
+//!
+//! WRF runs `dmpar` (distributed-memory MPI); the paper's I/O options are
+//! all defined by their MPI communication patterns (funnel-to-root,
+//! two-phase exchange, aggregation chains, quilt forwarding).  This module
+//! provides those patterns over OS threads and channels so the *same
+//! topology* executes in-process: rank `r` lives on simulated node
+//! `r / ranks_per_node`, and every transfer can be charged to the
+//! virtual-time model by the caller (payload sizes are returned).
+//!
+//! The implementation is deliberately faithful to MPI semantics where it
+//! matters for I/O middleware: tagged matching with out-of-order buffering,
+//! blocking `send`/`recv` pairs, `barrier`, `gather`, and `alltoallv`.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::{Error, Result};
+
+/// A tagged message.
+#[derive(Debug)]
+struct Message {
+    src: usize,
+    tag: u64,
+    data: Vec<u8>,
+}
+
+/// Per-rank communicator handle (the `MPI_COMM_WORLD` analog).
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    ranks_per_node: usize,
+    senders: Vec<Sender<Message>>,
+    inbox: Receiver<Message>,
+    /// Out-of-order messages awaiting a matching recv.
+    stash: VecDeque<Message>,
+    barrier: Arc<Barrier>,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+    pub fn size(&self) -> usize {
+        self.size
+    }
+    /// Simulated node index of this rank.
+    pub fn node(&self) -> usize {
+        self.rank / self.ranks_per_node
+    }
+    /// Simulated node of an arbitrary rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+    pub fn ranks_per_node(&self) -> usize {
+        self.ranks_per_node
+    }
+
+    /// Blocking tagged send (buffered: never deadlocks on unpaired sends).
+    pub fn send(&self, dst: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        if dst >= self.size {
+            return Err(Error::cluster(format!("send to invalid rank {dst}")));
+        }
+        self.senders[dst]
+            .send(Message {
+                src: self.rank,
+                tag,
+                data,
+            })
+            .map_err(|_| Error::cluster(format!("rank {dst} hung up")))
+    }
+
+    /// Blocking tagged receive from a specific source.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        // Check the stash first.
+        if let Some(i) = self
+            .stash
+            .iter()
+            .position(|m| m.src == src && m.tag == tag)
+        {
+            return Ok(self.stash.remove(i).unwrap().data);
+        }
+        loop {
+            let m = self
+                .inbox
+                .recv()
+                .map_err(|_| Error::cluster("world torn down during recv"))?;
+            if m.src == src && m.tag == tag {
+                return Ok(m.data);
+            }
+            self.stash.push_back(m);
+        }
+    }
+
+    /// Receive from any source with the given tag; returns `(src, data)`.
+    pub fn recv_any(&mut self, tag: u64) -> Result<(usize, Vec<u8>)> {
+        if let Some(i) = self.stash.iter().position(|m| m.tag == tag) {
+            let m = self.stash.remove(i).unwrap();
+            return Ok((m.src, m.data));
+        }
+        loop {
+            let m = self
+                .inbox
+                .recv()
+                .map_err(|_| Error::cluster("world torn down during recv_any"))?;
+            if m.tag == tag {
+                return Ok((m.src, m.data));
+            }
+            self.stash.push_back(m);
+        }
+    }
+
+    /// Synchronize all ranks.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Gather each rank's buffer at `root` (rank order preserved).
+    /// Non-root ranks return an empty vec.
+    pub fn gather(&mut self, root: usize, data: Vec<u8>, tag: u64) -> Result<Vec<Vec<u8>>> {
+        if self.rank == root {
+            let mut out: Vec<Vec<u8>> = (0..self.size).map(|_| Vec::new()).collect();
+            out[root] = data;
+            for _ in 0..self.size - 1 {
+                let (src, d) = self.recv_any(tag)?;
+                out[src] = d;
+            }
+            Ok(out)
+        } else {
+            self.send(root, tag, data)?;
+            Ok(Vec::new())
+        }
+    }
+
+    /// Broadcast `data` from `root` to all ranks.
+    pub fn bcast(&mut self, root: usize, data: Vec<u8>, tag: u64) -> Result<Vec<u8>> {
+        if self.rank == root {
+            for dst in 0..self.size {
+                if dst != root {
+                    self.send(dst, tag, data.clone())?;
+                }
+            }
+            Ok(data)
+        } else {
+            self.recv(root, tag)
+        }
+    }
+
+    /// Personalized all-to-all: `bufs[d]` goes to rank `d`; returns the
+    /// buffers received, indexed by source (the two-phase exchange).
+    pub fn alltoallv(&mut self, mut bufs: Vec<Vec<u8>>, tag: u64) -> Result<Vec<Vec<u8>>> {
+        if bufs.len() != self.size {
+            return Err(Error::cluster(format!(
+                "alltoallv needs {} buffers, got {}",
+                self.size,
+                bufs.len()
+            )));
+        }
+        let mine = std::mem::take(&mut bufs[self.rank]);
+        for (dst, b) in bufs.into_iter().enumerate() {
+            if dst != self.rank {
+                self.send(dst, tag, b)?;
+            }
+        }
+        let mut out: Vec<Vec<u8>> = (0..self.size).map(|_| Vec::new()).collect();
+        out[self.rank] = mine;
+        for _ in 0..self.size - 1 {
+            let (src, d) = self.recv_any(tag)?;
+            out[src] = d;
+        }
+        Ok(out)
+    }
+
+    /// Sum-reduce a u64 at root (used for byte accounting).
+    pub fn reduce_sum_u64(&mut self, root: usize, v: u64, tag: u64) -> Result<u64> {
+        let parts = self.gather(root, v.to_le_bytes().to_vec(), tag)?;
+        if self.rank == root {
+            Ok(parts
+                .iter()
+                .map(|b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+                .sum())
+        } else {
+            Ok(0)
+        }
+    }
+}
+
+/// Build a world of `n` ranks (`ranks_per_node` for node mapping) and run
+/// `f` on each rank's own thread; returns per-rank results in rank order.
+pub fn run_world<T, F>(n: usize, ranks_per_node: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Comm) -> T + Sync,
+{
+    assert!(n > 0, "world must have at least one rank");
+    let mut senders = Vec::with_capacity(n);
+    let mut inboxes = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(rx);
+    }
+    let barrier = Arc::new(Barrier::new(n));
+    let comms: Vec<Comm> = inboxes
+        .into_iter()
+        .enumerate()
+        .map(|(rank, inbox)| Comm {
+            rank,
+            size: n,
+            ranks_per_node: ranks_per_node.max(1),
+            senders: senders.clone(),
+            inbox,
+            stash: VecDeque::new(),
+            barrier: barrier.clone(),
+        })
+        .collect();
+    // Keep result order deterministic by collecting into a slot per rank.
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for comm in comms {
+            let f = &f;
+            let results = &results;
+            s.spawn(move || {
+                let rank = comm.rank();
+                // A rank that panics would leave the others blocked in
+                // barriers/recvs forever (exactly like a died MPI rank);
+                // abort the whole world loudly instead of deadlocking.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(comm)))
+                    .unwrap_or_else(|p| {
+                        let msg = p
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| p.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "<non-string panic>".into());
+                        eprintln!("fatal: rank {rank} panicked: {msg}; aborting world");
+                        std::process::abort();
+                    });
+                *results[rank].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("rank produced no result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass() {
+        let sums = run_world(4, 2, |mut c| {
+            let next = (c.rank() + 1) % c.size();
+            let prev = (c.rank() + c.size() - 1) % c.size();
+            c.send(next, 7, vec![c.rank() as u8]).unwrap();
+            let got = c.recv(prev, 7).unwrap();
+            got[0] as usize
+        });
+        assert_eq!(sums, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn gather_preserves_rank_order() {
+        let out = run_world(6, 3, |mut c| {
+            let data = vec![c.rank() as u8; c.rank() + 1];
+            c.gather(0, data, 1).unwrap()
+        });
+        let root = &out[0];
+        assert_eq!(root.len(), 6);
+        for (r, buf) in root.iter().enumerate() {
+            assert_eq!(buf.len(), r + 1);
+            assert!(buf.iter().all(|&b| b == r as u8));
+        }
+        assert!(out[1].is_empty());
+    }
+
+    #[test]
+    fn bcast_delivers_everywhere() {
+        let out = run_world(5, 5, |mut c| c.bcast(2, vec![9, 9], 3).unwrap());
+        assert!(out.iter().all(|b| b == &[9, 9]));
+    }
+
+    #[test]
+    fn alltoallv_transpose() {
+        let out = run_world(3, 3, |mut c| {
+            let bufs: Vec<Vec<u8>> = (0..3).map(|d| vec![(c.rank() * 10 + d) as u8]).collect();
+            c.alltoallv(bufs, 4).unwrap()
+        });
+        // rank r receives from src s the value s*10 + r
+        for (r, bufs) in out.iter().enumerate() {
+            for (s, b) in bufs.iter().enumerate() {
+                assert_eq!(b, &[(s * 10 + r) as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn tags_do_not_cross_match() {
+        let out = run_world(2, 2, |mut c| {
+            if c.rank() == 0 {
+                c.send(1, 100, vec![1]).unwrap();
+                c.send(1, 200, vec![2]).unwrap();
+                0u8
+            } else {
+                // Receive in reverse tag order: stash must hold tag 100.
+                let b = c.recv(0, 200).unwrap();
+                let a = c.recv(0, 100).unwrap();
+                a[0] * 10 + b[0]
+            }
+        });
+        assert_eq!(out[1], 12);
+    }
+
+    #[test]
+    fn reduce_sum() {
+        let out = run_world(4, 4, |mut c| c.reduce_sum_u64(0, (c.rank() + 1) as u64, 9).unwrap());
+        assert_eq!(out[0], 10);
+    }
+
+    #[test]
+    fn node_mapping() {
+        let nodes = run_world(8, 4, |c| c.node());
+        assert_eq!(nodes, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn barrier_all_arrive() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        let out = run_world(4, 4, |c| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+            c.barrier();
+            COUNT.load(Ordering::SeqCst)
+        });
+        assert!(out.iter().all(|&v| v == 4));
+    }
+}

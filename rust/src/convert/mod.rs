@@ -1,0 +1,238 @@
+//! Converters for backwards compatibility (paper §IV).
+//!
+//! * [`bp_to_nc`] — the paper's stand-alone BP → NetCDF converter, so
+//!   "legacy post-processing pipelines" keep working (their Python tool
+//!   converted a CONUS 2.5 km history file in <10 s single-threaded; ours
+//!   is benchmarked in `benches/fig8_insitu_pipeline.rs`).
+//! * [`stitch_split`] — the community `joinwrf`-style stitcher that merges
+//!   split-NetCDF (`io_form=102`) per-rank files back into one file.
+
+use std::path::{Path, PathBuf};
+
+use crate::adios::bp::reader::BpReader;
+use crate::io::cdf::{CdfReader, CdfWriter, DType};
+use crate::{Error, Result};
+
+/// Convert one step of a BP directory into a CDF-lite NetCDF-style file.
+/// Returns bytes written.
+pub fn bp_to_nc(bp_dir: &Path, out: &Path, step: usize, compress: bool) -> Result<u64> {
+    let rd = BpReader::open(bp_dir)?;
+    let names: Vec<String> = rd
+        .var_names(step)?
+        .into_iter()
+        .map(|s| s.to_string())
+        .collect();
+    let mut w = CdfWriter::new(compress);
+    let mut dims: Vec<u64> = Vec::new();
+    let mut shapes = Vec::with_capacity(names.len());
+    for n in &names {
+        let shape = rd.var_shape(step, n)?;
+        for d in &shape {
+            if !dims.contains(d) {
+                dims.push(*d);
+            }
+        }
+        shapes.push(shape);
+    }
+    for d in &dims {
+        w.def_dim(&format!("dim{d}"), *d)?;
+    }
+    w.put_attr("TITLE", "converted from BP by stormio convert");
+    w.put_attr("SOURCE", &bp_dir.display().to_string());
+    for (k, v) in &rd.attrs {
+        w.put_attr(k, v);
+    }
+    for (n, shape) in names.iter().zip(&shapes) {
+        let dn: Vec<String> = shape.iter().map(|d| format!("dim{d}")).collect();
+        let dr: Vec<&str> = dn.iter().map(|s| s.as_str()).collect();
+        w.def_var(n, DType::F32, &dr)?;
+    }
+    w.end_define();
+    for n in &names {
+        let (_, data) = rd.read_var_global(step, n)?;
+        w.put_var_f32(n, &data)?;
+    }
+    w.finish(out)
+}
+
+/// Convert every step of a BP directory; returns the written paths.
+pub fn bp_to_nc_all(bp_dir: &Path, out_dir: &Path, compress: bool) -> Result<Vec<PathBuf>> {
+    let rd = BpReader::open(bp_dir)?;
+    std::fs::create_dir_all(out_dir)?;
+    let stem = bp_dir
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "out".into());
+    let mut paths = Vec::new();
+    for s in 0..rd.num_steps() {
+        let p = out_dir.join(format!("{stem}_step{s}.nc"));
+        bp_to_nc(bp_dir, &p, s, compress)?;
+        paths.push(p);
+    }
+    Ok(paths)
+}
+
+/// Stitch split-NetCDF per-rank files (`<frame>_NNNN.nc`) back into one
+/// global file using the placement attributes the split backend records.
+pub fn stitch_split(parts: &[PathBuf], out: &Path, compress: bool) -> Result<u64> {
+    if parts.is_empty() {
+        return Err(Error::Cdf("stitch: no input files".into()));
+    }
+    struct GVar {
+        shape: Vec<u64>,
+        data: Vec<f32>,
+    }
+    let mut order: Vec<String> = Vec::new();
+    let mut globals: std::collections::BTreeMap<String, GVar> = Default::default();
+    let parse_dims = |s: &str| -> Result<Vec<u64>> {
+        s.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<u64>()
+                    .map_err(|_| Error::Cdf(format!("bad placement attr `{s}`")))
+            })
+            .collect()
+    };
+    for part in parts {
+        let rd = CdfReader::open(part)?;
+        for name in rd.var_names().iter().map(|s| s.to_string()) {
+            let attr = |suffix: &str| -> Result<Vec<u64>> {
+                let key = format!("{name}:{suffix}");
+                let v = rd
+                    .attrs
+                    .iter()
+                    .find(|(k, _)| k == &key)
+                    .map(|(_, v)| v.clone())
+                    .ok_or_else(|| {
+                        Error::Cdf(format!("{}: missing attr {key}", part.display()))
+                    })?;
+                parse_dims(&v)
+            };
+            let shape = attr("shape")?;
+            let start = attr("start")?;
+            let count = attr("count")?;
+            let data = rd.read_var_f32(&name)?;
+            let g = globals.entry(name.clone()).or_insert_with(|| {
+                order.push(name.clone());
+                GVar {
+                    shape: shape.clone(),
+                    data: vec![0.0; shape.iter().product::<u64>() as usize],
+                }
+            });
+            crate::adios::bp::scatter_block(&mut g.data, &shape, &start, &count, &data)?;
+        }
+    }
+    let mut w = CdfWriter::new(compress);
+    let mut dims: Vec<u64> = Vec::new();
+    for name in &order {
+        for d in &globals[name].shape {
+            if !dims.contains(d) {
+                dims.push(*d);
+            }
+        }
+    }
+    for d in &dims {
+        w.def_dim(&format!("dim{d}"), *d)?;
+    }
+    w.put_attr("TITLE", "stitched from split NetCDF by stormio");
+    for name in &order {
+        let dn: Vec<String> = globals[name].shape.iter().map(|d| format!("dim{d}")).collect();
+        let dr: Vec<&str> = dn.iter().map(|s| s.as_str()).collect();
+        w.def_var(name, DType::F32, &dr)?;
+    }
+    w.end_define();
+    for name in &order {
+        w.put_var_f32(name, &globals[name].data)?;
+    }
+    w.finish(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::engine::bp4::{Bp4Config, Bp4Engine};
+    use crate::adios::engine::{Engine, Target};
+    use crate::adios::operator::{Codec, OperatorConfig};
+    use crate::adios::Variable;
+    use crate::cluster::run_world;
+    use crate::io::api::FrameFields;
+    use crate::io::split_nc::SplitNcBackend;
+    use crate::io::HistoryBackend;
+    use crate::sim::{CostModel, HardwareSpec};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("stormio_conv_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn bp_to_nc_roundtrip() {
+        let dir = tmp("bp2nc");
+        let d2 = dir.clone();
+        run_world(4, 2, move |mut comm| {
+            let cfg = Bp4Config {
+                name: "hist".into(),
+                pfs_dir: d2.join("pfs"),
+                bb_root: d2.join("bb"),
+                target: Target::Pfs,
+                operator: OperatorConfig::blosc(Codec::Zstd),
+                aggs_per_node: 1,
+                cost: CostModel::new(HardwareSpec::paper_testbed(2)),
+            };
+            let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
+            let r = comm.rank() as u64;
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T2", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                (0..6).map(|i| (r * 6 + i) as f32).collect(),
+            )
+            .unwrap();
+            eng.end_step(&mut comm).unwrap();
+            eng.close(&mut comm).unwrap();
+        });
+        let out = dir.join("hist.nc");
+        let n = bp_to_nc(&dir.join("pfs/hist.bp"), &out, 0, true).unwrap();
+        assert!(n > 0);
+        let rd = CdfReader::open(&out).unwrap();
+        let t2 = rd.read_var_f32("T2").unwrap();
+        assert_eq!(t2.len(), 24);
+        assert_eq!(t2[13], 13.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stitch_split_reassembles() {
+        let dir = tmp("stitch");
+        let d2 = dir.clone();
+        run_world(4, 2, move |mut comm| {
+            let mut b =
+                SplitNcBackend::new(d2.clone(), CostModel::new(HardwareSpec::paper_testbed(2)));
+            let r = comm.rank() as u64;
+            let fields: FrameFields = vec![(
+                Variable::global("PSFC", &[4, 5], &[r, 0], &[1, 5]).unwrap(),
+                (0..5).map(|i| (r * 5 + i) as f32).collect(),
+            )];
+            b.write_frame(&mut comm, 0, "wrfout", fields).unwrap();
+            b.finish(&mut comm).unwrap();
+        });
+        let parts: Vec<PathBuf> = (0..4)
+            .map(|r| dir.join(format!("wrfout_{r:04}.nc")))
+            .collect();
+        let out = dir.join("stitched.nc");
+        stitch_split(&parts, &out, false).unwrap();
+        let rd = CdfReader::open(&out).unwrap();
+        let p = rd.read_var_f32("PSFC").unwrap();
+        assert_eq!(p.len(), 20);
+        for i in 0..20 {
+            assert_eq!(p[i], i as f32);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stitch_empty_is_error() {
+        assert!(stitch_split(&[], Path::new("/tmp/x.nc"), false).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every stormio subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("namelist parse error at line {line}: {msg}")]
+    Namelist { line: usize, msg: String },
+
+    #[error("xml parse error at byte {pos}: {msg}")]
+    Xml { pos: usize, msg: String },
+
+    #[error("bp format error: {0}")]
+    Bp(String),
+
+    #[error("cdf format error: {0}")]
+    Cdf(String),
+
+    #[error("adios error: {0}")]
+    Adios(String),
+
+    #[error("sst transport error: {0}")]
+    Sst(String),
+
+    #[error("cluster/communication error: {0}")]
+    Cluster(String),
+
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("compression error ({codec}): {msg}")]
+    Compress { codec: &'static str, msg: String },
+
+    #[error("model/driver error: {0}")]
+    Model(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience constructor used across the adios module.
+    pub fn adios(msg: impl Into<String>) -> Self {
+        Error::Adios(msg.into())
+    }
+    pub fn bp(msg: impl Into<String>) -> Self {
+        Error::Bp(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn cluster(msg: impl Into<String>) -> Self {
+        Error::Cluster(msg.into())
+    }
+    pub fn sst(msg: impl Into<String>) -> Self {
+        Error::Sst(msg.into())
+    }
+    pub fn model(msg: impl Into<String>) -> Self {
+        Error::Model(msg.into())
+    }
+}

@@ -1,0 +1,126 @@
+//! The WRF I/O API layer: pluggable history backends selected by
+//! `io_form_history` in `namelist.input`, exactly like WRF's I/O layer
+//! (paper §III-A).
+//!
+//! | io_form | WRF meaning                  | backend                    |
+//! |---------|------------------------------|----------------------------|
+//! | 2       | serial NetCDF (funnel)       | [`crate::io::serial_nc`]   |
+//! | 11      | PnetCDF (N-1 MPI-I/O)        | [`crate::io::pnetcdf`]     |
+//! | 102     | split NetCDF (N-N)           | [`crate::io::split_nc`]    |
+//! | 22      | **ADIOS2 (this paper)**      | [`crate::adios`] BP4/SST   |
+//! | 9xx     | quilt servers                | [`crate::io::quilt`]       |
+
+use crate::adios::Variable;
+use crate::cluster::Comm;
+use crate::sim::WriteCost;
+use crate::Result;
+
+/// One rank's payload for one history frame: the materialized registry
+/// variables with their global selections.
+pub type FrameFields = Vec<(Variable, Vec<f32>)>;
+
+/// Rank-0 report for one written history frame.
+#[derive(Debug, Clone, Default)]
+pub struct FrameReport {
+    pub frame: usize,
+    pub name: String,
+    /// Measured wall seconds for the physical write on this host.
+    pub real_secs: f64,
+    /// Virtual CONUS-scale cost breakdown.
+    pub cost: WriteCost,
+    pub bytes_raw: u64,
+    pub bytes_stored: u64,
+    pub files_created: usize,
+}
+
+impl FrameReport {
+    /// Application-perceived virtual write time (the paper's metric).
+    pub fn perceived(&self) -> f64 {
+        self.cost.perceived()
+    }
+}
+
+/// A pluggable history-output backend (per-rank handle).
+pub trait HistoryBackend: Send {
+    /// Human-readable backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Collectively write one history frame.
+    fn write_frame(
+        &mut self,
+        comm: &mut Comm,
+        frame: usize,
+        frame_name: &str,
+        fields: FrameFields,
+    ) -> Result<()>;
+
+    /// Collectively finalize; rank 0 receives per-frame reports.
+    fn finish(&mut self, comm: &mut Comm) -> Result<Vec<FrameReport>>;
+}
+
+/// Sum of raw payload bytes in a frame.
+pub fn frame_raw_bytes(fields: &FrameFields) -> u64 {
+    fields.iter().map(|(_, d)| d.len() as u64 * 4).sum()
+}
+
+/// Serialize one rank's fields into a single message (shared by the
+/// funnel-style backends: serial NetCDF, quilt).
+pub fn pack_fields(fields: &FrameFields) -> Vec<u8> {
+    let mut w = crate::util::byteio::Writer::new();
+    w.u32(fields.len() as u32);
+    for (var, data) in fields {
+        w.str(&var.name);
+        w.dims(&var.shape);
+        w.dims(&var.start);
+        w.dims(&var.count);
+        w.bytes(crate::util::f32_slice_as_bytes(data));
+    }
+    w.into_vec()
+}
+
+/// Inverse of [`pack_fields`].
+pub fn unpack_fields(msg: &[u8]) -> Result<FrameFields> {
+    let mut r = crate::util::byteio::Reader::new(msg);
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str()?;
+        let shape = r.dims()?;
+        let start = r.dims()?;
+        let count = r.dims()?;
+        let bytes = r.bytes()?;
+        let data = crate::util::bytes_to_f32_vec(&bytes)?;
+        out.push((Variable::global(name, &shape, &start, &count)?, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let fields: FrameFields = vec![
+            (
+                Variable::global("T", &[2, 4], &[0, 0], &[1, 4]).unwrap(),
+                vec![1.0, 2.0, 3.0, 4.0],
+            ),
+            (
+                Variable::global("PSFC", &[4], &[2], &[2]).unwrap(),
+                vec![9.5, -3.0],
+            ),
+        ];
+        let msg = pack_fields(&fields);
+        let back = unpack_fields(&msg).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, fields[0].0);
+        assert_eq!(back[1].1, fields[1].1);
+        assert_eq!(frame_raw_bytes(&fields), 24);
+    }
+
+    #[test]
+    fn unpack_garbage_is_error() {
+        assert!(unpack_fields(&[9, 9, 9]).is_err());
+    }
+}

@@ -1,0 +1,642 @@
+//! CDF-lite: a NetCDF-classic-like self-describing container format.
+//!
+//! The paper's baselines (serial NetCDF, split NetCDF, PnetCDF) all write
+//! NetCDF containers; this module is our substrate for them (DESIGN.md S8).
+//! It keeps NetCDF's structural essentials — named shared dimensions,
+//! global attributes, typed N-dimensional variables, a define-mode →
+//! data-mode lifecycle, and optional per-variable Zlib compression (the
+//! NetCDF4/HDF5 deflate path used by `io_form=2`) — in a compact
+//! little-endian layout:
+//!
+//! ```text
+//! "CDFL" | u32 version | u32 flags
+//! u32 header_len | header (dims, attrs, var table with offsets)
+//! payload (var data, in define order; zlib per-var when enabled)
+//! ```
+//!
+//! Readers get random access by variable name through the header table,
+//! which is exactly what the paper's post-processing consumers rely on.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"CDFL";
+const VERSION: u32 = 1;
+
+/// Variable element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        4
+    }
+    fn code(self) -> u8 {
+        match self {
+            DType::F32 => 1,
+            DType::I32 => 2,
+        }
+    }
+    fn from_code(c: u8) -> Result<Self> {
+        match c {
+            1 => Ok(DType::F32),
+            2 => Ok(DType::I32),
+            _ => Err(Error::Cdf(format!("unknown dtype code {c}"))),
+        }
+    }
+}
+
+/// A defined variable (header entry).
+#[derive(Debug, Clone)]
+pub struct VarDef {
+    pub name: String,
+    pub dtype: DType,
+    /// Dimension names (must be defined).
+    pub dims: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+struct VarEntry {
+    def: VarDef,
+    offset: u64,
+    stored: u64,
+    raw: u64,
+}
+
+/// Writer: define dims/attrs/vars, then put data, then `finish`.
+pub struct CdfWriter {
+    dims: Vec<(String, u64)>,
+    attrs: Vec<(String, String)>,
+    vars: Vec<VarEntry>,
+    defined: BTreeMap<String, usize>,
+    payload: Vec<u8>,
+    compress: bool,
+    in_define: bool,
+}
+
+impl CdfWriter {
+    /// `compress` enables per-variable Zlib (the NetCDF4 deflate analog).
+    pub fn new(compress: bool) -> Self {
+        CdfWriter {
+            dims: Vec::new(),
+            attrs: Vec::new(),
+            vars: Vec::new(),
+            defined: BTreeMap::new(),
+            payload: Vec::new(),
+            compress,
+            in_define: true,
+        }
+    }
+
+    pub fn def_dim(&mut self, name: &str, size: u64) -> Result<()> {
+        if !self.in_define {
+            return Err(Error::Cdf("def_dim after end_define".into()));
+        }
+        if self.dims.iter().any(|(n, _)| n == name) {
+            return Err(Error::Cdf(format!("duplicate dimension `{name}`")));
+        }
+        self.dims.push((name.to_string(), size));
+        Ok(())
+    }
+
+    pub fn put_attr(&mut self, name: &str, value: &str) {
+        self.attrs.push((name.to_string(), value.to_string()));
+    }
+
+    pub fn def_var(&mut self, name: &str, dtype: DType, dims: &[&str]) -> Result<()> {
+        if !self.in_define {
+            return Err(Error::Cdf("def_var after end_define".into()));
+        }
+        if self.defined.contains_key(name) {
+            return Err(Error::Cdf(format!("duplicate variable `{name}`")));
+        }
+        for d in dims {
+            if !self.dims.iter().any(|(n, _)| n == d) {
+                return Err(Error::Cdf(format!("variable `{name}` uses undefined dim `{d}`")));
+            }
+        }
+        self.defined.insert(name.to_string(), self.vars.len());
+        self.vars.push(VarEntry {
+            def: VarDef {
+                name: name.to_string(),
+                dtype,
+                dims: dims.iter().map(|s| s.to_string()).collect(),
+            },
+            offset: 0,
+            stored: 0,
+            raw: 0,
+        });
+        Ok(())
+    }
+
+    /// Leave define mode (NetCDF `enddef`).
+    pub fn end_define(&mut self) {
+        self.in_define = false;
+    }
+
+    fn var_len(&self, idx: usize) -> u64 {
+        self.vars[idx]
+            .def
+            .dims
+            .iter()
+            .map(|d| self.dims.iter().find(|(n, _)| n == d).unwrap().1)
+            .product::<u64>()
+            * self.vars[idx].def.dtype.size() as u64
+    }
+
+    /// Write a variable's full payload (little-endian raw bytes).
+    pub fn put_var_bytes(&mut self, name: &str, data: &[u8]) -> Result<()> {
+        if self.in_define {
+            return Err(Error::Cdf("put_var before end_define".into()));
+        }
+        let idx = *self
+            .defined
+            .get(name)
+            .ok_or_else(|| Error::Cdf(format!("unknown variable `{name}`")))?;
+        let expect = self.var_len(idx);
+        if data.len() as u64 != expect {
+            return Err(Error::Cdf(format!(
+                "variable `{name}`: got {} bytes, expected {expect}",
+                data.len()
+            )));
+        }
+        if self.vars[idx].raw != 0 {
+            return Err(Error::Cdf(format!("variable `{name}` written twice")));
+        }
+        let offset = self.payload.len() as u64;
+        let stored = if self.compress {
+            // HDF5-style shuffle + deflate (what NetCDF4 WRF output uses;
+            // shuffle is what gets smooth f32 fields to the ~4x ratios the
+            // paper reports for io_form=2).
+            let shuffled =
+                crate::adios::operator::shuffle::shuffle(data, self.vars[idx].def.dtype.size());
+            let mut enc = ZlibEncoder::new(&mut self.payload, Compression::new(4));
+            enc.write_all(&shuffled)?;
+            enc.finish()?;
+            self.payload.len() as u64 - offset
+        } else {
+            self.payload.extend_from_slice(data);
+            data.len() as u64
+        };
+        let v = &mut self.vars[idx];
+        v.offset = offset;
+        v.stored = stored;
+        v.raw = data.len() as u64;
+        Ok(())
+    }
+
+    pub fn put_var_f32(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        self.put_var_bytes(name, crate::util::f32_slice_as_bytes(data))
+    }
+
+    fn header_bytes(&self) -> Vec<u8> {
+        let mut h = Vec::new();
+        put_u32(&mut h, self.dims.len() as u32);
+        for (n, s) in &self.dims {
+            put_str(&mut h, n);
+            put_u64(&mut h, *s);
+        }
+        put_u32(&mut h, self.attrs.len() as u32);
+        for (k, v) in &self.attrs {
+            put_str(&mut h, k);
+            put_str(&mut h, v);
+        }
+        put_u32(&mut h, self.vars.len() as u32);
+        for v in &self.vars {
+            put_str(&mut h, &v.def.name);
+            h.push(v.def.dtype.code());
+            put_u32(&mut h, v.def.dims.len() as u32);
+            for d in &v.def.dims {
+                put_str(&mut h, d);
+            }
+            put_u64(&mut h, v.offset);
+            put_u64(&mut h, v.stored);
+            put_u64(&mut h, v.raw);
+        }
+        h
+    }
+
+    /// Plan an *uncompressed* shared-file layout (the PnetCDF N-1 path):
+    /// every variable's absolute byte range is known before any data is
+    /// written, so collective writers can `write_at` their segments
+    /// concurrently.  Call after `end_define`, before any `put_var`.
+    pub fn layout(&self) -> Result<CdfLayout> {
+        if self.in_define {
+            return Err(Error::Cdf("layout before end_define".into()));
+        }
+        if self.compress {
+            return Err(Error::Cdf("shared-file layout requires uncompressed mode".into()));
+        }
+        // Clone with offsets filled in define order.
+        let mut planned = self.clone_defs();
+        let mut off = 0u64;
+        let mut vars = Vec::with_capacity(self.vars.len());
+        for i in 0..planned.vars.len() {
+            let len = planned.var_len(i);
+            planned.vars[i].offset = off;
+            planned.vars[i].stored = len;
+            planned.vars[i].raw = len;
+            vars.push((planned.vars[i].def.name.clone(), off, len));
+            off += len;
+        }
+        let header = planned.header_bytes();
+        let mut prefix = Vec::with_capacity(16 + header.len());
+        prefix.extend_from_slice(MAGIC);
+        put_u32(&mut prefix, VERSION);
+        put_u32(&mut prefix, 0);
+        put_u32(&mut prefix, header.len() as u32);
+        prefix.extend_from_slice(&header);
+        let prefix_len = prefix.len() as u64;
+        Ok(CdfLayout {
+            prefix,
+            vars: vars
+                .into_iter()
+                .map(|(n, o, l)| (n, prefix_len + o, l))
+                .collect(),
+            total_len: prefix_len + off,
+        })
+    }
+
+    fn clone_defs(&self) -> CdfWriter {
+        CdfWriter {
+            dims: self.dims.clone(),
+            attrs: self.attrs.clone(),
+            vars: self.vars.clone(),
+            defined: self.defined.clone(),
+            payload: Vec::new(),
+            compress: false,
+            in_define: false,
+        }
+    }
+
+    /// Serialize the complete file to a byte vector.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        for v in &self.vars {
+            if v.raw == 0 && self.var_len(self.defined[&v.def.name]) != 0 {
+                return Err(Error::Cdf(format!("variable `{}` never written", v.def.name)));
+            }
+        }
+        let header = self.header_bytes();
+        let mut out = Vec::with_capacity(16 + header.len() + self.payload.len());
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, if self.compress { 1 } else { 0 });
+        put_u32(&mut out, header.len() as u32);
+        out.extend_from_slice(&header);
+        out.extend_from_slice(&self.payload);
+        Ok(out)
+    }
+
+    /// Write the file to disk; returns bytes written.
+    pub fn finish(&self, path: &Path) -> Result<u64> {
+        let bytes = self.to_bytes()?;
+        std::fs::write(path, &bytes)?;
+        Ok(bytes.len() as u64)
+    }
+}
+
+/// Planned shared-file layout (see [`CdfWriter::layout`]).
+#[derive(Debug, Clone)]
+pub struct CdfLayout {
+    /// File prefix: magic + version + flags + header with final offsets.
+    pub prefix: Vec<u8>,
+    /// (name, absolute file offset, byte length) per variable.
+    pub vars: Vec<(String, u64, u64)>,
+    /// Total file length.
+    pub total_len: u64,
+}
+
+impl CdfLayout {
+    pub fn var_range(&self, name: &str) -> Option<(u64, u64)> {
+        self.vars
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, o, l)| (*o, *l))
+    }
+}
+
+/// Reader over a CDF-lite file.
+pub struct CdfReader {
+    pub dims: Vec<(String, u64)>,
+    pub attrs: Vec<(String, String)>,
+    vars: Vec<VarEntry>,
+    payload: Vec<u8>,
+    compressed: bool,
+}
+
+impl CdfReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::from_bytes(std::fs::read(path)?)
+    }
+
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        let mut c = Cursor { b: &bytes, p: 0 };
+        if c.take(4)? != MAGIC {
+            return Err(Error::Cdf("bad magic".into()));
+        }
+        let ver = c.u32()?;
+        if ver != VERSION {
+            return Err(Error::Cdf(format!("unsupported version {ver}")));
+        }
+        let flags = c.u32()?;
+        let hlen = c.u32()? as usize;
+        let hstart = c.p;
+        let mut dims = Vec::new();
+        for _ in 0..c.u32()? {
+            let n = c.str()?;
+            let s = c.u64()?;
+            dims.push((n, s));
+        }
+        let mut attrs = Vec::new();
+        for _ in 0..c.u32()? {
+            attrs.push((c.str()?, c.str()?));
+        }
+        let mut vars = Vec::new();
+        for _ in 0..c.u32()? {
+            let name = c.str()?;
+            let dtype = DType::from_code(c.u8()?)?;
+            let nd = c.u32()?;
+            let mut vdims = Vec::new();
+            for _ in 0..nd {
+                vdims.push(c.str()?);
+            }
+            let offset = c.u64()?;
+            let stored = c.u64()?;
+            let raw = c.u64()?;
+            vars.push(VarEntry {
+                def: VarDef {
+                    name,
+                    dtype,
+                    dims: vdims,
+                },
+                offset,
+                stored,
+                raw,
+            });
+        }
+        if c.p != hstart + hlen {
+            return Err(Error::Cdf("header length mismatch".into()));
+        }
+        let payload = bytes[c.p..].to_vec();
+        Ok(CdfReader {
+            dims,
+            attrs,
+            vars,
+            payload,
+            compressed: flags & 1 != 0,
+        })
+    }
+
+    pub fn var_names(&self) -> Vec<&str> {
+        self.vars.iter().map(|v| v.def.name.as_str()).collect()
+    }
+
+    pub fn var_def(&self, name: &str) -> Option<&VarDef> {
+        self.vars.iter().find(|v| v.def.name == name).map(|v| &v.def)
+    }
+
+    /// Dimension sizes of a variable.
+    pub fn var_shape(&self, name: &str) -> Result<Vec<u64>> {
+        let v = self
+            .vars
+            .iter()
+            .find(|v| v.def.name == name)
+            .ok_or_else(|| Error::Cdf(format!("no variable `{name}`")))?;
+        v.def
+            .dims
+            .iter()
+            .map(|d| {
+                self.dims
+                    .iter()
+                    .find(|(n, _)| n == d)
+                    .map(|(_, s)| *s)
+                    .ok_or_else(|| Error::Cdf(format!("undefined dim `{d}`")))
+            })
+            .collect()
+    }
+
+    /// Raw little-endian payload of a variable (decompressed).
+    pub fn read_var_bytes(&self, name: &str) -> Result<Vec<u8>> {
+        let v = self
+            .vars
+            .iter()
+            .find(|v| v.def.name == name)
+            .ok_or_else(|| Error::Cdf(format!("no variable `{name}`")))?;
+        let start = v.offset as usize;
+        let end = start + v.stored as usize;
+        if end > self.payload.len() {
+            return Err(Error::Cdf(format!("variable `{name}` exceeds payload")));
+        }
+        let chunk = &self.payload[start..end];
+        if self.compressed {
+            let mut out = Vec::with_capacity(v.raw as usize);
+            ZlibDecoder::new(chunk).read_to_end(&mut out)?;
+            if out.len() as u64 != v.raw {
+                return Err(Error::Cdf(format!(
+                    "variable `{name}`: inflated {} bytes, expected {}",
+                    out.len(),
+                    v.raw
+                )));
+            }
+            Ok(crate::adios::operator::shuffle::unshuffle(
+                &out,
+                v.def.dtype.size(),
+            ))
+        } else {
+            Ok(chunk.to_vec())
+        }
+    }
+
+    pub fn read_var_f32(&self, name: &str) -> Result<Vec<f32>> {
+        crate::util::bytes_to_f32_vec(&self.read_var_bytes(name)?)
+    }
+}
+
+// ---- little-endian helpers ------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.p + n > self.b.len() {
+            return Err(Error::Cdf("truncated file".into()));
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(compress: bool) -> CdfWriter {
+        let mut w = CdfWriter::new(compress);
+        w.def_dim("z", 2).unwrap();
+        w.def_dim("y", 3).unwrap();
+        w.def_dim("x", 4).unwrap();
+        w.put_attr("TITLE", "stormio test");
+        w.def_var("T", DType::F32, &["z", "y", "x"]).unwrap();
+        w.def_var("PSFC", DType::F32, &["y", "x"]).unwrap();
+        w.end_define();
+        let t: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        let p: Vec<f32> = (0..12).map(|i| 1000.0 + i as f32).collect();
+        w.put_var_f32("T", &t).unwrap();
+        w.put_var_f32("PSFC", &p).unwrap();
+        w
+    }
+
+    #[test]
+    fn roundtrip_uncompressed() {
+        let w = sample(false);
+        let r = CdfReader::from_bytes(w.to_bytes().unwrap()).unwrap();
+        assert_eq!(r.var_names(), vec!["T", "PSFC"]);
+        assert_eq!(r.var_shape("T").unwrap(), vec![2, 3, 4]);
+        let t = r.read_var_f32("T").unwrap();
+        assert_eq!(t.len(), 24);
+        assert_eq!(t[3], 1.5);
+        assert_eq!(r.attrs[0], ("TITLE".into(), "stormio test".into()));
+    }
+
+    #[test]
+    fn roundtrip_compressed_smaller() {
+        let raw = sample(false).to_bytes().unwrap();
+        let comp = sample(true).to_bytes().unwrap();
+        // Linear ramps compress well under zlib.
+        assert!(comp.len() < raw.len(), "{} !< {}", comp.len(), raw.len());
+        let r = CdfReader::from_bytes(comp).unwrap();
+        let t = r.read_var_f32("T").unwrap();
+        assert_eq!(t[23], 11.5);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let mut w = CdfWriter::new(false);
+        w.def_dim("x", 4).unwrap();
+        w.def_var("v", DType::F32, &["x"]).unwrap();
+        w.end_define();
+        assert!(w.put_var_f32("v", &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn define_mode_enforced() {
+        let mut w = CdfWriter::new(false);
+        w.def_dim("x", 1).unwrap();
+        w.def_var("v", DType::F32, &["x"]).unwrap();
+        assert!(w.put_var_f32("v", &[0.0]).is_err()); // before end_define
+        w.end_define();
+        assert!(w.def_dim("y", 1).is_err()); // after end_define
+    }
+
+    #[test]
+    fn undefined_dim_rejected() {
+        let mut w = CdfWriter::new(false);
+        assert!(w.def_var("v", DType::F32, &["ghost"]).is_err());
+    }
+
+    #[test]
+    fn unwritten_var_rejected() {
+        let mut w = CdfWriter::new(false);
+        w.def_dim("x", 2).unwrap();
+        w.def_var("v", DType::F32, &["x"]).unwrap();
+        w.end_define();
+        assert!(w.to_bytes().is_err());
+    }
+
+    #[test]
+    fn double_write_rejected() {
+        let mut w = CdfWriter::new(false);
+        w.def_dim("x", 1).unwrap();
+        w.def_var("v", DType::F32, &["x"]).unwrap();
+        w.end_define();
+        w.put_var_f32("v", &[1.0]).unwrap();
+        assert!(w.put_var_f32("v", &[2.0]).is_err());
+    }
+
+    #[test]
+    fn layout_matches_serial_write() {
+        // A file assembled from a layout via write_at-style patching must be
+        // byte-identical to the serial to_bytes() path.
+        let w = sample(false);
+        let serial = w.to_bytes().unwrap();
+
+        let mut planner = CdfWriter::new(false);
+        planner.def_dim("z", 2).unwrap();
+        planner.def_dim("y", 3).unwrap();
+        planner.def_dim("x", 4).unwrap();
+        planner.put_attr("TITLE", "stormio test");
+        planner.def_var("T", DType::F32, &["z", "y", "x"]).unwrap();
+        planner.def_var("PSFC", DType::F32, &["y", "x"]).unwrap();
+        planner.end_define();
+        let layout = planner.layout().unwrap();
+        assert_eq!(layout.total_len as usize, serial.len());
+
+        let mut assembled = vec![0u8; layout.total_len as usize];
+        assembled[..layout.prefix.len()].copy_from_slice(&layout.prefix);
+        let t: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        let p: Vec<f32> = (0..12).map(|i| 1000.0 + i as f32).collect();
+        for (name, data) in [("T", &t), ("PSFC", &p)] {
+            let (off, len) = layout.var_range(name).unwrap();
+            let bytes = crate::util::f32_slice_as_bytes(data);
+            assert_eq!(bytes.len() as u64, len);
+            assembled[off as usize..(off + len) as usize].copy_from_slice(bytes);
+        }
+        assert_eq!(assembled, serial);
+        // And it parses.
+        let r = CdfReader::from_bytes(assembled).unwrap();
+        assert_eq!(r.read_var_f32("PSFC").unwrap()[0], 1000.0);
+    }
+
+    #[test]
+    fn layout_rejects_compressed() {
+        let mut w = CdfWriter::new(true);
+        w.def_dim("x", 1).unwrap();
+        w.end_define();
+        assert!(w.layout().is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let bytes = sample(false).to_bytes().unwrap();
+        assert!(CdfReader::from_bytes(bytes[..20].to_vec()).is_err());
+        assert!(CdfReader::from_bytes(b"NOPE".to_vec()).is_err());
+    }
+}

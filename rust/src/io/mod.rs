@@ -1,0 +1,12 @@
+//! WRF I/O layer: the pluggable history-output API (`io_form_history`)
+//! and its backends — the paper's comparison set.
+
+pub mod adios2;
+pub mod api;
+pub mod cdf;
+pub mod pnetcdf;
+pub mod quilt;
+pub mod serial_nc;
+pub mod split_nc;
+
+pub use api::{FrameFields, FrameReport, HistoryBackend};

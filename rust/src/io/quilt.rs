@@ -1,0 +1,203 @@
+//! Quilt-server backend — WRF's dedicated-I/O-rank technique (paper
+//! §III-A, flagged "should be investigated in future works"; we build it
+//! as the ablation baseline `benches/ablation_quilt.rs`).
+//!
+//! The world is split into compute ranks and `nio` quilt servers (the
+//! world's last ranks).  Compute ranks ship their blocks to their server
+//! and continue immediately — the *perceived* write time is only the
+//! funnel send — while servers merge ("quilt") the data and write a
+//! serial-NetCDF-style file in the background, holding it in memory
+//! until the PFS write completes.
+
+use std::path::PathBuf;
+
+use crate::cluster::Comm;
+use crate::io::api::{
+    frame_raw_bytes, pack_fields, unpack_fields, FrameFields, FrameReport, HistoryBackend,
+};
+use crate::metrics::Stopwatch;
+use crate::sim::{CostModel, WriteCost};
+use crate::util::byteio::{Reader, Writer};
+use crate::{Error, Result};
+
+const TAG_QUILT: u64 = 0x0901_0000;
+const TAG_QSTATS: u64 = 0x0902_0000;
+
+/// Per-rank quilt handle.  `nio` trailing ranks act as servers.
+pub struct QuiltBackend {
+    pub out_dir: PathBuf,
+    pub cost: CostModel,
+    pub nio: usize,
+    reports: Vec<FrameReport>,
+}
+
+impl QuiltBackend {
+    pub fn new(out_dir: PathBuf, cost: CostModel, nio: usize) -> Self {
+        QuiltBackend {
+            out_dir,
+            cost,
+            nio: nio.max(1),
+            reports: Vec::new(),
+        }
+    }
+
+    pub fn compute_ranks(&self, world: usize) -> usize {
+        world - self.nio
+    }
+
+    fn server_of(&self, rank: usize, world: usize) -> usize {
+        let nc = self.compute_ranks(world);
+        world - self.nio + (rank % self.nio).min(self.nio - 1) * 0
+            + (rank * self.nio / nc.max(1)).min(self.nio - 1)
+    }
+}
+
+impl HistoryBackend for QuiltBackend {
+    fn name(&self) -> &'static str {
+        "quilt-servers"
+    }
+
+    fn write_frame(
+        &mut self,
+        comm: &mut Comm,
+        frame: usize,
+        frame_name: &str,
+        fields: FrameFields,
+    ) -> Result<()> {
+        let world = comm.size();
+        if world <= self.nio {
+            return Err(Error::cluster("quilt needs more ranks than servers"));
+        }
+        let nc = self.compute_ranks(world);
+        let is_server = comm.rank() >= nc;
+        comm.barrier();
+        let sw = Stopwatch::start();
+        let tag = TAG_QUILT + frame as u64;
+
+        let raw = if is_server { 0 } else { frame_raw_bytes(&fields) };
+
+        if !is_server {
+            // Compute rank: ship and go.  Perceived time ends here.
+            let srv = self.server_of(comm.rank(), world);
+            comm.send(srv, tag, pack_fields(&fields))?;
+        } else {
+            // Server: collect from my compute group, merge, write.
+            let me = comm.rank() - nc;
+            let group: Vec<usize> = (0..nc)
+                .filter(|r| self.server_of(*r, world) == comm.rank())
+                .collect();
+            let mut all: Vec<FrameFields> = Vec::with_capacity(group.len());
+            for _ in &group {
+                let (_, msg) = comm.recv_any(tag)?;
+                all.push(unpack_fields(&msg)?);
+            }
+            std::fs::create_dir_all(&self.out_dir)?;
+            let path = self
+                .out_dir
+                .join(format!("{frame_name}_quilt{me}.nc"));
+            let (stored, _comp) =
+                crate::io::serial_nc::assemble_and_write_partial(all, &path, true)?;
+            // Report stats to rank 0.
+            let mut w = Writer::new();
+            w.u64(stored);
+            comm.send(0, TAG_QSTATS + frame as u64, w.into_vec())?;
+        }
+
+        // Rank 0 (a compute rank) assembles the report without waiting for
+        // servers' disk writes — that is the whole point of quilting.
+        if comm.rank() == 0 {
+            let mut tstored = 0u64;
+            for _ in 0..self.nio {
+                let (_, msg) = comm.recv_any(TAG_QSTATS + frame as u64)?;
+                let mut r = Reader::new(&msg);
+                tstored += r.u64()?;
+            }
+            let hw = &self.cost.hw;
+            // Total raw across compute ranks ≈ nc × this rank's raw
+            // (balanced decomposition).
+            let traw = raw * nc as u64;
+            let mut cost = WriteCost::default();
+            cost.push("funnel-to-servers", self.cost.t_gather_root(hw.scaled(traw), nc) / self.nio as f64);
+            cost.push_background("quilt-merge", self.cost.t_buffer_copy(hw.scaled(traw)));
+            cost.push_background("mds", self.cost.t_mds_creates(self.nio));
+            cost.push_background(
+                "write-pfs",
+                self.cost.t_pfs_write(hw.scaled(tstored), self.nio),
+            );
+            self.reports.push(FrameReport {
+                frame,
+                name: frame_name.to_string(),
+                real_secs: sw.secs(),
+                cost,
+                bytes_raw: traw,
+                bytes_stored: tstored,
+                files_created: self.nio,
+            });
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, comm: &mut Comm) -> Result<Vec<FrameReport>> {
+        comm.barrier();
+        if comm.rank() == 0 {
+            Ok(std::mem::take(&mut self.reports))
+        } else {
+            Ok(Vec::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::Variable;
+    use crate::cluster::run_world;
+    use crate::io::cdf::CdfReader;
+    use crate::sim::HardwareSpec;
+
+    #[test]
+    fn quilt_writes_server_files_and_frees_compute() {
+        let dir = std::env::temp_dir().join(format!("stormio_quilt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d2 = dir.clone();
+        // 6 ranks: 4 compute + 2 servers.
+        let reports = run_world(6, 3, move |mut comm| {
+            let mut b = QuiltBackend::new(
+                d2.clone(),
+                CostModel::new(HardwareSpec::paper_testbed(2)),
+                2,
+            );
+            let r = comm.rank() as u64;
+            let fields: FrameFields = if comm.rank() < 4 {
+                vec![(
+                    Variable::global("T2", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                    (0..8).map(|i| (r * 8 + i) as f32).collect(),
+                )]
+            } else {
+                Vec::new()
+            };
+            b.write_frame(&mut comm, 0, "wrfout_q", fields).unwrap();
+            b.finish(&mut comm).unwrap()
+        });
+        let rep = &reports[0][0];
+        assert_eq!(rep.files_created, 2);
+        // perceived: only the funnel, everything else background
+        let blocking: Vec<&str> = rep
+            .cost
+            .phases
+            .iter()
+            .filter(|p| p.blocking)
+            .map(|p| p.name)
+            .collect();
+        assert_eq!(blocking, vec!["funnel-to-servers"]);
+        // server files exist and carry the right rows
+        let mut rows = 0;
+        for s in 0..2 {
+            let rd = CdfReader::open(&dir.join(format!("wrfout_q_quilt{s}.nc"))).unwrap();
+            let t2 = rd.read_var_f32("T2").unwrap();
+            rows += t2.len() / 8;
+        }
+        assert_eq!(rows, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

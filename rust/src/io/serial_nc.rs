@@ -1,0 +1,296 @@
+//! Serial NetCDF backend (`io_form=2`) — WRF's default.
+//!
+//! All data funnels through MPI rank 0, which alone writes one
+//! NetCDF4-style file with Zlib compression while every other rank waits
+//! (paper §III-A).  Strengths: ~4× smaller files.  Weakness: single write
+//! thread + full-domain gather, which is why the paper excludes it from
+//! the scaling runs ("known to not perform adequately at high process
+//! counts").
+
+use std::path::PathBuf;
+
+use crate::cluster::Comm;
+use crate::io::api::{frame_raw_bytes, pack_fields, unpack_fields, FrameFields, FrameReport, HistoryBackend};
+use crate::io::cdf::{CdfWriter, DType};
+use crate::metrics::Stopwatch;
+use crate::sim::{CostModel, WriteCost};
+use crate::Result;
+
+const TAG_FUNNEL: u64 = 0x0002_0001;
+
+/// Per-rank serial-NetCDF backend handle.
+pub struct SerialNcBackend {
+    pub out_dir: PathBuf,
+    pub cost: CostModel,
+    reports: Vec<FrameReport>,
+}
+
+impl SerialNcBackend {
+    pub fn new(out_dir: PathBuf, cost: CostModel) -> Self {
+        SerialNcBackend {
+            out_dir,
+            cost,
+            reports: Vec::new(),
+        }
+    }
+}
+
+/// Assemble gathered per-rank fields into global arrays and write one
+/// compressed CDF-lite file.  Returns (file bytes written, compress secs).
+pub(crate) fn assemble_and_write(
+    all: Vec<FrameFields>,
+    path: &std::path::Path,
+    compress: bool,
+) -> Result<(u64, f64)> {
+    // Union of variables: (name, shape) -> global buffer.
+    let mut order: Vec<(String, Vec<u64>)> = Vec::new();
+    let mut globals: std::collections::BTreeMap<String, Vec<f32>> = Default::default();
+    for fields in &all {
+        for (var, data) in fields {
+            if !globals.contains_key(&var.name) {
+                order.push((var.name.clone(), var.shape.clone()));
+                globals.insert(var.name.clone(), vec![0.0; var.global_len()]);
+            }
+            let g = globals.get_mut(&var.name).unwrap();
+            crate::adios::bp::scatter_block(g, &var.shape, &var.start, &var.count, data)?;
+        }
+    }
+    let sw = crate::metrics::CpuStopwatch::start();
+    let mut w = CdfWriter::new(compress);
+    // Shared dimensions named by size (NetCDF requires named dims).
+    let mut dims: Vec<u64> = Vec::new();
+    for (_, shape) in &order {
+        for d in shape {
+            if !dims.contains(d) {
+                dims.push(*d);
+            }
+        }
+    }
+    for d in &dims {
+        w.def_dim(&format!("dim{d}"), *d)?;
+    }
+    w.put_attr("TITLE", "stormio history (serial NetCDF path)");
+    for (name, shape) in &order {
+        let dnames: Vec<String> = shape.iter().map(|d| format!("dim{d}")).collect();
+        let drefs: Vec<&str> = dnames.iter().map(|s| s.as_str()).collect();
+        w.def_var(name, DType::F32, &drefs)?;
+    }
+    w.end_define();
+    for (name, _) in &order {
+        w.put_var_f32(name, &globals[name])?;
+    }
+    let bytes = w.finish(path)?;
+    Ok((bytes, sw.secs()))
+}
+
+/// Like [`assemble_and_write`] but assembles only the *bounding box* of the
+/// supplied blocks per variable (used by quilt servers, whose group covers
+/// a sub-domain).  The box's global placement is recorded as attributes,
+/// mirroring quilted WRF output.
+pub(crate) fn assemble_and_write_partial(
+    all: Vec<FrameFields>,
+    path: &std::path::Path,
+    compress: bool,
+) -> Result<(u64, f64)> {
+    struct Box_ {
+        shape: Vec<u64>,
+        lo: Vec<u64>,
+        hi: Vec<u64>,
+        blocks: Vec<(Vec<u64>, Vec<u64>, Vec<f32>)>,
+    }
+    let mut order: Vec<String> = Vec::new();
+    let mut boxes: std::collections::BTreeMap<String, Box_> = Default::default();
+    for fields in all {
+        for (var, data) in fields {
+            let e = boxes.entry(var.name.clone()).or_insert_with(|| {
+                order.push(var.name.clone());
+                Box_ {
+                    shape: var.shape.clone(),
+                    lo: var.start.clone(),
+                    hi: var
+                        .start
+                        .iter()
+                        .zip(&var.count)
+                        .map(|(s, c)| s + c)
+                        .collect(),
+                    blocks: Vec::new(),
+                }
+            });
+            for d in 0..var.shape.len() {
+                e.lo[d] = e.lo[d].min(var.start[d]);
+                e.hi[d] = e.hi[d].max(var.start[d] + var.count[d]);
+            }
+            e.blocks.push((var.start, var.count, data));
+        }
+    }
+    let sw = Stopwatch::start();
+    let mut w = CdfWriter::new(compress);
+    let mut dims: Vec<u64> = Vec::new();
+    for name in &order {
+        let b = &boxes[name];
+        for d in 0..b.shape.len() {
+            let ext = b.hi[d] - b.lo[d];
+            if !dims.contains(&ext) {
+                dims.push(ext);
+            }
+        }
+    }
+    for d in &dims {
+        w.def_dim(&format!("dim{d}"), *d)?;
+    }
+    for name in &order {
+        let b = &boxes[name];
+        let exts: Vec<u64> = (0..b.shape.len()).map(|d| b.hi[d] - b.lo[d]).collect();
+        let dn: Vec<String> = exts.iter().map(|d| format!("dim{d}")).collect();
+        let dr: Vec<&str> = dn.iter().map(|s| s.as_str()).collect();
+        w.def_var(name, DType::F32, &dr)?;
+        let fmt = |v: &[u64]| {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        };
+        w.put_attr(&format!("{name}:shape"), &fmt(&b.shape));
+        w.put_attr(&format!("{name}:start"), &fmt(&b.lo));
+        w.put_attr(&format!("{name}:count"), &fmt(&exts));
+    }
+    w.end_define();
+    for name in &order {
+        let b = &boxes[name];
+        let exts: Vec<u64> = (0..b.shape.len()).map(|d| b.hi[d] - b.lo[d]).collect();
+        let total: u64 = exts.iter().product();
+        let mut buf = vec![0.0f32; total as usize];
+        for (start, count, data) in &b.blocks {
+            let rel: Vec<u64> = start.iter().zip(&b.lo).map(|(s, l)| s - l).collect();
+            crate::adios::bp::scatter_block(&mut buf, &exts, &rel, count, data)?;
+        }
+        w.put_var_f32(name, &buf)?;
+    }
+    let bytes = w.finish(path)?;
+    Ok((bytes, sw.secs()))
+}
+
+impl HistoryBackend for SerialNcBackend {
+    fn name(&self) -> &'static str {
+        "serial-netcdf(io_form=2)"
+    }
+
+    fn write_frame(
+        &mut self,
+        comm: &mut Comm,
+        frame: usize,
+        frame_name: &str,
+        fields: FrameFields,
+    ) -> Result<()> {
+        comm.barrier();
+        let sw = Stopwatch::start();
+        let raw = frame_raw_bytes(&fields);
+        let msg = pack_fields(&fields);
+        let gathered = comm.gather(0, msg, TAG_FUNNEL + frame as u64)?;
+        if comm.rank() == 0 {
+            let all: Vec<FrameFields> = gathered
+                .iter()
+                .map(|m| unpack_fields(m))
+                .collect::<Result<_>>()?;
+            let traw: u64 = all.iter().map(frame_raw_bytes).sum();
+            std::fs::create_dir_all(&self.out_dir)?;
+            let path = self.out_dir.join(format!("{frame_name}.nc"));
+            let (stored, comp_secs) = assemble_and_write(all, &path, true)?;
+
+            // Virtual cost: funnel + rank-0 single-thread deflate at the
+            // *measured* throughput + one-stream PFS write.
+            let hw = &self.cost.hw;
+            let v_raw = hw.scaled(traw);
+            let v_stored = hw.scaled(stored);
+            let mut cost = WriteCost::default();
+            cost.push(
+                "gather",
+                self.cost.t_gather_root(v_raw, comm.size()),
+            );
+            let comp_bps = traw as f64 / comp_secs.max(1e-9);
+            cost.push("deflate@root", v_raw / comp_bps);
+            cost.push("mds", self.cost.t_mds_creates(1));
+            cost.push("write-pfs", self.cost.t_pfs_write(v_stored, 1));
+            self.reports.push(FrameReport {
+                frame,
+                name: frame_name.to_string(),
+                real_secs: 0.0,
+                cost,
+                bytes_raw: traw,
+                bytes_stored: stored,
+                files_created: 1,
+            });
+        }
+        let _ = raw;
+        comm.barrier();
+        if comm.rank() == 0 {
+            if let Some(r) = self.reports.last_mut() {
+                r.real_secs = sw.secs();
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, comm: &mut Comm) -> Result<Vec<FrameReport>> {
+        comm.barrier();
+        if comm.rank() == 0 {
+            Ok(std::mem::take(&mut self.reports))
+        } else {
+            Ok(Vec::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::Variable;
+    use crate::cluster::run_world;
+    use crate::io::cdf::CdfReader;
+    use crate::sim::HardwareSpec;
+
+    #[test]
+    fn funnel_write_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("stormio_snc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d2 = dir.clone();
+        let reports = run_world(4, 2, move |mut comm| {
+            let mut b = SerialNcBackend::new(d2.clone(), CostModel::new(HardwareSpec::paper_testbed(2)));
+            let r = comm.rank() as u64;
+            let fields: FrameFields = vec![(
+                Variable::global("T2", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                (0..8).map(|i| (r * 8 + i) as f32).collect(),
+            )];
+            b.write_frame(&mut comm, 0, "wrfout_0000", fields).unwrap();
+            b.finish(&mut comm).unwrap()
+        });
+        let r0 = &reports[0];
+        assert_eq!(r0.len(), 1);
+        assert!(r0[0].bytes_stored > 0);
+        assert!(r0[0].cost.perceived() > 0.0);
+        let rd = CdfReader::open(&dir.join("wrfout_0000.nc")).unwrap();
+        let t2 = rd.read_var_f32("T2").unwrap();
+        assert_eq!(t2.len(), 32);
+        assert_eq!(t2[19], 19.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compression_shrinks_file() {
+        // Smooth field -> zlib-compressed serial NC file smaller than raw.
+        let dir = std::env::temp_dir().join(format!("stormio_snc_c_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d2 = dir.clone();
+        let reports = run_world(1, 1, move |mut comm| {
+            let mut b = SerialNcBackend::new(d2.clone(), CostModel::new(HardwareSpec::paper_testbed(1)));
+            let n = 64 * 64;
+            let data: Vec<f32> = (0..n).map(|i| 280.0 + (i as f32 * 0.01).sin()).collect();
+            let fields: FrameFields = vec![(
+                Variable::global("T2", &[64, 64], &[0, 0], &[64, 64]).unwrap(),
+                data,
+            )];
+            b.write_frame(&mut comm, 0, "f0", fields).unwrap();
+            b.finish(&mut comm).unwrap()
+        });
+        let r = &reports[0][0];
+        assert!(r.bytes_stored < r.bytes_raw, "{} !< {}", r.bytes_stored, r.bytes_raw);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,199 @@
+//! Split NetCDF backend (`io_form=102`) — one file per MPI rank (N-N).
+//!
+//! Every rank writes its own patch to its own file with zero
+//! communication: very fast at moderate rank counts, but N simultaneous
+//! creates storm the metadata server and N concurrent streams thrash the
+//! PFS at scale — the cliff the paper observes between 4 and 8 nodes
+//! (Fig 1).  Post-processing must stitch the files back together
+//! ([`crate::convert::stitch_split`], the "community provided routine" of
+//! §III-A).
+
+use std::path::PathBuf;
+
+use crate::cluster::Comm;
+use crate::io::api::{frame_raw_bytes, FrameFields, FrameReport, HistoryBackend};
+use crate::io::cdf::{CdfWriter, DType};
+use crate::metrics::Stopwatch;
+use crate::sim::{CostModel, WriteCost};
+use crate::util::byteio::{Reader, Writer};
+use crate::Result;
+
+const TAG_STATS: u64 = 0x0102_0001;
+
+/// Per-rank split-NetCDF handle.
+pub struct SplitNcBackend {
+    pub out_dir: PathBuf,
+    pub cost: CostModel,
+    reports: Vec<FrameReport>,
+}
+
+impl SplitNcBackend {
+    pub fn new(out_dir: PathBuf, cost: CostModel) -> Self {
+        SplitNcBackend {
+            out_dir,
+            cost,
+            reports: Vec::new(),
+        }
+    }
+
+    /// Per-rank file name, WRF-style (`<frame>_0007`).
+    pub fn part_name(frame_name: &str, rank: usize) -> String {
+        format!("{frame_name}_{rank:04}")
+    }
+}
+
+/// Write one rank's patch file.  The block's global placement is recorded
+/// as attributes so the stitcher can reassemble the domain.
+pub(crate) fn write_patch_file(
+    path: &std::path::Path,
+    fields: &FrameFields,
+) -> Result<u64> {
+    let mut w = CdfWriter::new(false);
+    let mut dims: Vec<u64> = Vec::new();
+    for (var, _) in fields {
+        for c in &var.count {
+            if !dims.contains(c) {
+                dims.push(*c);
+            }
+        }
+    }
+    for d in &dims {
+        w.def_dim(&format!("dim{d}"), *d)?;
+    }
+    for (var, _) in fields {
+        let dnames: Vec<String> = var.count.iter().map(|d| format!("dim{d}")).collect();
+        let drefs: Vec<&str> = dnames.iter().map(|s| s.as_str()).collect();
+        w.def_var(&var.name, DType::F32, &drefs)?;
+        let fmt = |v: &[u64]| {
+            v.iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        w.put_attr(&format!("{}:shape", var.name), &fmt(&var.shape));
+        w.put_attr(&format!("{}:start", var.name), &fmt(&var.start));
+        w.put_attr(&format!("{}:count", var.name), &fmt(&var.count));
+    }
+    w.end_define();
+    for (var, data) in fields {
+        w.put_var_f32(&var.name, data)?;
+    }
+    w.finish(path)
+}
+
+impl HistoryBackend for SplitNcBackend {
+    fn name(&self) -> &'static str {
+        "split-netcdf(io_form=102)"
+    }
+
+    fn write_frame(
+        &mut self,
+        comm: &mut Comm,
+        frame: usize,
+        frame_name: &str,
+        fields: FrameFields,
+    ) -> Result<()> {
+        comm.barrier();
+        let sw = Stopwatch::start();
+        std::fs::create_dir_all(&self.out_dir)?;
+        let raw = frame_raw_bytes(&fields);
+        let path = self
+            .out_dir
+            .join(format!("{}.nc", Self::part_name(frame_name, comm.rank())));
+        let stored = write_patch_file(&path, &fields)?;
+
+        // Funnel byte stats to rank 0.
+        let mut w = Writer::new();
+        w.u64(raw);
+        w.u64(stored);
+        let gathered = comm.gather(0, w.into_vec(), TAG_STATS + frame as u64)?;
+        if comm.rank() == 0 {
+            let mut traw = 0u64;
+            let mut tstored = 0u64;
+            for g in &gathered {
+                let mut r = Reader::new(g);
+                traw += r.u64()?;
+                tstored += r.u64()?;
+            }
+            let n = comm.size();
+            let hw = &self.cost.hw;
+            let mut cost = WriteCost::default();
+            // N near-simultaneous creates at the MDS, then N independent
+            // streams sharing the PFS.
+            cost.push("mds", self.cost.t_mds_creates(n));
+            cost.push("write-pfs", self.cost.t_pfs_write(hw.scaled(tstored), n));
+            self.reports.push(FrameReport {
+                frame,
+                name: frame_name.to_string(),
+                real_secs: 0.0,
+                cost,
+                bytes_raw: traw,
+                bytes_stored: tstored,
+                files_created: n,
+            });
+        }
+        comm.barrier();
+        if comm.rank() == 0 {
+            if let Some(r) = self.reports.last_mut() {
+                r.real_secs = sw.secs();
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, comm: &mut Comm) -> Result<Vec<FrameReport>> {
+        comm.barrier();
+        if comm.rank() == 0 {
+            Ok(std::mem::take(&mut self.reports))
+        } else {
+            Ok(Vec::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::Variable;
+    use crate::cluster::run_world;
+    use crate::io::cdf::CdfReader;
+    use crate::sim::HardwareSpec;
+
+    #[test]
+    fn each_rank_writes_own_file() {
+        let dir = std::env::temp_dir().join(format!("stormio_split_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d2 = dir.clone();
+        let reports = run_world(4, 2, move |mut comm| {
+            let mut b =
+                SplitNcBackend::new(d2.clone(), CostModel::new(HardwareSpec::paper_testbed(2)));
+            let r = comm.rank() as u64;
+            let fields: FrameFields = vec![(
+                Variable::global("T2", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                (0..8).map(|i| (r * 8 + i) as f32).collect(),
+            )];
+            b.write_frame(&mut comm, 0, "wrfout_0000", fields).unwrap();
+            b.finish(&mut comm).unwrap()
+        });
+        assert_eq!(reports[0][0].files_created, 4);
+        for rank in 0..4 {
+            let p = dir.join(format!("wrfout_0000_{rank:04}.nc"));
+            let rd = CdfReader::open(&p).unwrap();
+            let d = rd.read_var_f32("T2").unwrap();
+            assert_eq!(d.len(), 8);
+            assert_eq!(d[0], (rank * 8) as f32);
+            // placement attributes present
+            assert!(rd.attrs.iter().any(|(k, v)| k == "T2:start" && v == &format!("{rank},0")));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mds_storm_grows_with_ranks() {
+        let cost = CostModel::new(HardwareSpec::paper_testbed(8));
+        let t36 = cost.t_mds_creates(36);
+        let t288 = cost.t_mds_creates(288);
+        // superlinear in creates
+        assert!(t288 / t36 > 288.0 / 36.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! # stormio
+//!
+//! Reproduction of *“High Performance Parallel I/O and In-Situ Analysis in
+//! the WRF Model with ADIOS2”* (Laufer & Fredj, 2022) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate contains every system the paper touches (see `DESIGN.md` for
+//! the full inventory):
+//!
+//! * [`adios`] — the core contribution: an ADIOS2-workalike data-management
+//!   library (step-based put/get API, BP4-lite sub-file format, N→M
+//!   aggregation, burst-buffer engine with background drain, in-line
+//!   compression operators, SST-like staging transport, XML runtime config).
+//! * [`io`] — WRF's legacy I/O backends rebuilt as baselines: serial
+//!   NetCDF (funnel to rank 0), split NetCDF (N-N), PnetCDF (two-phase
+//!   collective N-1), plus quilt servers, all over a CDF-lite container.
+//! * [`model`] + [`runtime`] — the WRF-analog forecast driver executing the
+//!   AOT-compiled JAX/Pallas dynamical core through PJRT (`xla` crate).
+//! * [`sim`] — the virtual-time testbed: the paper's 8-node cluster
+//!   (BeeGFS-like PFS, 100 GbE interconnect, per-node NVMe burst buffers,
+//!   metadata server) as an analytic contention model.
+//! * [`cluster`] — an in-process MPI: ranks as threads, point-to-point
+//!   channels and the collectives the I/O layers need.
+//! * [`namelist`] / [`xml`] — WRF's `namelist.input` (Fortran namelist)
+//!   and ADIOS2's `adios2.xml` configuration surfaces.
+//! * [`convert`] — the BP → NetCDF backwards-compatibility converter.
+//! * [`analysis`] — the in-situ consumer (temperature-slice statistics and
+//!   rendering) fed by the SST engine.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! Rust binary is self-contained afterwards.
+
+pub mod adios;
+pub mod analysis;
+pub mod cluster;
+pub mod convert;
+pub mod error;
+pub mod io;
+pub mod launcher;
+pub mod metrics;
+pub mod model;
+pub mod namelist;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+pub mod xml;
+
+pub use error::{Error, Result};
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

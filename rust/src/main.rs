@@ -1,0 +1,113 @@
+//! `stormio` — leader binary: run forecasts, convert output, inspect
+//! artifacts.  (clap is not in the offline vendor set; argument parsing is
+//! by hand.)
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use stormio::{convert, launcher, runtime};
+
+const USAGE: &str = "\
+stormio — WRF + ADIOS2 reproduction (Laufer & Fredj 2022)
+
+USAGE:
+  stormio run <namelist.input> [--artifacts DIR]
+      Run a forecast configured by a WRF-style namelist.
+
+  stormio convert <dir.bp> <out_dir> [--no-compress]
+      Convert every step of a BP directory to NetCDF-style files
+      (the paper's §IV backwards-compatibility converter).
+
+  stormio stitch <out.nc> <part.nc> [part.nc ...]
+      Stitch split-NetCDF (io_form=102) per-rank files into one file.
+
+  stormio info [--artifacts DIR]
+      Show the AOT artifact manifest and PJRT platform.
+
+  stormio version
+";
+
+fn artifacts_flag(args: &[String]) -> PathBuf {
+    args.windows(2)
+        .find(|w| w[0] == "--artifacts")
+        .map(|w| PathBuf::from(&w[1]))
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn real_main() -> stormio::Result<i32> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => {
+            let nl = args.get(1).ok_or_else(|| {
+                stormio::Error::config("run: missing namelist path".to_string())
+            })?;
+            launcher::run_from_namelist(Path::new(nl), &artifacts_flag(&args))?;
+            Ok(0)
+        }
+        Some("convert") => {
+            let bp = args.get(1).and_then(|s| Some(PathBuf::from(s)));
+            let out = args.get(2).and_then(|s| Some(PathBuf::from(s)));
+            let (Some(bp), Some(out)) = (bp, out) else {
+                eprintln!("{USAGE}");
+                return Ok(2);
+            };
+            let compress = !args.iter().any(|a| a == "--no-compress");
+            let sw = stormio::metrics::Stopwatch::start();
+            let paths = convert::bp_to_nc_all(&bp, &out, compress)?;
+            println!(
+                "converted {} step(s) from {} in {:.2}s:",
+                paths.len(),
+                bp.display(),
+                sw.secs()
+            );
+            for p in paths {
+                println!("  {}", p.display());
+            }
+            Ok(0)
+        }
+        Some("stitch") => {
+            let out = args.get(1).map(PathBuf::from);
+            let parts: Vec<PathBuf> = args[2..].iter().map(PathBuf::from).collect();
+            let Some(out) = out else {
+                eprintln!("{USAGE}");
+                return Ok(2);
+            };
+            let n = convert::stitch_split(&parts, &out, false)?;
+            println!("stitched {} parts into {} ({} bytes)", parts.len(), out.display(), n);
+            Ok(0)
+        }
+        Some("info") => {
+            let dir = artifacts_flag(&args);
+            let man = runtime::Manifest::load(&dir)?;
+            let rt = runtime::XlaRuntime::new()?;
+            println!("pjrt platform: {}", rt.platform());
+            println!("artifacts dir: {}", man.dir.display());
+            println!("halo {}  nf {}  fields {:?}", man.halo, man.nf, man.fields);
+            for m in &man.models {
+                println!("  model {}: nz={} patch {}x{} ({})", m.tag, m.nz, m.nyp, m.nxp, m.file);
+            }
+            for a in &man.analyses {
+                println!("  analysis: nz={} grid {}x{} ({})", a.nz, a.ny, a.nx, a.file);
+            }
+            Ok(0)
+        }
+        Some("version") => {
+            println!("stormio {}", stormio::version());
+            Ok(0)
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => ExitCode::from(code as u8),
+        Err(e) => {
+            eprintln!("stormio error: {e}");
+            ExitCode::from(1)
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Timing collection and report tables (the `rsl.out`-style accounting
+//! WRF users read, plus the bench table printer).
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// CPU time consumed by the calling thread, in seconds.
+///
+/// The in-process cluster runs hundreds of simulated ranks as threads on
+/// (possibly) one core, so *wall* time massively over-states per-rank
+/// compute costs: a rank's compression that needs 50 ms of CPU appears to
+/// take seconds while time-slicing.  The virtual-time model charges
+/// per-rank work with thread CPU seconds — what a dedicated core (as on
+/// the paper's 36-core nodes) would actually spend.
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // Safety: plain syscall writing into the local struct.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Stopwatch over this thread's CPU time (see [`thread_cpu_secs`]).
+pub struct CpuStopwatch(f64);
+
+impl CpuStopwatch {
+    pub fn start() -> Self {
+        CpuStopwatch(thread_cpu_secs())
+    }
+    pub fn secs(&self) -> f64 {
+        (thread_cpu_secs() - self.0).max(0.0)
+    }
+}
+
+/// Accumulates named timing buckets (compute / io / init …).
+#[derive(Debug, Default, Clone)]
+pub struct TimingLedger {
+    entries: Vec<(String, f64)>,
+}
+
+impl TimingLedger {
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+}
+
+/// Fixed-width aligned table printer for bench output (criterion is not in
+/// the offline vendor set; every bench prints paper-shaped rows through
+/// this).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            out.push_str(&s);
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&format!("{:-<width$}|", "", width = wi + 2));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// CSV form for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Print to stdout and also persist CSV next to the bench outputs.
+    pub fn emit(&self, csv_path: Option<&std::path::Path>) {
+        println!("{}", self.render());
+        if let Some(p) = csv_path {
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            let _ = std::fs::write(p, self.to_csv());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = TimingLedger::default();
+        l.add("io", 1.0);
+        l.add("io", 2.0);
+        l.add("compute", 4.0);
+        assert_eq!(l.get("io"), 3.0);
+        assert_eq!(l.total(), 7.0);
+        assert_eq!(l.get("missing"), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["config", "time [s]"]);
+        t.row(&["PnetCDF".into(), "93".into()]);
+        t.row(&["ADIOS2+BB+Zstd".into(), "0.52".into()]);
+        let s = t.render();
+        assert!(s.contains("== Fig X =="));
+        assert!(s.contains("| PnetCDF"));
+        assert!(s.contains("| ADIOS2+BB+Zstd"));
+        // column alignment: both data rows same length
+        let rows: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(rows.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.secs() >= 0.004);
+    }
+}

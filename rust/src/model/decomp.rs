@@ -1,0 +1,146 @@
+//! Domain decomposition: the WRF-style 2-D block split of the global grid
+//! over MPI ranks.
+
+use crate::{Error, Result};
+
+/// A py × px processor grid over an (ny, nx) domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decomp {
+    pub ny: usize,
+    pub nx: usize,
+    pub py: usize,
+    pub px: usize,
+}
+
+impl Decomp {
+    /// Build a decomposition; patch sizes must divide evenly (the AOT
+    /// model is compiled for a fixed patch shape).
+    pub fn new(ny: usize, nx: usize, py: usize, px: usize) -> Result<Decomp> {
+        if py == 0 || px == 0 || ny == 0 || nx == 0 {
+            return Err(Error::model("decomposition dims must be positive"));
+        }
+        if ny % py != 0 || nx % px != 0 {
+            return Err(Error::model(format!(
+                "grid {ny}x{nx} not divisible by processor grid {py}x{px}"
+            )));
+        }
+        Ok(Decomp { ny, nx, py, px })
+    }
+
+    /// Pick the most-square processor grid for `ranks` that divides the
+    /// domain evenly (WRF's default factorization strategy).
+    pub fn auto(ny: usize, nx: usize, ranks: usize) -> Result<Decomp> {
+        let mut best: Option<Decomp> = None;
+        for py in 1..=ranks {
+            if ranks % py != 0 {
+                continue;
+            }
+            let px = ranks / py;
+            if ny % py != 0 || nx % px != 0 {
+                continue;
+            }
+            let d = Decomp { ny, nx, py, px };
+            let aspect = |d: &Decomp| {
+                let a = (d.ny / d.py) as f64 / (d.nx / d.px) as f64;
+                if a < 1.0 {
+                    1.0 / a
+                } else {
+                    a
+                }
+            };
+            match &best {
+                Some(b) if aspect(b) <= aspect(&d) => {}
+                _ => best = Some(d),
+            }
+        }
+        best.ok_or_else(|| {
+            Error::model(format!(
+                "no processor grid for {ranks} ranks divides {ny}x{nx}"
+            ))
+        })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.py * self.px
+    }
+
+    /// Patch shape (nyp, nxp).
+    pub fn patch(&self) -> (usize, usize) {
+        (self.ny / self.py, self.nx / self.px)
+    }
+
+    /// Rank → (iy, ix) processor coordinates (row-major).
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        (rank / self.px, rank % self.px)
+    }
+
+    pub fn rank_of(&self, iy: usize, ix: usize) -> usize {
+        (iy % self.py) * self.px + (ix % self.px)
+    }
+
+    /// Periodic neighbours (north, south, west, east) of a rank.
+    /// North = +y direction.
+    pub fn neighbors(&self, rank: usize) -> [usize; 4] {
+        let (iy, ix) = self.coords(rank);
+        [
+            self.rank_of(iy + 1, ix),
+            self.rank_of(iy + self.py - 1, ix),
+            self.rank_of(iy, ix + self.px - 1),
+            self.rank_of(iy, ix + 1),
+        ]
+    }
+
+    /// Global (start_y, start_x) of a rank's patch.
+    pub fn origin(&self, rank: usize) -> (usize, usize) {
+        let (iy, ix) = self.coords(rank);
+        let (nyp, nxp) = self.patch();
+        (iy * nyp, ix * nxp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_2x2() {
+        let d = Decomp::new(192, 192, 2, 2).unwrap();
+        assert_eq!(d.patch(), (96, 96));
+        assert_eq!(d.coords(3), (1, 1));
+        assert_eq!(d.origin(3), (96, 96));
+        assert_eq!(d.rank_of(1, 1), 3);
+    }
+
+    #[test]
+    fn auto_prefers_square_patches() {
+        let d = Decomp::auto(192, 192, 4).unwrap();
+        assert_eq!((d.py, d.px), (2, 2));
+        let d16 = Decomp::auto(192, 192, 16).unwrap();
+        assert_eq!((d16.py, d16.px), (4, 4));
+    }
+
+    #[test]
+    fn auto_rectangular_domain() {
+        let d = Decomp::auto(288, 576, 8).unwrap();
+        assert_eq!(d.ranks(), 8);
+        let (nyp, nxp) = d.patch();
+        assert_eq!(nyp * d.py, 288);
+        assert_eq!(nxp * d.px, 576);
+    }
+
+    #[test]
+    fn neighbors_periodic() {
+        let d = Decomp::new(8, 8, 2, 2).unwrap();
+        // rank 0 at (0,0): north=(1,0)=2, south=(1,0)=2 (wrap), west=(0,1)=1, east=1
+        assert_eq!(d.neighbors(0), [2, 2, 1, 1]);
+        let d3 = Decomp::new(9, 9, 3, 3).unwrap();
+        assert_eq!(d3.neighbors(4), [7, 1, 3, 5]); // center rank
+        assert_eq!(d3.neighbors(0), [3, 6, 2, 1]);
+    }
+
+    #[test]
+    fn indivisible_rejected() {
+        assert!(Decomp::new(10, 10, 3, 1).is_err());
+        assert!(Decomp::auto(7, 7, 4).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! The WRF-analog forecast model: domain decomposition, per-rank state,
+//! the history-variable registry, and the forecast driver that executes
+//! the AOT-compiled JAX/Pallas step through PJRT and emits history frames
+//! through a pluggable I/O backend.
+
+pub mod decomp;
+pub mod driver;
+pub mod registry;
+pub mod state;
+
+pub use decomp::Decomp;
+pub use driver::{ForecastConfig, ForecastDriver, RunSummary};
+pub use registry::{wrf_history_vars, VarSpec};
+pub use state::RankState;

@@ -1,0 +1,292 @@
+//! WRF history-variable registry.
+//!
+//! WRF's history stream carries on the order of one to two hundred named
+//! fields per frame (paper §IV: "sometimes over 200").  The I/O behaviour
+//! the paper measures depends on that long tail of named 2-D/3-D arrays —
+//! per-variable API calls, per-variable metadata, many small-to-medium
+//! payloads — so the registry reproduces a realistic WRF-ARW variable set
+//! with real WRF names/staggering, each mapped to a source expression over
+//! the five prognostic model fields (DESIGN.md §Substitutions).
+//!
+//! Sources keep the data *physically meaningful* (smooth, correlated,
+//! dimensionally sensible) so compression ratios in Fig 5/6 are honest.
+
+use crate::util::rng::Rng;
+
+/// Prognostic field indices in the model state (mirrors
+/// `python/compile/model.FIELDS`).
+pub const F_H: usize = 0;
+pub const F_U: usize = 1;
+pub const F_V: usize = 2;
+pub const F_TH: usize = 3;
+pub const F_QV: usize = 4;
+
+/// How a registry variable's data is produced from the rank's patch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Source {
+    /// Affine map of a prognostic 3-D field: `a * field + b`.
+    State3d { field: usize, a: f32, b: f32 },
+    /// Surface level (z = 0) of a prognostic field, affine-mapped.
+    Surface { field: usize, a: f32, b: f32 },
+    /// Static terrain-like 2-D field, deterministic in global coords.
+    Terrain { seed: u64, amp: f32, base: f32 },
+    /// Vertical-coordinate profile broadcast over the patch (3-D).
+    Profile { base: f32, lapse: f32 },
+}
+
+/// One history variable.
+#[derive(Debug, Clone)]
+pub struct VarSpec {
+    pub name: &'static str,
+    pub is_3d: bool,
+    pub source: Source,
+}
+
+/// The WRF-ARW-like history variable set.
+///
+/// 3-D fields use the model's `nz` levels; 2-D fields are single planes.
+pub fn wrf_history_vars() -> Vec<VarSpec> {
+    use Source::*;
+    let mut v = Vec::new();
+    let s3 = |name, field, a, b| VarSpec {
+        name,
+        is_3d: true,
+        source: State3d { field, a, b },
+    };
+    let s2 = |name, field, a, b| VarSpec {
+        name,
+        is_3d: false,
+        source: Surface { field, a, b },
+    };
+    let terrain = |name, seed, amp, base| VarSpec {
+        name,
+        is_3d: false,
+        source: Terrain { seed, amp, base },
+    };
+    let prof = |name, base, lapse| VarSpec {
+        name,
+        is_3d: true,
+        source: Profile { base, lapse },
+    };
+
+    // ---- dynamics (3-D) ---------------------------------------------------
+    v.push(s3("U", F_U, 1.0, 0.0));
+    v.push(s3("V", F_V, 1.0, 0.0));
+    v.push(s3("W", F_V, 0.05, 0.0));
+    v.push(s3("T", F_TH, 1.0, -300.0)); // perturbation potential temp
+    v.push(s3("THM", F_TH, 1.0, -290.0));
+    v.push(s3("PH", F_H, 50.0, 0.0)); // perturbation geopotential
+    v.push(prof("PHB", 3000.0, 2500.0)); // base-state geopotential
+    v.push(s3("P", F_H, 800.0, -800.0)); // perturbation pressure
+    v.push(prof("PB", 95000.0, -8000.0)); // base-state pressure
+    v.push(prof("T_INIT", 290.0, 3.0));
+    v.push(s3("AL", F_H, -0.02, 0.85));
+    v.push(prof("ALB", 0.80, 0.06));
+    // ---- moisture / microphysics (3-D) ------------------------------------
+    v.push(s3("QVAPOR", F_QV, 1.0, 0.0));
+    v.push(s3("QCLOUD", F_QV, 0.10, 0.0));
+    v.push(s3("QRAIN", F_QV, 0.02, 0.0));
+    v.push(s3("QICE", F_QV, 0.01, 0.0));
+    v.push(s3("QSNOW", F_QV, 0.005, 0.0));
+    v.push(s3("QGRAUP", F_QV, 0.002, 0.0));
+    v.push(s3("CLDFRA", F_QV, 30.0, 0.0));
+    // ---- turbulence / radiation tendencies (3-D) ---------------------------
+    v.push(s3("TKE_PBL", F_U, 0.3, 0.4));
+    v.push(s3("EL_PBL", F_U, 12.0, 25.0));
+    v.push(s3("EXCH_H", F_V, 8.0, 15.0));
+    v.push(s3("RTHRATEN", F_TH, 1e-5, 0.0));
+    v.push(s3("RTHBLTEN", F_TH, 5e-6, 0.0));
+    v.push(s3("RQVBLTEN", F_QV, 1e-6, 0.0));
+    v.push(s3("RUBLTEN", F_U, 1e-5, 0.0));
+    v.push(s3("RVBLTEN", F_V, 1e-5, 0.0));
+    v.push(s3("H_DIABATIC", F_TH, 2e-5, 0.0));
+    // ---- surface / diagnostics (2-D) ---------------------------------------
+    v.push(s2("T2", F_TH, 1.0, -5.0));
+    v.push(s2("TH2", F_TH, 1.0, -4.0));
+    v.push(s2("Q2", F_QV, 0.9, 0.0));
+    v.push(s2("U10", F_U, 0.8, 0.0));
+    v.push(s2("V10", F_V, 0.8, 0.0));
+    v.push(s2("PSFC", F_H, 900.0, 95000.0));
+    v.push(s2("TSK", F_TH, 1.05, -8.0));
+    v.push(s2("SST", F_TH, 0.95, 2.0));
+    v.push(s2("OLR", F_TH, 0.8, -10.0));
+    v.push(s2("PBLH", F_U, 400.0, 800.0));
+    v.push(s2("HFX", F_U, 120.0, 40.0));
+    v.push(s2("QFX", F_QV, 20.0, 0.0));
+    v.push(s2("LH", F_QV, 8000.0, 10.0));
+    v.push(s2("UST", F_U, 0.2, 0.3));
+    v.push(s2("RAINC", F_QV, 400.0, 0.0));
+    v.push(s2("RAINNC", F_QV, 900.0, 0.0));
+    v.push(s2("SNOWNC", F_QV, 60.0, 0.0));
+    v.push(s2("GRAUPELNC", F_QV, 25.0, 0.0));
+    v.push(s2("REFL_10CM", F_QV, 1500.0, -20.0));
+    v.push(s2("SWDOWN", F_H, 300.0, 300.0));
+    v.push(s2("GLW", F_TH, 1.1, 30.0));
+    v.push(s2("GSW", F_H, 250.0, 220.0));
+    v.push(s2("ALBEDO", F_H, 0.02, 0.15));
+    v.push(s2("EMISS", F_H, 0.01, 0.95));
+    v.push(s2("CANWAT", F_QV, 30.0, 0.0));
+    v.push(s2("SMOIS_SFC", F_QV, 12.0, 0.25));
+    v.push(s2("TSLB_SFC", F_TH, 0.9, 6.0));
+    // ---- static fields (2-D, terrain-derived) -------------------------------
+    v.push(terrain("HGT", 11, 800.0, 350.0));
+    v.push(terrain("LANDMASK", 13, 0.5, 0.5));
+    v.push(terrain("LU_INDEX", 17, 8.0, 12.0));
+    v.push(terrain("XLAT", 19, 8.0, 40.0));
+    v.push(terrain("XLONG", 23, 15.0, -97.0));
+    v.push(terrain("MAPFAC_M", 29, 0.02, 1.0));
+    v.push(terrain("F_CORIOLIS", 31, 2e-5, 9e-5));
+    v.push(terrain("SINALPHA", 37, 0.05, 0.0));
+    v.push(terrain("COSALPHA", 41, 0.05, 1.0));
+    v.push(terrain("E_CORIOLIS", 43, 1e-5, 5e-5));
+    v
+}
+
+impl VarSpec {
+    /// Materialize this variable for one rank.
+    ///
+    /// `patch` is the rank's interior state `(nf, nz, nyp, nxp)` flattened;
+    /// `origin` its global (y0, x0); `gny/gnx` the global grid (for
+    /// deterministic terrain).  Returns row-major data, `nz` planes for 3-D
+    /// variables or one plane for 2-D.
+    #[allow(clippy::too_many_arguments)]
+    pub fn materialize(
+        &self,
+        patch: &[f32],
+        nf: usize,
+        nz: usize,
+        nyp: usize,
+        nxp: usize,
+        origin: (usize, usize),
+        gny: usize,
+        gnx: usize,
+    ) -> Vec<f32> {
+        debug_assert_eq!(patch.len(), nf * nz * nyp * nxp);
+        let plane = nyp * nxp;
+        let fplane = nz * plane;
+        match self.source {
+            Source::State3d { field, a, b } => patch[field * fplane..(field + 1) * fplane]
+                .iter()
+                .map(|&x| a * x + b)
+                .collect(),
+            Source::Surface { field, a, b } => patch
+                [field * fplane..field * fplane + plane]
+                .iter()
+                .map(|&x| a * x + b)
+                .collect(),
+            Source::Profile { base, lapse } => {
+                let mut out = Vec::with_capacity(fplane);
+                for z in 0..nz {
+                    let v = base + lapse * z as f32;
+                    out.extend(std::iter::repeat(v).take(plane));
+                }
+                out
+            }
+            Source::Terrain { seed, amp, base } => {
+                // Deterministic smooth bumps in *global* coordinates so
+                // patches tile seamlessly across ranks.
+                let mut rng = Rng::new(seed);
+                let nb = 6;
+                let bumps: Vec<(f32, f32, f32, f32)> = (0..nb)
+                    .map(|_| {
+                        (
+                            rng.uniform(0.0, 1.0),
+                            rng.uniform(0.0, 1.0),
+                            rng.uniform(0.5, 1.0),
+                            rng.uniform(0.05, 0.15),
+                        )
+                    })
+                    .collect();
+                let (y0, x0) = origin;
+                let mut out = Vec::with_capacity(plane);
+                for j in 0..nyp {
+                    let gy = (y0 + j) as f32 / gny as f32;
+                    for i in 0..nxp {
+                        let gx = (x0 + i) as f32 / gnx as f32;
+                        let mut h = 0.0;
+                        for &(cx, cy, a, w) in &bumps {
+                            let r2 = (gx - cx) * (gx - cx) + (gy - cy) * (gy - cy);
+                            h += a * (-r2 / (2.0 * w * w)).exp();
+                        }
+                        out.push(base + amp * h);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_patch(nf: usize, nz: usize, nyp: usize, nxp: usize) -> Vec<f32> {
+        (0..nf * nz * nyp * nxp).map(|i| i as f32 * 0.001).collect()
+    }
+
+    #[test]
+    fn registry_has_wrf_scale_variable_count() {
+        let vars = wrf_history_vars();
+        assert!(vars.len() >= 60, "only {} vars", vars.len());
+        let n3d = vars.iter().filter(|v| v.is_3d).count();
+        assert!(n3d >= 20, "only {n3d} 3-D vars");
+        // Unique names.
+        let mut names: Vec<_> = vars.iter().map(|v| v.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), vars.len());
+    }
+
+    #[test]
+    fn sizes_match_kind() {
+        let (nf, nz, nyp, nxp) = (5, 3, 8, 10);
+        let patch = fake_patch(nf, nz, nyp, nxp);
+        for v in wrf_history_vars() {
+            let data = v.materialize(&patch, nf, nz, nyp, nxp, (0, 0), 16, 20);
+            let expect = if v.is_3d { nz * nyp * nxp } else { nyp * nxp };
+            assert_eq!(data.len(), expect, "{}", v.name);
+            assert!(data.iter().all(|x| x.is_finite()), "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn terrain_tiles_seamlessly() {
+        // Two horizontally adjacent patches must agree along the seam.
+        let spec = VarSpec {
+            name: "HGT",
+            is_3d: false,
+            source: Source::Terrain { seed: 11, amp: 800.0, base: 350.0 },
+        };
+        let patch = fake_patch(5, 1, 4, 4);
+        let whole_patch = fake_patch(5, 1, 4, 8);
+        let left = spec.materialize(&patch, 5, 1, 4, 4, (0, 0), 4, 8);
+        let right = spec.materialize(&patch, 5, 1, 4, 4, (0, 4), 4, 8);
+        let whole = spec.materialize(&whole_patch, 5, 1, 4, 8, (0, 0), 4, 8);
+        // The two half-domain patches must tile to exactly the whole-domain
+        // evaluation (terrain is a function of global coordinates only).
+        for j in 0..4 {
+            for i in 0..4 {
+                assert_eq!(left[j * 4 + i], whole[j * 8 + i], "left ({j},{i})");
+                assert_eq!(right[j * 4 + i], whole[j * 8 + 4 + i], "right ({j},{i})");
+            }
+        }
+        // And deterministic.
+        let again = spec.materialize(&patch, 5, 1, 4, 4, (0, 0), 4, 8);
+        assert_eq!(left, again);
+    }
+
+    #[test]
+    fn state3d_affine() {
+        let (nf, nz, nyp, nxp) = (5, 2, 2, 2);
+        let patch = fake_patch(nf, nz, nyp, nxp);
+        let spec = VarSpec {
+            name: "T",
+            is_3d: true,
+            source: Source::State3d { field: F_TH, a: 2.0, b: 1.0 },
+        };
+        let d = spec.materialize(&patch, nf, nz, nyp, nxp, (0, 0), 4, 4);
+        let base = F_TH * nz * nyp * nxp;
+        assert_eq!(d[0], 2.0 * patch[base] + 1.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Artifact manifest parser.
+//!
+//! `make artifacts` (the Python AOT path) writes `artifacts/manifest.txt`
+//! describing every compiled HLO module; this is the only contract between
+//! the build-time Python world and the Rust runtime.
+//!
+//! ```text
+//! # comment
+//! halo 2
+//! nf 5
+//! fields HGT_FLD,U,V,THETA,QVAPOR
+//! dt 0.02
+//! model p96x96 nz=4 nyp=96 nxp=96 file=model_p96x96.hlo.txt
+//! analysis nz=4 ny=192 nx=192 file=analysis_192x192.hlo.txt
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// One compiled per-rank model step artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    pub tag: String,
+    pub nz: usize,
+    pub nyp: usize,
+    pub nxp: usize,
+    pub file: String,
+}
+
+/// One compiled analysis artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisArtifact {
+    pub nz: usize,
+    pub ny: usize,
+    pub nx: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub halo: usize,
+    pub nf: usize,
+    pub fields: Vec<String>,
+    pub dt: f64,
+    pub models: Vec<ModelArtifact>,
+    pub analyses: Vec<AnalysisArtifact>,
+}
+
+fn kv(part: &str, key: &str) -> Option<String> {
+    part.strip_prefix(&format!("{key}=")).map(|s| s.to_string())
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut m = Manifest {
+            dir: dir.to_path_buf(),
+            ..Default::default()
+        };
+        let err = |msg: String| Error::config(format!("manifest: {msg}"));
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let head = parts.next().unwrap();
+            match head {
+                "halo" => {
+                    m.halo = parts
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| err("bad halo".into()))?
+                }
+                "nf" => {
+                    m.nf = parts
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| err("bad nf".into()))?
+                }
+                "fields" => {
+                    m.fields = parts
+                        .next()
+                        .ok_or_else(|| err("bad fields".into()))?
+                        .split(',')
+                        .map(|s| s.to_string())
+                        .collect()
+                }
+                "dt" => {
+                    m.dt = parts
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| err("bad dt".into()))?
+                }
+                "model" => {
+                    let tag = parts.next().ok_or_else(|| err("model missing tag".into()))?;
+                    let rest: Vec<&str> = parts.collect();
+                    let get = |k: &str| -> Result<String> {
+                        rest.iter()
+                            .find_map(|p| kv(p, k))
+                            .ok_or_else(|| err(format!("model {tag} missing {k}")))
+                    };
+                    m.models.push(ModelArtifact {
+                        tag: tag.to_string(),
+                        nz: get("nz")?.parse().map_err(|_| err("bad nz".into()))?,
+                        nyp: get("nyp")?.parse().map_err(|_| err("bad nyp".into()))?,
+                        nxp: get("nxp")?.parse().map_err(|_| err("bad nxp".into()))?,
+                        file: get("file")?,
+                    });
+                }
+                "analysis" => {
+                    let rest: Vec<&str> = parts.collect();
+                    let get = |k: &str| -> Result<String> {
+                        rest.iter()
+                            .find_map(|p| kv(p, k))
+                            .ok_or_else(|| err(format!("analysis missing {k}")))
+                    };
+                    m.analyses.push(AnalysisArtifact {
+                        nz: get("nz")?.parse().map_err(|_| err("bad nz".into()))?,
+                        ny: get("ny")?.parse().map_err(|_| err("bad ny".into()))?,
+                        nx: get("nx")?.parse().map_err(|_| err("bad nx".into()))?,
+                        file: get("file")?,
+                    });
+                }
+                other => return Err(err(format!("unknown entry `{other}`"))),
+            }
+        }
+        if m.nf == 0 || m.fields.len() != m.nf {
+            return Err(err(format!(
+                "field count {} inconsistent with nf {}",
+                m.fields.len(),
+                m.nf
+            )));
+        }
+        Ok(m)
+    }
+
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            Error::config(format!(
+                "cannot read {}/manifest.txt (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Find the model artifact for a patch shape.
+    pub fn model_for_patch(&self, nyp: usize, nxp: usize) -> Result<&ModelArtifact> {
+        self.models
+            .iter()
+            .find(|a| a.nyp == nyp && a.nxp == nxp)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "no compiled model for patch {nyp}x{nxp}; available: {:?} (extend PATCHES in python/compile/aot.py)",
+                    self.models.iter().map(|m| m.tag.as_str()).collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    /// Find the analysis artifact for a global grid.
+    pub fn analysis_for(&self, ny: usize, nx: usize) -> Option<&AnalysisArtifact> {
+        self.analyses.iter().find(|a| a.ny == ny && a.nx == nx)
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# stormio artifact manifest\nhalo 2\nnf 5\nfields HGT_FLD,U,V,THETA,QVAPOR\ndt 0.02\nmodel p96x96 nz=4 nyp=96 nxp=96 file=model_p96x96.hlo.txt\nanalysis nz=4 ny=192 nx=192 file=analysis_192x192.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.halo, 2);
+        assert_eq!(m.nf, 5);
+        assert_eq!(m.fields[3], "THETA");
+        assert_eq!(m.dt, 0.02);
+        let a = m.model_for_patch(96, 96).unwrap();
+        assert_eq!(a.nz, 4);
+        assert_eq!(
+            m.hlo_path(&a.file),
+            PathBuf::from("/art/model_p96x96.hlo.txt")
+        );
+        assert!(m.analysis_for(192, 192).is_some());
+        assert!(m.analysis_for(10, 10).is_none());
+    }
+
+    #[test]
+    fn missing_patch_is_helpful_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        let e = m.model_for_patch(7, 7).unwrap_err().to_string();
+        assert!(e.contains("p96x96"), "{e}");
+    }
+
+    #[test]
+    fn inconsistent_fields_rejected() {
+        let bad = "halo 2\nnf 3\nfields A,B\ndt 0.1\n";
+        assert!(Manifest::parse(bad, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn unknown_entry_rejected() {
+        assert!(Manifest::parse("bogus 1\n", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.model_for_patch(96, 96).is_ok());
+            for a in &m.models {
+                assert!(m.hlo_path(&a.file).exists(), "{}", a.file);
+            }
+        }
+    }
+}

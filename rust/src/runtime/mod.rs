@@ -1,0 +1,332 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it from the Rust
+//! request path (no Python at run time).
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.  HLO **text** is the interchange format —
+//! see `python/compile/aot.py` for why serialized protos are rejected.
+
+pub mod manifest;
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::{Error, Result};
+
+pub use manifest::Manifest;
+
+/// Shared PJRT CPU client (one per process).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    pub fn new() -> Result<XlaRuntime> {
+        Ok(XlaRuntime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Xla(format!("cannot parse HLO text {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable {
+            exe: Mutex::new(exe),
+            name: path.display().to_string(),
+        })
+    }
+}
+
+/// A compiled computation.  Executions are serialized behind a mutex: the
+/// container is single-core and the PJRT CPU client is not documented
+/// thread-safe for concurrent executions of one loaded executable.
+pub struct Executable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    name: String,
+}
+
+// Safety: `PjRtLoadedExecutable` is `!Send`/`!Sync` only because the `xla`
+// crate wraps its client handle in an `Rc` and raw pointers.  Every access
+// to the inner value (execute + drop) is serialized behind the `Mutex`
+// above, so the non-atomic refcount is never touched concurrently, and the
+// underlying XLA C++ objects are safe to use and destroy from any thread.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lock_exe(&self) -> std::sync::MutexGuard<'_, xla::PjRtLoadedExecutable> {
+        self.exe.lock().expect("executable mutex poisoned")
+    }
+
+    /// Execute with f32 inputs; returns the elements of the result tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let n: usize = dims.iter().product();
+                if n != data.len() {
+                    return Err(Error::Xla(format!(
+                        "input has {} elems but shape {:?}",
+                        data.len(),
+                        dims
+                    )));
+                }
+                let bytes = crate::util::f32_slice_as_bytes(data);
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    dims,
+                    bytes,
+                )?)
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.lock_exe();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        drop(exe);
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+/// Convenience: the per-rank model step function.
+pub struct ModelStep {
+    exe: Executable,
+    pub nf: usize,
+    pub nz: usize,
+    pub nyp: usize,
+    pub nxp: usize,
+    pub halo: usize,
+}
+
+impl ModelStep {
+    /// Load the model artifact matching a patch shape.
+    pub fn load(rt: &XlaRuntime, man: &Manifest, nyp: usize, nxp: usize) -> Result<ModelStep> {
+        let art = man.model_for_patch(nyp, nxp)?;
+        let exe = rt.load_hlo(&man.hlo_path(&art.file))?;
+        Ok(ModelStep {
+            exe,
+            nf: man.nf,
+            nz: art.nz,
+            nyp,
+            nxp,
+            halo: man.halo,
+        })
+    }
+
+    /// Padded input length (elements).
+    pub fn padded_len(&self) -> usize {
+        self.nf * self.nz * (self.nyp + 2 * self.halo) * (self.nxp + 2 * self.halo)
+    }
+
+    /// Interior output length (elements).
+    pub fn interior_len(&self) -> usize {
+        self.nf * self.nz * self.nyp * self.nxp
+    }
+
+    /// Advance one step: padded state in, interior state out.
+    pub fn step(&self, padded: &[f32]) -> Result<Vec<f32>> {
+        let dims = [
+            self.nf,
+            self.nz,
+            self.nyp + 2 * self.halo,
+            self.nxp + 2 * self.halo,
+        ];
+        let mut out = self.exe.run_f32(&[(padded, &dims)])?;
+        if out.len() != 1 {
+            return Err(Error::Xla(format!(
+                "model step returned {}-tuple, expected 1",
+                out.len()
+            )));
+        }
+        let interior = out.pop().unwrap();
+        if interior.len() != self.interior_len() {
+            return Err(Error::Xla(format!(
+                "model step output {} elems, expected {}",
+                interior.len(),
+                self.interior_len()
+            )));
+        }
+        Ok(interior)
+    }
+}
+
+/// The in-situ analysis computation (consumer side of SST).
+pub struct AnalysisStep {
+    exe: Executable,
+    pub nz: usize,
+    pub ny: usize,
+    pub nx: usize,
+}
+
+/// Output of one analysis execution (mirrors `model.analysis_fn`).
+#[derive(Debug, Clone)]
+pub struct AnalysisOutput {
+    /// Surface slice downsampled 4x (ny/4 * nx/4, row-major).
+    pub slice_ds: Vec<f32>,
+    pub level_mean: Vec<f32>,
+    pub level_min: Vec<f32>,
+    pub level_max: Vec<f32>,
+    /// 32-bin histogram of the surface level.
+    pub hist: Vec<i32>,
+}
+
+impl AnalysisStep {
+    pub fn load(rt: &XlaRuntime, man: &Manifest, ny: usize, nx: usize) -> Result<AnalysisStep> {
+        let art = man.analysis_for(ny, nx).ok_or_else(|| {
+            Error::config(format!("no compiled analysis artifact for {ny}x{nx}"))
+        })?;
+        let exe = rt.load_hlo(&man.hlo_path(&art.file))?;
+        Ok(AnalysisStep {
+            exe,
+            nz: art.nz,
+            ny,
+            nx,
+        })
+    }
+
+    pub fn run(&self, theta: &[f32]) -> Result<AnalysisOutput> {
+        let dims = [self.nz, self.ny, self.nx];
+        let n: usize = dims.iter().product();
+        if theta.len() != n {
+            return Err(Error::Xla(format!(
+                "analysis input {} elems, expected {n}",
+                theta.len()
+            )));
+        }
+        let lit_in = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &dims,
+            crate::util::f32_slice_as_bytes(theta),
+        )?;
+        let exe = self.exe.lock_exe();
+        let result = exe.execute::<xla::Literal>(&[lit_in])?[0][0].to_literal_sync()?;
+        drop(exe);
+        let parts = result.to_tuple()?;
+        if parts.len() != 5 {
+            return Err(Error::Xla(format!(
+                "analysis returned {}-tuple, expected 5",
+                parts.len()
+            )));
+        }
+        let mut it = parts.into_iter();
+        let slice_ds = it.next().unwrap().to_vec::<f32>()?;
+        let level_mean = it.next().unwrap().to_vec::<f32>()?;
+        let level_min = it.next().unwrap().to_vec::<f32>()?;
+        let level_max = it.next().unwrap().to_vec::<f32>()?;
+        let hist = it.next().unwrap().to_vec::<i32>()?;
+        Ok(AnalysisOutput {
+            slice_ds,
+            level_mean,
+            level_min,
+            level_max,
+            hist,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime_or_skip() -> Option<(XlaRuntime, Manifest)> {
+        if !artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        let rt = XlaRuntime::new().unwrap();
+        let man = Manifest::load(artifacts_dir()).unwrap();
+        Some((rt, man))
+    }
+
+    #[test]
+    fn model_step_executes_and_preserves_rest_state() {
+        let Some((rt, man)) = runtime_or_skip() else { return };
+        let step = ModelStep::load(&rt, &man, 96, 96).unwrap();
+        // Rest state: h=1, others 0 -> fixed point of the scheme.
+        let mut padded = vec![0.0f32; step.padded_len()];
+        let plane = step.nz * (step.nyp + 4) * (step.nxp + 4);
+        for v in padded.iter_mut().take(plane) {
+            *v = 1.0; // field 0 = HGT_FLD
+        }
+        let out = step.step(&padded).unwrap();
+        assert_eq!(out.len(), step.interior_len());
+        let iplane = step.nz * step.nyp * step.nxp;
+        for (i, &v) in out.iter().enumerate() {
+            let expect = if i < iplane { 1.0 } else { 0.0 };
+            assert!((v - expect).abs() < 1e-6, "elem {i}: {v}");
+        }
+    }
+
+    #[test]
+    fn model_step_finite_on_perturbed_state() {
+        let Some((rt, man)) = runtime_or_skip() else { return };
+        let step = ModelStep::load(&rt, &man, 48, 48).unwrap();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let plane = step.nz * (step.nyp + 4) * (step.nxp + 4);
+        let mut padded = vec![0.0f32; step.padded_len()];
+        for i in 0..padded.len() {
+            let f = i / plane;
+            padded[i] = match f {
+                0 => 1.0 + 0.05 * rng.normal() as f32,
+                3 => 300.0 + rng.normal() as f32,
+                _ => 0.1 * rng.normal() as f32,
+            };
+        }
+        let out = step.step(&padded).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+        // THETA stays in a physical range after one step.
+        let iplane = step.nz * step.nyp * step.nxp;
+        let theta = &out[3 * iplane..4 * iplane];
+        assert!(theta.iter().all(|&t| t > 250.0 && t < 350.0));
+    }
+
+    #[test]
+    fn analysis_executes() {
+        let Some((rt, man)) = runtime_or_skip() else { return };
+        let an = AnalysisStep::load(&rt, &man, 192, 192).unwrap();
+        let theta: Vec<f32> = (0..an.nz * 192 * 192)
+            .map(|i| 280.0 + (i % 97) as f32 * 0.1)
+            .collect();
+        let out = an.run(&theta).unwrap();
+        assert_eq!(out.slice_ds.len(), 48 * 48);
+        assert_eq!(out.level_mean.len(), an.nz);
+        let total: i32 = out.hist.iter().sum();
+        assert_eq!(total, 192 * 192);
+        for z in 0..an.nz {
+            assert!(out.level_min[z] <= out.level_mean[z]);
+            assert!(out.level_mean[z] <= out.level_max[z]);
+        }
+    }
+
+    #[test]
+    fn wrong_input_shape_is_error() {
+        let Some((rt, man)) = runtime_or_skip() else { return };
+        let step = ModelStep::load(&rt, &man, 96, 96).unwrap();
+        assert!(step.step(&[0.0f32; 10]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_config_error() {
+        let Some((rt, man)) = runtime_or_skip() else { return };
+        assert!(ModelStep::load(&rt, &man, 7, 7).is_err());
+    }
+}

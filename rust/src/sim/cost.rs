@@ -1,0 +1,298 @@
+//! Analytic cost model: communication + storage phases on the virtual
+//! testbed.
+//!
+//! Each I/O backend composes the primitives here into a [`WriteCost`]
+//! describing one history-file write at CONUS scale.  The primitives are
+//! first-principles bandwidth/latency/contention formulas:
+//!
+//! * **fair-share streams** — a storage backend with `T` targets serving
+//!   `s` concurrent streams delivers its aggregate bandwidth until seek
+//!   thrash sets in past a knee (spinning disks), then efficiency decays
+//!   as `1/(1 + slope·excess/targets)`;
+//! * **byte-range locks** — N-1 collective writers serialize on file
+//!   locks: `1/(1 + c·(writers−1))` (the classic MPI-I/O shared-file
+//!   penalty PnetCDF pays and sub-file formats avoid);
+//! * **MDS storms** — `n` near-simultaneous creates cost
+//!   `n·t_create·(1 + n/knee)` (directory-lock convoy);
+//! * **LogP-style collectives** — per-variable `α·log2(ranks)` sync for
+//!   two-phase collective writes; all-to-all exchange bounded by the
+//!   per-node link with `(n−1)/n` remote fraction.
+
+use super::hardware::HardwareSpec;
+
+/// One named phase of a write (for report tables and the Fig 8 Gantt).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub name: &'static str,
+    pub secs: f64,
+    /// True if this phase blocks the application (perceived time);
+    /// false if it proceeds in the background (e.g. BB drain).
+    pub blocking: bool,
+}
+
+/// Cost breakdown of one history-file write at CONUS scale.
+#[derive(Debug, Clone, Default)]
+pub struct WriteCost {
+    pub phases: Vec<Phase>,
+}
+
+impl WriteCost {
+    pub fn push(&mut self, name: &'static str, secs: f64) {
+        self.phases.push(Phase {
+            name,
+            secs,
+            blocking: true,
+        });
+    }
+    pub fn push_background(&mut self, name: &'static str, secs: f64) {
+        self.phases.push(Phase {
+            name,
+            secs,
+            blocking: false,
+        });
+    }
+    /// Application-perceived (blocking) time.
+    pub fn perceived(&self) -> f64 {
+        self.phases.iter().filter(|p| p.blocking).map(|p| p.secs).sum()
+    }
+    /// Wall time until data is durable on the final target (incl. drain).
+    pub fn durable(&self) -> f64 {
+        self.phases.iter().map(|p| p.secs).sum()
+    }
+}
+
+/// Cost-model facade over a [`HardwareSpec`].
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub hw: HardwareSpec,
+}
+
+impl CostModel {
+    pub fn new(hw: HardwareSpec) -> Self {
+        CostModel { hw }
+    }
+
+    // ---- efficiencies -----------------------------------------------------
+
+    /// Concurrent-stream efficiency of the PFS backend.
+    pub fn stream_efficiency(&self, streams: usize) -> f64 {
+        let knee = self.hw.pfs_thrash_knee;
+        if streams <= knee {
+            1.0
+        } else {
+            let excess = (streams - knee) as f64;
+            1.0 / (1.0 + self.hw.pfs_thrash_slope * excess / self.hw.pfs_targets as f64)
+        }
+    }
+
+    /// Byte-range lock efficiency for `writers` collective N-1 writers.
+    pub fn lock_efficiency(&self, writers: usize) -> f64 {
+        1.0 / (1.0 + self.hw.lock_c * (writers.saturating_sub(1)) as f64)
+    }
+
+    // ---- storage primitives -------------------------------------------------
+
+    /// Effective PFS write bandwidth seen by `streams` concurrent
+    /// independent streams (no shared-file locks).
+    pub fn pfs_bw(&self, streams: usize) -> f64 {
+        let per_stream = streams as f64 * self.hw.pfs_stream_bw;
+        let agg = self.hw.pfs_agg_bw * self.stream_efficiency(streams);
+        per_stream.min(agg).min(self.hw.pfs_ingress_bw)
+    }
+
+    /// Time to write `bytes` (virtual) through `streams` independent
+    /// streams to the PFS.
+    pub fn t_pfs_write(&self, bytes: f64, streams: usize) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.pfs_bw(streams.max(1))
+    }
+
+    /// Time to write `bytes` to a *single shared file* by `writers`
+    /// collective writers (PnetCDF/MPI-I/O path): lock serialization plus
+    /// read-modify-write inflation for unaligned stripes.
+    pub fn t_pfs_write_locked(&self, bytes: f64, writers: usize) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let eff = self.lock_efficiency(writers.max(1));
+        let bw = self.pfs_bw(writers.max(1)) * eff;
+        bytes * self.hw.rmw_inflation / bw
+    }
+
+    /// MDS create storm: `n` near-simultaneous file creates.
+    pub fn t_mds_creates(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        nf * self.hw.mds_create_s * (1.0 + nf / self.hw.mds_storm_knee)
+    }
+
+    /// Node-local NVMe write: `bytes` split over `nodes` local drives;
+    /// nodes proceed in parallel, so the max per-node share bounds time.
+    pub fn t_nvme_write(&self, bytes: f64, nodes: usize) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let per_node = bytes / nodes.max(1) as f64;
+        per_node / self.hw.nvme_write_bw
+    }
+
+    /// Drain `bytes` from `nodes` burst buffers back to the PFS
+    /// (background thread): bounded by NVMe read and PFS write.
+    pub fn t_bb_drain(&self, bytes: f64, nodes: usize) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let read = bytes / nodes.max(1) as f64 / self.hw.nvme_read_bw;
+        let write = self.t_pfs_write(bytes, nodes.max(1));
+        read.max(write)
+    }
+
+    // ---- communication primitives -------------------------------------------
+
+    /// Funnel `bytes` from all ranks to rank 0 (serial-NetCDF gather):
+    /// bounded by the root's NIC for remote data plus per-message latency.
+    pub fn t_gather_root(&self, bytes: f64, msgs: usize) -> f64 {
+        let remote_frac = if self.hw.nodes <= 1 {
+            0.0
+        } else {
+            (self.hw.nodes - 1) as f64 / self.hw.nodes as f64
+        };
+        let net = bytes * remote_frac / self.hw.link_bw;
+        let shm = bytes * (1.0 - remote_frac) / self.hw.shm_bw;
+        net + shm + msgs as f64 * self.hw.link_lat_s
+    }
+
+    /// Two-phase exchange (all-to-all) of `bytes` total across nodes.
+    pub fn t_alltoall(&self, bytes: f64) -> f64 {
+        let n = self.hw.nodes as f64;
+        if self.hw.nodes <= 1 {
+            // Intra-node reshuffle through shared memory.
+            return bytes / self.hw.mem_bw;
+        }
+        // Each node's link carries its share × remote fraction, all links
+        // active simultaneously.
+        bytes * (n - 1.0) / (n * n) / self.hw.link_bw + bytes / self.hw.mem_bw
+    }
+
+    /// Per-variable collective synchronization for two-phase writes.
+    pub fn t_collective_sync(&self, nvars: usize) -> f64 {
+        let ranks = self.hw.ranks().max(2) as f64;
+        nvars as f64 * self.hw.coll_sync_s * ranks.log2()
+    }
+
+    /// Aggregation chain: ranks stream their payload to their node-local
+    /// aggregator, pipelined with the aggregator's write.  The non-
+    /// overlapped cost is the slowest per-aggregator inflow.
+    pub fn t_chain_gather(&self, bytes: f64, aggregators: usize) -> f64 {
+        let per_agg = bytes / aggregators.max(1) as f64;
+        per_agg / self.hw.shm_bw
+    }
+
+    /// In-memory buffering of a put (engine copies user data).
+    pub fn t_buffer_copy(&self, bytes: f64) -> f64 {
+        bytes / self.hw.mem_bw
+    }
+
+    /// Stream `bytes` from producer to consumer over the interconnect
+    /// (SST data movement, background thread).
+    pub fn t_stream_transfer(&self, bytes: f64) -> f64 {
+        bytes / self.hw.link_bw + self.hw.link_lat_s
+    }
+
+    /// Per-rank parallel compression: each rank compresses its share at
+    /// the measured single-thread codec throughput.
+    pub fn t_compress(&self, bytes: f64, codec_bw: f64) -> f64 {
+        if codec_bw <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.hw.ranks().max(1) as f64 / codec_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm(nodes: usize) -> CostModel {
+        CostModel::new(HardwareSpec::paper_testbed(nodes))
+    }
+
+    #[test]
+    fn stream_efficiency_monotone_decreasing() {
+        let m = cm(8);
+        let mut last = 1.0;
+        for s in [1, 8, 32, 64, 144, 288] {
+            let e = m.stream_efficiency(s);
+            assert!(e <= last + 1e-12, "eff not monotone at {s}");
+            assert!(e > 0.0 && e <= 1.0);
+            last = e;
+        }
+        assert_eq!(m.stream_efficiency(8), 1.0);
+        assert!(m.stream_efficiency(288) < 0.35);
+    }
+
+    #[test]
+    fn lock_efficiency_shape() {
+        let m = cm(8);
+        assert_eq!(m.lock_efficiency(1), 1.0);
+        assert!(m.lock_efficiency(8) < 0.2);
+    }
+
+    #[test]
+    fn pfs_bw_single_stream_capped() {
+        let m = cm(1);
+        assert!((m.pfs_bw(1) - m.hw.pfs_stream_bw).abs() < 1.0);
+        // 8 streams reach aggregate.
+        assert!((m.pfs_bw(8) - m.hw.pfs_agg_bw).abs() / m.hw.pfs_agg_bw < 0.1);
+    }
+
+    #[test]
+    fn nvme_scales_with_nodes() {
+        let m = cm(8);
+        let v = 8e9;
+        let t8 = m.t_nvme_write(v, 8);
+        let t1 = m.t_nvme_write(v, 1);
+        assert!((t1 / t8 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gather_root_single_node_uses_shm() {
+        let m1 = cm(1);
+        let m8 = cm(8);
+        let b = 1e9;
+        // Multi-node funnel is slower per byte? No: shm 6 GB/s < link 12.5,
+        // but remote fraction bound by root ingress; both finite + positive.
+        assert!(m1.t_gather_root(b, 36) > 0.0);
+        assert!(m8.t_gather_root(b, 288) > 0.0);
+    }
+
+    #[test]
+    fn write_cost_perceived_vs_durable() {
+        let mut c = WriteCost::default();
+        c.push("write", 1.0);
+        c.push_background("drain", 3.0);
+        assert_eq!(c.perceived(), 1.0);
+        assert_eq!(c.durable(), 4.0);
+    }
+
+    #[test]
+    fn paper_scale_sanity_pnetcdf_vs_adios2() {
+        // Emergent-shape guard: at 8 nodes a CONUS-scale (8 GB) shared-file
+        // collective write must be ~an order of magnitude slower than 8
+        // independent sub-file streams (paper Fig 1 / Table I).
+        let m = cm(8);
+        let v = 8e9;
+        let pnetcdf = m.t_pfs_write_locked(v, 8) + m.t_collective_sync(170) + m.t_alltoall(v);
+        let adios2 = m.t_pfs_write(v, 8) + m.t_chain_gather(v, 8);
+        assert!(
+            pnetcdf / adios2 > 6.0,
+            "expected ≥6x gap, got {:.1} ({pnetcdf:.1}s vs {adios2:.1}s)",
+            pnetcdf / adios2
+        );
+        // And the gap must *grow* with node count (rising PnetCDF trend).
+        let m1 = cm(1);
+        let p1 = m1.t_pfs_write_locked(v, 1) + m1.t_collective_sync(170) + m1.t_alltoall(v);
+        assert!(pnetcdf > p1, "PnetCDF should degrade as nodes increase");
+    }
+}

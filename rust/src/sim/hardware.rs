@@ -1,0 +1,126 @@
+//! Hardware description of the simulated testbed.
+
+/// All tunable constants of the virtual testbed, in SI units (bytes/s,
+/// seconds).  Defaults mirror the paper's cluster (section V).
+#[derive(Debug, Clone)]
+pub struct HardwareSpec {
+    /// Compute nodes brought online (paper: 1, 2, 4, 8).
+    pub nodes: usize,
+    /// MPI ranks per node (paper: 36 = 2 × 18 cores, dmpar).
+    pub ranks_per_node: usize,
+
+    // ---- interconnect -----------------------------------------------------
+    /// Per-node NIC bandwidth, one 100 GbE port (ConnectX-6).
+    pub link_bw: f64,
+    /// Per-message interconnect latency.
+    pub link_lat_s: f64,
+    /// Intra-node (shared-memory) transfer bandwidth per rank pair.
+    pub shm_bw: f64,
+    /// Memory-copy bandwidth (buffering a put into the engine).
+    pub mem_bw: f64,
+
+    // ---- parallel file system (BeeGFS over 8 disks) ----------------------
+    /// Aggregate PFS backend bandwidth (8 spinning disks × ~125 MB/s).
+    pub pfs_agg_bw: f64,
+    /// Per-client-stream ceiling (BeeGFS single-stream pipeline).
+    pub pfs_stream_bw: f64,
+    /// Number of backend storage targets (stripes/disks).
+    pub pfs_targets: usize,
+    /// Concurrent streams beyond which seek thrash sets in (≈ 4× targets).
+    pub pfs_thrash_knee: usize,
+    /// Thrash slope: efficiency = 1/(1 + slope · excess/targets).
+    pub pfs_thrash_slope: f64,
+    /// Storage-node ingress NIC (ConnectX-5, 100 Gb).
+    pub pfs_ingress_bw: f64,
+
+    // ---- metadata server ---------------------------------------------------
+    /// Serialized cost of one file create at the MDS.
+    pub mds_create_s: f64,
+    /// Directory-lock contention: creates cost `n·create·(1 + n/knee)`.
+    pub mds_storm_knee: f64,
+
+    // ---- MPI-I/O (PnetCDF path) -------------------------------------------
+    /// Per-variable collective synchronization constant (·log2(ranks)).
+    pub coll_sync_s: f64,
+    /// Byte-range lock serialization between collective writers:
+    /// efficiency = 1/(1 + lock_c · (writers − 1)).
+    pub lock_c: f64,
+    /// Read-modify-write inflation for unaligned stripe writes.
+    pub rmw_inflation: f64,
+
+    // ---- node-local burst buffer (Intel DC P4510) --------------------------
+    /// Sequential write bandwidth per node-local NVMe.
+    pub nvme_write_bw: f64,
+    /// Sequential read bandwidth (drain path).
+    pub nvme_read_bw: f64,
+
+    // ---- workload scaling ---------------------------------------------------
+    /// Multiplier mapping physically-moved bytes to CONUS-2.5km-scale bytes
+    /// for *virtual time accounting only* (DESIGN.md §Substitutions: the
+    /// single-core container cannot move ~8 GB × 5 reps × 20 configs).
+    pub volume_scale: f64,
+}
+
+impl HardwareSpec {
+    /// The paper's testbed (section V) with `nodes` compute nodes online.
+    pub fn paper_testbed(nodes: usize) -> Self {
+        HardwareSpec {
+            nodes,
+            ranks_per_node: 36,
+            link_bw: 12.5e9,  // 100 GbE
+            link_lat_s: 2e-6, // RoCE-class
+            shm_bw: 6.0e9,
+            mem_bw: 40.0e9,
+            pfs_agg_bw: 1.0e9,     // 8 disks × 125 MB/s
+            pfs_stream_bw: 0.35e9, // single BeeGFS client stream pipeline
+            pfs_targets: 8,
+            pfs_thrash_knee: 32,
+            pfs_thrash_slope: 0.08,
+            pfs_ingress_bw: 12.5e9, // ConnectX-5
+            mds_create_s: 3e-3,
+            mds_storm_knee: 256.0,
+            coll_sync_s: 5e-3,
+            lock_c: 1.0,
+            rmw_inflation: 1.15,
+            nvme_write_bw: 1.1e9,  // Intel DC P4510 datasheet
+            nvme_read_bw: 2.85e9,
+            volume_scale: 1.0,
+        }
+    }
+
+    /// Total MPI ranks.
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    /// Scale physical bytes to CONUS-scale bytes for virtual accounting.
+    pub fn scaled(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.volume_scale
+    }
+}
+
+impl Default for HardwareSpec {
+    fn default() -> Self {
+        HardwareSpec::paper_testbed(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let hw = HardwareSpec::paper_testbed(8);
+        assert_eq!(hw.ranks(), 288);
+        assert_eq!(hw.pfs_targets, 8);
+        assert!(hw.nvme_write_bw < hw.nvme_read_bw);
+    }
+
+    #[test]
+    fn volume_scaling() {
+        let mut hw = HardwareSpec::paper_testbed(1);
+        hw.volume_scale = 16.0;
+        assert_eq!(hw.scaled(100), 1600.0);
+    }
+}

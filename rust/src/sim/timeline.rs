@@ -1,0 +1,193 @@
+//! Gantt timeline for the Fig 8 end-to-end pipeline comparison.
+//!
+//! Records labelled spans per lane (e.g. `WRF+PnetCDF`, `WRF+ADIOS2-SST`,
+//! `consumer`) and renders the run-time progression chart the paper shows:
+//! compute blocks interleaved with I/O stalls for the legacy pipeline vs.
+//! an almost-unbroken compute bar plus a concurrent consumer lane for the
+//! in-situ pipeline.
+
+/// What a span represents (affects rendering glyph).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Init,
+    Compute,
+    Io,
+    PostProcess,
+    Analysis,
+    Idle,
+}
+
+impl SpanKind {
+    fn glyph(self) -> char {
+        match self {
+            SpanKind::Init => 'i',
+            SpanKind::Compute => '#',
+            SpanKind::Io => 'W',
+            SpanKind::PostProcess => 'P',
+            SpanKind::Analysis => 'A',
+            SpanKind::Idle => '.',
+        }
+    }
+}
+
+/// One labelled span on a lane.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub lane: usize,
+    pub label: String,
+    pub kind: SpanKind,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// A multi-lane timeline.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub lanes: Vec<String>,
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn lane(&mut self, name: impl Into<String>) -> usize {
+        self.lanes.push(name.into());
+        self.lanes.len() - 1
+    }
+
+    pub fn push(&mut self, lane: usize, kind: SpanKind, label: impl Into<String>, t0: f64, t1: f64) {
+        assert!(t1 >= t0, "span ends before it starts");
+        assert!(lane < self.lanes.len(), "unknown lane");
+        self.spans.push(Span {
+            lane,
+            label: label.into(),
+            kind,
+            t0,
+            t1,
+        });
+    }
+
+    /// Append a span after the last span on `lane`; returns its end time.
+    pub fn append(&mut self, lane: usize, kind: SpanKind, label: impl Into<String>, dur: f64) -> f64 {
+        let t0 = self.lane_end(lane);
+        self.push(lane, kind, label, t0, t0 + dur);
+        t0 + dur
+    }
+
+    /// End time of the last span on a lane (0 if empty).
+    pub fn lane_end(&self, lane: usize) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.lane == lane)
+            .map(|s| s.t1)
+            .fold(0.0, f64::max)
+    }
+
+    /// Overall makespan.
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.t1).fold(0.0, f64::max)
+    }
+
+    /// Total time spent in a kind on one lane.
+    pub fn total(&self, lane: usize, kind: SpanKind) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.lane == lane && s.kind == kind)
+            .map(|s| s.t1 - s.t0)
+            .sum()
+    }
+
+    /// ASCII Gantt rendering, `width` columns for the full makespan.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let span = self.makespan().max(1e-9);
+        let scale = width as f64 / span;
+        let mut out = String::new();
+        let name_w = self.lanes.iter().map(|l| l.len()).max().unwrap_or(4).max(4);
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let mut row = vec!['.'; width];
+            for s in self.spans.iter().filter(|s| s.lane == i) {
+                let a = (s.t0 * scale) as usize;
+                let b = ((s.t1 * scale) as usize).min(width).max(a + 1);
+                for c in row.iter_mut().take(b.min(width)).skip(a) {
+                    *c = s.kind.glyph();
+                }
+            }
+            out.push_str(&format!("{lane:>name_w$} |"));
+            out.extend(row);
+            out.push_str("|\n");
+        }
+        out.push_str(&format!(
+            "{:>name_w$}  0{:·>width$}\n",
+            "t",
+            format!("{:.0}s", span),
+        ));
+        out.push_str("legend: i=init  #=compute  W=write/io  P=post-process  A=analysis\n");
+        out
+    }
+
+    /// CSV dump (lane,label,kind,t0,t1) for external plotting.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("lane,label,kind,t0,t1\n");
+        for sp in &self.spans {
+            s.push_str(&format!(
+                "{},{},{:?},{:.4},{:.4}\n",
+                self.lanes[sp.lane], sp.label, sp.kind, sp.t0, sp.t1
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_chains_spans() {
+        let mut tl = Timeline::default();
+        let l = tl.lane("wrf");
+        let e1 = tl.append(l, SpanKind::Compute, "step", 10.0);
+        let e2 = tl.append(l, SpanKind::Io, "hist", 5.0);
+        assert_eq!(e1, 10.0);
+        assert_eq!(e2, 15.0);
+        assert_eq!(tl.makespan(), 15.0);
+        assert_eq!(tl.total(l, SpanKind::Io), 5.0);
+    }
+
+    #[test]
+    fn lanes_independent() {
+        let mut tl = Timeline::default();
+        let a = tl.lane("a");
+        let b = tl.lane("b");
+        tl.append(a, SpanKind::Compute, "c", 3.0);
+        tl.append(b, SpanKind::Analysis, "an", 1.0);
+        assert_eq!(tl.lane_end(a), 3.0);
+        assert_eq!(tl.lane_end(b), 1.0);
+    }
+
+    #[test]
+    fn render_contains_lane_names_and_glyphs() {
+        let mut tl = Timeline::default();
+        let l = tl.lane("wrf");
+        tl.append(l, SpanKind::Compute, "c", 2.0);
+        tl.append(l, SpanKind::Io, "w", 2.0);
+        let art = tl.render_ascii(40);
+        assert!(art.contains("wrf"));
+        assert!(art.contains('#'));
+        assert!(art.contains('W'));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown lane")]
+    fn unknown_lane_panics() {
+        let mut tl = Timeline::default();
+        tl.push(3, SpanKind::Io, "x", 0.0, 1.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let mut tl = Timeline::default();
+        let l = tl.lane("x");
+        tl.append(l, SpanKind::Init, "init", 1.5);
+        let csv = tl.to_csv();
+        assert!(csv.contains("x,init,Init,0.0000,1.5000"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Small shared utilities: deterministic PRNG, byte formatting, scoped
+//! thread helpers.  (tokio/rayon are not available in the offline vendor
+//! set, so the crate is std-threads based throughout.)
+
+pub mod byteio;
+pub mod pool;
+pub mod rng;
+
+/// Render a byte count as a human-readable string (`"1.50 GiB"`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < UNITS.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{n} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[i])
+    }
+}
+
+/// Render seconds with sensible precision for report tables.
+pub fn human_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+/// Reinterpret a `&[f32]` as little-endian bytes (copy-free on LE hosts).
+pub fn f32_slice_as_bytes(v: &[f32]) -> &[u8] {
+    // Safety: f32 has no invalid bit patterns and alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Reinterpret little-endian bytes as f32 values (copies; handles any
+/// alignment).  Errors if the length is not a multiple of 4.
+pub fn bytes_to_f32_vec(b: &[u8]) -> crate::Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(crate::Error::bp(format!(
+            "byte length {} not a multiple of 4",
+            b.len()
+        )));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(8 * 1024 * 1024 * 1024), "8.00 GiB");
+    }
+
+    #[test]
+    fn human_secs_ranges() {
+        assert_eq!(human_secs(120.0), "120 s");
+        assert_eq!(human_secs(8.2), "8.20 s");
+        assert_eq!(human_secs(0.0005), "500.00 µs");
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![1.0f32, -2.5, 3.25e7, f32::MIN_POSITIVE];
+        let b = f32_slice_as_bytes(&v);
+        assert_eq!(b.len(), 16);
+        assert_eq!(bytes_to_f32_vec(b).unwrap(), v);
+    }
+
+    #[test]
+    fn bytes_to_f32_rejects_ragged() {
+        assert!(bytes_to_f32_vec(&[1, 2, 3]).is_err());
+    }
+}

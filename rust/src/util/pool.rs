@@ -1,0 +1,101 @@
+//! Minimal scoped fork-join helper over std threads.
+//!
+//! The I/O backends and the cluster runtime fan work out across simulated
+//! MPI ranks; this helper is the one place that spawning happens so the
+//! thread count and panic propagation policy are uniform.
+
+/// Run `f(i)` for `i in 0..n` on `n` scoped threads and collect results in
+/// index order.  Panics in workers propagate to the caller.
+pub fn scoped_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let f = &f;
+                s.spawn(move || f(i))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scoped_map worker panicked"))
+            .collect()
+    })
+}
+
+/// Like [`scoped_map`] but caps real OS threads at `max_threads`, running
+/// the index space in strided batches.  With 288 simulated ranks on a small
+/// host this keeps memory and scheduler pressure bounded while preserving
+/// per-index results.
+pub fn scoped_map_bounded<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let w = max_threads.max(1).min(n.max(1));
+    if n <= w {
+        return scoped_map(n, f);
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<_> = out.iter_mut().collect();
+    std::thread::scope(|s| {
+        // Partition slots by stride so each worker owns disjoint indices.
+        let mut buckets: Vec<Vec<(usize, &mut Option<T>)>> =
+            (0..w).map(|_| Vec::new()).collect();
+        for (i, slot) in slots.into_iter().enumerate() {
+            buckets[i % w].push((i, slot));
+        }
+        for bucket in buckets {
+            let f = &f;
+            s.spawn(move || {
+                for (i, slot) in bucket {
+                    *slot = Some(f(i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("index not filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let v = scoped_map(8, |i| i * i);
+        assert_eq!(v, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn map_zero_and_one() {
+        assert!(scoped_map(0, |i| i).is_empty());
+        assert_eq!(scoped_map(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn bounded_matches_unbounded() {
+        let a = scoped_map(37, |i| i as u64 * 3);
+        let b = scoped_map_bounded(37, 4, |i| i as u64 * 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        scoped_map(4, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

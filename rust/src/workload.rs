@@ -1,0 +1,255 @@
+//! Benchmark workload: the CONUS-proxy history frame and the common
+//! write-benchmark harness used by every figure/table bench.
+//!
+//! The paper's workload is the *New CONUS 2.5 km* benchmark: a fixed
+//! global grid whose history frame (~8 GB uncompressed across ~10⁲ named
+//! variables) is written every 30 simulated minutes, strong-scaled over
+//! 1–8 nodes × 36 ranks.  Our proxy keeps the variable set, layouts and
+//! smooth-field statistics (via [`crate::model::registry`] +
+//! [`crate::model::state::RankState::init`]) on a 192×384×4 grid, and maps
+//! physical bytes to CONUS scale through `HardwareSpec::volume_scale`
+//! (DESIGN.md §Substitutions) so virtual times are paper-scale while the
+//! single-core container moves ~50 MB per frame.
+
+use crate::io::api::{FrameFields, FrameReport, HistoryBackend};
+use crate::model::decomp::Decomp;
+use crate::model::registry::{wrf_history_vars, VarSpec};
+use crate::model::state::RankState;
+use crate::adios::Variable;
+use crate::sim::HardwareSpec;
+use crate::Result;
+
+/// Uncompressed CONUS 2.5 km history-frame volume we scale to (bytes).
+/// 1901×1301×35 cells × 4 B ≈ 346 MB per 3-D field; WRF-ARW history holds
+/// ~20+ 3-D fields plus the 2-D tail → ≈ 8 GB (consistent with the
+/// paper's Table I: 93 s @ ~86 MB/s effective PnetCDF bandwidth).
+pub const PAPER_FRAME_BYTES: f64 = 8.0e9;
+
+/// The benchmark workload description.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub ny: usize,
+    pub nx: usize,
+    pub nz: usize,
+    pub vars: Vec<VarSpec>,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// The CONUS-proxy grid used by all figure benches.
+    pub fn conus_proxy() -> Workload {
+        Workload {
+            ny: 192,
+            nx: 384,
+            nz: 4,
+            vars: wrf_history_vars(),
+            seed: 2022,
+        }
+    }
+
+    /// A smaller grid for tests.
+    pub fn tiny() -> Workload {
+        Workload {
+            ny: 16,
+            nx: 32,
+            nz: 2,
+            vars: wrf_history_vars(),
+            seed: 7,
+        }
+    }
+
+    /// Decomposition for a rank count.
+    pub fn decomp(&self, ranks: usize) -> Result<Decomp> {
+        Decomp::auto(self.ny, self.nx, ranks)
+    }
+
+    /// Materialize one rank's frame fields (no XLA needed: the initial
+    /// condition already has the right smoothness; `frame` perturbs the
+    /// seed so frames differ between repetitions).
+    pub fn rank_fields(&self, decomp: &Decomp, rank: usize, frame: u64) -> Result<FrameFields> {
+        let st = RankState::init(decomp, rank, self.nz, 2, self.seed + frame);
+        let (nyp, nxp) = decomp.patch();
+        let (y0, x0) = decomp.origin(rank);
+        let interior = st.interior();
+        let mut out = Vec::with_capacity(self.vars.len());
+        for spec in &self.vars {
+            let data = spec.materialize(
+                &interior,
+                st.nf,
+                self.nz,
+                nyp,
+                nxp,
+                (y0, x0),
+                self.ny,
+                self.nx,
+            );
+            let var = if spec.is_3d {
+                Variable::global(
+                    spec.name,
+                    &[self.nz as u64, self.ny as u64, self.nx as u64],
+                    &[0, y0 as u64, x0 as u64],
+                    &[self.nz as u64, nyp as u64, nxp as u64],
+                )?
+            } else {
+                Variable::global(
+                    spec.name,
+                    &[self.ny as u64, self.nx as u64],
+                    &[y0 as u64, x0 as u64],
+                    &[nyp as u64, nxp as u64],
+                )?
+            };
+            out.push((var, data));
+        }
+        Ok(out)
+    }
+
+    /// Raw bytes of one full frame on this grid.
+    pub fn frame_bytes(&self) -> u64 {
+        let d3 = (self.nz * self.ny * self.nx * 4) as u64;
+        let d2 = (self.ny * self.nx * 4) as u64;
+        self.vars
+            .iter()
+            .map(|v| if v.is_3d { d3 } else { d2 })
+            .sum()
+    }
+
+    /// `volume_scale` mapping this grid's frame to CONUS scale.
+    pub fn paper_volume_scale(&self) -> f64 {
+        PAPER_FRAME_BYTES / self.frame_bytes() as f64
+    }
+
+    /// Paper-testbed hardware for `nodes`, with CONUS volume scaling.
+    pub fn hardware(&self, nodes: usize) -> HardwareSpec {
+        let mut hw = HardwareSpec::paper_testbed(nodes);
+        hw.volume_scale = self.paper_volume_scale();
+        hw
+    }
+}
+
+/// Aggregate result of a write benchmark (rank-0 view over reps).
+#[derive(Debug, Clone, Default)]
+pub struct WriteBench {
+    pub reports: Vec<FrameReport>,
+}
+
+impl WriteBench {
+    /// Mean perceived (virtual CONUS-scale) write time.
+    pub fn mean_perceived(&self) -> f64 {
+        if self.reports.is_empty() {
+            return 0.0;
+        }
+        self.reports.iter().map(|r| r.perceived()).sum::<f64>() / self.reports.len() as f64
+    }
+    /// Mean measured wall seconds for the physical write.
+    pub fn mean_real(&self) -> f64 {
+        if self.reports.is_empty() {
+            return 0.0;
+        }
+        self.reports.iter().map(|r| r.real_secs).sum::<f64>() / self.reports.len() as f64
+    }
+    pub fn stored_bytes(&self) -> u64 {
+        self.reports.first().map(|r| r.bytes_stored).unwrap_or(0)
+    }
+    pub fn raw_bytes(&self) -> u64 {
+        self.reports.first().map(|r| r.bytes_raw).unwrap_or(0)
+    }
+    /// Mean seconds of one named phase.
+    pub fn mean_phase(&self, name: &str) -> f64 {
+        if self.reports.is_empty() {
+            return 0.0;
+        }
+        self.reports
+            .iter()
+            .map(|r| {
+                r.cost
+                    .phases
+                    .iter()
+                    .filter(|p| p.name == name)
+                    .map(|p| p.secs)
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / self.reports.len() as f64
+    }
+}
+
+/// Run `reps` history-frame writes through `make_backend` on a
+/// `nodes × ranks_per_node` world (the common harness of Figs 1–5 and
+/// Table I).  Each rep writes a distinct frame to a distinct file name.
+pub fn bench_write<F>(
+    wl: &Workload,
+    nodes: usize,
+    ranks_per_node: usize,
+    reps: usize,
+    make_backend: F,
+) -> Result<WriteBench>
+where
+    F: Fn(usize) -> Box<dyn HistoryBackend> + Sync,
+{
+    let ranks = nodes * ranks_per_node;
+    let decomp = wl.decomp(ranks)?;
+    let results = crate::cluster::run_world(ranks, ranks_per_node, |mut comm| -> Result<Vec<FrameReport>> {
+        let mut backend = make_backend(comm.rank());
+        for rep in 0..reps {
+            let fields = wl.rank_fields(&decomp, comm.rank(), rep as u64)?;
+            backend.write_frame(&mut comm, rep, &format!("bench_frame_{rep}"), fields)?;
+        }
+        backend.finish(&mut comm)
+    });
+    let reports = results.into_iter().next().unwrap()?;
+    Ok(WriteBench { reports })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::split_nc::SplitNcBackend;
+    use crate::sim::CostModel;
+
+    #[test]
+    fn conus_proxy_volume_scale_is_paper_scale() {
+        let wl = Workload::conus_proxy();
+        let fb = wl.frame_bytes();
+        // ~40-60 MB physical
+        assert!(fb > 30_000_000 && fb < 80_000_000, "{fb}");
+        let vs = wl.paper_volume_scale();
+        assert!((wl.hardware(8).scaled(fb) - PAPER_FRAME_BYTES).abs() < 1.0);
+        assert!(vs > 50.0 && vs < 300.0, "{vs}");
+    }
+
+    #[test]
+    fn decomps_exist_for_paper_rank_counts() {
+        let wl = Workload::conus_proxy();
+        for nodes in [1usize, 2, 4, 8] {
+            let d = wl.decomp(nodes * 36).unwrap();
+            assert_eq!(d.ranks(), nodes * 36);
+        }
+    }
+
+    #[test]
+    fn bench_write_runs_tiny() {
+        let wl = Workload::tiny();
+        let dir = std::env::temp_dir().join(format!("stormio_wl_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d2 = dir.clone();
+        let hw = wl.hardware(1);
+        let b = bench_write(&wl, 1, 4, 2, move |_| {
+            Box::new(SplitNcBackend::new(d2.clone(), CostModel::new(hw.clone())))
+        })
+        .unwrap();
+        assert_eq!(b.reports.len(), 2);
+        assert!(b.mean_perceived() > 0.0);
+        assert_eq!(b.raw_bytes(), wl.frame_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn frames_differ_between_reps() {
+        let wl = Workload::tiny();
+        let d = wl.decomp(2).unwrap();
+        let f0 = wl.rank_fields(&d, 0, 0).unwrap();
+        let f1 = wl.rank_fields(&d, 0, 1).unwrap();
+        assert_eq!(f0[0].0, f1[0].0);
+        assert_ne!(f0[0].1, f1[0].1);
+    }
+}

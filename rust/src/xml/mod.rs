@@ -1,0 +1,324 @@
+//! Minimal XML parser for ADIOS2-style runtime configuration files.
+//!
+//! ADIOS2 is configured at run time by an `adios2.xml` document
+//! (`<adios-config><io name="..."><engine type="..."><parameter .../>`).
+//! The offline vendor set has no XML crate, so this module implements the
+//! subset the config surface needs: elements, attributes, text nodes,
+//! comments, XML declarations and entity escapes.  It does **not** aim to
+//! be a general-purpose XML library (no namespaces, DTDs or CDATA).
+
+use crate::{Error, Result};
+
+/// A parsed XML element.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Element {
+    pub name: String,
+    pub attrs: Vec<(String, String)>,
+    pub children: Vec<Element>,
+    /// Concatenated text content directly inside this element.
+    pub text: String,
+}
+
+impl Element {
+    /// First attribute value with the given name.
+    pub fn attr(&self, name: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// All direct children with the given element name.
+    pub fn children_named<'a, 'b: 'a>(
+        &'a self,
+        name: &'b str,
+    ) -> impl Iterator<Item = &'a Element> + 'a {
+        self.children.iter().filter(move |c| c.name == name)
+    }
+
+    /// First direct child with the given name.
+    pub fn child(&self, name: &str) -> Option<&Element> {
+        self.children.iter().find(|c| c.name == name)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::Xml {
+            pos: self.pos,
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.b[self.pos..].starts_with(s.as_bytes())
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.pos += 1;
+        }
+    }
+
+    fn skip_misc(&mut self) -> Result<()> {
+        loop {
+            self.skip_ws();
+            if self.starts_with("<?") {
+                let end = self.find("?>")?;
+                self.pos = end + 2;
+            } else if self.starts_with("<!--") {
+                let end = self.find("-->")?;
+                self.pos = end + 3;
+            } else {
+                return Ok(());
+            }
+        }
+    }
+
+    fn find(&self, needle: &str) -> Result<usize> {
+        self.b[self.pos..]
+            .windows(needle.len())
+            .position(|w| w == needle.as_bytes())
+            .map(|i| self.pos + i)
+            .ok_or_else(|| self.err(format!("unterminated construct, expected `{needle}`")))
+    }
+
+    fn name(&mut self) -> Result<String> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || matches!(c, b'_' | b'-' | b'.' | b':') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if self.pos == start {
+            return Err(self.err("expected name"));
+        }
+        Ok(String::from_utf8_lossy(&self.b[start..self.pos]).into_owned())
+    }
+
+    fn attr_value(&mut self) -> Result<String> {
+        let quote = self.peek().ok_or_else(|| self.err("eof in attribute"))?;
+        if quote != b'"' && quote != b'\'' {
+            return Err(self.err("attribute value must be quoted"));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c == quote {
+                let raw = &self.b[start..self.pos];
+                self.pos += 1;
+                return unescape(raw).map_err(|m| self.err(m));
+            }
+            self.pos += 1;
+        }
+        Err(self.err("unterminated attribute value"))
+    }
+
+    fn element(&mut self) -> Result<Element> {
+        if self.peek() != Some(b'<') {
+            return Err(self.err("expected `<`"));
+        }
+        self.pos += 1;
+        let name = self.name()?;
+        let mut attrs = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'/') => {
+                    self.pos += 1;
+                    if self.peek() != Some(b'>') {
+                        return Err(self.err("expected `>` after `/`"));
+                    }
+                    self.pos += 1;
+                    return Ok(Element {
+                        name,
+                        attrs,
+                        children: Vec::new(),
+                        text: String::new(),
+                    });
+                }
+                Some(b'>') => {
+                    self.pos += 1;
+                    break;
+                }
+                Some(_) => {
+                    let k = self.name()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b'=') {
+                        return Err(self.err(format!("expected `=` after attribute `{k}`")));
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    let v = self.attr_value()?;
+                    attrs.push((k, v));
+                }
+                None => return Err(self.err("eof in tag")),
+            }
+        }
+
+        // Content until matching close tag.
+        let mut children = Vec::new();
+        let mut text = String::new();
+        loop {
+            if self.starts_with("<!--") {
+                let end = self.find("-->")?;
+                self.pos = end + 3;
+                continue;
+            }
+            if self.starts_with("</") {
+                self.pos += 2;
+                let close = self.name()?;
+                if close != name {
+                    return Err(self.err(format!(
+                        "mismatched close tag: expected `</{name}>`, got `</{close}>`"
+                    )));
+                }
+                self.skip_ws();
+                if self.peek() != Some(b'>') {
+                    return Err(self.err("expected `>` in close tag"));
+                }
+                self.pos += 1;
+                return Ok(Element {
+                    name,
+                    attrs,
+                    children,
+                    text: text.trim().to_string(),
+                });
+            }
+            match self.peek() {
+                Some(b'<') => children.push(self.element()?),
+                Some(_) => {
+                    let start = self.pos;
+                    while let Some(c) = self.peek() {
+                        if c == b'<' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    let chunk = unescape(&self.b[start..self.pos]).map_err(|m| self.err(m))?;
+                    text.push_str(&chunk);
+                }
+                None => return Err(self.err(format!("eof inside `<{name}>`"))),
+            }
+        }
+    }
+}
+
+fn unescape(raw: &[u8]) -> std::result::Result<String, String> {
+    let s = String::from_utf8_lossy(raw);
+    if !s.contains('&') {
+        return Ok(s.into_owned());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s.as_ref();
+    while let Some(i) = rest.find('&') {
+        out.push_str(&rest[..i]);
+        rest = &rest[i..];
+        let end = rest
+            .find(';')
+            .ok_or_else(|| "unterminated entity".to_string())?;
+        match &rest[..=end] {
+            "&amp;" => out.push('&'),
+            "&lt;" => out.push('<'),
+            "&gt;" => out.push('>'),
+            "&quot;" => out.push('"'),
+            "&apos;" => out.push('\''),
+            other => return Err(format!("unknown entity `{other}`")),
+        }
+        rest = &rest[end + 1..];
+    }
+    out.push_str(rest);
+    Ok(out)
+}
+
+/// Parse a document and return its root element.
+pub fn parse(doc: &str) -> Result<Element> {
+    let mut p = Parser {
+        b: doc.as_bytes(),
+        pos: 0,
+    };
+    p.skip_misc()?;
+    let root = p.element()?;
+    p.skip_misc()?;
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing content after document root"));
+    }
+    Ok(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_adios_config_shape() {
+        let doc = r#"<?xml version="1.0"?>
+            <adios-config>
+              <!-- history output io -->
+              <io name="wrf_history">
+                <engine type="BP4">
+                  <parameter key="NumAggregators" value="8"/>
+                </engine>
+                <transport type="File"/>
+              </io>
+            </adios-config>"#;
+        let root = parse(doc).unwrap();
+        assert_eq!(root.name, "adios-config");
+        let io = root.child("io").unwrap();
+        assert_eq!(io.attr("name"), Some("wrf_history"));
+        let engine = io.child("engine").unwrap();
+        assert_eq!(engine.attr("type"), Some("BP4"));
+        let p = engine.child("parameter").unwrap();
+        assert_eq!(p.attr("key"), Some("NumAggregators"));
+        assert_eq!(p.attr("value"), Some("8"));
+    }
+
+    #[test]
+    fn self_closing_and_text() {
+        let root = parse("<a x='1'><b/>hello <c/> world</a>").unwrap();
+        assert_eq!(root.attr("x"), Some("1"));
+        assert_eq!(root.children.len(), 2);
+        assert_eq!(root.text, "hello  world");
+    }
+
+    #[test]
+    fn entity_unescape() {
+        let root = parse(r#"<a v="&lt;&amp;&gt;">x &quot;y&quot;</a>"#).unwrap();
+        assert_eq!(root.attr("v"), Some("<&>"));
+        assert_eq!(root.text, "x \"y\"");
+    }
+
+    #[test]
+    fn rejects_mismatched_close() {
+        assert!(parse("<a><b></a></b>").is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse("<a/><b/>").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        assert!(parse("<a><b>").is_err());
+        assert!(parse("<a attr=>").is_err());
+    }
+
+    #[test]
+    fn comments_everywhere() {
+        let root = parse("<!-- head --><a><!-- in -->1<b/><!-- tail2 --></a><!-- tail -->").unwrap();
+        assert_eq!(root.text, "1");
+        assert_eq!(root.children.len(), 1);
+    }
+}

@@ -1,0 +1,281 @@
+//! Property-based tests over randomized inputs (the offline vendor set has
+//! no proptest, so generation uses the crate's deterministic xoshiro RNG —
+//! failures print the case seed for replay).
+
+use stormio::adios::bp::reader::BpReader;
+use stormio::adios::engine::bp4::{Bp4Config, Bp4Engine};
+use stormio::adios::engine::{Engine, Target};
+use stormio::adios::operator::{self, Codec, OperatorConfig};
+use stormio::adios::Variable;
+use stormio::cluster::run_world;
+use stormio::io::cdf::{CdfReader, CdfWriter, DType};
+use stormio::namelist::Namelist;
+use stormio::sim::{CostModel, HardwareSpec};
+use stormio::util::rng::Rng;
+
+/// Random payload with mixed compressibility.
+fn random_payload(rng: &mut Rng, len: usize) -> Vec<u8> {
+    let mode = rng.below(3);
+    let mut out = vec![0u8; len];
+    match mode {
+        0 => rng.fill_bytes(&mut out),
+        1 => {
+            for (i, b) in out.iter_mut().enumerate() {
+                *b = (i / 7) as u8;
+            }
+        }
+        _ => {
+            for (i, b) in out.iter_mut().enumerate() {
+                *b = if i % 5 == 0 {
+                    (rng.next_u64() & 0xFF) as u8
+                } else {
+                    (i % 31) as u8
+                };
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_codec_roundtrip_random() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let len = rng.below(60_000);
+        let data = random_payload(&mut rng, len);
+        let codec = [Codec::None, Codec::BloscLz, Codec::Lz4, Codec::Zlib, Codec::Zstd]
+            [rng.below(5)];
+        let shuffle = rng.below(2) == 1;
+        let elem = [1usize, 2, 4, 8][rng.below(4)];
+        let cfg = OperatorConfig {
+            codec,
+            shuffle: shuffle && codec != Codec::None,
+            elem_size: elem,
+            keep_bits: None,
+        };
+        let frame = operator::compress(&data, cfg).unwrap();
+        let back = operator::decompress(&frame).unwrap();
+        assert_eq!(back, data, "seed {seed} codec {codec:?} shuffle {shuffle} elem {elem}");
+    }
+}
+
+#[test]
+fn prop_scatter_tiling_partition() {
+    // Random 2-D tilings must write every cell exactly once.
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let py = 1 + rng.below(4);
+        let px = 1 + rng.below(4);
+        let nyp = 1 + rng.below(6);
+        let nxp = 1 + rng.below(6);
+        let (ny, nx) = (py * nyp, px * nxp);
+        let shape = [ny as u64, nx as u64];
+        let mut g = vec![-1.0f32; ny * nx];
+        for iy in 0..py {
+            for ix in 0..px {
+                let block = vec![(iy * px + ix) as f32; nyp * nxp];
+                stormio::adios::bp::scatter_block(
+                    &mut g,
+                    &shape,
+                    &[(iy * nyp) as u64, (ix * nxp) as u64],
+                    &[nyp as u64, nxp as u64],
+                    &block,
+                )
+                .unwrap();
+            }
+        }
+        assert!(
+            g.iter().all(|&v| v >= 0.0),
+            "seed {seed}: uncovered cells in {py}x{px} tiling of {ny}x{nx}"
+        );
+    }
+}
+
+#[test]
+fn prop_bp_roundtrip_random_worlds() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(7_000 + seed);
+        let rpn = 1 + rng.below(3);
+        let nodes = 1 + rng.below(3);
+        let ranks = rpn * nodes;
+        let nyp = 2 + rng.below(5);
+        let nxp = 2 + rng.below(5);
+        let ny = ranks * nyp; // 1-D row decomposition
+        let codec = [Codec::None, Codec::Lz4, Codec::Zstd][rng.below(3)];
+        let aggs = 1 + rng.below(rpn);
+        let steps = 1 + rng.below(3);
+        let dir = std::env::temp_dir().join(format!(
+            "stormio_prop_bp_{seed}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let d2 = dir.clone();
+        run_world(ranks, rpn, move |mut comm| {
+            let cfg = Bp4Config {
+                name: "prop".into(),
+                pfs_dir: d2.join("pfs"),
+                bb_root: d2.join("bb"),
+                target: Target::Pfs,
+                operator: OperatorConfig::blosc(codec),
+                aggs_per_node: aggs,
+                cost: CostModel::new(HardwareSpec::paper_testbed(nodes)),
+            };
+            let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..steps {
+                eng.begin_step().unwrap();
+                let data: Vec<f32> = (0..nyp * nxp)
+                    .map(|i| (s * 10_000 + comm.rank() * 100 + i) as f32)
+                    .collect();
+                let var = Variable::global(
+                    "F",
+                    &[ny as u64, nxp as u64],
+                    &[r * nyp as u64, 0],
+                    &[nyp as u64, nxp as u64],
+                )
+                .unwrap();
+                eng.put_f32(var, data).unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap();
+        });
+
+        let rd = BpReader::open(dir.join("pfs/prop.bp")).unwrap();
+        assert_eq!(rd.num_steps(), steps, "seed {seed}");
+        for s in 0..steps {
+            let (shape, g) = rd.read_var_global(s, "F").unwrap();
+            assert_eq!(shape, vec![ny as u64, nxp as u64]);
+            for rank in 0..ranks {
+                for i in 0..nyp * nxp {
+                    let got = g[rank * nyp * nxp + i];
+                    let want = (s * 10_000 + rank * 100 + i) as f32;
+                    assert_eq!(got, want, "seed {seed} step {s} rank {rank} i {i}");
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn prop_cdf_roundtrip_random_schemas() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(3_000 + seed);
+        let compress = rng.below(2) == 1;
+        let ndims = 1 + rng.below(3);
+        let dims: Vec<u64> = (0..ndims).map(|_| 1 + rng.below(9) as u64).collect();
+        let nvars = 1 + rng.below(5);
+        let mut w = CdfWriter::new(compress);
+        for (i, d) in dims.iter().enumerate() {
+            w.def_dim(&format!("d{i}"), *d).unwrap();
+        }
+        let mut datasets = Vec::new();
+        for v in 0..nvars {
+            let vd = 1 + rng.below(ndims);
+            let names: Vec<String> = (0..vd).map(|i| format!("d{i}")).collect();
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let name = format!("v{v}");
+            w.def_var(&name, DType::F32, &refs).unwrap();
+            let n: u64 = dims[..vd].iter().product();
+            let data: Vec<f32> = (0..n).map(|i| i as f32 + v as f32 * 0.5).collect();
+            datasets.push((name, data));
+        }
+        w.end_define();
+        for (name, data) in &datasets {
+            w.put_var_f32(name, data).unwrap();
+        }
+        let rd = CdfReader::from_bytes(w.to_bytes().unwrap()).unwrap();
+        for (name, data) in &datasets {
+            assert_eq!(&rd.read_var_f32(name).unwrap(), data, "seed {seed} {name}");
+        }
+    }
+}
+
+#[test]
+fn prop_namelist_roundtrip_random() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(9_000 + seed);
+        let nkeys = 1 + rng.below(6);
+        let mut src = String::from("&g\n");
+        let mut expect: Vec<(String, stormio::namelist::Value)> = Vec::new();
+        for k in 0..nkeys {
+            let key = format!("key_{k}");
+            match rng.below(4) {
+                0 => {
+                    let v = rng.next_u64() as i64 % 100_000;
+                    src.push_str(&format!("  {key} = {v},\n"));
+                    expect.push((key, stormio::namelist::Value::Int(v)));
+                }
+                1 => {
+                    let v = (rng.next_f64() * 1e3 * 8.0).round() / 8.0;
+                    src.push_str(&format!("  {key} = {v:?},\n"));
+                    expect.push((key, stormio::namelist::Value::Real(v)));
+                }
+                2 => {
+                    let v = rng.below(2) == 1;
+                    src.push_str(&format!(
+                        "  {key} = {},\n",
+                        if v { ".true." } else { ".false." }
+                    ));
+                    expect.push((key, stormio::namelist::Value::Bool(v)));
+                }
+                _ => {
+                    let v = format!("s{}", rng.below(1000));
+                    src.push_str(&format!("  {key} = '{v}',\n"));
+                    expect.push((key, stormio::namelist::Value::Str(v)));
+                }
+            }
+        }
+        src.push_str("/\n");
+        let nl = Namelist::parse(&src).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{src}"));
+        let g = nl.group("g").unwrap();
+        for (k, v) in &expect {
+            assert_eq!(g.get(k), Some(v), "seed {seed} key {k}\n{src}");
+        }
+    }
+}
+
+#[test]
+fn prop_cost_model_monotonicity() {
+    for nodes in [1usize, 2, 4, 8] {
+        let m = CostModel::new(HardwareSpec::paper_testbed(nodes));
+        let mut rng = Rng::new(nodes as u64);
+        for _ in 0..50 {
+            let a = rng.next_f64() * 8e9;
+            let b = a + rng.next_f64() * 8e9;
+            let s = 1 + rng.below(288);
+            // More bytes never cost less.
+            assert!(m.t_pfs_write(b, s) >= m.t_pfs_write(a, s));
+            assert!(m.t_pfs_write_locked(b, s) >= m.t_pfs_write_locked(a, s));
+            assert!(m.t_nvme_write(b, nodes) >= m.t_nvme_write(a, nodes));
+            assert!(m.t_alltoall(b) >= m.t_alltoall(a));
+            // Locked N-1 writes never beat independent streams.
+            assert!(m.t_pfs_write_locked(a, s) >= m.t_pfs_write(a, s) * 0.999);
+            // Efficiencies stay in (0, 1].
+            let e = m.stream_efficiency(s);
+            assert!(e > 0.0 && e <= 1.0);
+        }
+    }
+}
+
+#[test]
+fn prop_shuffle_is_permutation() {
+    use stormio::adios::operator::shuffle::{shuffle, unshuffle};
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(500 + seed);
+        let len = rng.below(10_000);
+        let data = random_payload(&mut rng, len);
+        for es in [1usize, 2, 4, 8, 16] {
+            let s = shuffle(&data, es);
+            assert_eq!(s.len(), data.len());
+            // Same multiset of bytes.
+            let mut a = data.clone();
+            let mut b = s.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "seed {seed} es {es}");
+            assert_eq!(unshuffle(&s, es), data);
+        }
+    }
+}
