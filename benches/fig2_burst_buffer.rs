@@ -57,7 +57,7 @@ fn main() {
 
     let mut table = Table::new(
         "Fig 2: ADIOS2 history write time [s] — PFS vs node-local burst buffer",
-        &["nodes", "ranks", "PFS", "BurstBuffer", "BB speedup"],
+        &["nodes", "ranks", "PFS", "BurstBuffer", "BB+drain", "BB speedup"],
     );
     for nodes in [1usize, 2, 4, 8] {
         let pfs = adios_bench(&wl, nodes, reps, tmp.join(format!("p{nodes}")), Target::Pfs);
@@ -68,15 +68,35 @@ fn main() {
             tmp.join(format!("b{nodes}")),
             Target::BurstBuffer { drain: false },
         );
+        // Drain enabled: perceived time must stay at BB level because the
+        // BB->PFS copy physically runs on the background pipeline while
+        // the next step proceeds (the paper's §V-B argument, now measured).
+        let bbd = adios_bench(
+            &wl,
+            nodes,
+            reps,
+            tmp.join(format!("d{nodes}")),
+            Target::BurstBuffer { drain: true },
+        );
         table.row(&[
             nodes.to_string(),
             (nodes * 36).to_string(),
             format!("{:.2}", pfs.mean_perceived()),
             format!("{:.2}", bb.mean_perceived()),
+            format!("{:.2}", bbd.mean_perceived()),
             format!("{:.1}x", pfs.mean_perceived() / bb.mean_perceived()),
         ]);
+        let d = bbd.drain_totals();
+        println!(
+            "  {nodes} node(s), drain overlap (measured): {} frames, busy {:.1} ms, close join {:.1} ms, overlapped {:.1} ms",
+            d.frames_enqueued,
+            d.drain_busy_secs * 1e3,
+            d.close_join_secs * 1e3,
+            d.overlapped_secs * 1e3
+        );
     }
     table.emit(Some(std::path::Path::new("bench_results/fig2.csv")));
     println!("paper: similar at 1 node; BB dramatically lower as nodes are added (supplemental NVMe bandwidth/node).");
+    println!("BB+drain perceived ~= BB perceived: the physical drain overlaps the application (async pipeline).");
     let _ = std::fs::remove_dir_all(&tmp);
 }

@@ -15,8 +15,13 @@ pub struct AggregationPlan {
     pub ranks_per_node: usize,
     /// Aggregator rank for every rank (aggregators map to themselves).
     pub agg_of_rank: Vec<usize>,
-    /// Sub-file index for every aggregator rank (dense 0..M).
+    /// Sub-file index for every aggregator rank (dense 0..M), in
+    /// sub-file order.
     pub subfile_of_agg: Vec<(usize, u32)>,
+    /// Per-rank sub-file lookup (`None` for non-aggregators): `subfile()`
+    /// sits on the per-step hot path, so the O(M) scan over
+    /// `subfile_of_agg` is precomputed into a direct index.
+    subfile_by_rank: Vec<Option<u32>>,
 }
 
 impl AggregationPlan {
@@ -55,11 +60,16 @@ impl AggregationPlan {
                 agg_of_rank[base + local] = aggs[bucket];
             }
         }
+        let mut subfile_by_rank = vec![None; nranks];
+        for (agg, sub) in &subfile_of_agg {
+            subfile_by_rank[*agg] = Some(*sub);
+        }
         Ok(AggregationPlan {
             nranks,
             ranks_per_node,
             agg_of_rank,
             subfile_of_agg,
+            subfile_by_rank,
         })
     }
 
@@ -73,12 +83,10 @@ impl AggregationPlan {
         self.agg_of_rank[rank] == rank
     }
 
-    /// Sub-file index of an aggregator rank.
+    /// Sub-file index of an aggregator rank (O(1); `None` for
+    /// non-aggregators and out-of-range ranks).
     pub fn subfile(&self, agg_rank: usize) -> Option<u32> {
-        self.subfile_of_agg
-            .iter()
-            .find(|(r, _)| *r == agg_rank)
-            .map(|(_, s)| *s)
+        self.subfile_by_rank.get(agg_rank).copied().flatten()
     }
 
     /// Ranks assigned to an aggregator (including itself), in rank order —
@@ -143,6 +151,22 @@ mod tests {
         let mut subs: Vec<u32> = p.subfile_of_agg.iter().map(|(_, s)| *s).collect();
         subs.sort_unstable();
         assert_eq!(subs, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn subfile_lookup_matches_dense_map() {
+        let p = AggregationPlan::per_node(144, 36, 2).unwrap();
+        for (agg, sub) in &p.subfile_of_agg {
+            assert_eq!(p.subfile(*agg), Some(*sub));
+        }
+        for r in 0..144 {
+            if !p.is_aggregator(r) {
+                assert_eq!(p.subfile(r), None, "rank {r}");
+            }
+        }
+        // Out-of-range ranks are None, not a panic.
+        assert_eq!(p.subfile(144), None);
+        assert_eq!(p.subfile(10_000), None);
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //! use: the metadata index tells us exactly which byte ranges of which
 //! sub-files hold each block, so reads touch only what they need.
 
+use std::collections::HashMap;
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::{read_metadata, StepIndex};
 use crate::adios::operator;
@@ -20,6 +23,14 @@ pub struct BpReader {
     subfiles: u32,
     /// Global attributes recorded at write time.
     pub attrs: Vec<(String, String)>,
+    /// Open sub-file handles, keyed by sub-file index.  A global read of a
+    /// many-block variable touches the same few sub-files over and over;
+    /// without this cache every block paid an `open()` (an MDS round-trip
+    /// on a real PFS).
+    handles: Mutex<HashMap<u32, fs::File>>,
+    /// Number of physical sub-file `open()` calls performed (test/report
+    /// instrumentation for the caching guarantee).
+    opens: AtomicUsize,
 }
 
 impl BpReader {
@@ -33,7 +44,15 @@ impl BpReader {
             steps,
             subfiles,
             attrs,
+            handles: Mutex::new(HashMap::new()),
+            opens: AtomicUsize::new(0),
         })
+    }
+
+    /// Physical sub-file `open()` calls performed so far (one per distinct
+    /// sub-file touched, regardless of how many blocks were read).
+    pub fn subfile_opens(&self) -> usize {
+        self.opens.load(Ordering::Relaxed)
     }
 
     /// Attribute lookup.
@@ -82,15 +101,27 @@ impl BpReader {
         Ok(v.minmax())
     }
 
-    /// Read one block's frame bytes from its sub-file.
+    /// Read one block's frame bytes from its sub-file (cached handle).
     fn read_frame(&self, subfile: u32, offset: u64, stored: u64) -> Result<Vec<u8>> {
-        let path = self.dir.join(format!("data.{subfile}"));
-        let mut f = fs::File::open(&path)
-            .map_err(|e| Error::bp(format!("cannot open {}: {e}", path.display())))?;
+        let mut handles = self.handles.lock().expect("subfile handle cache poisoned");
+        let f = match handles.entry(subfile) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let path = self.dir.join(format!("data.{subfile}"));
+                let f = fs::File::open(&path)
+                    .map_err(|e| Error::bp(format!("cannot open {}: {e}", path.display())))?;
+                self.opens.fetch_add(1, Ordering::Relaxed);
+                e.insert(f)
+            }
+        };
         f.seek(SeekFrom::Start(offset))?;
         let mut buf = vec![0u8; stored as usize];
-        f.read_exact(&mut buf)
-            .map_err(|e| Error::bp(format!("short read in {}: {e}", path.display())))?;
+        f.read_exact(&mut buf).map_err(|e| {
+            Error::bp(format!(
+                "short read in {}/data.{subfile}: {e}",
+                self.dir.display()
+            ))
+        })?;
         Ok(buf)
     }
 

@@ -33,11 +33,60 @@ pub struct StepStats {
     pub cost: WriteCost,
 }
 
+/// Measured (wall-clock, this host) statistics of the background drain
+/// pipeline, folded across ranks at `close` (rank-0 view).
+///
+/// These are the *physical* counterparts of the virtual
+/// [`crate::sim::WriteCost`] background phases: the cost model claims the
+/// BB→PFS drain overlaps the application, and these counters verify that
+/// the real byte movement actually did.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DrainStats {
+    /// Frames handed to the background I/O pipeline (sum over ranks).
+    pub frames_enqueued: usize,
+    /// Frames already durable on the final target when `close` began
+    /// waiting (drain work fully hidden from the application).
+    pub durable_before_close: usize,
+    /// Maximum frames still in flight observed when a *subsequent*
+    /// `end_step` entered the engine (sampled before enqueueing the new
+    /// frame; > 0 proves the application ran ahead of the drain).
+    pub max_inflight: usize,
+    /// Longest time any rank's `close` blocked joining outstanding
+    /// pipeline work (the only remaining blocking part of the drain).
+    pub close_join_secs: f64,
+    /// Background-thread busy seconds spent moving bytes to the final
+    /// target (sum over ranks; excludes queue idle time).
+    pub drain_busy_secs: f64,
+    /// Seconds of background byte movement hidden from the application:
+    /// each rank's `busy − close_join`, clamped at zero, summed at fold
+    /// time.  Computed **per rank before folding** — deriving it from the
+    /// folded sums would pair one rank's busy time with another rank's
+    /// join time and fabricate overlap that never happened.
+    pub overlapped_secs: f64,
+}
+
+impl DrainStats {
+    /// Fold another rank's/frame's stats into this one — the single
+    /// definition of which fields sum and which take the max (used by the
+    /// engine's close-time rank fold and the bench-level frame fold).
+    pub fn fold(&mut self, other: &DrainStats) {
+        self.frames_enqueued += other.frames_enqueued;
+        self.durable_before_close += other.durable_before_close;
+        self.max_inflight = self.max_inflight.max(other.max_inflight);
+        self.close_join_secs = self.close_join_secs.max(other.close_join_secs);
+        self.drain_busy_secs += other.drain_busy_secs;
+        self.overlapped_secs += other.overlapped_secs;
+    }
+}
+
 /// Aggregate report returned by `close` on rank 0.
 #[derive(Debug, Clone, Default)]
 pub struct EngineReport {
     pub steps: Vec<StepStats>,
     pub files_created: usize,
+    /// Measured background-drain statistics (file engines with an async
+    /// pipeline; zero for synchronous/streaming engines).
+    pub drain: DrainStats,
 }
 
 impl EngineReport {
@@ -61,6 +110,14 @@ impl EngineReport {
         }
         self.steps.iter().map(|s| s.real_secs).sum::<f64>() / self.steps.len() as f64
     }
+    /// Mean virtual wall time per step until data is durable on the final
+    /// target (perceived + background phases).
+    pub fn mean_durable(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.cost.durable()).sum::<f64>() / self.steps.len() as f64
+    }
 }
 
 /// Step-based writer engine (per-rank handle; collective calls take the
@@ -77,7 +134,20 @@ pub trait Engine: Send {
     /// or defer to `end_step`).
     fn put_f32(&mut self, var: Variable, data: Vec<f32>) -> Result<()>;
     /// Collective: flush the step through aggregation to the target.
+    ///
+    /// Returning only guarantees *perceived* completion: the data has left
+    /// the application's buffers.  Durable completion on the final target
+    /// (e.g. after a burst-buffer drain) may still be in flight — use
+    /// [`Engine::wait_durable`] or `close` to wait for it.
     fn end_step(&mut self, comm: &mut Comm) -> Result<()>;
-    /// Collective: finalize; rank 0 receives the report.
+    /// Non-collective: block until every step already ended by *this rank*
+    /// is durable on the final target (background drains flushed).  No-op
+    /// for engines without background data movement.
+    fn wait_durable(&mut self) -> Result<()> {
+        Ok(())
+    }
+    /// Collective: finalize; rank 0 receives the report.  Blocks only on
+    /// outstanding background work (drain pipeline join), then verifies
+    /// durability before publishing metadata.
     fn close(&mut self, comm: &mut Comm) -> Result<EngineReport>;
 }

@@ -32,7 +32,7 @@ use crate::sim::CostModel;
 use crate::{Error, Result};
 
 pub use config::{AdiosConfig, EngineKind, IoConfig};
-pub use engine::{Engine, EngineReport, Target};
+pub use engine::{DrainStats, Engine, EngineReport, Target};
 pub use operator::{Codec, OperatorConfig};
 pub use variable::Variable;
 
@@ -97,6 +97,13 @@ impl Adios {
                     operator: io.operator,
                     aggs_per_node: io.aggregators_per_node()?,
                     cost,
+                    // Per-block compression fan-out (0 = auto).
+                    pack_threads: io.param_usize("PackThreads", 0)?,
+                    // Pipelined append/drain is the default; `false`
+                    // restores the synchronous baseline (perf_hotpath
+                    // measures both).
+                    async_io: io.param_bool("AsyncIO", true)?,
+                    drain_throttle: None,
                 };
                 Ok(Box::new(engine::bp4::Bp4Engine::open(cfg, comm)?))
             }

@@ -132,10 +132,32 @@ fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: usize, mlen: usize)
 }
 
 /// Decompress an LZ4 block; `raw_len` is the exact decompressed size.
+///
+/// Hardened against adversarial input: the output is never allowed to
+/// grow past `raw_len` (a corrupt stream cannot force a multi-GB
+/// allocation before the final length check), and the `255…` extension
+/// encodings of literal/match lengths are capped at `raw_len` so a flood
+/// of extension bytes errors out instead of accumulating an absurd
+/// length.
 pub fn decompress(src: &[u8], raw_len: usize) -> Result<Vec<u8>> {
     let err = |m: &str| Error::Compress {
         codec: "lz4",
         msg: m.to_string(),
+    };
+    // Read a 15-anchored extended length; rejects runs that could never
+    // fit in `raw_len` while still inside the extension loop.
+    let read_ext_len = |p: &mut usize, mut len: usize| -> Result<usize> {
+        loop {
+            let b = *src.get(*p).ok_or_else(|| err("truncated length extension"))?;
+            *p += 1;
+            len += b as usize;
+            if len > raw_len {
+                return Err(err("length extension overflows declared raw length"));
+            }
+            if b != 255 {
+                return Ok(len);
+            }
+        }
     };
     let mut out = Vec::with_capacity(raw_len);
     let mut p = 0usize;
@@ -145,17 +167,13 @@ pub fn decompress(src: &[u8], raw_len: usize) -> Result<Vec<u8>> {
         // literals
         let mut ll = (token >> 4) as usize;
         if ll == 15 {
-            loop {
-                let b = *src.get(p).ok_or_else(|| err("truncated literal length"))?;
-                p += 1;
-                ll += b as usize;
-                if b != 255 {
-                    break;
-                }
-            }
+            ll = read_ext_len(&mut p, ll)?;
         }
         if p + ll > src.len() {
             return Err(err("literal run exceeds input"));
+        }
+        if out.len() + ll > raw_len {
+            return Err(err("literal run exceeds declared raw length"));
         }
         out.extend_from_slice(&src[p..p + ll]);
         p += ll;
@@ -173,16 +191,12 @@ pub fn decompress(src: &[u8], raw_len: usize) -> Result<Vec<u8>> {
         }
         let mut ml = (token & 0x0F) as usize;
         if ml == 15 {
-            loop {
-                let b = *src.get(p).ok_or_else(|| err("truncated match length"))?;
-                p += 1;
-                ml += b as usize;
-                if b != 255 {
-                    break;
-                }
-            }
+            ml = read_ext_len(&mut p, ml)?;
         }
         let mlen = ml + MIN_MATCH;
+        if out.len() + mlen > raw_len {
+            return Err(err("match exceeds declared raw length"));
+        }
         let start = out.len() - offset;
         if offset >= mlen {
             // Non-overlapping: bulk copy.
@@ -306,5 +320,58 @@ mod tests {
     fn wrong_raw_len_detected() {
         let c = compress(b"some payload some payload some payload!");
         assert!(decompress(&c, 7).is_err());
+    }
+
+    #[test]
+    fn literal_run_past_raw_len_rejected_early() {
+        // token: 15 literals + extensions 255,255,200 -> ll = 725, with a
+        // declared raw_len of 10: must error out of the extension loop /
+        // bounds check, never allocate or copy 725 bytes.
+        let mut s = vec![0xF0u8, 255, 255, 200];
+        s.extend(std::iter::repeat(0xAB).take(725));
+        let e = decompress(&s, 10);
+        assert!(e.is_err(), "oversized literal run accepted");
+    }
+
+    #[test]
+    fn match_expansion_bomb_rejected_early() {
+        // 4 literals then an RLE match (offset 1) whose extended length
+        // claims ~8 GB: the old code would try to materialize it before
+        // the final length check; now it must error immediately against
+        // the declared raw_len.
+        let mut s = Vec::new();
+        s.push((4 << 4) as u8 | 0x0F); // 4 literals, match len ext
+        s.extend_from_slice(b"AAAA");
+        s.extend_from_slice(&1u16.to_le_bytes()); // offset 1 (RLE)
+        // Extension flood: ~33 million × 255 would be ~8 GB...
+        s.extend(std::iter::repeat(255u8).take(10_000));
+        s.push(0);
+        let t0 = std::time::Instant::now();
+        let e = decompress(&s, 64);
+        assert!(e.is_err(), "match bomb accepted");
+        // Must fail fast (extension cap), not after chewing the flood.
+        assert!(t0.elapsed().as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn extension_flood_cannot_overflow_length() {
+        // A stream that is nothing but 255-extensions: the length cap must
+        // reject it as soon as the accumulated length passes raw_len.
+        let mut s = vec![0xF0u8];
+        s.extend(std::iter::repeat(255u8).take(100_000));
+        assert!(decompress(&s, 1_000).is_err());
+    }
+
+    #[test]
+    fn hardening_preserves_exact_boundary_roundtrips() {
+        // Streams whose final literal run lands exactly on raw_len (every
+        // legitimate stream) must still decode after the bounds hardening.
+        for len in [0usize, 1, 12, 13, 255, 4096] {
+            let data: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            roundtrip(&data);
+        }
+        // Long RLE whose match legitimately fills out to raw_len exactly.
+        let data = vec![9u8; 70_000];
+        roundtrip(&data);
     }
 }

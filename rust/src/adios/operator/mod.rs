@@ -244,6 +244,78 @@ pub fn decompress(frame: &[u8]) -> Result<Vec<u8>> {
     }
 }
 
+/// Compress independent payloads in parallel across a bounded worker pool
+/// (the BP4 `pack_blocks` fan-out: shuffle+codec work of distinct
+/// variables is embarrassingly parallel).
+///
+/// `max_threads = 0` picks `available_parallelism` capped at 4.  The cap
+/// is additionally enforced **process-wide**: hundreds of simulated
+/// rank-threads call this concurrently during bench worlds, and a purely
+/// per-caller cap would multiply into `ranks × 4` transient threads per
+/// step.  A best-effort global claim counter keeps the total worker count
+/// near the host's parallelism; callers that find no free slot compress
+/// inline on their own thread (which is the right degradation — the host
+/// is already saturated).  Returns the frames in input order plus the
+/// summed per-worker *CPU* seconds actually spent compressing (the
+/// single-core-equivalent cost the virtual-time model charges).
+pub fn compress_batch(
+    payloads: &[&[u8]],
+    cfg: OperatorConfig,
+    max_threads: usize,
+) -> Result<(Vec<Vec<u8>>, f64)> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static ACTIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+    /// Releases the global claim even if a worker panic unwinds past us —
+    /// a leaked claim would silently serialize every later batch.
+    struct Claim(usize);
+    impl Drop for Claim {
+        fn drop(&mut self) {
+            ACTIVE_WORKERS.fetch_sub(self.0, Ordering::Relaxed);
+        }
+    }
+
+    let host = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let want = if max_threads == 0 {
+        host.min(4)
+    } else {
+        max_threads
+    }
+    .min(payloads.len().max(1));
+    // Best-effort global claim (stale reads only make the bound softer).
+    let claimed = {
+        let cur = ACTIVE_WORKERS.load(Ordering::Relaxed);
+        let free = host.saturating_sub(cur);
+        want.min(free).max(1)
+    };
+    ACTIVE_WORKERS.fetch_add(claimed, Ordering::Relaxed);
+    let _claim = Claim(claimed);
+    let results = if claimed <= 1 {
+        // No free slot (or a serial request): compress inline, no spawn.
+        payloads
+            .iter()
+            .map(|p| {
+                let sw = crate::metrics::CpuStopwatch::start();
+                (compress(p, cfg), sw.secs())
+            })
+            .collect()
+    } else {
+        crate::util::pool::scoped_map_bounded(payloads.len(), claimed, |i| {
+            let sw = crate::metrics::CpuStopwatch::start();
+            let frame = compress(payloads[i], cfg);
+            (frame, sw.secs())
+        })
+    };
+    let mut frames = Vec::with_capacity(payloads.len());
+    let mut cpu_secs = 0.0;
+    for (frame, secs) in results {
+        frames.push(frame?);
+        cpu_secs += secs;
+    }
+    Ok((frames, cpu_secs))
+}
+
 /// Measured codec throughputs (bytes/s, single thread) used to charge
 /// compression phases in the virtual-time model with *real* numbers.
 #[derive(Debug, Clone, Copy, Default)]
@@ -338,6 +410,26 @@ mod tests {
             let frame = compress(&data, OperatorConfig::blosc(codec)).unwrap();
             assert_eq!(decompress(&frame).unwrap(), data);
         }
+    }
+
+    #[test]
+    fn compress_batch_matches_serial_in_order() {
+        let blocks: Vec<Vec<u8>> = (0..9)
+            .map(|i| field_bytes(10_000 + i * 1_000))
+            .collect();
+        let payloads: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
+        for cfg in [OperatorConfig::blosc(Codec::Lz4), OperatorConfig::none()] {
+            let (frames, cpu) = compress_batch(&payloads, cfg, 3).unwrap();
+            assert_eq!(frames.len(), blocks.len());
+            assert!(cpu >= 0.0);
+            for (i, (frame, raw)) in frames.iter().zip(&blocks).enumerate() {
+                assert_eq!(frame, &compress(raw, cfg).unwrap(), "block {i} order/content");
+                assert_eq!(&decompress(frame).unwrap(), raw, "block {i} roundtrip");
+            }
+        }
+        // Empty batch and auto thread count.
+        let (frames, _) = compress_batch(&[], OperatorConfig::none(), 0).unwrap();
+        assert!(frames.is_empty());
     }
 
     #[test]

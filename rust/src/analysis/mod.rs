@@ -205,10 +205,16 @@ mod tests {
     fn native_matches_aot_analysis_if_built() {
         let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !art.join("manifest.txt").exists() {
-            eprintln!("skipping: artifacts not built");
+            eprintln!("SKIP analysis test: AOT artifacts not built");
             return;
         }
-        let rt = crate::runtime::XlaRuntime::new().unwrap();
+        let rt = match crate::runtime::XlaRuntime::new() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("SKIP analysis test: XLA runtime unavailable: {e}");
+                return;
+            }
+        };
         let man = crate::runtime::Manifest::load(&art).unwrap();
         let aot = AnalysisStep::load(&rt, &man, 192, 192).unwrap();
         let t = theta(aot.nz, 192, 192);

@@ -72,6 +72,18 @@ impl Comm {
             .map_err(|_| Error::cluster(format!("rank {dst} hung up")))
     }
 
+    /// Explicitly non-blocking buffered send (the `MPI_Isend` analog whose
+    /// buffer is owned by the transport).  On this substrate *every* send
+    /// is buffered and completes immediately; this alias marks call sites
+    /// whose correctness depends on that.  In the BP4 engine, rank 0 (an
+    /// aggregator) sends its own index fragment to itself before posting
+    /// the matching receive, and members send blocks before their
+    /// aggregator gets around to that member's receive — both would
+    /// deadlock over a rendezvous (synchronous-send) transport.
+    pub fn isend(&self, dst: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        self.send(dst, tag, data)
+    }
+
     /// Blocking tagged receive from a specific source.
     pub fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
         // Check the stash first.
@@ -296,6 +308,28 @@ mod tests {
                 assert_eq!(b, &[(s * 10 + r) as u8]);
             }
         }
+    }
+
+    #[test]
+    fn isend_is_buffered_never_rendezvous() {
+        // A rank may run arbitrarily far ahead on isend before any
+        // matching recv is posted (the drain pipeline relies on this).
+        let out = run_world(2, 2, |mut c| {
+            if c.rank() == 0 {
+                for step in 0..64u64 {
+                    c.isend(1, 100 + step, vec![step as u8]).unwrap();
+                }
+                0u64
+            } else {
+                // Receive in reverse order: everything must be stashed.
+                let mut sum = 0u64;
+                for step in (0..64u64).rev() {
+                    sum += c.recv(0, 100 + step).unwrap()[0] as u64;
+                }
+                sum
+            }
+        });
+        assert_eq!(out[1], (0..64).sum::<u64>());
     }
 
     #[test]

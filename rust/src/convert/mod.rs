@@ -180,6 +180,9 @@ mod tests {
                 operator: OperatorConfig::blosc(Codec::Zstd),
                 aggs_per_node: 1,
                 cost: CostModel::new(HardwareSpec::paper_testbed(2)),
+                pack_threads: 0,
+                async_io: true,
+                drain_throttle: None,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;

@@ -42,6 +42,7 @@ pub enum Error {
     Model(String),
 }
 
+#[cfg(feature = "xla-runtime")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

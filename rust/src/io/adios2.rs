@@ -68,6 +68,7 @@ impl Adios2Backend {
                 bytes_raw: s.bytes_raw,
                 bytes_stored: s.bytes_stored,
                 files_created: rep.files_created,
+                drain: rep.drain,
             });
         }
     }

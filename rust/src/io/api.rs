@@ -10,6 +10,7 @@
 //! | 22      | **ADIOS2 (this paper)**      | [`crate::adios`] BP4/SST   |
 //! | 9xx     | quilt servers                | [`crate::io::quilt`]       |
 
+use crate::adios::engine::DrainStats;
 use crate::adios::Variable;
 use crate::cluster::Comm;
 use crate::sim::WriteCost;
@@ -31,6 +32,9 @@ pub struct FrameReport {
     pub bytes_raw: u64,
     pub bytes_stored: u64,
     pub files_created: usize,
+    /// Measured background-drain pipeline statistics (engines with async
+    /// data movement; zero for synchronous backends).
+    pub drain: DrainStats,
 }
 
 impl FrameReport {

@@ -261,6 +261,7 @@ impl HistoryBackend for PnetCdfBackend {
                 bytes_raw: traw,
                 bytes_stored: layout.total_len,
                 files_created: 1,
+                ..Default::default()
             });
         }
         comm.barrier();

@@ -132,6 +132,7 @@ impl HistoryBackend for QuiltBackend {
                 bytes_raw: traw,
                 bytes_stored: tstored,
                 files_created: self.nio,
+                ..Default::default()
             });
         }
         Ok(())

@@ -216,6 +216,7 @@ impl HistoryBackend for SerialNcBackend {
                 bytes_raw: traw,
                 bytes_stored: stored,
                 files_created: 1,
+                ..Default::default()
             });
         }
         let _ = raw;

@@ -130,6 +130,7 @@ impl HistoryBackend for SplitNcBackend {
                 bytes_raw: traw,
                 bytes_stored: tstored,
                 files_created: n,
+                ..Default::default()
             });
         }
         comm.barrier();

@@ -55,6 +55,28 @@ impl CpuStopwatch {
     }
 }
 
+/// Lock-free busy-seconds accumulator shared across threads.
+///
+/// The BP4 drain pipeline's background threads record how long they spend
+/// physically moving bytes; the engine folds this into
+/// [`crate::adios::engine::DrainStats`] at close to *measure* the overlap
+/// the virtual cost model claims.
+#[derive(Debug, Default)]
+pub struct BusyMeter(std::sync::atomic::AtomicU64);
+
+impl BusyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add_secs(&self, s: f64) {
+        let nanos = (s.max(0.0) * 1e9) as u64;
+        self.0.fetch_add(nanos, std::sync::atomic::Ordering::Relaxed);
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.load(std::sync::atomic::Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
 /// Accumulates named timing buckets (compute / io / init …).
 #[derive(Debug, Default, Clone)]
 pub struct TimingLedger {
@@ -211,6 +233,21 @@ mod tests {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn busy_meter_accumulates_across_threads() {
+        let m = std::sync::Arc::new(BusyMeter::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || m.add_secs(0.25))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((m.secs() - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! PJRT-backed runtime (compiled only with the `xla-runtime` feature).
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.  HLO **text** is the interchange format —
+//! see `python/compile/aot.py` for why serialized protos are rejected.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::manifest::Manifest;
+use super::AnalysisOutput;
+use crate::{Error, Result};
+
+/// Shared PJRT CPU client (one per process).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    pub fn new() -> Result<XlaRuntime> {
+        Ok(XlaRuntime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Xla(format!("cannot parse HLO text {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable {
+            exe: Mutex::new(exe),
+            name: path.display().to_string(),
+        })
+    }
+}
+
+/// A compiled computation.  Executions are serialized behind a mutex: the
+/// container is single-core and the PJRT CPU client is not documented
+/// thread-safe for concurrent executions of one loaded executable.
+pub struct Executable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    name: String,
+}
+
+// Safety: `PjRtLoadedExecutable` is `!Send`/`!Sync` only because the `xla`
+// crate wraps its client handle in an `Rc` and raw pointers.  Every access
+// to the inner value (execute + drop) is serialized behind the `Mutex`
+// above, so the non-atomic refcount is never touched concurrently, and the
+// underlying XLA C++ objects are safe to use and destroy from any thread.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lock_exe(&self) -> std::sync::MutexGuard<'_, xla::PjRtLoadedExecutable> {
+        self.exe.lock().expect("executable mutex poisoned")
+    }
+
+    /// Execute with f32 inputs; returns the elements of the result tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let n: usize = dims.iter().product();
+                if n != data.len() {
+                    return Err(Error::Xla(format!(
+                        "input has {} elems but shape {:?}",
+                        data.len(),
+                        dims
+                    )));
+                }
+                let bytes = crate::util::f32_slice_as_bytes(data);
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    dims,
+                    bytes,
+                )?)
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.lock_exe();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        drop(exe);
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+/// Convenience: the per-rank model step function.
+pub struct ModelStep {
+    exe: Executable,
+    pub nf: usize,
+    pub nz: usize,
+    pub nyp: usize,
+    pub nxp: usize,
+    pub halo: usize,
+}
+
+impl ModelStep {
+    /// Load the model artifact matching a patch shape.
+    pub fn load(rt: &XlaRuntime, man: &Manifest, nyp: usize, nxp: usize) -> Result<ModelStep> {
+        let art = man.model_for_patch(nyp, nxp)?;
+        let exe = rt.load_hlo(&man.hlo_path(&art.file))?;
+        Ok(ModelStep {
+            exe,
+            nf: man.nf,
+            nz: art.nz,
+            nyp,
+            nxp,
+            halo: man.halo,
+        })
+    }
+
+    /// Padded input length (elements).
+    pub fn padded_len(&self) -> usize {
+        self.nf * self.nz * (self.nyp + 2 * self.halo) * (self.nxp + 2 * self.halo)
+    }
+
+    /// Interior output length (elements).
+    pub fn interior_len(&self) -> usize {
+        self.nf * self.nz * self.nyp * self.nxp
+    }
+
+    /// Advance one step: padded state in, interior state out.
+    pub fn step(&self, padded: &[f32]) -> Result<Vec<f32>> {
+        let dims = [
+            self.nf,
+            self.nz,
+            self.nyp + 2 * self.halo,
+            self.nxp + 2 * self.halo,
+        ];
+        let mut out = self.exe.run_f32(&[(padded, &dims)])?;
+        if out.len() != 1 {
+            return Err(Error::Xla(format!(
+                "model step returned {}-tuple, expected 1",
+                out.len()
+            )));
+        }
+        let interior = out.pop().unwrap();
+        if interior.len() != self.interior_len() {
+            return Err(Error::Xla(format!(
+                "model step output {} elems, expected {}",
+                interior.len(),
+                self.interior_len()
+            )));
+        }
+        Ok(interior)
+    }
+}
+
+/// The in-situ analysis computation (consumer side of SST).
+pub struct AnalysisStep {
+    exe: Executable,
+    pub nz: usize,
+    pub ny: usize,
+    pub nx: usize,
+}
+
+impl AnalysisStep {
+    pub fn load(rt: &XlaRuntime, man: &Manifest, ny: usize, nx: usize) -> Result<AnalysisStep> {
+        let art = man.analysis_for(ny, nx).ok_or_else(|| {
+            Error::config(format!("no compiled analysis artifact for {ny}x{nx}"))
+        })?;
+        let exe = rt.load_hlo(&man.hlo_path(&art.file))?;
+        Ok(AnalysisStep {
+            exe,
+            nz: art.nz,
+            ny,
+            nx,
+        })
+    }
+
+    pub fn run(&self, theta: &[f32]) -> Result<AnalysisOutput> {
+        let dims = [self.nz, self.ny, self.nx];
+        let n: usize = dims.iter().product();
+        if theta.len() != n {
+            return Err(Error::Xla(format!(
+                "analysis input {} elems, expected {n}",
+                theta.len()
+            )));
+        }
+        let lit_in = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &dims,
+            crate::util::f32_slice_as_bytes(theta),
+        )?;
+        let exe = self.exe.lock_exe();
+        let result = exe.execute::<xla::Literal>(&[lit_in])?[0][0].to_literal_sync()?;
+        drop(exe);
+        let parts = result.to_tuple()?;
+        if parts.len() != 5 {
+            return Err(Error::Xla(format!(
+                "analysis returned {}-tuple, expected 5",
+                parts.len()
+            )));
+        }
+        let mut it = parts.into_iter();
+        let slice_ds = it.next().unwrap().to_vec::<f32>()?;
+        let level_mean = it.next().unwrap().to_vec::<f32>()?;
+        let level_min = it.next().unwrap().to_vec::<f32>()?;
+        let level_max = it.next().unwrap().to_vec::<f32>()?;
+        let hist = it.next().unwrap().to_vec::<i32>()?;
+        Ok(AnalysisOutput {
+            slice_ds,
+            level_mean,
+            level_min,
+            level_max,
+            hist,
+        })
+    }
+}

@@ -1,0 +1,104 @@
+//! Stub runtime (default build, no `xla-runtime` feature).
+//!
+//! The offline image has no `xla` crate / xla_extension, so the PJRT path
+//! is feature-gated and this stub keeps the rest of the crate — the
+//! ADIOS2-workalike, the baseline backends, the launcher plumbing and
+//! every bench — compiling and testable.  The API mirrors
+//! [`super::pjrt`] exactly; every constructor returns a descriptive
+//! [`Error::Xla`], so artifact-gated tests and tools skip gracefully.
+
+use std::path::Path;
+
+use super::manifest::Manifest;
+use super::AnalysisOutput;
+use crate::{Error, Result};
+
+fn unavailable() -> Error {
+    Error::Xla(
+        "stormio was built without the `xla-runtime` feature; the PJRT model \
+         runtime needs the `xla` crate, which is not in the offline vendor \
+         set (see DESIGN.md §8)"
+            .to_string(),
+    )
+}
+
+/// Stub of the shared PJRT CPU client; `new` always errors.
+pub struct XlaRuntime {
+    _priv: (),
+}
+
+impl XlaRuntime {
+    pub fn new() -> Result<XlaRuntime> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without xla-runtime)".to_string()
+    }
+
+    pub fn load_hlo(&self, _path: &Path) -> Result<Executable> {
+        Err(unavailable())
+    }
+}
+
+/// Stub compiled computation (never instantiated).
+pub struct Executable {
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of the per-rank model step function (same public surface as the
+/// PJRT-backed one; `load` always errors so instances never exist).
+pub struct ModelStep {
+    pub nf: usize,
+    pub nz: usize,
+    pub nyp: usize,
+    pub nxp: usize,
+    pub halo: usize,
+}
+
+impl ModelStep {
+    pub fn load(_rt: &XlaRuntime, _man: &Manifest, _nyp: usize, _nxp: usize) -> Result<ModelStep> {
+        Err(unavailable())
+    }
+
+    /// Padded input length (elements).
+    pub fn padded_len(&self) -> usize {
+        self.nf * self.nz * (self.nyp + 2 * self.halo) * (self.nxp + 2 * self.halo)
+    }
+
+    /// Interior output length (elements).
+    pub fn interior_len(&self) -> usize {
+        self.nf * self.nz * self.nyp * self.nxp
+    }
+
+    pub fn step(&self, _padded: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of the in-situ analysis computation.
+pub struct AnalysisStep {
+    pub nz: usize,
+    pub ny: usize,
+    pub nx: usize,
+}
+
+impl AnalysisStep {
+    pub fn load(_rt: &XlaRuntime, _man: &Manifest, _ny: usize, _nx: usize) -> Result<AnalysisStep> {
+        Err(unavailable())
+    }
+
+    pub fn run(&self, _theta: &[f32]) -> Result<AnalysisOutput> {
+        Err(unavailable())
+    }
+}

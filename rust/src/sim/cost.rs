@@ -59,6 +59,17 @@ impl WriteCost {
     pub fn durable(&self) -> f64 {
         self.phases.iter().map(|p| p.secs).sum()
     }
+    /// Background (non-blocking) virtual seconds — the drain/transfer work
+    /// the model claims overlaps the application.  Engines validate this
+    /// claim against the *measured* pipeline overlap
+    /// ([`crate::adios::engine::DrainStats`]).
+    pub fn background(&self) -> f64 {
+        self.phases.iter().filter(|p| !p.blocking).map(|p| p.secs).sum()
+    }
+    /// Virtual seconds hidden from the application (`durable − perceived`).
+    pub fn hidden(&self) -> f64 {
+        self.durable() - self.perceived()
+    }
 }
 
 /// Cost-model facade over a [`HardwareSpec`].
@@ -274,6 +285,8 @@ mod tests {
         c.push_background("drain", 3.0);
         assert_eq!(c.perceived(), 1.0);
         assert_eq!(c.durable(), 4.0);
+        assert_eq!(c.background(), 3.0);
+        assert_eq!(c.hidden(), 3.0);
     }
 
     #[test]

@@ -65,9 +65,32 @@ where
     out.into_iter().map(|o| o.expect("index not filled")).collect()
 }
 
+/// Spawn a named long-lived background thread (`std::thread::Builder`
+/// wrapper).  The BP4 write pipeline's writer/drainer threads go through
+/// here so thread naming is uniform in profilers and spawn failures
+/// surface with context instead of an opaque io error.
+pub fn spawn_named<T, F>(name: &str, f: F) -> std::thread::JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("cannot spawn thread `{name}`: {e}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn spawn_named_runs_and_names() {
+        let h = spawn_named("pool-test", || {
+            std::thread::current().name().map(|s| s.to_string())
+        });
+        assert_eq!(h.join().unwrap().as_deref(), Some("pool-test"));
+    }
 
     #[test]
     fn map_preserves_order() {

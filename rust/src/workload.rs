@@ -153,6 +153,15 @@ impl WriteBench {
     pub fn raw_bytes(&self) -> u64 {
         self.reports.first().map(|r| r.bytes_raw).unwrap_or(0)
     }
+    /// Folded measured drain-pipeline statistics across all frames
+    /// (see [`crate::adios::DrainStats::fold`] for the sum/max rules).
+    pub fn drain_totals(&self) -> crate::adios::DrainStats {
+        let mut d = crate::adios::DrainStats::default();
+        for r in &self.reports {
+            d.fold(&r.drain);
+        }
+        d
+    }
     /// Mean seconds of one named phase.
     pub fn mean_phase(&self, name: &str) -> f64 {
         if self.reports.is_empty() {

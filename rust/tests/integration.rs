@@ -219,7 +219,11 @@ fn failure_injection_on_read_paths() {
 fn launcher_runs_every_io_form() {
     let art = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !art.join("manifest.txt").exists() {
-        eprintln!("skipping: artifacts not built");
+        eprintln!("SKIP launcher test: AOT artifacts not built");
+        return;
+    }
+    if let Err(e) = stormio::runtime::XlaRuntime::new() {
+        eprintln!("SKIP launcher test: XLA runtime unavailable: {e}");
         return;
     }
     for io_form in [2i64, 11, 102, 22, 901] {

@@ -120,6 +120,9 @@ fn prop_bp_roundtrip_random_worlds() {
                 operator: OperatorConfig::blosc(codec),
                 aggs_per_node: aggs,
                 cost: CostModel::new(HardwareSpec::paper_testbed(nodes)),
+                pack_threads: 0,
+                async_io: true,
+                drain_throttle: None,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;
