@@ -112,6 +112,7 @@ fn main() {
                     pack_threads: if pipelined { 0 } else { 1 },
                     async_io: pipelined,
                     drain_throttle: None,
+                    live_publish: false,
                 };
                 let wlc = wl.clone();
                 let t0 = Instant::now();
@@ -168,6 +169,7 @@ fn main() {
             pack_threads: 0,
             async_io: true,
             drain_throttle: None,
+            live_publish: false,
         };
         let wlc = wl.clone();
         let t0 = Instant::now();
@@ -228,6 +230,8 @@ fn main() {
                 CostModel::new(wl.hardware(1)),
                 &comm,
                 std::time::Duration::from_secs(5),
+                stormio::adios::engine::sst::DataPlane::Lanes,
+                1,
             )
             .unwrap();
             let data: Vec<f32> = (0..n).map(|i| i as f32).collect();

@@ -13,8 +13,9 @@
 //! `cargo run --release --example forecast_insitu`
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use stormio::adios::engine::sst::SstConsumer;
+use stormio::adios::engine::sst::{SstConsumer, SstSource};
 use stormio::adios::{Adios, EngineKind};
 use stormio::analysis::InsituAnalyzer;
 use stormio::io::adios2::Adios2Backend;
@@ -63,8 +64,10 @@ fn main() -> stormio::Result<()> {
     let img_dir = out_dir.clone();
     let consumer = std::thread::spawn(move || {
         let analyzer = InsituAnalyzer::new(analysis, Some(img_dir));
-        let mut c = listener.accept().unwrap();
-        analyzer.run(&mut c).unwrap()
+        // The analyzer only sees the StepSource trait: swap in a lane-SST
+        // consumer or a BP4 file-follower without touching the analysis.
+        let mut src = SstSource::new(listener.accept().unwrap());
+        analyzer.run(&mut src, Duration::from_secs(120)).unwrap()
     });
 
     // The producer: WRF-analog forecast streaming history over SST.

@@ -73,6 +73,25 @@ impl AggregationPlan {
         })
     }
 
+    /// Degenerate plan: rank 0 aggregates every rank.  This is the
+    /// serial SST funnel kept as the measured baseline — no divisibility
+    /// requirement, one lane, all collection traffic converging on the
+    /// root's NIC.
+    pub fn funnel(nranks: usize, ranks_per_node: usize) -> Result<Self> {
+        if nranks == 0 {
+            return Err(Error::config("empty world in aggregation plan"));
+        }
+        let mut subfile_by_rank = vec![None; nranks];
+        subfile_by_rank[0] = Some(0);
+        Ok(AggregationPlan {
+            nranks,
+            ranks_per_node: ranks_per_node.max(1),
+            agg_of_rank: vec![0; nranks],
+            subfile_of_agg: vec![(0, 0)],
+            subfile_by_rank,
+        })
+    }
+
     /// Number of aggregators (sub-files).
     pub fn num_aggregators(&self) -> usize {
         self.subfile_of_agg.len()
@@ -172,6 +191,21 @@ mod tests {
     #[test]
     fn indivisible_world_rejected() {
         assert!(AggregationPlan::per_node(10, 4, 1).is_err());
+    }
+
+    #[test]
+    fn funnel_has_single_root_lane() {
+        let p = AggregationPlan::funnel(7, 2).unwrap();
+        assert_eq!(p.num_aggregators(), 1);
+        assert!(p.is_aggregator(0));
+        assert_eq!(p.subfile(0), Some(0));
+        for r in 1..7 {
+            assert!(!p.is_aggregator(r));
+            assert_eq!(p.agg_of_rank[r], 0);
+            assert_eq!(p.subfile(r), None);
+        }
+        assert_eq!(p.members(0), (0..7).collect::<Vec<usize>>());
+        assert!(AggregationPlan::funnel(0, 1).is_err());
     }
 
     #[test]

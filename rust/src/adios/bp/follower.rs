@@ -1,0 +1,227 @@
+//! BP4 file-follower: a [`StepSource`] that tails a live BP directory.
+//!
+//! A BP4 producer running with `LivePublish` republishes `md.idx`
+//! atomically (write-to-temp + rename) after every durable step, and
+//! stamps [`super::COMPLETE_ATTR`] into the final index at `close`.  The
+//! follower polls the index for growth with a deadline and reads only the
+//! newly published step's byte ranges through the reader's cached
+//! sub-file handles — so concurrent file-based pipelines (in-situ
+//! analysis *and* live NetCDF conversion off the same run) need zero
+//! producer changes beyond the publish flag.
+//!
+//! The polling protocol (DESIGN.md §9):
+//!
+//! 1. until `md.idx` exists, the directory is treated as "not started";
+//! 2. each poll re-reads the index; steps beyond the consumed count are
+//!    delivered in order;
+//! 3. an index carrying the completion attribute and no unconsumed steps
+//!    means [`StepStatus::EndOfStream`];
+//! 4. a deadline with no growth means [`StepStatus::Timeout`] — the
+//!    follower stays usable, so callers choose between retrying and
+//!    giving up on a stalled producer.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use super::reader::BpReader;
+use crate::adios::source::{StepSource, StepStatus};
+use crate::{Error, Result};
+
+/// Default sleep between index polls.
+pub const DEFAULT_POLL: Duration = Duration::from_millis(20);
+
+/// Tail a live (or completed) BP directory as a step stream.
+pub struct BpFollower {
+    dir: PathBuf,
+    reader: Option<BpReader>,
+    /// Steps fully delivered (`end_step`ped).
+    consumed: usize,
+    /// Currently open step, if any.
+    current: Option<usize>,
+    poll: Duration,
+    /// Byte length of the `md.idx` last parsed — every republish grows
+    /// (or otherwise changes) the index, so an unchanged length means the
+    /// poll tick can skip the re-read/re-parse entirely.
+    last_index_len: Option<u64>,
+}
+
+impl BpFollower {
+    /// Open a follower on `dir`.  The directory (and its `md.idx`) need
+    /// not exist yet — a producer that has not started is the same as a
+    /// producer that has not published its first step.
+    pub fn open(dir: impl AsRef<Path>, poll: Duration) -> Result<BpFollower> {
+        Ok(BpFollower {
+            dir: dir.as_ref().to_path_buf(),
+            reader: None,
+            consumed: 0,
+            current: None,
+            poll: poll.max(Duration::from_millis(1)),
+            last_index_len: None,
+        })
+    }
+
+    /// Refresh the index view; `Ok(true)` if an index is loaded.  The
+    /// re-read/re-parse is skipped while the index file's length is
+    /// unchanged, so idle poll ticks cost one `stat`, not a full parse.
+    fn load_index(&mut self) -> Result<bool> {
+        // Distinguish "not published yet" from a broken index: only
+        // parse once the (atomically renamed) file exists.
+        let Ok(meta) = std::fs::metadata(self.dir.join("md.idx")) else {
+            if self.reader.is_some() {
+                // Publishes are atomic renames, so the index never simply
+                // disappears mid-run: a producer restarted into this
+                // directory, and the stream we were following is gone.
+                return Err(Error::bp(format!(
+                    "{}: md.idx vanished — producer restarted into this \
+                     directory; re-open the follower",
+                    self.dir.display()
+                )));
+            }
+            return Ok(false);
+        };
+        let len = meta.len();
+        if self.reader.is_some() && self.last_index_len == Some(len) {
+            return Ok(true);
+        }
+        if let Some(rd) = self.reader.as_mut() {
+            rd.refresh()?;
+            self.last_index_len = Some(len);
+            return Ok(true);
+        }
+        self.reader = Some(BpReader::open(&self.dir)?);
+        self.last_index_len = Some(len);
+        Ok(true)
+    }
+
+    fn open_step(&self) -> Result<usize> {
+        self.current
+            .ok_or_else(|| Error::bp("no step open (call begin_step first)"))
+    }
+
+    fn reader(&self) -> Result<&BpReader> {
+        self.reader
+            .as_ref()
+            .ok_or_else(|| Error::bp("follower has no index loaded"))
+    }
+}
+
+impl StepSource for BpFollower {
+    fn source_name(&self) -> &'static str {
+        "bp-follower"
+    }
+
+    fn begin_step(&mut self, timeout: Duration) -> Result<StepStatus> {
+        if self.current.is_some() {
+            return Err(Error::bp("begin_step while a step is open"));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.load_index()? {
+                let rd = self.reader.as_ref().expect("index just loaded");
+                if self.consumed < rd.num_steps() {
+                    self.current = Some(self.consumed);
+                    return Ok(StepStatus::Ready);
+                }
+                if rd.attr(super::COMPLETE_ATTR).is_some() {
+                    return Ok(StepStatus::EndOfStream);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(StepStatus::Timeout);
+            }
+            std::thread::sleep(self.poll.min(deadline - now));
+        }
+    }
+
+    fn step_index(&self) -> usize {
+        self.current.unwrap_or(self.consumed)
+    }
+
+    fn var_names(&self) -> Vec<String> {
+        match (self.current, &self.reader) {
+            (Some(s), Some(rd)) => rd
+                .var_names(s)
+                .map(|ns| ns.into_iter().map(|n| n.to_string()).collect())
+                .unwrap_or_default(),
+            _ => Vec::new(),
+        }
+    }
+
+    fn var_shape(&self, name: &str) -> Result<Vec<u64>> {
+        let s = self.open_step()?;
+        self.reader()?.var_shape(s, name)
+    }
+
+    fn read_var_global(&mut self, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
+        let s = self.open_step()?;
+        self.reader()?.read_var_global(s, name)
+    }
+
+    fn read_var_selection(
+        &mut self,
+        name: &str,
+        start: &[u64],
+        count: &[u64],
+    ) -> Result<Vec<f32>> {
+        // Native box selection: only intersecting blocks are fetched.
+        let s = self.open_step()?;
+        self.reader()?.read_var_selection(s, name, start, count)
+    }
+
+    fn step_stored_bytes(&self) -> u64 {
+        match (self.current, &self.reader) {
+            (Some(s), Some(rd)) => rd.stored_bytes(s).unwrap_or(0),
+            _ => 0,
+        }
+    }
+
+    fn attrs(&self) -> Vec<(String, String)> {
+        self.reader
+            .as_ref()
+            .map(|rd| {
+                rd.attrs
+                    .iter()
+                    .filter(|(k, _)| !k.starts_with("__"))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        match self.current.take() {
+            Some(_) => {
+                self.consumed += 1;
+                Ok(())
+            }
+            None => Err(Error::bp("end_step without begin_step")),
+        }
+    }
+}
+
+// Liveness tests (publish/poll/complete protocol) live in
+// `rust/tests/streaming.rs`, which drives a real BP4 producer; here we
+// only cover the empty-directory edge.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn follower_on_absent_dir_times_out_cleanly() {
+        let dir = std::env::temp_dir().join(format!("stormio_follow_none_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut f = BpFollower::open(&dir, Duration::from_millis(2)).unwrap();
+        let t0 = Instant::now();
+        let st = f.begin_step(Duration::from_millis(40)).unwrap();
+        assert_eq!(st, StepStatus::Timeout);
+        assert!(t0.elapsed() >= Duration::from_millis(35));
+        // Still usable: a second poll also times out rather than erroring.
+        assert_eq!(
+            f.begin_step(Duration::from_millis(5)).unwrap(),
+            StepStatus::Timeout
+        );
+        assert!(f.read_var_global("T").is_err());
+        assert!(f.end_step().is_err());
+    }
+}

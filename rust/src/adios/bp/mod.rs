@@ -15,6 +15,7 @@
 //! [`StepIndex`]) and its serialization; the write path lives in
 //! `adios::engine::bp4`, the read path in [`reader`].
 
+pub mod follower;
 pub mod reader;
 
 use crate::util::byteio::{Reader, Writer};
@@ -22,6 +23,13 @@ use crate::{Error, Result};
 
 pub const MD_MAGIC: u32 = 0x42504C54; // "BPLT"
 pub const MD_VERSION: u32 = 1;
+
+/// Internal attribute rank 0 stamps into the final `md.idx` at `close`.
+/// Its presence tells a live [`follower::BpFollower`] that the producer
+/// finished and no further steps will be published.  Attributes with the
+/// `__` prefix are implementation details and are excluded from
+/// conversions/reports.
+pub const COMPLETE_ATTR: &str = "__stormio_complete";
 
 /// One written block of one variable at one step.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,7 +98,8 @@ impl VarIndex {
         let name = r.str()?;
         let shape = r.dims()?;
         let n = r.u32()? as usize;
-        let mut blocks = Vec::with_capacity(n);
+        // Capacity hint capped: a corrupt count must not pre-allocate.
+        let mut blocks = Vec::with_capacity(n.min(256));
         for _ in 0..n {
             blocks.push(BlockRecord::read(r)?);
         }
@@ -122,7 +131,7 @@ impl StepIndex {
 
     pub fn read(r: &mut Reader) -> Result<Self> {
         let n = r.u32()? as usize;
-        let mut vars = Vec::with_capacity(n);
+        let mut vars = Vec::with_capacity(n.min(256));
         for _ in 0..n {
             vars.push(VarIndex::read(r)?);
         }
@@ -165,16 +174,70 @@ pub fn read_metadata(bytes: &[u8]) -> Result<(Vec<StepIndex>, u32, Vec<(String, 
     }
     let subfiles = r.u32()?;
     let nattrs = r.u32()? as usize;
-    let mut attrs = Vec::with_capacity(nattrs);
+    let mut attrs = Vec::with_capacity(nattrs.min(256));
     for _ in 0..nattrs {
         attrs.push((r.str()?, r.str()?));
     }
     let nsteps = r.u32()? as usize;
-    let mut steps = Vec::with_capacity(nsteps);
+    let mut steps = Vec::with_capacity(nsteps.min(256));
     for _ in 0..nsteps {
         steps.push(StepIndex::read(&mut r)?);
     }
     Ok((steps, subfiles, attrs))
+}
+
+/// Number of elements of a shape, rejecting overflow and absurd sizes
+/// (an index or wire frame is untrusted input: a crafted shape must not
+/// drive a huge allocation).  The cap is in *elements*; at f32 width it
+/// matches the 1 GiB wire-frame cap of the SST transport.
+pub const MAX_GLOBAL_ELEMS: u64 = 1 << 28;
+
+pub fn checked_elems(shape: &[u64]) -> Result<u64> {
+    let total = shape
+        .iter()
+        .try_fold(1u64, |a, d| a.checked_mul(*d))
+        .ok_or_else(|| Error::bp(format!("shape {shape:?} element count overflows")))?;
+    if total > MAX_GLOBAL_ELEMS {
+        return Err(Error::bp(format!(
+            "shape {shape:?} declares {total} elements (cap {MAX_GLOBAL_ELEMS})"
+        )));
+    }
+    Ok(total)
+}
+
+/// Validate an untrusted box (a block's placement, or a read selection)
+/// against a global shape: non-zero rank, matching rank, non-empty
+/// per-dimension extents, and `start + count <= shape` per dimension
+/// (overflow-checked) — so a corrupt index or wire frame can never drive
+/// an out-of-bounds or degenerate scatter.  The single bounds-check used
+/// by the SST consumer, the BP reader, and `source::extract_box`.
+pub fn validate_block_geometry(shape: &[u64], start: &[u64], count: &[u64]) -> Result<()> {
+    let nd = shape.len();
+    if nd == 0 {
+        return Err(Error::bp("zero-rank variable shape"));
+    }
+    if start.len() != nd || count.len() != nd {
+        return Err(Error::bp(format!(
+            "block rank {}/{} vs variable rank {nd}",
+            start.len(),
+            count.len()
+        )));
+    }
+    for d in 0..nd {
+        if count[d] == 0 {
+            return Err(Error::bp(format!("block has zero extent in dim {d}")));
+        }
+        let end = start[d]
+            .checked_add(count[d])
+            .ok_or_else(|| Error::bp(format!("block extent overflows in dim {d}")))?;
+        if end > shape[d] {
+            return Err(Error::bp(format!(
+                "block [{}, {end}) exceeds dim {d} extent {}",
+                start[d], shape[d]
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Does block `[start, start+count)` intersect selection `[s0, s0+c0)`?
@@ -313,14 +376,30 @@ mod tests {
     }
 
     #[test]
+    fn geometry_validation_rejects_bombs() {
+        assert_eq!(checked_elems(&[4, 8]).unwrap(), 32);
+        // Element-count cap and multiplication overflow.
+        assert!(checked_elems(&[1 << 31, 1 << 31]).is_err());
+        assert!(checked_elems(&[u64::MAX, u64::MAX]).is_err());
+        // Placement checks: rank mismatch, overflow, out of extent,
+        // degenerate rank/extent.
+        assert!(validate_block_geometry(&[4, 8], &[0, 0], &[4, 8]).is_ok());
+        assert!(validate_block_geometry(&[4, 8], &[0], &[4]).is_err());
+        assert!(validate_block_geometry(&[4, 8], &[u64::MAX, 0], &[4, 8]).is_err());
+        assert!(validate_block_geometry(&[4, 8], &[2, 0], &[3, 8]).is_err());
+        assert!(validate_block_geometry(&[], &[], &[]).is_err());
+        assert!(validate_block_geometry(&[4, 8], &[0, 0], &[0, 8]).is_err());
+    }
+
+    #[test]
     fn scatter_2d() {
         let shape = [4u64, 6];
         let mut g = vec![0.0f32; 24];
         // block covering rows 1..3, cols 2..5
         let block: Vec<f32> = (0..6).map(|i| (i + 1) as f32).collect();
         scatter_block(&mut g, &shape, &[1, 2], &[2, 3], &block).unwrap();
-        assert_eq!(g[1 * 6 + 2], 1.0);
-        assert_eq!(g[1 * 6 + 4], 3.0);
+        assert_eq!(g[6 + 2], 1.0);
+        assert_eq!(g[6 + 4], 3.0);
         assert_eq!(g[2 * 6 + 2], 4.0);
         assert_eq!(g[2 * 6 + 4], 6.0);
         assert_eq!(g.iter().filter(|&&v| v != 0.0).count(), 6);

@@ -49,6 +49,19 @@ impl BpReader {
         })
     }
 
+    /// Re-read `md.idx`, picking up steps a live producer has published
+    /// since `open` (the file-follower path).  The sub-file handle cache
+    /// survives: only newly indexed byte ranges are ever read.
+    pub fn refresh(&mut self) -> Result<()> {
+        let md = fs::read(self.dir.join("md.idx"))
+            .map_err(|e| Error::bp(format!("cannot read {}/md.idx: {e}", self.dir.display())))?;
+        let (steps, subfiles, attrs) = read_metadata(&md)?;
+        self.steps = steps;
+        self.subfiles = subfiles;
+        self.attrs = attrs;
+        Ok(())
+    }
+
     /// Physical sub-file `open()` calls performed so far (one per distinct
     /// sub-file touched, regardless of how many blocks were read).
     pub fn subfile_opens(&self) -> usize {
@@ -125,16 +138,19 @@ impl BpReader {
         Ok(buf)
     }
 
-    /// Reconstitute the full global array of `name` at `step`.
+    /// Reconstitute the full global array of `name` at `step`.  The
+    /// index is untrusted input: the shape and every block's placement
+    /// are validated before any allocation or scatter.
     pub fn read_var_global(&self, step: usize, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
         let v = self
             .step(step)?
             .var(name)
             .ok_or_else(|| Error::bp(format!("no variable `{name}` at step {step}")))?
             .clone();
-        let total: u64 = v.shape.iter().product();
+        let total = super::checked_elems(&v.shape)?;
         let mut global = vec![0.0f32; total as usize];
         for b in &v.blocks {
+            super::validate_block_geometry(&v.shape, &b.start, &b.count)?;
             let frame = self.read_frame(b.subfile, b.offset, b.stored)?;
             let raw = operator::decompress(&frame)?;
             if raw.len() as u64 != b.raw {
@@ -169,23 +185,12 @@ impl BpReader {
             .ok_or_else(|| Error::bp(format!("no variable `{name}` at step {step}")))?
             .clone();
         let nd = v.shape.len();
-        if start.len() != nd || count.len() != nd {
-            return Err(Error::bp(format!(
-                "selection rank {} vs variable rank {nd}",
-                start.len()
-            )));
-        }
-        for d in 0..nd {
-            if count[d] == 0 || start[d] + count[d] > v.shape[d] {
-                return Err(Error::bp(format!(
-                    "selection [{}, {}) exceeds dim {d} extent {}",
-                    start[d],
-                    start[d] + count[d],
-                    v.shape[d]
-                )));
-            }
-        }
-        let total: u64 = count.iter().product();
+        // Same shared bounds check the block scatter path uses (rank,
+        // non-empty extents, overflow-checked `start+count <= shape`).
+        super::validate_block_geometry(&v.shape, start, count)?;
+        // Element-count cap/overflow check on the selection itself (the
+        // shape is untrusted, so `count <= shape` alone bounds nothing).
+        let total = super::checked_elems(count)?;
         let mut out = vec![0.0f32; total as usize];
         // Row-major strides of the *selection* box.
         let mut sel_strides = vec![1u64; nd];
@@ -193,6 +198,7 @@ impl BpReader {
             sel_strides[d] = sel_strides[d + 1] * count[d + 1];
         }
         for b in &v.blocks {
+            super::validate_block_geometry(&v.shape, &b.start, &b.count)?;
             let Some(overlap) = super::block_intersection(&b.start, &b.count, start, count)
             else {
                 continue;
@@ -200,6 +206,13 @@ impl BpReader {
             let frame = self.read_frame(b.subfile, b.offset, b.stored)?;
             let raw = crate::adios::operator::decompress(&frame)?;
             let vals = crate::util::bytes_to_f32_vec(&raw)?;
+            let want: u64 = b.count.iter().product();
+            if vals.len() as u64 != want {
+                return Err(Error::bp(format!(
+                    "block of `{name}`: {} elems vs declared extent {want}",
+                    vals.len()
+                )));
+            }
             // Block-local strides.
             let mut bl_strides = vec![1u64; nd];
             for d in (0..nd.saturating_sub(1)).rev() {

@@ -86,6 +86,12 @@ pub struct Bp4Config {
     /// Test/bench hook: artificial latency injected per drained frame so
     /// overlap is observable deterministically regardless of disk speed.
     pub drain_throttle: Option<Duration>,
+    /// Republish `md.idx` atomically after every step (once the step is
+    /// durable on the final target), so a live
+    /// [`crate::adios::bp::follower::BpFollower`] can tail this run while
+    /// it is still being written.  `close` additionally stamps
+    /// [`crate::adios::bp::COMPLETE_ATTR`] so followers terminate.
+    pub live_publish: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -294,6 +300,33 @@ fn drain_loop(
     Ok(())
 }
 
+/// Append to `dst` whatever suffix of `src` it does not hold yet (the
+/// synchronous-mode drain).  Incremental and non-destructive: unlike a
+/// whole-file copy, already-drained bytes are never truncated/rewritten,
+/// so a live follower reading previously published steps from `dst` is
+/// never exposed to a short or zeroed file.
+fn append_missing_suffix(src: &std::path::Path, dst: &std::path::Path) -> Result<u64> {
+    fs::create_dir_all(dst.parent().expect("sub-file has a parent dir"))?;
+    let mut src_f = fs::File::open(src)?;
+    let mut dst_f = fs::OpenOptions::new().create(true).append(true).open(dst)?;
+    let done = dst_f.metadata()?.len();
+    let src_len = src_f.metadata()?.len();
+    if done > src_len {
+        // The engine truncates both copies at open, so during a run the
+        // target is always a prefix of the source; anything else is a
+        // stale leftover we must not silently extend.
+        return Err(Error::adios(format!(
+            "final sub-file {} holds {done} bytes but the source has only \
+             {src_len} — stale leftover from a previous run?",
+            dst.display()
+        )));
+    }
+    src_f.seek(SeekFrom::Start(done))?;
+    let copied = std::io::copy(&mut src_f, &mut dst_f)?;
+    dst_f.flush()?;
+    Ok(copied)
+}
+
 // ---------------------------------------------------------------------------
 // Engine
 // ---------------------------------------------------------------------------
@@ -353,10 +386,25 @@ impl Bp4Engine {
                     _ => None,
                 };
                 eng.pipeline = Some(IoPipeline::spawn(p, drain_dst, eng.cfg.drain_throttle));
+            } else if let Target::BurstBuffer { drain: true } = eng.cfg.target {
+                // Synchronous drain appends incrementally during the run
+                // (`append_missing_suffix`), so the final target must
+                // start empty too — a longer/stale leftover from a
+                // previous run would otherwise shadow this run's bytes.
+                let dst = eng.final_subfile_path();
+                if let Some(dir) = dst.parent() {
+                    fs::create_dir_all(dir)?;
+                }
+                fs::write(&dst, b"")?;
             }
         }
         if rank == 0 {
             fs::create_dir_all(eng.bp_dir_pfs())?;
+            // A previous run's index must not survive into this one: a
+            // live follower attached before our first publish would read
+            // stale offsets (or a stale completion marker) against the
+            // just-truncated sub-files.
+            let _ = fs::remove_file(eng.bp_dir_pfs().join("md.idx"));
         }
         Ok(eng)
     }
@@ -493,6 +541,26 @@ impl Bp4Engine {
             v.blocks.sort_by_key(|b| b.producer_rank);
         }
         Ok(step)
+    }
+
+    /// Rank 0: publish the current index.  The write is atomic
+    /// (temp file + rename) so a concurrent follower never parses a
+    /// half-written `md.idx`.
+    fn publish_metadata(&self, complete: bool) -> Result<()> {
+        let mut attrs = self.attrs.clone();
+        if complete {
+            attrs.push((crate::adios::bp::COMPLETE_ATTR.to_string(), "1".to_string()));
+        }
+        let md = crate::adios::bp::write_metadata(
+            &self.steps_index,
+            self.plan.num_aggregators() as u32,
+            &attrs,
+        );
+        let dir = self.bp_dir_pfs();
+        let tmp = dir.join("md.idx.tmp");
+        fs::write(&tmp, &md)?;
+        fs::rename(&tmp, dir.join("md.idx"))?;
+        Ok(())
     }
 
     /// Rank 0: compose the CONUS-scale virtual cost of this step.
@@ -676,6 +744,17 @@ impl Engine for Bp4Engine {
                 cost,
             });
         }
+        if self.cfg.live_publish {
+            // Live follower contract: the index may only name bytes that
+            // are already durable on the final target, so flush this
+            // rank's pipeline (or drain synchronously), synchronize, and
+            // only then let rank 0 republish.
+            self.wait_durable()?;
+            comm.barrier();
+            if self.rank == 0 {
+                self.publish_metadata(false)?;
+            }
+        }
         comm.barrier();
         if self.rank == 0 {
             if let Some(s) = self.report.steps.last_mut() {
@@ -698,13 +777,9 @@ impl Engine for Bp4Engine {
                 .map_err(|_| Error::adios("bp4 i/o pipeline died before flush ack"))?;
         } else if let Target::BurstBuffer { drain: true } = self.cfg.target {
             // Synchronous mode defers the drain to close; honor the
-            // durability contract here by copying now (close overwrites
-            // with the same bytes, so this is idempotent).
+            // durability contract here by draining the missing suffix now.
             if self.plan.is_aggregator(self.rank) {
-                let src = self.subfile_path();
-                let dst = self.final_subfile_path();
-                fs::create_dir_all(dst.parent().unwrap())?;
-                fs::copy(&src, &dst)?;
+                append_missing_suffix(&self.subfile_path(), &self.final_subfile_path())?;
             }
         }
         Ok(())
@@ -726,13 +801,10 @@ impl Engine for Bp4Engine {
             local = pipe.finish()?;
         } else if let Target::BurstBuffer { drain: true } = self.cfg.target {
             // Synchronous fallback (`async_io = false`): the pre-pipeline
-            // behavior — block here copying the whole sub-file to the PFS.
+            // behavior — block here draining the sub-file to the PFS.
             if self.plan.is_aggregator(self.rank) {
                 let sw = Stopwatch::start();
-                let src = self.subfile_path();
-                let dst = self.final_subfile_path();
-                fs::create_dir_all(dst.parent().unwrap())?;
-                fs::copy(&src, &dst)?;
+                append_missing_suffix(&self.subfile_path(), &self.final_subfile_path())?;
                 local.frames_enqueued = self.step;
                 local.close_join_secs = sw.secs();
                 local.drain_busy_secs = local.close_join_secs;
@@ -778,12 +850,7 @@ impl Engine for Bp4Engine {
                     overlapped_secs: r.f64()?,
                 });
             }
-            let md = crate::adios::bp::write_metadata(
-                &self.steps_index,
-                self.plan.num_aggregators() as u32,
-                &self.attrs,
-            );
-            fs::write(self.bp_dir_pfs().join("md.idx"), md)?;
+            self.publish_metadata(true)?;
             self.report.files_created = self.plan.num_aggregators() + 1;
             self.report.drain = drain;
             Ok(std::mem::take(&mut self.report))
@@ -813,6 +880,7 @@ mod tests {
             pack_threads: 0,
             async_io: true,
             drain_throttle: None,
+            live_publish: false,
         }
     }
 
@@ -1074,7 +1142,7 @@ mod tests {
         assert_eq!(sel.len(), 4 * 7);
         for y in 0..4 {
             for x in 0..7 {
-                let want = full[1 * 8 * 16 + (2 + y) * 16 + (3 + x)];
+                let want = full[8 * 16 + (2 + y) * 16 + (3 + x)];
                 assert_eq!(sel[y * 7 + x], want, "({y},{x})");
             }
         }

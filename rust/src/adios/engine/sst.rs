@@ -2,23 +2,36 @@
 //!
 //! SST connects data producers directly to consumers using the same
 //! step-based put/get API as the file engines: data bypasses the file
-//! system entirely and the producer buffers steps in memory while a
-//! background thread ships them to the consumer — so the *perceived*
+//! system entirely and the producer buffers steps in memory while
+//! background threads ship them to the consumer — so the *perceived*
 //! write time inside the application is just the buffer hand-off, and
 //! computation continues while the consumer works (Fig 8).
+//!
+//! Two data planes (DESIGN.md §9):
+//!
+//! * [`DataPlane::Lanes`] (default) — one TCP lane **per aggregator
+//!   group**: each aggregator rank owns a connection with its own
+//!   bounded-queue back-pressure, members compress their blocks in
+//!   parallel and chain-gather to their node-local aggregator, and the
+//!   consumer reassembles each step across lanes.  This is the streaming
+//!   analog of BP4's N→M sub-file fan-out (Fredj et al., arXiv:2304.06603).
+//! * [`DataPlane::Funnel`] — the original rank-0 funnel over a single
+//!   stream, kept as the measured baseline: every rank's blocks converge
+//!   on the root's NIC before anything reaches the wire.
 //!
 //! The paper's fabric is RDMA over 100 GbE; our transport is TCP on
 //! localhost (DESIGN.md §Substitutions) with the same semantics: step
 //! framing, producer-side buffering with bounded queue back-pressure, and
-//! reader-side step iteration
-//! (`for fstep in adios2_fh` in their Python consumer).
+//! reader-side step iteration.
 //!
-//! Wire protocol (little-endian):
+//! Wire protocol (little-endian, all lengths validated against
+//! [`MAX_FRAME_LEN`] before allocation):
 //! ```text
-//! frame   := u32 magic "SST1" | u8 type | u64 len | payload
-//! type    := 1 step-data | 2 bye
-//! payload := u32 nvars { str name | dims shape | u32 nblocks
-//!                        { dims start | dims count | u64 raw | bytes frame } }
+//! frame   := u32 magic "SST2" | u8 type | u64 len | payload
+//! type    := 1 step-data | 2 bye | 3 hello
+//! hello   := u32 lane | u32 nlanes
+//! step    := u64 step | u32 nvars { str name | dims shape | u32 nblocks
+//!            { u32 producer | dims start | dims count | u64 raw | bytes frame } }
 //! ```
 
 use std::io::{Read, Write};
@@ -27,8 +40,10 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::adios::aggregation::AggregationPlan;
 use crate::adios::bp::scatter_block;
 use crate::adios::operator::{self, OperatorConfig};
+use crate::adios::source::{StepSource, StepStatus};
 use crate::adios::variable::Variable;
 use crate::cluster::Comm;
 use crate::metrics::Stopwatch;
@@ -38,13 +53,56 @@ use crate::{Error, Result};
 
 use super::{Engine, EngineReport, StepStats};
 
-const MAGIC: u32 = 0x53535431; // "SST1"
-const TYPE_STEP: u8 = 1;
-const TYPE_BYE: u8 = 2;
-const TAG_SST_BLOCKS: u64 = 0x5353_0001;
+/// Wire magic, version 2 (lane hello + per-block producer ranks).
+pub const MAGIC: u32 = 0x53535432; // "SST2"
+pub const TYPE_STEP: u8 = 1;
+pub const TYPE_BYE: u8 = 2;
+pub const TYPE_HELLO: u8 = 3;
+/// Hard cap on a declared frame (and per-block raw) length: a corrupt or
+/// adversarial peer must not be able to make the reader allocate from an
+/// untrusted u64 (OOM bomb).
+pub const MAX_FRAME_LEN: u64 = 1 << 30;
+/// Sanity cap on the lane count a hello may announce.
+const MAX_LANES: u32 = 1 << 16;
 
-/// Producer-side queue depth before `end_step` blocks (back-pressure).
+const TAG_SST_BLOCKS: u64 = 0x5353_0001;
+const TAG_SST_STATS: u64 = 0x5353_0002;
+
+/// Per-lane producer queue depth before `end_step` blocks (back-pressure).
 const QUEUE_STEPS: usize = 4;
+
+/// Minimum time an in-flight frame gets to finish once its first byte
+/// has arrived, even past the poll deadline (see [`SstConsumer::poll_step`]).
+const FRAME_GRACE: Duration = Duration::from_secs(5);
+
+/// Bound on the lane handshake: once one lane of a collective open has
+/// connected, the remaining lanes (and every hello frame) must arrive
+/// within this window.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Producer→consumer topology of the SST data plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPlane {
+    /// Rank-0 funnel over one TCP stream (measured baseline).
+    Funnel,
+    /// One TCP lane per aggregator group (parallel data plane, default).
+    Lanes,
+}
+
+impl DataPlane {
+    /// Parse the `DataPlane` IO parameter.
+    pub fn parse(s: &str) -> Result<DataPlane> {
+        match s.to_ascii_lowercase().as_str() {
+            "funnel" | "root" | "serial" => Ok(DataPlane::Funnel),
+            "lanes" | "parallel" => Ok(DataPlane::Lanes),
+            other => Err(Error::config(format!("unknown SST DataPlane `{other}`"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
 
 fn write_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> Result<()> {
     let mut hdr = [0u8; 13];
@@ -56,85 +114,152 @@ fn write_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
+/// Read exactly `buf.len()` bytes with one wall-clock deadline over the
+/// *whole* read.  A per-recv socket timeout alone is not enough: a peer
+/// trickling one byte per interval resets it forever.
+fn read_exact_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> std::io::Result<()> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "frame read deadline exceeded",
+            ));
+        }
+        // Short per-recv timeout so the loop re-checks the wall-clock
+        // deadline and reports it as such (a recv timeout equal to the
+        // whole budget would surface as a raw WouldBlock instead).
+        let per_recv = (deadline - now)
+            .min(Duration::from_millis(100))
+            .max(Duration::from_millis(1));
+        stream.set_read_timeout(Some(per_recv))?;
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed",
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted
+                    || e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame; with a deadline the whole frame (header + payload)
+/// must arrive before it, else the read errors out — never hangs.
+fn read_frame(stream: &mut TcpStream, deadline: Option<Instant>) -> Result<(u8, Vec<u8>)> {
+    fn read_all(
+        stream: &mut TcpStream,
+        buf: &mut [u8],
+        deadline: Option<Instant>,
+    ) -> std::io::Result<()> {
+        match deadline {
+            Some(d) => read_exact_deadline(stream, buf, d),
+            None => stream.read_exact(buf),
+        }
+    }
     let mut hdr = [0u8; 13];
-    stream
-        .read_exact(&mut hdr)
+    read_all(stream, &mut hdr, deadline)
         .map_err(|e| Error::sst(format!("peer closed mid-frame: {e}")))?;
     let magic = u32::from_le_bytes(hdr[..4].try_into().unwrap());
     if magic != MAGIC {
-        return Err(Error::sst(format!("bad frame magic {magic:#x}")));
+        return Err(Error::sst(format!(
+            "bad frame magic {magic:#010x} (want {MAGIC:#010x})"
+        )));
     }
     let ty = hdr[4];
-    let len = u64::from_le_bytes(hdr[5..13].try_into().unwrap()) as usize;
-    let mut payload = vec![0u8; len];
-    stream.read_exact(&mut payload)?;
+    let len = u64::from_le_bytes(hdr[5..13].try_into().unwrap());
+    // Never allocate from the untrusted wire length without a cap.
+    if len > MAX_FRAME_LEN {
+        return Err(Error::sst(format!(
+            "declared frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_all(stream, &mut payload, deadline).map_err(|e| {
+        Error::sst(format!(
+            "truncated frame: wanted {len} payload bytes of type {ty}: {e}"
+        ))
+    })?;
+    if deadline.is_some() {
+        stream
+            .set_read_timeout(None)
+            .map_err(|e| Error::sst(format!("clear read_timeout: {e}")))?;
+    }
     Ok((ty, payload))
 }
 
-/// Producer engine: rank 0 owns the socket + sender thread; all ranks
-/// funnel their step blocks to rank 0 (the aggregating-SST layout).
-pub struct SstEngine {
-    rank: usize,
-    operator: OperatorConfig,
-    cost: CostModel,
-    queue: Vec<(Variable, Vec<f32>)>,
-    in_step: bool,
-    step: usize,
-    /// rank 0 only:
-    tx: Option<SyncSender<Vec<u8>>>,
-    sender: Option<JoinHandle<Result<()>>>,
-    report: EngineReport,
-    closed: bool,
-}
-
-impl SstEngine {
-    /// Collective open: rank 0 connects to the consumer at `addr`
-    /// (retrying up to `timeout`), other ranks connect to nothing.
-    pub fn open(
-        addr: &str,
-        operator: OperatorConfig,
-        cost: CostModel,
-        comm: &Comm,
-        timeout: Duration,
-    ) -> Result<SstEngine> {
-        let mut tx = None;
-        let mut sender = None;
-        if comm.rank() == 0 {
-            let stream = connect_retry(addr, timeout)?;
-            let (s, r): (SyncSender<Vec<u8>>, Receiver<Vec<u8>>) = sync_channel(QUEUE_STEPS);
-            let handle = std::thread::spawn(move || sender_loop(stream, r));
-            tx = Some(s);
-            sender = Some(handle);
+/// Wait up to `timeout` for the stream to become readable without
+/// consuming anything.  `Ok(false)` = nothing arrived in time.
+fn wait_readable(stream: &TcpStream, timeout: Duration) -> Result<bool> {
+    stream
+        .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+        .map_err(|e| Error::sst(format!("set_read_timeout: {e}")))?;
+    let mut probe = [0u8; 1];
+    let r = stream.peek(&mut probe);
+    stream
+        .set_read_timeout(None)
+        .map_err(|e| Error::sst(format!("clear read_timeout: {e}")))?;
+    match r {
+        // Data available — or EOF, which a subsequent read reports loudly.
+        Ok(_) => Ok(true),
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            Ok(false)
         }
-        Ok(SstEngine {
-            rank: comm.rank(),
-            operator,
-            cost,
-            queue: Vec::new(),
-            in_step: false,
-            step: 0,
-            tx,
-            sender,
-            report: EngineReport::default(),
-            closed: false,
-        })
+        Err(e) => Err(Error::sst(format!("peek: {e}"))),
     }
 }
 
+/// Retry `connect` with exponential backoff + jitter until `timeout`,
+/// surfacing the attempt count in the final error.
 fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
     let t0 = Instant::now();
+    // Deterministic-enough jitter seed: per-call clock + address bytes
+    // (decorrelates the retry phase of many concurrent lanes).
+    let seed = addr.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64))
+        ^ std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0);
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut backoff = Duration::from_millis(5);
+    let mut attempts = 0u32;
     loop {
+        attempts += 1;
         match TcpStream::connect(addr) {
             Ok(s) => {
                 s.set_nodelay(true).ok();
                 return Ok(s);
             }
-            Err(e) if t0.elapsed() < timeout => {
-                std::thread::sleep(Duration::from_millis(20));
-                let _ = e;
+            Err(e) => {
+                let elapsed = t0.elapsed();
+                if elapsed >= timeout {
+                    return Err(Error::sst(format!(
+                        "cannot connect to consumer {addr} after {attempts} attempts \
+                         over {:.2}s: {e}",
+                        elapsed.as_secs_f64()
+                    )));
+                }
+                // Full jitter on the current backoff window, capped by the
+                // remaining budget so we re-test right at the deadline.
+                let jittered = backoff.mul_f64(0.5 + rng.next_f64() * 0.5);
+                std::thread::sleep(jittered.min(timeout - elapsed));
+                backoff = (backoff * 2).min(Duration::from_millis(500));
             }
-            Err(e) => return Err(Error::sst(format!("cannot connect to consumer {addr}: {e}"))),
         }
     }
 }
@@ -152,6 +277,193 @@ fn sender_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) -> Result<()> {
     // Channel dropped without bye: still close politely.
     let _ = write_frame(&mut stream, TYPE_BYE, &[]);
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Producer engine
+// ---------------------------------------------------------------------------
+
+/// One lane's background sender (aggregator ranks only).
+struct LaneSender {
+    tx: SyncSender<Vec<u8>>,
+    handle: JoinHandle<Result<()>>,
+}
+
+/// Producer engine.  With [`DataPlane::Lanes`] every aggregator rank owns
+/// a TCP lane + sender thread; with [`DataPlane::Funnel`] rank 0 owns the
+/// single lane and all ranks funnel to it.
+pub struct SstEngine {
+    rank: usize,
+    operator: OperatorConfig,
+    cost: CostModel,
+    plan: AggregationPlan,
+    data_plane: DataPlane,
+    queue: Vec<(Variable, Vec<f32>)>,
+    in_step: bool,
+    step: usize,
+    /// Aggregator ranks only.
+    lane: Option<LaneSender>,
+    report: EngineReport,
+    closed: bool,
+}
+
+impl SstEngine {
+    /// Collective open: every aggregator rank connects a lane to the
+    /// consumer at `addr` (retrying with backoff up to `timeout`) and
+    /// announces itself with a hello frame.
+    pub fn open(
+        addr: &str,
+        operator: OperatorConfig,
+        cost: CostModel,
+        comm: &Comm,
+        timeout: Duration,
+        data_plane: DataPlane,
+        aggs_per_node: usize,
+    ) -> Result<SstEngine> {
+        let mut data_plane = data_plane;
+        let plan = match data_plane {
+            DataPlane::Funnel => AggregationPlan::funnel(comm.size(), comm.ranks_per_node())?,
+            DataPlane::Lanes => {
+                let rpn = comm.ranks_per_node().max(1);
+                if comm.size() % rpn == 0 {
+                    AggregationPlan::per_node(comm.size(), rpn, aggs_per_node)?
+                } else {
+                    // Ragged world (ranks not divisible by ranks/node):
+                    // there is no clean per-node lane grouping, so degrade
+                    // to the single-lane funnel — and charge it as one —
+                    // instead of failing a config that worked before
+                    // lanes existed.  Loudly, so a lanes-vs-funnel
+                    // comparison can't silently measure funnel twice.
+                    if comm.rank() == 0 {
+                        eprintln!(
+                            "sst: {} ranks / {} per node has no per-node lane \
+                             grouping; falling back to the funnel data plane",
+                            comm.size(),
+                            rpn
+                        );
+                    }
+                    data_plane = DataPlane::Funnel;
+                    AggregationPlan::funnel(comm.size(), rpn)?
+                }
+            }
+        };
+        let rank = comm.rank();
+        let mut lane = None;
+        if plan.is_aggregator(rank) {
+            let lane_id = plan.subfile(rank).expect("aggregator has a lane");
+            let mut stream = connect_retry(addr, timeout)?;
+            let mut w = Writer::new();
+            w.u32(lane_id);
+            w.u32(plan.num_aggregators() as u32);
+            write_frame(&mut stream, TYPE_HELLO, &w.into_vec())?;
+            let (tx, rx): (SyncSender<Vec<u8>>, Receiver<Vec<u8>>) = sync_channel(QUEUE_STEPS);
+            let handle = std::thread::spawn(move || sender_loop(stream, rx));
+            lane = Some(LaneSender { tx, handle });
+        }
+        Ok(SstEngine {
+            rank,
+            operator,
+            cost,
+            plan,
+            data_plane,
+            queue: Vec::new(),
+            in_step: false,
+            step: 0,
+            lane,
+            report: EngineReport::default(),
+            closed: false,
+        })
+    }
+
+    /// Serialize + compress this rank's queued blocks.  The per-block
+    /// codec work fans out across the shared worker pool
+    /// ([`operator::compress_batch`], same as the BP4 pack path), on top
+    /// of the rank-level parallelism every lane's members already give.
+    /// Returns (message bytes, raw total, stored total).
+    fn pack_blocks(&mut self) -> Result<(Vec<u8>, u64, u64)> {
+        let items: Vec<(Variable, Vec<f32>)> = self.queue.drain(..).collect();
+        let payloads: Vec<&[u8]> = items
+            .iter()
+            .map(|(_, data)| crate::util::f32_slice_as_bytes(data))
+            .collect();
+        let (frames, _cpu_secs) = operator::compress_batch(&payloads, self.operator, 0)?;
+        let mut w = Writer::new();
+        w.u32(items.len() as u32);
+        let mut raw = 0u64;
+        let mut stored = 0u64;
+        for ((var, _), (payload, frame)) in items.iter().zip(payloads.iter().zip(&frames)) {
+            raw += payload.len() as u64;
+            stored += frame.len() as u64;
+            w.str(&var.name);
+            w.dims(&var.shape);
+            w.u32(self.rank as u32);
+            w.dims(&var.start);
+            w.dims(&var.count);
+            w.u64(payload.len() as u64);
+            w.bytes(frame);
+        }
+        Ok((w.into_vec(), raw, stored))
+    }
+}
+
+/// Merge member messages (in rank order) into one lane step payload.
+fn merge_lane_payload(step: u64, msgs: &[Vec<u8>]) -> Result<Vec<u8>> {
+    let mut entries: Vec<SstVar> = Vec::new();
+    for msg in msgs {
+        let mut r = Reader::new(msg);
+        let n = r.u32()? as usize;
+        for _ in 0..n {
+            let name = r.str()?;
+            let shape = r.dims()?;
+            let producer_rank = r.u32()?;
+            let start = r.dims()?;
+            let count = r.dims()?;
+            let raw = r.u64()?;
+            let frame = r.bytes()?;
+            let block = SstBlock {
+                producer_rank,
+                start,
+                count,
+                raw,
+                frame,
+            };
+            match entries.iter_mut().find(|v| v.name == name) {
+                Some(v) => v.blocks.push(block),
+                None => entries.push(SstVar {
+                    name,
+                    shape,
+                    blocks: vec![block],
+                }),
+            }
+        }
+    }
+    let mut out = Writer::new();
+    out.u64(step);
+    out.u32(entries.len() as u32);
+    for v in &entries {
+        out.str(&v.name);
+        out.dims(&v.shape);
+        out.u32(v.blocks.len() as u32);
+        for b in &v.blocks {
+            out.u32(b.producer_rank);
+            out.dims(&b.start);
+            out.dims(&b.count);
+            out.u64(b.raw);
+            out.bytes(&b.frame);
+        }
+    }
+    let payload = out.into_vec();
+    // Fail fast at end_step with an actionable error instead of letting
+    // the consumer reject the frame header mid-stream.
+    if payload.len() as u64 > MAX_FRAME_LEN {
+        return Err(Error::sst(format!(
+            "step {step}: merged lane payload is {} bytes, over the \
+             {MAX_FRAME_LEN}-byte frame cap — use more lanes \
+             (NumAggregatorsPerNode) or compression to shrink per-lane steps",
+            payload.len()
+        )));
+    }
+    Ok(payload)
 }
 
 impl Engine for SstEngine {
@@ -186,79 +498,72 @@ impl Engine for SstEngine {
         }
         comm.barrier();
         let sw = Stopwatch::start();
-        // Pack this rank's blocks (compress if an operator is configured).
-        let mut w = Writer::new();
-        w.u32(self.queue.len() as u32);
-        let mut raw = 0u64;
-        let mut stored = 0u64;
-        for (var, data) in self.queue.drain(..) {
-            let payload = crate::util::f32_slice_as_bytes(&data);
-            let frame = operator::compress(payload, self.operator)?;
-            raw += payload.len() as u64;
-            stored += frame.len() as u64;
-            w.str(&var.name);
-            w.dims(&var.shape);
-            w.dims(&var.start);
-            w.dims(&var.count);
-            w.u64(payload.len() as u64);
-            w.bytes(&frame);
-        }
+        let (msg, raw, stored) = self.pack_blocks()?;
         let tag = TAG_SST_BLOCKS + self.step as u64 * 4;
-        let _ = (raw, stored); // totals recomputed exactly at rank 0
-        let gathered = comm.gather(0, w.into_vec(), tag)?;
+
+        if self.plan.is_aggregator(self.rank) {
+            let mut own = Some(msg);
+            let members = self.plan.members(self.rank);
+            let mut msgs = Vec::with_capacity(members.len());
+            for m in members {
+                if m == self.rank {
+                    msgs.push(own.take().expect("own blocks consumed once"));
+                } else {
+                    msgs.push(comm.recv(m, tag)?);
+                }
+            }
+            let payload = merge_lane_payload(self.step as u64, &msgs)?;
+            // Enqueue for this lane's background sender (blocks only when
+            // the consumer is QUEUE_STEPS behind — per-lane back-pressure).
+            self.lane
+                .as_ref()
+                .expect("aggregator has a lane")
+                .tx
+                .send(payload)
+                .map_err(|_| Error::sst("lane sender thread died"))?;
+        } else {
+            comm.isend(self.plan.agg_of_rank[self.rank], tag, msg)?;
+        }
+
+        // Stats funnel: exact raw/wire byte totals to rank 0.
+        let mut stats = Writer::new();
+        stats.u64(raw);
+        stats.u64(stored);
+        let gathered = comm.gather(0, stats.into_vec(), TAG_SST_STATS + self.step as u64 * 4)?;
 
         if self.rank == 0 {
-            // Merge rank messages into one step payload, accumulating the
-            // exact raw/wire byte totals as we parse.
-            let mut out = Writer::new();
             let mut t_raw = 0u64;
             let mut t_stored = 0u64;
-            let mut entries: Vec<(String, Vec<u64>, Vec<(Vec<u64>, Vec<u64>, u64, Vec<u8>)>)> =
-                Vec::new();
-            for msg in &gathered {
-                let mut r = Reader::new(msg);
-                let n = r.u32()? as usize;
-                for _ in 0..n {
-                    let name = r.str()?;
-                    let shape = r.dims()?;
-                    let start = r.dims()?;
-                    let count = r.dims()?;
-                    let raw_len = r.u64()?;
-                    let frame = r.bytes()?;
-                    t_raw += raw_len;
-                    t_stored += frame.len() as u64;
-                    match entries.iter_mut().find(|(n2, _, _)| n2 == &name) {
-                        Some((_, _, blocks)) => blocks.push((start, count, raw_len, frame)),
-                        None => entries.push((name, shape, vec![(start, count, raw_len, frame)])),
-                    }
-                }
+            for g in &gathered {
+                let mut r = Reader::new(g);
+                t_raw += r.u64()?;
+                t_stored += r.u64()?;
             }
-            out.u32(entries.len() as u32);
-            for (name, shape, blocks) in &entries {
-                out.str(name);
-                out.dims(shape);
-                out.u32(blocks.len() as u32);
-                for (start, count, raw_len, frame) in blocks {
-                    out.dims(start);
-                    out.dims(count);
-                    out.u64(*raw_len);
-                    out.bytes(frame);
-                }
-            }
-            let payload = out.into_vec();
-            // Enqueue for the background sender (blocks only when the
-            // consumer is QUEUE_STEPS behind — SST back-pressure).
-            self.tx
-                .as_ref()
-                .expect("rank0 has sender")
-                .send(payload)
-                .map_err(|_| Error::sst("sender thread died"))?;
-
             let hw = &self.cost.hw;
+            let v_raw = hw.scaled(t_raw);
+            let v_stored = hw.scaled(t_stored);
+            let naggs = self.plan.num_aggregators();
             let mut cost = crate::sim::WriteCost::default();
-            cost.push("buffer", self.cost.t_buffer_copy(hw.scaled(t_raw)));
-            cost.push("sync", 1e-3);
-            cost.push_background("transfer", self.cost.t_stream_transfer(hw.scaled(t_stored)));
+            cost.push("buffer", self.cost.t_buffer_copy(v_raw));
+            match self.data_plane {
+                DataPlane::Funnel => {
+                    // Every rank's wire bytes converge on the root before
+                    // anything ships: the serial-funnel bottleneck.
+                    cost.push("funnel", self.cost.t_gather_root(v_stored, hw.ranks()));
+                    cost.push("sync", 1e-3);
+                    cost.push_background("transfer", self.cost.t_stream_transfer(v_stored));
+                }
+                DataPlane::Lanes => {
+                    // Node-local chain to each lane's aggregator, then the
+                    // lanes ship concurrently.
+                    cost.push("chain", self.cost.t_chain_gather(v_stored, naggs));
+                    cost.push("sync", 1e-3);
+                    cost.push_background(
+                        "transfer",
+                        self.cost.t_stream_transfer_lanes(v_stored, naggs),
+                    );
+                }
+            }
             self.report.steps.push(StepStats {
                 step: self.step,
                 bytes_raw: t_raw,
@@ -279,14 +584,15 @@ impl Engine for SstEngine {
         }
         self.closed = true;
         comm.barrier();
+        if let Some(LaneSender { tx, handle }) = self.lane.take() {
+            tx.send(Vec::new()).ok(); // bye sentinel
+            drop(tx);
+            handle
+                .join()
+                .map_err(|_| Error::sst("lane sender thread panicked"))??;
+        }
+        comm.barrier();
         if self.rank == 0 {
-            if let Some(tx) = self.tx.take() {
-                tx.send(Vec::new()).ok(); // bye sentinel
-            }
-            if let Some(h) = self.sender.take() {
-                h.join()
-                    .map_err(|_| Error::sst("sender thread panicked"))??;
-            }
             Ok(std::mem::take(&mut self.report))
         } else {
             Ok(EngineReport::default())
@@ -294,109 +600,314 @@ impl Engine for SstEngine {
     }
 }
 
-/// One received step on the consumer side.
+// ---------------------------------------------------------------------------
+// Consumer
+// ---------------------------------------------------------------------------
+
+/// One block of one variable in a received step.
+#[derive(Debug, Clone)]
+pub struct SstBlock {
+    pub producer_rank: u32,
+    pub start: Vec<u64>,
+    pub count: Vec<u64>,
+    /// Declared decompressed length (validated against the actual
+    /// decompressed output before any data is returned).
+    pub raw: u64,
+    pub frame: Vec<u8>,
+}
+
+/// One variable in a received step.
+#[derive(Debug, Clone)]
+pub struct SstVar {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub blocks: Vec<SstBlock>,
+}
+
+/// One received step on the consumer side (reassembled across lanes,
+/// blocks in canonical producer-rank order).
 #[derive(Debug, Clone)]
 pub struct SstStep {
     pub index: usize,
-    vars: Vec<(String, Vec<u64>, Vec<(Vec<u64>, Vec<u64>, u64, Vec<u8>)>)>,
+    vars: Vec<SstVar>,
 }
 
 impl SstStep {
     pub fn var_names(&self) -> Vec<&str> {
-        self.vars.iter().map(|(n, _, _)| n.as_str()).collect()
+        self.vars.iter().map(|v| v.name.as_str()).collect()
     }
 
     pub fn var_shape(&self, name: &str) -> Option<&[u64]> {
         self.vars
             .iter()
-            .find(|(n, _, _)| n == name)
-            .map(|(_, s, _)| s.as_slice())
+            .find(|v| v.name == name)
+            .map(|v| v.shape.as_slice())
     }
 
-    /// Reconstitute the global array of one variable.
+    /// Reconstitute the global array of one variable.  The wire-declared
+    /// shape and every block's placement are validated before any
+    /// allocation or scatter — a crafted frame must not drive an OOM or
+    /// an out-of-bounds write.
     pub fn read_var_global(&self, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
-        let (_, shape, blocks) = self
+        let v = self
             .vars
             .iter()
-            .find(|(n, _, _)| n == name)
+            .find(|v| v.name == name)
             .ok_or_else(|| Error::sst(format!("step has no variable `{name}`")))?;
-        let total: u64 = shape.iter().product();
+        let total = crate::adios::bp::checked_elems(&v.shape)?;
         let mut global = vec![0.0f32; total as usize];
-        for (start, count, raw_len, frame) in blocks {
-            let rawb = operator::decompress(frame)?;
-            if rawb.len() as u64 != *raw_len {
-                return Err(Error::sst("raw length mismatch in stream block"));
+        for b in &v.blocks {
+            crate::adios::bp::validate_block_geometry(&v.shape, &b.start, &b.count)?;
+            let rawb = operator::decompress(&b.frame)?;
+            if rawb.len() as u64 != b.raw {
+                return Err(Error::sst(format!(
+                    "block of `{name}` from rank {}: decompressed to {} bytes, \
+                     declared {}",
+                    b.producer_rank,
+                    rawb.len(),
+                    b.raw
+                )));
             }
             let vals = crate::util::bytes_to_f32_vec(&rawb)?;
-            scatter_block(&mut global, shape, start, count, &vals)?;
+            scatter_block(&mut global, &v.shape, &b.start, &b.count, &vals)?;
         }
-        Ok((shape.clone(), global))
+        Ok((v.shape.clone(), global))
     }
 
     /// Total stored (wire) bytes of this step.
     pub fn wire_bytes(&self) -> u64 {
         self.vars
             .iter()
-            .flat_map(|(_, _, b)| b.iter())
-            .map(|(_, _, _, f)| f.len() as u64)
+            .flat_map(|v| v.blocks.iter())
+            .map(|b| b.frame.len() as u64)
             .sum()
     }
 }
 
-/// Consumer: listens for one producer connection and iterates steps.
-pub struct SstConsumer {
+/// Parse one lane's step payload with count/length sanity checks.
+fn parse_step_payload(payload: &[u8]) -> Result<(u64, Vec<SstVar>)> {
+    let mut r = Reader::new(payload);
+    let step = r.u64()?;
+    let nvars = r.u32()? as usize;
+    if nvars > r.remaining() {
+        return Err(Error::sst(format!(
+            "corrupt step frame: declares {nvars} variables in {} remaining bytes",
+            r.remaining()
+        )));
+    }
+    // Capacity hints are capped: a corrupt count must not pre-allocate
+    // beyond what the frame could possibly encode.
+    let mut vars = Vec::with_capacity(nvars.min(256));
+    for _ in 0..nvars {
+        let name = r.str()?;
+        let shape = r.dims()?;
+        let nblocks = r.u32()? as usize;
+        if nblocks > r.remaining() {
+            return Err(Error::sst(format!(
+                "corrupt step frame: variable `{name}` declares {nblocks} blocks \
+                 in {} remaining bytes",
+                r.remaining()
+            )));
+        }
+        let mut blocks = Vec::with_capacity(nblocks.min(256));
+        for _ in 0..nblocks {
+            let producer_rank = r.u32()?;
+            let start = r.dims()?;
+            let count = r.dims()?;
+            let raw = r.u64()?;
+            if raw > MAX_FRAME_LEN {
+                return Err(Error::sst(format!(
+                    "block of `{name}` declares {raw} raw bytes \
+                     (cap {MAX_FRAME_LEN})"
+                )));
+            }
+            let frame = r.bytes()?;
+            blocks.push(SstBlock {
+                producer_rank,
+                start,
+                count,
+                raw,
+                frame,
+            });
+        }
+        vars.push(SstVar {
+            name,
+            shape,
+            blocks,
+        });
+    }
+    Ok((step, vars))
+}
+
+/// One accepted lane connection.
+struct SstLane {
     stream: TcpStream,
+    id: u32,
+}
+
+/// Result of a bounded wait for the next step.
+pub enum StepPoll {
+    Step(SstStep),
+    End,
+    Timeout,
+}
+
+/// Consumer: reassembles steps across all accepted lanes.
+pub struct SstConsumer {
+    lanes: Vec<SstLane>,
+    /// Frames already read for the in-progress step (one slot per lane),
+    /// so a timed-out poll never loses a lane's delivered frame.
+    pending: Vec<Option<(u8, Vec<u8>)>>,
     next_index: usize,
     done: bool,
 }
 
 impl SstConsumer {
-    /// Bind `addr` and return a factory that accepts the producer.
+    /// Bind `addr` and return a listener that accepts the producer lanes.
     pub fn listen(addr: &str) -> Result<SstListener> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::sst(format!("cannot bind {addr}: {e}")))?;
         Ok(SstListener { listener })
     }
 
-    /// Next step, or `None` after the producer's bye.
+    /// Lane frames staged for the in-progress step (progress indicator:
+    /// grows while a multi-lane step is still being delivered).
+    pub fn staged_frames(&self) -> usize {
+        self.pending.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Stage every lane frame that is already readable (short probe per
+    /// lane).  An in-flight frame gets a deadline-bounded read: the poll
+    /// deadline extended by a grace floor — tearing a frame that is
+    /// actively arriving would corrupt the stream for good, while a
+    /// trickling or stalled peer still errors at the frame deadline,
+    /// never hangs.
+    fn stage_ready(&mut self, poll_deadline: Instant) -> Result<()> {
+        for (lane, slot) in self.lanes.iter_mut().zip(self.pending.iter_mut()) {
+            if slot.is_some() {
+                continue;
+            }
+            if wait_readable(&lane.stream, Duration::from_millis(1))? {
+                let frame_deadline = poll_deadline.max(Instant::now() + FRAME_GRACE);
+                *slot = Some(read_frame(&mut lane.stream, Some(frame_deadline))?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Blocking: next reassembled step, or `None` after all lanes' bye.
     pub fn next_step(&mut self) -> Result<Option<SstStep>> {
+        match self.poll_step(None)? {
+            StepPoll::Step(s) => Ok(Some(s)),
+            StepPoll::End => Ok(None),
+            StepPoll::Timeout => unreachable!("no timeout was requested"),
+        }
+    }
+
+    /// Wait up to `timeout` (forever if `None`) for the next step to
+    /// *start arriving*; one overall deadline covers all lanes.  A
+    /// timed-out poll consumes nothing: lanes that already delivered
+    /// their frame keep it staged, and a later poll resumes where this
+    /// one stopped.  Once a lane's frame has started arriving it gets a
+    /// bounded grace ([`FRAME_GRACE`] past the deadline) to finish, so a
+    /// healthy-but-slow frame near the deadline is not torn mid-read —
+    /// but a producer that stalls *mid-frame* surfaces as a descriptive
+    /// error (the stream is unrecoverable at that point), never a hang.
+    pub fn poll_step(&mut self, timeout: Option<Duration>) -> Result<StepPoll> {
         if self.done {
-            return Ok(None);
+            return Ok(StepPoll::End);
         }
-        let (ty, payload) = read_frame(&mut self.stream)?;
-        match ty {
-            TYPE_BYE => {
-                self.done = true;
-                Ok(None)
-            }
-            TYPE_STEP => {
-                let mut r = Reader::new(&payload);
-                let nvars = r.u32()? as usize;
-                let mut vars = Vec::with_capacity(nvars);
-                for _ in 0..nvars {
-                    let name = r.str()?;
-                    let shape = r.dims()?;
-                    let nblocks = r.u32()? as usize;
-                    let mut blocks = Vec::with_capacity(nblocks);
-                    for _ in 0..nblocks {
-                        let start = r.dims()?;
-                        let count = r.dims()?;
-                        let raw = r.u64()?;
-                        let frame = r.bytes()?;
-                        blocks.push((start, count, raw, frame));
+        match timeout.map(|t| Instant::now() + t) {
+            None => {
+                for (lane, slot) in self.lanes.iter_mut().zip(self.pending.iter_mut()) {
+                    if slot.is_none() {
+                        *slot = Some(read_frame(&mut lane.stream, None)?);
                     }
-                    vars.push((name, shape, blocks));
                 }
-                let idx = self.next_index;
-                self.next_index += 1;
-                Ok(Some(SstStep { index: idx, vars }))
             }
-            other => Err(Error::sst(format!("unexpected frame type {other}"))),
+            Some(d) => loop {
+                // Stage every frame that is already available, so one
+                // slow lane can never hide progress on the others.
+                self.stage_ready(d)?;
+                let Some(i) = self.pending.iter().position(|p| p.is_none()) else {
+                    break;
+                };
+                let now = Instant::now();
+                if now >= d {
+                    return Ok(StepPoll::Timeout);
+                }
+                // Block on the first still-missing lane for the rest of
+                // the budget, then re-sweep.  On a timed-out wait, stage
+                // whatever arrived on *other* lanes during the block
+                // first — callers use staged growth to tell "slow but
+                // alive" from "stalled".
+                if !wait_readable(&self.lanes[i].stream, d - now)? {
+                    self.stage_ready(d)?;
+                    return Ok(StepPoll::Timeout);
+                }
+            },
         }
+        // Every lane has delivered: reassemble.
+        let mut vars: Vec<SstVar> = Vec::new();
+        let mut byes = 0usize;
+        for (lane, slot) in self.lanes.iter().zip(self.pending.iter_mut()) {
+            let (ty, payload) = slot.take().expect("frame staged for every lane");
+            match ty {
+                TYPE_BYE => byes += 1,
+                TYPE_STEP => {
+                    let (step, lvars) = parse_step_payload(&payload)?;
+                    if step != self.next_index as u64 {
+                        return Err(Error::sst(format!(
+                            "lane {} delivered step {step}, expected {}",
+                            lane.id, self.next_index
+                        )));
+                    }
+                    for lv in lvars {
+                        match vars.iter_mut().find(|v| v.name == lv.name) {
+                            Some(v) => {
+                                if v.shape != lv.shape {
+                                    return Err(Error::sst(format!(
+                                        "lane {} disagrees on shape of `{}`: \
+                                         {:?} vs {:?}",
+                                        lane.id, lv.name, lv.shape, v.shape
+                                    )));
+                                }
+                                v.blocks.extend(lv.blocks);
+                            }
+                            None => vars.push(lv),
+                        }
+                    }
+                }
+                other => {
+                    return Err(Error::sst(format!(
+                        "unexpected frame type {other} on lane {}",
+                        lane.id
+                    )))
+                }
+            }
+        }
+        if byes > 0 {
+            if byes != self.lanes.len() {
+                return Err(Error::sst(format!(
+                    "{byes}/{} lanes closed while others kept streaming",
+                    self.lanes.len()
+                )));
+            }
+            self.done = true;
+            return Ok(StepPoll::End);
+        }
+        // Canonical order: blocks by producer rank (stable, so a rank's
+        // own put order is preserved) — identical across data planes.
+        for v in &mut vars {
+            v.blocks.sort_by_key(|b| b.producer_rank);
+        }
+        let idx = self.next_index;
+        self.next_index += 1;
+        Ok(StepPoll::Step(SstStep { index: idx, vars }))
     }
 }
 
-/// Bound listener; `accept` blocks until the producer connects.
+/// Bound listener; `accept` blocks until every producer lane connects.
 pub struct SstListener {
     listener: TcpListener,
 }
@@ -405,17 +916,197 @@ impl SstListener {
     pub fn local_addr(&self) -> Result<String> {
         Ok(self.listener.local_addr()?.to_string())
     }
-    pub fn accept(self) -> Result<SstConsumer> {
-        let (stream, _) = self
-            .listener
-            .accept()
-            .map_err(|e| Error::sst(format!("accept failed: {e}")))?;
+
+    /// Accept one lane connection and read its hello.  `deadline: None`
+    /// waits indefinitely for the *connection* (a producer may start much
+    /// later than the consumer); once connected, the hello itself is
+    /// always deadline-bounded — a peer that connects and then sends
+    /// nothing cannot hang the consumer.
+    fn accept_one(&self, deadline: Option<Instant>) -> Result<(TcpStream, u32, u32)> {
+        let mut stream = match deadline {
+            None => {
+                self.listener
+                    .accept()
+                    .map_err(|e| Error::sst(format!("accept failed: {e}")))?
+                    .0
+            }
+            Some(d) => {
+                // Bounded accept: poll so a producer that dies after
+                // connecting some lanes cannot hang the consumer.
+                self.listener
+                    .set_nonblocking(true)
+                    .map_err(|e| Error::sst(format!("set_nonblocking: {e}")))?;
+                let stream = loop {
+                    match self.listener.accept() {
+                        Ok((s, _)) => break s,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if Instant::now() >= d {
+                                self.listener.set_nonblocking(false).ok();
+                                return Err(Error::sst(
+                                    "timed out waiting for a producer lane to connect",
+                                ));
+                            }
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            self.listener.set_nonblocking(false).ok();
+                            return Err(Error::sst(format!("accept failed: {e}")));
+                        }
+                    }
+                };
+                self.listener.set_nonblocking(false).ok();
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| Error::sst(format!("set_nonblocking: {e}")))?;
+                stream
+            }
+        };
         stream.set_nodelay(true).ok();
+        let hello_deadline = deadline.unwrap_or_else(|| Instant::now() + HELLO_TIMEOUT);
+        let (ty, payload) = read_frame(&mut stream, Some(hello_deadline))?;
+        if ty != TYPE_HELLO {
+            return Err(Error::sst(format!(
+                "expected hello frame, got type {ty}"
+            )));
+        }
+        let mut r = Reader::new(&payload);
+        let lane = r.u32()?;
+        let nlanes = r.u32()?;
+        if nlanes == 0 || nlanes > MAX_LANES || lane >= nlanes {
+            return Err(Error::sst(format!(
+                "invalid hello: lane {lane} of {nlanes}"
+            )));
+        }
+        Ok((stream, lane, nlanes))
+    }
+
+    /// Accept all lanes of one producer (the lane count is announced by
+    /// the first hello; ids must be dense and distinct).  The first
+    /// connection may arrive arbitrarily late; once it does, the engine
+    /// open is collective, so the remaining lanes must follow within
+    /// [`HELLO_TIMEOUT`].
+    pub fn accept(self) -> Result<SstConsumer> {
+        let (stream, lane, nlanes) = self.accept_one(None)?;
+        let mut lanes = vec![SstLane { stream, id: lane }];
+        let deadline = Instant::now() + HELLO_TIMEOUT;
+        for _ in 1..nlanes {
+            let (stream, lane, n2) = self.accept_one(Some(deadline))?;
+            if n2 != nlanes {
+                return Err(Error::sst(format!(
+                    "lane {lane} announced {n2} lanes, first lane said {nlanes}"
+                )));
+            }
+            lanes.push(SstLane { stream, id: lane });
+        }
+        lanes.sort_by_key(|l| l.id);
+        for (i, l) in lanes.iter().enumerate() {
+            if l.id != i as u32 {
+                return Err(Error::sst(format!(
+                    "lane ids not dense: position {i} holds lane {}",
+                    l.id
+                )));
+            }
+        }
+        let n = lanes.len();
         Ok(SstConsumer {
-            stream,
+            lanes,
+            pending: (0..n).map(|_| None).collect(),
             next_index: 0,
             done: false,
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StepSource adapter
+// ---------------------------------------------------------------------------
+
+/// [`StepSource`] over an accepted [`SstConsumer`]: the streaming half of
+/// the unified read layer.
+pub struct SstSource {
+    consumer: SstConsumer,
+    current: Option<SstStep>,
+}
+
+impl SstSource {
+    pub fn new(consumer: SstConsumer) -> Self {
+        SstSource {
+            consumer,
+            current: None,
+        }
+    }
+
+    fn current(&self) -> Result<&SstStep> {
+        self.current
+            .as_ref()
+            .ok_or_else(|| Error::sst("no step open (call begin_step first)"))
+    }
+}
+
+impl StepSource for SstSource {
+    fn source_name(&self) -> &'static str {
+        "sst"
+    }
+
+    fn begin_step(&mut self, timeout: Duration) -> Result<StepStatus> {
+        if self.current.is_some() {
+            return Err(Error::sst("begin_step while a step is open"));
+        }
+        // `timeout` bounds each wait *without progress*: a multi-lane
+        // step whose delivery straddles the deadline keeps the wait
+        // alive (some lane delivered, so the producer is healthy), while
+        // a genuinely stalled producer still times out after one quantum.
+        let mut staged = self.consumer.staged_frames();
+        loop {
+            match self.consumer.poll_step(Some(timeout))? {
+                StepPoll::Step(s) => {
+                    self.current = Some(s);
+                    return Ok(StepStatus::Ready);
+                }
+                StepPoll::End => return Ok(StepStatus::EndOfStream),
+                StepPoll::Timeout => {
+                    let now_staged = self.consumer.staged_frames();
+                    if now_staged > staged {
+                        staged = now_staged;
+                        continue;
+                    }
+                    return Ok(StepStatus::Timeout);
+                }
+            }
+        }
+    }
+
+    fn step_index(&self) -> usize {
+        self.current.as_ref().map(|s| s.index).unwrap_or(0)
+    }
+
+    fn var_names(&self) -> Vec<String> {
+        self.current
+            .as_ref()
+            .map(|s| s.var_names().iter().map(|n| n.to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    fn var_shape(&self, name: &str) -> Result<Vec<u64>> {
+        let s = self.current()?;
+        s.var_shape(name)
+            .map(|sh| sh.to_vec())
+            .ok_or_else(|| Error::sst(format!("step has no variable `{name}`")))
+    }
+
+    fn read_var_global(&mut self, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
+        self.current()?.read_var_global(name)
+    }
+
+    fn step_stored_bytes(&self) -> u64 {
+        self.current.as_ref().map(|s| s.wire_bytes()).unwrap_or(0)
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        self.current
+            .take()
+            .map(|_| ())
+            .ok_or_else(|| Error::sst("end_step without begin_step"))
     }
 }
 
@@ -426,7 +1117,12 @@ mod tests {
     use crate::cluster::run_world;
     use crate::sim::HardwareSpec;
 
-    fn world_stream(codec: Codec, steps: usize) -> (Vec<SstStep>, EngineReport) {
+    fn world_stream(
+        codec: Codec,
+        steps: usize,
+        plane: DataPlane,
+        aggs_per_node: usize,
+    ) -> (Vec<SstStep>, EngineReport) {
         let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
 
@@ -446,6 +1142,8 @@ mod tests {
                 CostModel::new(HardwareSpec::paper_testbed(2)),
                 &comm,
                 Duration::from_secs(5),
+                plane,
+                aggs_per_node,
             )
             .unwrap();
             let r = comm.rank() as u64;
@@ -463,8 +1161,8 @@ mod tests {
     }
 
     #[test]
-    fn stream_roundtrip_uncompressed() {
-        let (steps, report) = world_stream(Codec::None, 3);
+    fn stream_roundtrip_uncompressed_funnel() {
+        let (steps, report) = world_stream(Codec::None, 3, DataPlane::Funnel, 1);
         assert_eq!(steps.len(), 3);
         assert_eq!(report.steps.len(), 3);
         for (s, step) in steps.iter().enumerate() {
@@ -477,8 +1175,52 @@ mod tests {
     }
 
     #[test]
+    fn stream_roundtrip_parallel_lanes() {
+        // 2 nodes × 2 ranks, 1 aggregator per node → 2 TCP lanes the
+        // consumer must reassemble into byte-identical steps.
+        let (steps, report) = world_stream(Codec::Lz4, 3, DataPlane::Lanes, 1);
+        assert_eq!(steps.len(), 3);
+        assert_eq!(report.steps.len(), 3);
+        for (s, step) in steps.iter().enumerate() {
+            let (shape, g) = step.read_var_global("THETA").unwrap();
+            assert_eq!(shape, vec![4, 8]);
+            for i in 0..32 {
+                assert_eq!(g[i], (s * 100) as f32 + i as f32, "step {s} elem {i}");
+            }
+        }
+        // Lane mode charges the chain + parallel transfer, not the funnel.
+        let phases: Vec<&str> = report.steps[0].cost.phases.iter().map(|p| p.name).collect();
+        assert!(phases.contains(&"chain"));
+        assert!(!phases.contains(&"funnel"));
+    }
+
+    #[test]
+    fn funnel_and_lanes_deliver_identical_payloads() {
+        let (funnel, _) = world_stream(Codec::Zstd, 2, DataPlane::Funnel, 1);
+        let (lanes, _) = world_stream(Codec::Zstd, 2, DataPlane::Lanes, 2);
+        assert_eq!(funnel.len(), lanes.len());
+        for (f, l) in funnel.iter().zip(&lanes) {
+            assert_eq!(f.index, l.index);
+            assert_eq!(f.var_names(), l.var_names());
+            let (fs, fg) = f.read_var_global("THETA").unwrap();
+            let (ls, lg) = l.read_var_global("THETA").unwrap();
+            assert_eq!(fs, ls);
+            assert_eq!(fg, lg);
+            // Same canonical block order and identical compressed frames.
+            assert_eq!(f.wire_bytes(), l.wire_bytes());
+            for (fv, lv) in f.vars.iter().zip(&l.vars) {
+                assert_eq!(fv.blocks.len(), lv.blocks.len());
+                for (fb, lb) in fv.blocks.iter().zip(&lv.blocks) {
+                    assert_eq!(fb.producer_rank, lb.producer_rank);
+                    assert_eq!(fb.frame, lb.frame);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn stream_roundtrip_compressed() {
-        let (steps, report) = world_stream(Codec::Zstd, 2);
+        let (steps, report) = world_stream(Codec::Zstd, 2, DataPlane::Lanes, 1);
         assert_eq!(steps.len(), 2);
         let (_, g) = steps[1].read_var_global("THETA").unwrap();
         assert_eq!(g[5], 105.0);
@@ -501,6 +1243,8 @@ mod tests {
                 CostModel::new(HardwareSpec::paper_testbed(1)),
                 &comm,
                 Duration::from_secs(5),
+                DataPlane::Lanes,
+                1,
             )
             .unwrap();
             eng.begin_step().unwrap();
@@ -520,12 +1264,14 @@ mod tests {
 
     #[test]
     fn perceived_cost_is_buffer_not_transfer() {
-        let (_, report) = world_stream(Codec::None, 1);
-        let s = &report.steps[0];
-        let perceived = s.cost.perceived();
-        let durable = s.cost.durable();
-        assert!(perceived < durable, "transfer must be background");
-        assert!(s.cost.phases.iter().any(|p| p.name == "transfer" && !p.blocking));
+        for plane in [DataPlane::Funnel, DataPlane::Lanes] {
+            let (_, report) = world_stream(Codec::None, 1, plane, 1);
+            let s = &report.steps[0];
+            let perceived = s.cost.perceived();
+            let durable = s.cost.durable();
+            assert!(perceived < durable, "transfer must be background");
+            assert!(s.cost.phases.iter().any(|p| p.name == "transfer" && !p.blocking));
+        }
     }
 
     #[test]
@@ -552,6 +1298,8 @@ mod tests {
                 CostModel::new(HardwareSpec::paper_testbed(1)),
                 &comm,
                 Duration::from_secs(5),
+                DataPlane::Lanes,
+                1,
             )
             .unwrap();
             for s in 0..nsteps {
@@ -573,15 +1321,74 @@ mod tests {
     }
 
     #[test]
-    fn connect_timeout_errors() {
+    fn sst_source_step_api() {
+        // The StepSource surface over a live stream: begin/inquire/read/
+        // selection/end, then EndOfStream.
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let consumer = std::thread::spawn(move || {
+            let mut src = SstSource::new(listener.accept().unwrap());
+            let mut seen = Vec::new();
+            loop {
+                match src.begin_step(Duration::from_secs(10)).unwrap() {
+                    StepStatus::Ready => {}
+                    StepStatus::EndOfStream => break,
+                    StepStatus::Timeout => panic!("unexpected timeout"),
+                }
+                assert_eq!(src.var_names(), vec!["THETA".to_string()]);
+                assert_eq!(src.var_shape("THETA").unwrap(), vec![4, 8]);
+                let (_, g) = src.read_var_global("THETA").unwrap();
+                let sel = src.read_var_selection("THETA", &[1, 2], &[2, 3]).unwrap();
+                assert_eq!(sel[0], g[8 + 2]);
+                assert_eq!(sel.len(), 6);
+                assert!(src.step_stored_bytes() > 0);
+                seen.push((src.step_index(), g));
+                src.end_step().unwrap();
+            }
+            seen
+        });
+        run_world(4, 2, move |mut comm| {
+            let mut eng = SstEngine::open(
+                &addr,
+                OperatorConfig::blosc(Codec::Lz4),
+                CostModel::new(HardwareSpec::paper_testbed(2)),
+                &comm,
+                Duration::from_secs(5),
+                DataPlane::Lanes,
+                1,
+            )
+            .unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..2 {
+                eng.begin_step().unwrap();
+                let data: Vec<f32> = (0..8).map(|i| (s * 100 + r * 8 + i) as f32).collect();
+                eng.put_f32(
+                    Variable::global("THETA", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                    data,
+                )
+                .unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap();
+        });
+        let seen = consumer.join().unwrap();
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0].0, 0);
+        assert_eq!(seen[1].0, 1);
+        assert_eq!(seen[1].1[9], 109.0);
+    }
+
+    #[test]
+    fn connect_timeout_errors_with_attempts() {
         // Nothing listens on this port.
-        let r = connect_retry("127.0.0.1:1", Duration::from_millis(50));
-        assert!(r.is_err());
+        let r = connect_retry("127.0.0.1:1", Duration::from_millis(60));
+        let msg = format!("{}", r.err().expect("must fail"));
+        assert!(msg.contains("attempts"), "error should count attempts: {msg}");
     }
 
     #[test]
     fn missing_var_is_error() {
-        let (steps, _) = world_stream(Codec::None, 1);
+        let (steps, _) = world_stream(Codec::None, 1, DataPlane::Lanes, 1);
         assert!(steps[0].read_var_global("NOPE").is_err());
     }
 }

@@ -22,6 +22,7 @@ pub mod bp;
 pub mod config;
 pub mod engine;
 pub mod operator;
+pub mod source;
 pub mod variable;
 
 use std::path::Path;
@@ -34,6 +35,7 @@ use crate::{Error, Result};
 pub use config::{AdiosConfig, EngineKind, IoConfig};
 pub use engine::{DrainStats, Engine, EngineReport, Target};
 pub use operator::{Codec, OperatorConfig};
+pub use source::{StepSource, StepStatus};
 pub use variable::Variable;
 
 /// Top-level context (the `adios2::ADIOS` analog).
@@ -104,6 +106,8 @@ impl Adios {
                     // measures both).
                     async_io: io.param_bool("AsyncIO", true)?,
                     drain_throttle: None,
+                    // Per-step atomic md.idx republish for live followers.
+                    live_publish: io.param_bool("LivePublish", false)?,
                 };
                 Ok(Box::new(engine::bp4::Bp4Engine::open(cfg, comm)?))
             }
@@ -111,12 +115,17 @@ impl Adios {
                 let addr = io
                     .param("Address")
                     .ok_or_else(|| Error::config("SST io needs an Address parameter"))?;
+                // Parallel lanes by default; the rank-0 funnel stays
+                // available as the measured baseline.
+                let plane = engine::sst::DataPlane::parse(io.param("DataPlane").unwrap_or("lanes"))?;
                 Ok(Box::new(engine::sst::SstEngine::open(
                     addr,
                     io.operator,
                     cost,
                     comm,
                     Duration::from_secs(30),
+                    plane,
+                    io.aggregators_per_node()?,
                 )?))
             }
             EngineKind::Null => Ok(Box::new(NullEngine::default())),

@@ -1,0 +1,165 @@
+//! The unified streaming-read layer: [`StepSource`] (DESIGN.md §9).
+//!
+//! ADIOS2 gives *readers* the same step-based API it gives writers:
+//! `BeginStep(timeout)` / variable inquiry / selection reads / `EndStep`,
+//! identical whether the engine behind it is a live SST stream or a BP
+//! file being tailed.  That symmetry is what lets the paper's in-situ
+//! pipeline swap transports without touching the consumer, and it is the
+//! contract this trait reproduces:
+//!
+//! * [`crate::adios::engine::sst::SstSource`] — steps arriving over the
+//!   SST data plane (serial funnel or parallel lanes);
+//! * [`crate::adios::bp::follower::BpFollower`] — steps tailed from a
+//!   live (or completed) BP4 directory on the file system.
+//!
+//! Consumers (`analysis::InsituAnalyzer`, `convert::stream_to_nc`, the
+//! examples and benches) are written against `&mut dyn StepSource` only.
+
+use std::time::Duration;
+
+use crate::{Error, Result};
+
+/// Outcome of a [`StepSource::begin_step`] wait (ADIOS2 `StepStatus`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepStatus {
+    /// A step is open; inquire/read until `end_step`.
+    Ready,
+    /// The producer finished cleanly; no further steps will arrive.
+    EndOfStream,
+    /// No step arrived within the timeout (producer stalled or slow);
+    /// the source remains usable — call `begin_step` again or give up.
+    Timeout,
+}
+
+/// A step-based reader over a streaming transport or a followed file.
+///
+/// Lifecycle: `begin_step` blocks up to its timeout for the next step;
+/// on [`StepStatus::Ready`] the step's variables can be inquired and
+/// read (repeatedly, in any order) until `end_step` releases it.
+pub trait StepSource: Send {
+    /// Short transport name for reports ("sst", "bp-follower", ...).
+    fn source_name(&self) -> &'static str;
+
+    /// Wait up to `timeout` for the next step.
+    fn begin_step(&mut self, timeout: Duration) -> Result<StepStatus>;
+
+    /// Index of the currently open step (0-based, producer order).
+    fn step_index(&self) -> usize;
+
+    /// Variable names available in the open step.
+    fn var_names(&self) -> Vec<String>;
+
+    /// Global shape of a variable in the open step.
+    fn var_shape(&self, name: &str) -> Result<Vec<u64>>;
+
+    /// Reconstitute the full global array of a variable.
+    fn read_var_global(&mut self, name: &str) -> Result<(Vec<u64>, Vec<f32>)>;
+
+    /// Read a box selection `[start, start+count)` of a variable, in
+    /// row-major `count` order (the ADIOS2 `SetSelection` path).
+    fn read_var_selection(
+        &mut self,
+        name: &str,
+        start: &[u64],
+        count: &[u64],
+    ) -> Result<Vec<f32>> {
+        let (shape, global) = self.read_var_global(name)?;
+        extract_box(&shape, &global, start, count)
+    }
+
+    /// Stored (wire / on-disk) bytes of the open step, for reports.
+    fn step_stored_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Global attributes of the stream (file sources only; internal
+    /// attributes prefixed `__` are implementation details and excluded).
+    fn attrs(&self) -> Vec<(String, String)> {
+        Vec::new()
+    }
+
+    /// Release the open step.
+    fn end_step(&mut self) -> Result<()>;
+}
+
+/// Copy the box `[start, start+count)` out of a row-major global array
+/// (shared fallback for sources that materialize the global first).
+pub fn extract_box(
+    shape: &[u64],
+    global: &[f32],
+    start: &[u64],
+    count: &[u64],
+) -> Result<Vec<f32>> {
+    // One bounds check shared with the SST consumer and the BP reader
+    // (rank, non-empty extents, overflow-checked `start+count <= shape`).
+    crate::adios::bp::validate_block_geometry(shape, start, count)?;
+    let total = crate::adios::bp::checked_elems(shape)?;
+    if global.len() as u64 != total {
+        return Err(Error::bp(format!(
+            "global array holds {} elems, shape {shape:?} declares {total}",
+            global.len()
+        )));
+    }
+    let nd = shape.len();
+    let mut strides = vec![1u64; nd];
+    for d in (0..nd - 1).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    let row = count[nd - 1] as usize;
+    let rows: u64 = count[..nd - 1].iter().product();
+    let mut out = Vec::with_capacity(rows.max(1) as usize * row);
+    let mut idx = vec![0u64; nd - 1];
+    for _ in 0..rows.max(1) {
+        let mut off = start[nd - 1];
+        for d in 0..nd - 1 {
+            off += (start[d] + idx[d]) * strides[d];
+        }
+        out.extend_from_slice(&global[off as usize..off as usize + row]);
+        for d in (0..nd - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < count[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_box_2d() {
+        // 4x6 global filled 0..24; box rows 1..3, cols 2..5.
+        let g: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let sel = extract_box(&[4, 6], &g, &[1, 2], &[2, 3]).unwrap();
+        assert_eq!(sel, vec![8.0, 9.0, 10.0, 14.0, 15.0, 16.0]);
+    }
+
+    #[test]
+    fn extract_box_whole_and_degenerate() {
+        let g: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        assert_eq!(extract_box(&[2, 4], &g, &[0, 0], &[2, 4]).unwrap(), g);
+        assert_eq!(extract_box(&[2, 4], &g, &[1, 3], &[1, 1]).unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    fn extract_box_3d_matches_manual() {
+        let g: Vec<f32> = (0..2 * 3 * 4).map(|i| i as f32).collect();
+        let sel = extract_box(&[2, 3, 4], &g, &[1, 1, 1], &[1, 2, 2]).unwrap();
+        // z=1 plane starts at 12; (y,x) (1,1)=17 (1,2)=18 (2,1)=21 (2,2)=22.
+        assert_eq!(sel, vec![17.0, 18.0, 21.0, 22.0]);
+    }
+
+    #[test]
+    fn extract_box_rejects_bad_selections() {
+        let g = vec![0.0f32; 8];
+        assert!(extract_box(&[2, 4], &g, &[0, 0], &[2, 5]).is_err());
+        assert!(extract_box(&[2, 4], &g, &[0], &[2]).is_err());
+        assert!(extract_box(&[2, 4], &g, &[0, 0], &[0, 4]).is_err());
+        // Overflowing start+count must be rejected, not wrap past the check.
+        assert!(extract_box(&[2, 4], &g, &[u64::MAX, 0], &[2, 4]).is_err());
+    }
+}

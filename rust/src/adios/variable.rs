@@ -66,6 +66,12 @@ impl Variable {
                 self.name
             )));
         }
+        // Symmetric with the readers' element cap (`bp::checked_elems`):
+        // reject at put time anything the read path would refuse, so the
+        // engines can never write a file they cannot read back.
+        crate::adios::bp::checked_elems(&self.shape).map_err(|e| {
+            Error::adios(format!("variable `{}`: {e}", self.name))
+        })?;
         for (d, ((&s, &c), &g)) in self
             .start
             .iter()

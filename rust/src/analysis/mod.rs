@@ -2,15 +2,18 @@
 //!
 //! The paper's pipeline plots a temperature slice over CONUS from each
 //! history step, consuming data over SST while the model keeps running.
-//! Our consumer does the same work: for every SST step it reconstitutes
-//! the THETA field, reduces it (slice statistics + histogram — through the
+//! Our consumer does the same work — for every step it reconstitutes the
+//! THETA field, reduces it (slice statistics + histogram — through the
 //! AOT-compiled `analysis.hlo.txt` when the grid matches, else the native
 //! fallback that mirrors it), and renders the downsampled slice as a PGM
-//! image (the matplotlib-figure stand-in).
+//! image (the matplotlib-figure stand-in) — against **any**
+//! [`StepSource`]: funnel-SST, parallel-lane SST, or a live BP4
+//! file-follower, without changing a line of the analysis.
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
-use crate::adios::engine::sst::{SstConsumer, SstStep};
+use crate::adios::source::{StepSource, StepStatus};
 use crate::metrics::Stopwatch;
 use crate::runtime::{AnalysisOutput, AnalysisStep};
 use crate::{Error, Result};
@@ -128,10 +131,11 @@ impl InsituAnalyzer {
         }
     }
 
-    /// Analyze one received step.
-    pub fn analyze_step(&self, step: &SstStep) -> Result<AnalysisRecord> {
+    /// Analyze the step currently open on `src`.
+    pub fn analyze_current(&self, src: &mut dyn StepSource) -> Result<AnalysisRecord> {
         let sw = Stopwatch::start();
-        let (shape, theta) = step.read_var_global(&self.var)?;
+        let step = src.step_index();
+        let (shape, theta) = src.read_var_global(&self.var)?;
         if shape.len() != 3 {
             return Err(Error::model(format!(
                 "variable `{}` is not 3-D (shape {shape:?})",
@@ -145,14 +149,14 @@ impl InsituAnalyzer {
         };
         let image = if let Some(dir) = &self.image_dir {
             std::fs::create_dir_all(dir)?;
-            let p = dir.join(format!("theta_slice_{:03}.pgm", step.index));
+            let p = dir.join(format!("theta_slice_{step:03}.pgm"));
             write_pgm(&p, &out.slice_ds, ny / 4, nx / 4)?;
             Some(p)
         } else {
             None
         };
         Ok(AnalysisRecord {
-            step: step.index,
+            step,
             wall_secs: sw.secs(),
             surf_min: out.level_min[0],
             surf_max: out.level_max[0],
@@ -161,12 +165,32 @@ impl InsituAnalyzer {
         })
     }
 
-    /// Drain a consumer to completion (the paper's
-    /// `for fstep in adios2_fh` loop).  Returns one record per step.
-    pub fn run(&self, consumer: &mut SstConsumer) -> Result<Vec<AnalysisRecord>> {
+    /// Drain any streaming source to completion (the paper's
+    /// `for fstep in adios2_fh` loop).  `step_timeout` bounds the wait
+    /// for each next step; a producer that stalls past it surfaces as an
+    /// error naming the step it stalled at.  Returns one record per step.
+    pub fn run(
+        &self,
+        src: &mut dyn StepSource,
+        step_timeout: Duration,
+    ) -> Result<Vec<AnalysisRecord>> {
         let mut records = Vec::new();
-        while let Some(step) = consumer.next_step()? {
-            records.push(self.analyze_step(&step)?);
+        loop {
+            match src.begin_step(step_timeout)? {
+                StepStatus::EndOfStream => break,
+                StepStatus::Timeout => {
+                    return Err(Error::model(format!(
+                        "in-situ {} source stalled: no step {} within {:.1}s",
+                        src.source_name(),
+                        records.len(),
+                        step_timeout.as_secs_f64()
+                    )))
+                }
+                StepStatus::Ready => {
+                    records.push(self.analyze_current(src)?);
+                    src.end_step()?;
+                }
+            }
         }
         Ok(records)
     }

@@ -1,5 +1,9 @@
 //! Converters for backwards compatibility (paper §IV).
 //!
+//! * [`stream_to_nc`] — the step-streaming converter over any
+//!   [`StepSource`]: one CDF-lite file per arriving step, identical
+//!   whether the source is SST, a **live** BP4 run being tailed by a
+//!   file-follower, or a completed BP directory.
 //! * [`bp_to_nc`] — the paper's stand-alone BP → NetCDF converter, so
 //!   "legacy post-processing pipelines" keep working (their Python tool
 //!   converted a CONUS 2.5 km history file in <10 s single-threaded; ours
@@ -8,25 +12,77 @@
 //!   split-NetCDF (`io_form=102`) per-rank files back into one file.
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
-use crate::adios::bp::reader::BpReader;
+use crate::adios::bp::follower::BpFollower;
+use crate::adios::source::{StepSource, StepStatus};
 use crate::io::cdf::{CdfReader, CdfWriter, DType};
 use crate::{Error, Result};
 
 /// Convert one step of a BP directory into a CDF-lite NetCDF-style file.
 /// Returns bytes written.
+///
+/// Shares [`write_open_step`] with the streaming converters: a
+/// [`BpFollower`] is positioned on `step`, so single-step and streaming
+/// conversions can never drift apart.
 pub fn bp_to_nc(bp_dir: &Path, out: &Path, step: usize, compress: bool) -> Result<u64> {
-    let rd = BpReader::open(bp_dir)?;
-    let names: Vec<String> = rd
-        .var_names(step)?
-        .into_iter()
-        .map(|s| s.to_string())
-        .collect();
+    require_index(bp_dir)?;
+    let extra = [("SOURCE".to_string(), bp_dir.display().to_string())];
+    let mut src = BpFollower::open(bp_dir, Duration::from_millis(1))?;
+    let mut delivered = 0usize;
+    loop {
+        match src.begin_step(Duration::from_millis(1))? {
+            StepStatus::Ready => {}
+            StepStatus::EndOfStream | StepStatus::Timeout => {
+                return Err(Error::bp(format!(
+                    "step {step} out of range ({delivered})"
+                )))
+            }
+        }
+        if src.step_index() == step {
+            let n = write_open_step(
+                &mut src,
+                out,
+                compress,
+                "converted from BP by stormio convert",
+                &extra,
+            )?;
+            src.end_step()?;
+            return Ok(n);
+        }
+        src.end_step()?;
+        delivered += 1;
+    }
+}
+
+/// A follower treats a missing `md.idx` as "producer not started yet";
+/// the one-shot converters want the reader's immediate error instead.
+fn require_index(bp_dir: &Path) -> Result<()> {
+    if !bp_dir.join("md.idx").exists() {
+        return Err(Error::bp(format!(
+            "cannot read {}/md.idx: no such file",
+            bp_dir.display()
+        )));
+    }
+    Ok(())
+}
+
+/// Write the step currently open on `src` to `out` (shared body of the
+/// streaming and directory converters).  `extra_attrs` are written after
+/// `title`, before the source's own (non-internal) attributes.
+fn write_open_step(
+    src: &mut dyn StepSource,
+    out: &Path,
+    compress: bool,
+    title: &str,
+    extra_attrs: &[(String, String)],
+) -> Result<u64> {
+    let names = src.var_names();
     let mut w = CdfWriter::new(compress);
     let mut dims: Vec<u64> = Vec::new();
     let mut shapes = Vec::with_capacity(names.len());
     for n in &names {
-        let shape = rd.var_shape(step, n)?;
+        let shape = src.var_shape(n)?;
         for d in &shape {
             if !dims.contains(d) {
                 dims.push(*d);
@@ -37,10 +93,12 @@ pub fn bp_to_nc(bp_dir: &Path, out: &Path, step: usize, compress: bool) -> Resul
     for d in &dims {
         w.def_dim(&format!("dim{d}"), *d)?;
     }
-    w.put_attr("TITLE", "converted from BP by stormio convert");
-    w.put_attr("SOURCE", &bp_dir.display().to_string());
-    for (k, v) in &rd.attrs {
+    w.put_attr("TITLE", title);
+    for (k, v) in extra_attrs {
         w.put_attr(k, v);
+    }
+    for (k, v) in src.attrs() {
+        w.put_attr(&k, &v);
     }
     for (n, shape) in names.iter().zip(&shapes) {
         let dn: Vec<String> = shape.iter().map(|d| format!("dim{d}")).collect();
@@ -49,25 +107,91 @@ pub fn bp_to_nc(bp_dir: &Path, out: &Path, step: usize, compress: bool) -> Resul
     }
     w.end_define();
     for n in &names {
-        let (_, data) = rd.read_var_global(step, n)?;
+        let (_, data) = src.read_var_global(n)?;
         w.put_var_f32(n, &data)?;
     }
     w.finish(out)
 }
 
+/// Stream every step arriving on `src` into one CDF-lite file per step
+/// (`<stem>_step<i>.nc`).  Works identically over SST, a live BP4
+/// follower, or a completed BP directory; `step_timeout` bounds the wait
+/// for each next step so a stalled producer surfaces as an error instead
+/// of a hang.  Returns the written paths in step order.
+pub fn stream_to_nc(
+    src: &mut dyn StepSource,
+    out_dir: &Path,
+    stem: &str,
+    compress: bool,
+    step_timeout: Duration,
+) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    loop {
+        match src.begin_step(step_timeout)? {
+            StepStatus::EndOfStream => break,
+            StepStatus::Timeout => {
+                return Err(Error::Cdf(format!(
+                    "convert: {} source stalled, no step {} within {:.1}s",
+                    src.source_name(),
+                    paths.len(),
+                    step_timeout.as_secs_f64()
+                )))
+            }
+            StepStatus::Ready => {}
+        }
+        let p = out_dir.join(format!("{stem}_step{}.nc", src.step_index()));
+        write_open_step(
+            src,
+            &p,
+            compress,
+            "converted from step stream by stormio convert",
+            &[],
+        )?;
+        paths.push(p);
+        src.end_step()?;
+    }
+    Ok(paths)
+}
+
 /// Convert every step of a BP directory; returns the written paths.
+///
+/// Since the streaming-read refactor this drains a [`BpFollower`] over
+/// the directory.  A completed directory carries the completion marker
+/// and ends the stream; a directory *without* the marker (written before
+/// the marker existed, or by a producer that died before `close`) is
+/// converted up to the last published step and finishes cleanly — the
+/// backwards-compatibility contract of this converter.
 pub fn bp_to_nc_all(bp_dir: &Path, out_dir: &Path, compress: bool) -> Result<Vec<PathBuf>> {
-    let rd = BpReader::open(bp_dir)?;
+    // A missing index errors immediately (a corrupt one surfaces from
+    // the follower's first poll).
+    require_index(bp_dir)?;
     std::fs::create_dir_all(out_dir)?;
     let stem = bp_dir
         .file_stem()
         .map(|s| s.to_string_lossy().to_string())
         .unwrap_or_else(|| "out".into());
+    let extra = [("SOURCE".to_string(), bp_dir.display().to_string())];
+    let mut src = BpFollower::open(bp_dir, Duration::from_millis(1))?;
     let mut paths = Vec::new();
-    for s in 0..rd.num_steps() {
-        let p = out_dir.join(format!("{stem}_step{s}.nc"));
-        bp_to_nc(bp_dir, &p, s, compress)?;
+    loop {
+        // Zero-ish timeout: everything published is already on disk, and
+        // for this converter "no more steps right now" means done —
+        // marker or not.
+        match src.begin_step(Duration::from_millis(1))? {
+            StepStatus::Ready => {}
+            StepStatus::EndOfStream | StepStatus::Timeout => break,
+        }
+        let p = out_dir.join(format!("{stem}_step{}.nc", src.step_index()));
+        write_open_step(
+            &mut src,
+            &p,
+            compress,
+            "converted from BP by stormio convert",
+            &extra,
+        )?;
         paths.push(p);
+        src.end_step()?;
     }
     Ok(paths)
 }
@@ -183,6 +307,7 @@ mod tests {
                 pack_threads: 0,
                 async_io: true,
                 drain_throttle: None,
+                live_publish: false,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;

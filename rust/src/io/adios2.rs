@@ -2,11 +2,15 @@
 //! contribution (§IV): WRF history frames routed through the
 //! ADIOS2-workalike library.
 //!
-//! Two modes, matching the paper's two deployments:
+//! Three modes, matching the paper's deployments:
 //! * **file mode** — one BP4 output per history frame
 //!   (`frames_per_outfile=1`), sub-files + aggregators + operators;
 //! * **stream mode** — one long-lived SST engine; each history frame is
-//!   one SST step delivered to the in-situ consumer (§V-F).
+//!   one SST step delivered to the in-situ consumer (§V-F);
+//! * **single-file mode** — `FramesPerOutfile=0` (WRF's "all frames in
+//!   one outfile"): one long-lived BP4 engine, every history frame one
+//!   step of the same BP directory.  Combined with `LivePublish` this is
+//!   what live file-followers tail (DESIGN.md §9).
 
 use std::path::PathBuf;
 
@@ -26,6 +30,7 @@ pub struct Adios2Backend {
     /// Stream mode keeps one engine across frames.
     stream_engine: Option<Box<dyn Engine>>,
     is_stream: bool,
+    is_sst: bool,
     reports: Vec<FrameReport>,
 }
 
@@ -42,7 +47,10 @@ impl Adios2Backend {
             .config
             .io(&io_name)
             .ok_or_else(|| Error::config(format!("io `{io_name}` not in adios config")))?;
-        let is_stream = io.engine == EngineKind::Sst;
+        // One long-lived multi-step engine: SST always; BP4 when every
+        // frame goes into one outfile (FramesPerOutfile=0).
+        let is_sst = io.engine == EngineKind::Sst;
+        let is_stream = is_sst || io.param_usize("FramesPerOutfile", 1)? == 0;
         Ok(Adios2Backend {
             adios,
             io_name,
@@ -51,6 +59,7 @@ impl Adios2Backend {
             cost,
             stream_engine: None,
             is_stream,
+            is_sst,
             reports: Vec::new(),
         })
     }
@@ -77,8 +86,10 @@ impl Adios2Backend {
 
 impl HistoryBackend for Adios2Backend {
     fn name(&self) -> &'static str {
-        if self.is_stream {
+        if self.is_sst {
             "adios2-sst(io_form=22)"
+        } else if self.is_stream {
+            "adios2-bp4-stream(io_form=22)"
         } else {
             "adios2-bp4(io_form=22)"
         }
@@ -93,14 +104,22 @@ impl HistoryBackend for Adios2Backend {
     ) -> Result<()> {
         if self.is_stream {
             if self.stream_engine.is_none() {
-                self.stream_engine = Some(self.adios.open_write(
+                let mut eng = self.adios.open_write(
                     &self.io_name,
                     frame_name,
                     &self.pfs_dir,
                     &self.bb_root,
                     self.cost.clone(),
                     comm,
-                )?);
+                )?;
+                if comm.rank() == 0 {
+                    // Same WRF-style global attributes as per-frame mode
+                    // (SST engines ignore attributes; BP4 single-file
+                    // mode records them once for the whole run).
+                    eng.put_attr("TITLE", "OUTPUT FROM STORMIO (WRF-analog) V4.2-repro")?;
+                    eng.put_attr("HISTORY_FRAME", frame_name)?;
+                }
+                self.stream_engine = Some(eng);
             }
             let eng = self.stream_engine.as_mut().unwrap();
             eng.begin_step()?;

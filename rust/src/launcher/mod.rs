@@ -17,6 +17,9 @@
 //!   adios2_compression     = 'lz4',    ! none|blosclz|lz4|zlib|zstd
 //!   adios2_target          = 'pfs',    ! pfs | bb
 //!   adios2_drain           = .false.,
+//!   adios2_sst_data_plane  = 'lanes',  ! lanes | funnel (SST engines)
+//!   adios2_live_publish    = .false.,  ! per-step md.idx for followers
+//!   frames_per_outfile     = 1,        ! 0 = all frames in one BP file
 //!   nio_tasks              = 2,        ! quilt servers (io_form=901)
 //! /
 //! &domains
@@ -59,6 +62,12 @@ pub struct RunConfig {
     pub codec: Codec,
     pub target_bb: bool,
     pub drain: bool,
+    /// SST data plane: "lanes" (parallel, default) or "funnel" (baseline).
+    pub sst_data_plane: String,
+    /// Republish `md.idx` per step so live file-followers can tail the run.
+    pub live_publish: bool,
+    /// WRF `frames_per_outfile`: 0 = all history frames in one BP file.
+    pub frames_per_outfile: usize,
     pub out_dir: PathBuf,
     pub nodes: usize,
     pub volume_scale: f64,
@@ -114,6 +123,12 @@ impl RunConfig {
                 .map(|s| s.eq_ignore_ascii_case("bb"))
                 .unwrap_or(false),
             drain: tc.get_bool("adios2_drain").unwrap_or(false),
+            sst_data_plane: tc
+                .get_str("adios2_sst_data_plane")
+                .unwrap_or("lanes")
+                .to_string(),
+            live_publish: tc.get_bool("adios2_live_publish").unwrap_or(false),
+            frames_per_outfile: get(tc, "frames_per_outfile", 1).max(0) as usize,
             out_dir: base_dir.join(out_dir),
             nodes,
             volume_scale: st
@@ -138,14 +153,23 @@ impl RunConfig {
             None => Adios::default(),
         };
         let io = adios.declare_io("wrf_history");
+        io.params
+            .insert("NumAggregatorsPerNode".into(), self.aggs_per_node.to_string());
         if io.engine == EngineKind::Bp4 {
-            io.params
-                .insert("NumAggregatorsPerNode".into(), self.aggs_per_node.to_string());
             io.params.insert(
                 "Target".into(),
                 if self.target_bb { "burstbuffer" } else { "pfs" }.into(),
             );
             io.params.insert("DrainBB".into(), self.drain.to_string());
+            io.params
+                .insert("LivePublish".into(), self.live_publish.to_string());
+            io.params.insert(
+                "FramesPerOutfile".into(),
+                self.frames_per_outfile.to_string(),
+            );
+        } else if io.engine == EngineKind::Sst {
+            io.params
+                .insert("DataPlane".into(), self.sst_data_plane.clone());
         }
         io.operator = OperatorConfig::blosc(self.codec);
         Ok(adios)
@@ -248,6 +272,9 @@ mod tests {
    adios2_num_aggregators = 2,
    adios2_target = 'bb',
    adios2_drain = .true.,
+   adios2_sst_data_plane = 'funnel',
+   adios2_live_publish = .true.,
+   frames_per_outfile = 0,
  /
  &domains
    e_we = 192, e_sn = 192, e_vert = 4,
@@ -267,6 +294,9 @@ mod tests {
         assert_eq!(cfg.codec, Codec::Zstd);
         assert!(cfg.target_bb && cfg.drain);
         assert_eq!(cfg.aggs_per_node, 2);
+        assert_eq!(cfg.sst_data_plane, "funnel");
+        assert!(cfg.live_publish);
+        assert_eq!(cfg.frames_per_outfile, 0);
         assert_eq!(cfg.forecast.frames, 2);
         assert_eq!(cfg.forecast.steps_per_interval, 3);
         assert_eq!(cfg.out_dir, PathBuf::from("/base/out"));
@@ -286,6 +316,32 @@ mod tests {
             crate::adios::Target::BurstBuffer { drain: true }
         );
         assert_eq!(io.operator.codec, Codec::Zstd);
+        // Follower-enablement knobs flow through to the engine params.
+        assert_eq!(io.param("LivePublish"), Some("true"));
+        assert_eq!(io.param("FramesPerOutfile"), Some("0"));
+    }
+
+    #[test]
+    fn sst_io_gets_data_plane_from_namelist() {
+        let nl = Namelist::parse(NL).unwrap();
+        let cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/base")).unwrap();
+        let dir = std::env::temp_dir().join(format!("stormio_launch_sst_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(
+            dir.join("adios2.xml"),
+            r#"<adios-config><io name="wrf_history">
+              <engine type="SST"><parameter key="Address" value="127.0.0.1:1"/></engine>
+            </io></adios-config>"#,
+        )
+        .unwrap();
+        let mut cfg = cfg;
+        cfg.adios_xml = Some("adios2.xml".to_string());
+        let adios = cfg.adios(&dir).unwrap();
+        let io = adios.config.io("wrf_history").unwrap();
+        assert_eq!(io.engine, EngineKind::Sst);
+        assert_eq!(io.param("DataPlane"), Some("funnel"));
+        assert_eq!(io.aggregators_per_node().unwrap(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -18,6 +18,11 @@ USAGE:
       Convert every step of a BP directory to NetCDF-style files
       (the paper's §IV backwards-compatibility converter).
 
+  stormio follow <dir.bp> <out_dir> [--timeout SECS] [--no-compress]
+      Tail a *live* BP directory (a producer running with
+      LivePublish) and convert each step to NetCDF as it is
+      published; exits when the producer completes.
+
   stormio stitch <out.nc> <part.nc> [part.nc ...]
       Stitch split-NetCDF (io_form=102) per-rank files into one file.
 
@@ -45,8 +50,8 @@ fn real_main() -> stormio::Result<i32> {
             Ok(0)
         }
         Some("convert") => {
-            let bp = args.get(1).and_then(|s| Some(PathBuf::from(s)));
-            let out = args.get(2).and_then(|s| Some(PathBuf::from(s)));
+            let bp = args.get(1).map(PathBuf::from);
+            let out = args.get(2).map(PathBuf::from);
             let (Some(bp), Some(out)) = (bp, out) else {
                 eprintln!("{USAGE}");
                 return Ok(2);
@@ -63,6 +68,43 @@ fn real_main() -> stormio::Result<i32> {
             for p in paths {
                 println!("  {}", p.display());
             }
+            Ok(0)
+        }
+        Some("follow") => {
+            let bp = args.get(1).map(PathBuf::from);
+            let out = args.get(2).map(PathBuf::from);
+            let (Some(bp), Some(out)) = (bp, out) else {
+                eprintln!("{USAGE}");
+                return Ok(2);
+            };
+            let secs: u64 = args
+                .windows(2)
+                .find(|w| w[0] == "--timeout")
+                .and_then(|w| w[1].parse().ok())
+                .unwrap_or(300);
+            let compress = !args.iter().any(|a| a == "--no-compress");
+            let stem = bp
+                .file_stem()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_else(|| "out".into());
+            let mut src = stormio::adios::bp::follower::BpFollower::open(
+                &bp,
+                std::time::Duration::from_millis(50),
+            )?;
+            let sw = stormio::metrics::Stopwatch::start();
+            let paths = convert::stream_to_nc(
+                &mut src,
+                &out,
+                &stem,
+                compress,
+                std::time::Duration::from_secs(secs),
+            )?;
+            println!(
+                "followed {} live: converted {} step(s) in {:.2}s",
+                bp.display(),
+                paths.len(),
+                sw.secs()
+            );
             Ok(0)
         }
         Some("stitch") => {

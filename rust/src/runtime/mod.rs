@@ -95,9 +95,8 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(3);
         let plane = step.nz * (step.nyp + 4) * (step.nxp + 4);
         let mut padded = vec![0.0f32; step.padded_len()];
-        for i in 0..padded.len() {
-            let f = i / plane;
-            padded[i] = match f {
+        for (i, p) in padded.iter_mut().enumerate() {
+            *p = match i / plane {
                 0 => 1.0 + 0.05 * rng.normal() as f32,
                 3 => 300.0 + rng.normal() as f32,
                 _ => 0.1 * rng.normal() as f32,

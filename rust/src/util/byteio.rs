@@ -58,7 +58,9 @@ impl<'a> Reader<'a> {
         Reader { b, pos: 0 }
     }
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.b.len() {
+        // `pos <= len` is an invariant; comparing against the remainder
+        // keeps an attacker-chosen huge `n` from overflowing `pos + n`.
+        if n > self.b.len() - self.pos {
             return Err(Error::bp(format!(
                 "truncated buffer: need {n} bytes at {}",
                 self.pos
@@ -93,7 +95,9 @@ impl<'a> Reader<'a> {
     }
     pub fn dims(&mut self) -> Result<Vec<u64>> {
         let n = self.u32()? as usize;
-        let mut out = Vec::with_capacity(n);
+        // Never pre-allocate from an untrusted count beyond what the
+        // buffer could actually hold (8 bytes per dim).
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
         for _ in 0..n {
             out.push(self.u64()?);
         }
@@ -130,6 +134,20 @@ mod tests {
         assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
         assert_eq!(r.dims().unwrap(), vec![4, 288, 576]);
         assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn huge_declared_length_errors_without_overflow() {
+        // A corrupt buffer declaring a u64::MAX byte string must produce
+        // a descriptive error, not an overflowing bounds check.
+        let mut w = Writer::new();
+        w.u64(u64::MAX);
+        let v = w.into_vec();
+        assert!(Reader::new(&v).bytes().is_err());
+        let mut w = Writer::new();
+        w.u32(u32::MAX);
+        let v = w.into_vec();
+        assert!(Reader::new(&v).str().is_err());
     }
 
     #[test]

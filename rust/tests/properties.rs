@@ -123,6 +123,7 @@ fn prop_bp_roundtrip_random_worlds() {
                 pack_threads: 0,
                 async_io: true,
                 drain_throttle: None,
+                live_publish: false,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;

@@ -1,0 +1,492 @@
+//! Streaming-read layer tests: wire-protocol hardening (garbage /
+//! truncation / length bombs), transport equivalence (funnel-SST vs
+//! parallel-lane SST vs the BP4 file-follower, byte-identical payloads
+//! and bit-identical analysis statistics), live NetCDF conversion off a
+//! tailed BP4 run, and follower timeout semantics.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use stormio::adios::bp::follower::BpFollower;
+use stormio::adios::bp::{read_metadata, write_metadata};
+use stormio::adios::engine::bp4::{Bp4Config, Bp4Engine};
+use stormio::adios::engine::sst::{
+    DataPlane, SstConsumer, SstEngine, SstSource, MAGIC, MAX_FRAME_LEN, TYPE_HELLO, TYPE_STEP,
+};
+use stormio::adios::engine::{Engine, Target};
+use stormio::adios::operator::{Codec, OperatorConfig};
+use stormio::adios::source::{StepSource, StepStatus};
+use stormio::adios::Variable;
+use stormio::analysis::{AnalysisRecord, InsituAnalyzer};
+use stormio::cluster::{run_world, Comm};
+use stormio::io::cdf::CdfReader;
+use stormio::sim::{CostModel, HardwareSpec};
+use stormio::util::byteio::Writer;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("stormio_stream_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Raw wire frame (test-side mirror of the producer's framing).
+fn frame_bytes(ty: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13 + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(ty);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn hello_frame(lane: u32, nlanes: u32) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(lane);
+    w.u32(nlanes);
+    frame_bytes(TYPE_HELLO, &w.into_vec())
+}
+
+// ---------------------------------------------------------------------------
+// Wire-protocol hardening
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_rejects_garbage() {
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GARBAGE GARBAGE GARBAGE GARBAGE").unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+    });
+    let err = listener.accept().err().expect("garbage hello accepted");
+    assert!(
+        format!("{err}").contains("magic"),
+        "want bad-magic error, got: {err}"
+    );
+    peer.join().unwrap();
+}
+
+#[test]
+fn wire_rejects_length_bomb_without_allocating() {
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&hello_frame(0, 1)).unwrap();
+        // A frame header declaring a u64::MAX-byte payload: the consumer
+        // must reject it from the header alone (no allocation, no read).
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC.to_le_bytes());
+        hdr.push(TYPE_STEP);
+        hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+        s.write_all(&hdr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+    });
+    let mut c = listener.accept().unwrap();
+    let t0 = Instant::now();
+    let err = c.next_step().err().expect("length bomb accepted");
+    assert!(
+        format!("{err}").contains("cap"),
+        "want cap-exceeded error, got: {err}"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(5), "bomb rejection stalled");
+    peer.join().unwrap();
+}
+
+#[test]
+fn wire_rejects_truncated_step() {
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&hello_frame(0, 1)).unwrap();
+        // Declare 100 payload bytes, deliver 10, hang up.
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC.to_le_bytes());
+        hdr.push(TYPE_STEP);
+        hdr.extend_from_slice(&100u64.to_le_bytes());
+        hdr.extend_from_slice(&[7u8; 10]);
+        s.write_all(&hdr).unwrap();
+        // Socket drops here.
+    });
+    let mut c = listener.accept().unwrap();
+    let err = c.next_step().err().expect("truncated frame accepted");
+    assert!(
+        format!("{err}").contains("truncated"),
+        "want truncation error, got: {err}"
+    );
+    peer.join().unwrap();
+}
+
+#[test]
+fn wire_rejects_declared_raw_bomb() {
+    // A structurally valid step frame whose block declares an absurd
+    // decompressed length must be rejected at parse time.
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&hello_frame(0, 1)).unwrap();
+        let mut w = Writer::new();
+        w.u64(0); // step index
+        w.u32(1); // nvars
+        w.str("X");
+        w.dims(&[4]);
+        w.u32(1); // nblocks
+        w.u32(0); // producer rank
+        w.dims(&[0]);
+        w.dims(&[4]);
+        w.u64(MAX_FRAME_LEN + 1); // declared raw length: bomb
+        w.bytes(&[0u8; 4]);
+        s.write_all(&frame_bytes(TYPE_STEP, &w.into_vec())).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+    });
+    let mut c = listener.accept().unwrap();
+    let err = c.next_step().err().expect("raw-length bomb accepted");
+    assert!(
+        format!("{err}").contains("raw bytes"),
+        "want raw-cap error, got: {err}"
+    );
+    peer.join().unwrap();
+}
+
+#[test]
+fn wire_rejects_shape_and_geometry_bombs() {
+    // Structurally valid frames whose *geometry* lies: a shape declaring
+    // exa-scale element counts (allocation bomb) and a block placed
+    // outside its variable's extent (out-of-bounds scatter).  Both must
+    // surface as errors at read time, before any allocation/scatter.
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&hello_frame(0, 1)).unwrap();
+        let tiny = stormio::adios::operator::compress(&[0u8; 4], OperatorConfig::none()).unwrap();
+        let mut w = Writer::new();
+        w.u64(0); // step index
+        w.u32(2); // nvars
+        w.str("BOMB");
+        w.dims(&[1 << 31, 1 << 31]); // 2^62 elements
+        w.u32(1);
+        w.u32(0);
+        w.dims(&[0, 0]);
+        w.dims(&[1, 1]);
+        w.u64(4);
+        w.bytes(&tiny);
+        w.str("OOB");
+        w.dims(&[4]);
+        w.u32(1);
+        w.u32(0);
+        w.dims(&[100]); // start beyond the extent
+        w.dims(&[4]);
+        w.u64(4);
+        w.bytes(&tiny);
+        s.write_all(&frame_bytes(TYPE_STEP, &w.into_vec())).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+    });
+    let mut c = listener.accept().unwrap();
+    let step = c.next_step().unwrap().expect("frame parses");
+    let bomb = format!("{}", step.read_var_global("BOMB").err().expect("shape bomb read"));
+    assert!(bomb.contains("elements"), "want element-cap error, got: {bomb}");
+    let oob = format!("{}", step.read_var_global("OOB").err().expect("oob block read"));
+    assert!(oob.contains("exceeds dim"), "want geometry error, got: {oob}");
+    peer.join().unwrap();
+}
+
+#[test]
+fn wire_rejects_raw_mismatch_at_read() {
+    // A block whose frame decompresses to fewer bytes than declared must
+    // fail the read loudly (mirrors the BP reader's index check).
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&hello_frame(0, 1)).unwrap();
+        let block = stormio::adios::operator::compress(&[1u8; 8], OperatorConfig::none()).unwrap();
+        let mut w = Writer::new();
+        w.u64(0);
+        w.u32(1);
+        w.str("X");
+        w.dims(&[4]);
+        w.u32(1);
+        w.u32(0);
+        w.dims(&[0]);
+        w.dims(&[4]);
+        w.u64(16); // declares 16 raw bytes; the frame holds 8
+        w.bytes(&block);
+        s.write_all(&frame_bytes(TYPE_STEP, &w.into_vec())).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+    });
+    let mut c = listener.accept().unwrap();
+    let step = c.next_step().unwrap().expect("frame parses");
+    let err = step.read_var_global("X").err().expect("raw mismatch read back");
+    assert!(
+        format!("{err}").contains("declared"),
+        "want declared-length mismatch, got: {err}"
+    );
+    peer.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Transport equivalence: funnel-SST ≡ lane-SST ≡ BP4 follower
+// ---------------------------------------------------------------------------
+
+/// Deterministic field payload.
+fn field(step: usize, salt: u64, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (step * 1000) as f32 + salt as f32 * 37.5 + (i as f32 * 0.1).sin())
+        .collect()
+}
+
+const STEPS: usize = 3;
+
+/// Drive one producer rank's steps through any engine.
+fn produce(eng: &mut dyn Engine, comm: &mut Comm, steps: usize) {
+    let r = comm.rank() as u64;
+    for s in 0..steps {
+        eng.begin_step().unwrap();
+        eng.put_f32(
+            Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+            field(s, r, 12),
+        )
+        .unwrap();
+        eng.put_f32(
+            Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+            field(s, r + 10, 6),
+        )
+        .unwrap();
+        eng.end_step(comm).unwrap();
+    }
+}
+
+/// Canonical step payload: variables sorted by name, global f32 data as
+/// little-endian bytes — the representation the byte-identity acceptance
+/// criterion compares across transports.
+type Canon = Vec<(String, Vec<u64>, Vec<u8>)>;
+
+fn canon_step(src: &mut dyn StepSource) -> Canon {
+    let mut names = src.var_names();
+    names.sort();
+    names
+        .iter()
+        .map(|n| {
+            let (shape, data) = src.read_var_global(n).unwrap();
+            assert_eq!(shape, src.var_shape(n).unwrap());
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in &data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            (n.clone(), shape, bytes)
+        })
+        .collect()
+}
+
+/// Drain a source to completion, capturing canonical payloads and the
+/// analysis records the in-situ consumer would produce.
+fn drain_source(src: &mut dyn StepSource) -> (Vec<Canon>, Vec<AnalysisRecord>) {
+    let analyzer = InsituAnalyzer::new(None, None);
+    let mut canons = Vec::new();
+    let mut recs = Vec::new();
+    loop {
+        match src.begin_step(Duration::from_secs(30)).unwrap() {
+            StepStatus::Ready => {}
+            StepStatus::EndOfStream => break,
+            StepStatus::Timeout => panic!("{} source timed out", src.source_name()),
+        }
+        assert_eq!(src.step_index(), canons.len());
+        assert!(src.step_stored_bytes() > 0);
+        canons.push(canon_step(src));
+        recs.push(analyzer.analyze_current(src).unwrap());
+        src.end_step().unwrap();
+    }
+    (canons, recs)
+}
+
+fn run_sst(plane: DataPlane, aggs_per_node: usize) -> (Vec<Canon>, Vec<AnalysisRecord>) {
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let consumer = std::thread::spawn(move || {
+        let mut src = SstSource::new(listener.accept().unwrap());
+        drain_source(&mut src)
+    });
+    run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open(
+            &addr,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            plane,
+            aggs_per_node,
+        )
+        .unwrap();
+        produce(&mut eng, &mut comm, STEPS);
+        eng.close(&mut comm).unwrap();
+    });
+    consumer.join().unwrap()
+}
+
+fn bp4_live_cfg(dir: &std::path::Path) -> Bp4Config {
+    Bp4Config {
+        name: "equiv".into(),
+        pfs_dir: dir.join("pfs"),
+        bb_root: dir.join("bb"),
+        target: Target::Pfs,
+        operator: OperatorConfig::blosc(Codec::Lz4),
+        aggs_per_node: 1,
+        cost: CostModel::new(HardwareSpec::paper_testbed(2)),
+        pack_threads: 0,
+        async_io: true,
+        drain_throttle: None,
+        live_publish: true,
+    }
+}
+
+#[test]
+fn step_payloads_identical_across_all_transports() {
+    let (funnel_c, funnel_r) = run_sst(DataPlane::Funnel, 1);
+    let (lanes_c, lanes_r) = run_sst(DataPlane::Lanes, 1);
+
+    // BP4 live run tailed by a *concurrent* follower (started before the
+    // producer creates the directory), plus a second follower doing live
+    // NetCDF conversion off the same run — zero producer changes.
+    let dir = tmp("equiv");
+    let bp = dir.join("pfs/equiv.bp");
+    let follow_bp = bp.clone();
+    let follower = std::thread::spawn(move || {
+        let mut src = BpFollower::open(&follow_bp, Duration::from_millis(5)).unwrap();
+        drain_source(&mut src)
+    });
+    let conv_bp = bp.clone();
+    let nc_out = dir.join("nc_live");
+    let converter = std::thread::spawn(move || {
+        let mut src = BpFollower::open(&conv_bp, Duration::from_millis(5)).unwrap();
+        stormio::convert::stream_to_nc(&mut src, &nc_out, "equiv", false, Duration::from_secs(30))
+            .unwrap()
+    });
+    let cfg = bp4_live_cfg(&dir);
+    run_world(4, 2, move |mut comm| {
+        let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+        produce(&mut eng, &mut comm, STEPS);
+        eng.close(&mut comm).unwrap();
+    });
+    let (follow_c, follow_r) = follower.join().unwrap();
+    let converted = converter.join().unwrap();
+
+    // Byte-identical step payloads across the three transports.
+    assert_eq!(funnel_c.len(), STEPS);
+    assert_eq!(funnel_c, lanes_c, "funnel vs lane SST payloads differ");
+    assert_eq!(funnel_c, follow_c, "SST vs BP4-follower payloads differ");
+
+    // Bit-identical analysis statistics.
+    for (others, tag) in [(&lanes_r, "lanes"), (&follow_r, "follower")] {
+        assert_eq!(funnel_r.len(), others.len(), "{tag}");
+        for (a, b) in funnel_r.iter().zip(others.iter()) {
+            assert_eq!(a.step, b.step, "{tag}");
+            assert_eq!(a.surf_min.to_bits(), b.surf_min.to_bits(), "{tag} step {}", a.step);
+            assert_eq!(a.surf_max.to_bits(), b.surf_max.to_bits(), "{tag} step {}", a.step);
+            assert_eq!(a.surf_mean.to_bits(), b.surf_mean.to_bits(), "{tag} step {}", a.step);
+        }
+    }
+
+    // The live conversion wrote one NetCDF per step, contents matching
+    // the canonical payloads exactly.
+    assert_eq!(converted.len(), STEPS);
+    for (s, path) in converted.iter().enumerate() {
+        let rd = CdfReader::open(path).unwrap();
+        for (name, shape, bytes) in &funnel_c[s] {
+            assert_eq!(&rd.var_shape(name).unwrap(), shape, "step {s} {name}");
+            let got = rd.read_var_f32(name).unwrap();
+            let mut got_bytes = Vec::with_capacity(got.len() * 4);
+            for v in &got {
+                got_bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            assert_eq!(&got_bytes, bytes, "step {s} {name} converted data differs");
+        }
+    }
+
+    // Native box selection on the (now complete) directory agrees with a
+    // slice of the canonical global array.
+    let mut src = BpFollower::open(&bp, Duration::from_millis(5)).unwrap();
+    assert_eq!(src.begin_step(Duration::from_secs(5)).unwrap(), StepStatus::Ready);
+    let (_, g) = src.read_var_global("T").unwrap();
+    let sel = src.read_var_selection("T", &[1, 1, 2], &[1, 2, 3]).unwrap();
+    for y in 0..2 {
+        for x in 0..3 {
+            assert_eq!(sel[y * 3 + x], g[24 + (1 + y) * 6 + 2 + x]);
+        }
+    }
+    src.end_step().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Follower timeout / completion protocol
+// ---------------------------------------------------------------------------
+
+#[test]
+fn follower_times_out_on_stalled_producer_and_resumes() {
+    // Produce a complete 2-step live dir, then strip the completion
+    // marker to simulate a producer that published 2 steps and stalled.
+    let dir = tmp("stall");
+    let mut cfg = bp4_live_cfg(&dir);
+    cfg.name = "stall".into();
+    run_world(2, 2, move |mut comm| {
+        let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+        produce(&mut eng, &mut comm, 2);
+        eng.close(&mut comm).unwrap();
+    });
+    let bp = dir.join("pfs/stall.bp");
+    let md = std::fs::read(bp.join("md.idx")).unwrap();
+    let (steps, subfiles, attrs) = read_metadata(&md).unwrap();
+    let stripped: Vec<(String, String)> = attrs
+        .iter()
+        .filter(|(k, _)| !k.starts_with("__"))
+        .cloned()
+        .collect();
+    std::fs::write(bp.join("md.idx"), write_metadata(&steps, subfiles, &stripped)).unwrap();
+
+    let mut f = BpFollower::open(&bp, Duration::from_millis(5)).unwrap();
+    for expect in 0..2usize {
+        assert_eq!(f.begin_step(Duration::from_secs(5)).unwrap(), StepStatus::Ready);
+        assert_eq!(f.step_index(), expect);
+        let (shape, g) = f.read_var_global("PSFC").unwrap();
+        assert_eq!(shape, vec![4, 6]);
+        assert_eq!(g.len(), 24);
+        f.end_step().unwrap();
+    }
+    // Producer "stalled": the reader gives up cleanly after the deadline…
+    let t0 = Instant::now();
+    assert_eq!(
+        f.begin_step(Duration::from_millis(80)).unwrap(),
+        StepStatus::Timeout
+    );
+    assert!(t0.elapsed() >= Duration::from_millis(75));
+    // …and stays usable: restoring the completion marker ends the stream.
+    std::fs::write(bp.join("md.idx"), md).unwrap();
+    assert_eq!(
+        f.begin_step(Duration::from_secs(5)).unwrap(),
+        StepStatus::EndOfStream
+    );
+    // The consumer-facing attrs still hide internal markers.
+    assert!(f.attrs().iter().all(|(k, _)| !k.starts_with("__")));
+}
+
+#[test]
+fn analyzer_surfaces_stalled_source_as_error() {
+    // An InsituAnalyzer over a stalled follower must return a descriptive
+    // error, not hang: the timeout satellite's end-to-end behavior.
+    let dir = tmp("stall_analyzer");
+    let bp = dir.join("pfs/never.bp"); // never created
+    let mut src = BpFollower::open(&bp, Duration::from_millis(5)).unwrap();
+    let analyzer = InsituAnalyzer::new(None, None);
+    let err = analyzer
+        .run(&mut src, Duration::from_millis(50))
+        .err()
+        .expect("stalled source must error");
+    let msg = format!("{err}");
+    assert!(msg.contains("stalled"), "want stall error, got: {msg}");
+}
