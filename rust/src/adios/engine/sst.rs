@@ -24,14 +24,29 @@
 //! framing, producer-side buffering with bounded queue back-pressure, and
 //! reader-side step iteration.
 //!
+//! **Multi-consumer fan-out (v3, DESIGN.md §10).**  One producer serves N
+//! independent consumers: every aggregator rank owns one lane *per
+//! consumer* (back-pressure is per consumer × lane), each consumer
+//! registers per-variable [`Subscription`]s at handshake, and the lane
+//! aggregator intersects every outgoing block against each consumer's
+//! subscription — full subscribers receive the member frames untouched
+//! (byte-identical to the v2 single-consumer path), boxed subscribers
+//! receive only the intersecting sub-blocks, re-cut and re-compressed at
+//! the lane.  A consumer that dies mid-stream is dropped; survivors keep
+//! receiving every step.
+//!
 //! Wire protocol (little-endian, all lengths validated against
-//! [`MAX_FRAME_LEN`] before allocation):
+//! [`MAX_FRAME_LEN`] before allocation; every block frame carries an
+//! XXH64 checksum the consumer verifies *before* decompressing):
 //! ```text
-//! frame   := u32 magic "SST2" | u8 type | u64 len | payload
-//! type    := 1 step-data | 2 bye | 3 hello
-//! hello   := u32 lane | u32 nlanes
+//! frame   := u32 magic "SST3" | u8 type | u64 len | payload
+//! type    := 1 step-data | 2 bye | 3 hello | 4 subscription
+//! hello   := u32 lane | u32 nlanes                      (producer -> consumer)
+//! sub     := u32 nentries { str var | u8 has_box        (consumer -> producer)
+//!            [ dims start | dims count ] }
 //! step    := u64 step | u32 nvars { str name | dims shape | u32 nblocks
-//!            { u32 producer | dims start | dims count | u64 raw | bytes frame } }
+//!            { u32 producer | dims start | dims count | u64 raw
+//!              | u64 xxh64(frame) | bytes frame } }
 //! ```
 
 use std::io::{Read, Write};
@@ -41,29 +56,37 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::adios::aggregation::AggregationPlan;
-use crate::adios::bp::scatter_block;
+use crate::adios::bp::{block_intersection, checked_elems, validate_block_geometry};
 use crate::adios::operator::{self, OperatorConfig};
-use crate::adios::source::{StepSource, StepStatus};
+use crate::adios::source::{
+    extract_box, StepSource, StepStatus, SubEntry, Subscription, VarInterest,
+};
 use crate::adios::variable::Variable;
 use crate::cluster::Comm;
 use crate::metrics::Stopwatch;
 use crate::sim::CostModel;
 use crate::util::byteio::{Reader, Writer};
+use crate::util::hash::xxh64;
 use crate::{Error, Result};
 
 use super::{Engine, EngineReport, StepStats};
 
-/// Wire magic, version 2 (lane hello + per-block producer ranks).
-pub const MAGIC: u32 = 0x53535432; // "SST2"
+/// Wire magic, version 3 (subscription handshake + per-frame checksums).
+pub const MAGIC: u32 = 0x53535433; // "SST3"
 pub const TYPE_STEP: u8 = 1;
 pub const TYPE_BYE: u8 = 2;
 pub const TYPE_HELLO: u8 = 3;
+/// Consumer → producer subscription reply, sent once per lane right
+/// after the hello is accepted.
+pub const TYPE_SUB: u8 = 4;
 /// Hard cap on a declared frame (and per-block raw) length: a corrupt or
 /// adversarial peer must not be able to make the reader allocate from an
 /// untrusted u64 (OOM bomb).
 pub const MAX_FRAME_LEN: u64 = 1 << 30;
 /// Sanity cap on the lane count a hello may announce.
 const MAX_LANES: u32 = 1 << 16;
+/// Sanity cap on the entry count a subscription may declare.
+const MAX_SUB_ENTRIES: u32 = 1 << 12;
 
 const TAG_SST_BLOCKS: u64 = 0x5353_0001;
 const TAG_SST_STATS: u64 = 0x5353_0002;
@@ -264,6 +287,76 @@ fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
     }
 }
 
+/// Serialize a [`Subscription`] for the v3 handshake reply.
+fn encode_subscription(sub: &Subscription) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(sub.entries.len() as u32);
+    for e in &sub.entries {
+        w.str(&e.var);
+        match &e.sel {
+            None => w.u8(0),
+            Some((start, count)) => {
+                w.u8(1);
+                w.dims(start);
+                w.dims(count);
+            }
+        }
+    }
+    w.into_vec()
+}
+
+/// Parse + validate an untrusted subscription reply: entry count capped,
+/// box ranks consistent, extents non-zero and overflow-checked — a
+/// malformed subscription fails the producer's open with a descriptive
+/// error instead of a panic at the first intersection.
+fn decode_subscription(payload: &[u8]) -> Result<Subscription> {
+    let mut r = Reader::new(payload);
+    let n = r.u32()?;
+    if n > MAX_SUB_ENTRIES {
+        return Err(Error::sst(format!(
+            "subscription declares {n} entries (cap {MAX_SUB_ENTRIES})"
+        )));
+    }
+    let mut entries = Vec::with_capacity((n as usize).min(256));
+    for _ in 0..n {
+        let var = r.str()?;
+        let sel = match r.u8()? {
+            0 => None,
+            1 => {
+                let start = r.dims()?;
+                let count = r.dims()?;
+                if start.len() != count.len() || start.is_empty() {
+                    return Err(Error::sst(format!(
+                        "subscription box for `{var}`: rank {} start vs rank {} count",
+                        start.len(),
+                        count.len()
+                    )));
+                }
+                for d in 0..start.len() {
+                    if count[d] == 0 {
+                        return Err(Error::sst(format!(
+                            "subscription box for `{var}` has zero extent in dim {d}"
+                        )));
+                    }
+                    start[d].checked_add(count[d]).ok_or_else(|| {
+                        Error::sst(format!(
+                            "subscription box for `{var}` overflows in dim {d}"
+                        ))
+                    })?;
+                }
+                Some((start, count))
+            }
+            other => {
+                return Err(Error::sst(format!(
+                    "subscription entry for `{var}`: bad selector tag {other}"
+                )))
+            }
+        };
+        entries.push(SubEntry { var, sel });
+    }
+    Ok(Subscription { entries })
+}
+
 fn sender_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) -> Result<()> {
     for msg in rx {
         if msg.is_empty() {
@@ -283,15 +376,15 @@ fn sender_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) -> Result<()> {
 // Producer engine
 // ---------------------------------------------------------------------------
 
-/// One lane's background sender (aggregator ranks only).
+/// One consumer lane's background sender (aggregator ranks only).
 struct LaneSender {
     tx: SyncSender<Vec<u8>>,
     handle: JoinHandle<Result<()>>,
 }
 
 /// Producer engine.  With [`DataPlane::Lanes`] every aggregator rank owns
-/// a TCP lane + sender thread; with [`DataPlane::Funnel`] rank 0 owns the
-/// single lane and all ranks funnel to it.
+/// one TCP lane *per consumer* + sender thread; with [`DataPlane::Funnel`]
+/// rank 0 owns the consumer lanes and all ranks funnel to it.
 pub struct SstEngine {
     rank: usize,
     operator: OperatorConfig,
@@ -301,16 +394,20 @@ pub struct SstEngine {
     queue: Vec<(Variable, Vec<f32>)>,
     in_step: bool,
     step: usize,
-    /// Aggregator ranks only.
-    lane: Option<LaneSender>,
+    /// Aggregator ranks: one slot per consumer, `None` once that
+    /// consumer dropped mid-stream (survivors keep streaming).
+    lanes: Vec<Option<LaneSender>>,
+    /// Per-consumer subscriptions, indexed like `lanes` (aggregators).
+    subs: Vec<Subscription>,
+    /// Consumer count (every rank; sizes the per-step stats exchange).
+    nconsumers: usize,
     report: EngineReport,
     closed: bool,
 }
 
 impl SstEngine {
-    /// Collective open: every aggregator rank connects a lane to the
-    /// consumer at `addr` (retrying with backoff up to `timeout`) and
-    /// announces itself with a hello frame.
+    /// Collective open against a single consumer (the v2-compatible
+    /// surface): see [`SstEngine::open_multi`].
     pub fn open(
         addr: &str,
         operator: OperatorConfig,
@@ -320,6 +417,36 @@ impl SstEngine {
         data_plane: DataPlane,
         aggs_per_node: usize,
     ) -> Result<SstEngine> {
+        Self::open_multi(
+            &[addr.to_string()],
+            operator,
+            cost,
+            comm,
+            timeout,
+            data_plane,
+            aggs_per_node,
+        )
+    }
+
+    /// Collective open of a multi-consumer fan-out: every aggregator rank
+    /// connects one lane to *each* consumer address (retrying with
+    /// backoff up to `timeout`), announces itself with a hello frame, and
+    /// reads back that consumer's [`Subscription`] — the selection the
+    /// lane then pushes down on every step it ships.
+    pub fn open_multi(
+        addrs: &[String],
+        operator: OperatorConfig,
+        cost: CostModel,
+        comm: &Comm,
+        timeout: Duration,
+        data_plane: DataPlane,
+        aggs_per_node: usize,
+    ) -> Result<SstEngine> {
+        if addrs.is_empty() {
+            return Err(Error::config(
+                "SST open: need at least one consumer address",
+            ));
+        }
         let mut data_plane = data_plane;
         let plan = match data_plane {
             DataPlane::Funnel => AggregationPlan::funnel(comm.size(), comm.ranks_per_node())?,
@@ -348,17 +475,38 @@ impl SstEngine {
             }
         };
         let rank = comm.rank();
-        let mut lane = None;
+        let mut lanes = Vec::new();
+        let mut subs = Vec::new();
         if plan.is_aggregator(rank) {
             let lane_id = plan.subfile(rank).expect("aggregator has a lane");
-            let mut stream = connect_retry(addr, timeout)?;
-            let mut w = Writer::new();
-            w.u32(lane_id);
-            w.u32(plan.num_aggregators() as u32);
-            write_frame(&mut stream, TYPE_HELLO, &w.into_vec())?;
-            let (tx, rx): (SyncSender<Vec<u8>>, Receiver<Vec<u8>>) = sync_channel(QUEUE_STEPS);
-            let handle = std::thread::spawn(move || sender_loop(stream, rx));
-            lane = Some(LaneSender { tx, handle });
+            for (c, addr) in addrs.iter().enumerate() {
+                let mut stream = connect_retry(addr, timeout)?;
+                let mut w = Writer::new();
+                w.u32(lane_id);
+                w.u32(plan.num_aggregators() as u32);
+                write_frame(&mut stream, TYPE_HELLO, &w.into_vec())?;
+                // The subscription reply is part of the handshake: a
+                // consumer that accepts and then sends nothing cannot
+                // hang the collective open.
+                let (ty, payload) =
+                    read_frame(&mut stream, Some(Instant::now() + HELLO_TIMEOUT)).map_err(
+                        |e| {
+                            Error::sst(format!(
+                                "consumer {c} ({addr}): no subscription reply: {e}"
+                            ))
+                        },
+                    )?;
+                if ty != TYPE_SUB {
+                    return Err(Error::sst(format!(
+                        "consumer {c} ({addr}): expected subscription frame, got type {ty}"
+                    )));
+                }
+                subs.push(decode_subscription(&payload)?);
+                let (tx, rx): (SyncSender<Vec<u8>>, Receiver<Vec<u8>>) =
+                    sync_channel(QUEUE_STEPS);
+                let handle = std::thread::spawn(move || sender_loop(stream, rx));
+                lanes.push(Some(LaneSender { tx, handle }));
+            }
         }
         Ok(SstEngine {
             rank,
@@ -369,7 +517,9 @@ impl SstEngine {
             queue: Vec::new(),
             in_step: false,
             step: 0,
-            lane,
+            lanes,
+            subs,
+            nconsumers: addrs.len(),
             report: EngineReport::default(),
             closed: false,
         })
@@ -406,8 +556,8 @@ impl SstEngine {
     }
 }
 
-/// Merge member messages (in rank order) into one lane step payload.
-fn merge_lane_payload(step: u64, msgs: &[Vec<u8>]) -> Result<Vec<u8>> {
+/// Merge member messages (in rank order) into this lane's full block set.
+fn collect_lane_vars(msgs: &[Vec<u8>]) -> Result<Vec<SstVar>> {
     let mut entries: Vec<SstVar> = Vec::new();
     for msg in msgs {
         let mut r = Reader::new(msg);
@@ -437,19 +587,138 @@ fn merge_lane_payload(step: u64, msgs: &[Vec<u8>]) -> Result<Vec<u8>> {
             }
         }
     }
+    Ok(entries)
+}
+
+/// One block as it goes out on one consumer's lane: the member's frame
+/// untouched (full subscription, with the step's precomputed checksum),
+/// or a sub-block cut to the consumer's box and re-compressed at the
+/// lane.
+enum OutBlock<'a> {
+    Full(&'a SstBlock, u64),
+    Crop {
+        producer_rank: u32,
+        start: Vec<u64>,
+        count: Vec<u64>,
+        raw: u64,
+        xxh: u64,
+        frame: Vec<u8>,
+    },
+}
+
+/// Apply one consumer's subscription to the lane's full block set and
+/// serialize its step payload (selection pushdown).  `full_xxh` holds
+/// the per-block checksums of the untouched member frames, computed once
+/// per step and shared by every full-subscription consumer (only crops
+/// hash fresh bytes).  Returns `(payload, frame_bytes)` where
+/// `frame_bytes` is the consumer's wire volume (sum of shipped
+/// compressed frames).
+fn build_consumer_payload(
+    step: u64,
+    vars: &[SstVar],
+    full_xxh: &[Vec<u64>],
+    sub: &Subscription,
+    operator: OperatorConfig,
+) -> Result<(Vec<u8>, u64)> {
+    let mut items: Vec<(&SstVar, Vec<OutBlock>)> = Vec::new();
+    for (vi, v) in vars.iter().enumerate() {
+        match sub.wants(&v.name) {
+            VarInterest::Skip => {}
+            VarInterest::Full => {
+                items.push((
+                    v,
+                    v.blocks
+                        .iter()
+                        .zip(&full_xxh[vi])
+                        .map(|(b, x)| OutBlock::Full(b, *x))
+                        .collect(),
+                ));
+            }
+            VarInterest::Boxes(boxes) => {
+                let mut blocks = Vec::new();
+                for b in &v.blocks {
+                    // Decompress at most once per block, and only when a
+                    // box actually intersects it.
+                    let mut vals: Option<Vec<f32>> = None;
+                    for (s, c) in &boxes {
+                        // A box whose rank disagrees with the variable
+                        // cannot intersect anything; skip it rather than
+                        // failing every consumer's step.
+                        if s.len() != b.start.len() {
+                            continue;
+                        }
+                        let Some(ov) = block_intersection(&b.start, &b.count, s, c) else {
+                            continue;
+                        };
+                        if vals.is_none() {
+                            vals = Some(b.decode_f32(&v.name)?);
+                        }
+                        let lo: Vec<u64> = ov.iter().map(|(l, _)| *l).collect();
+                        let cnt: Vec<u64> = ov.iter().map(|(l, h)| h - l).collect();
+                        let local_start: Vec<u64> =
+                            lo.iter().zip(&b.start).map(|(l, s0)| l - s0).collect();
+                        let sub_vals = extract_box(
+                            &b.count,
+                            vals.as_ref().expect("decompressed above"),
+                            &local_start,
+                            &cnt,
+                        )?;
+                        let payload = crate::util::f32_slice_as_bytes(&sub_vals);
+                        let frame = operator::compress(payload, operator)?;
+                        blocks.push(OutBlock::Crop {
+                            producer_rank: b.producer_rank,
+                            start: lo,
+                            count: cnt,
+                            raw: payload.len() as u64,
+                            xxh: xxh64(&frame, 0),
+                            frame,
+                        });
+                    }
+                }
+                if !blocks.is_empty() {
+                    items.push((v, blocks));
+                }
+            }
+        }
+    }
     let mut out = Writer::new();
     out.u64(step);
-    out.u32(entries.len() as u32);
-    for v in &entries {
+    out.u32(items.len() as u32);
+    let mut frame_bytes = 0u64;
+    for (v, blocks) in &items {
         out.str(&v.name);
         out.dims(&v.shape);
-        out.u32(v.blocks.len() as u32);
-        for b in &v.blocks {
-            out.u32(b.producer_rank);
-            out.dims(&b.start);
-            out.dims(&b.count);
-            out.u64(b.raw);
-            out.bytes(&b.frame);
+        out.u32(blocks.len() as u32);
+        for blk in blocks {
+            let (producer_rank, start, count, raw, xxh, frame): (
+                u32,
+                &[u64],
+                &[u64],
+                u64,
+                u64,
+                &[u8],
+            ) = match blk {
+                OutBlock::Full(b, x) => {
+                    (b.producer_rank, &b.start, &b.count, b.raw, *x, &b.frame)
+                }
+                OutBlock::Crop {
+                    producer_rank,
+                    start,
+                    count,
+                    raw,
+                    xxh,
+                    frame,
+                } => (*producer_rank, start, count, *raw, *xxh, frame),
+            };
+            out.u32(producer_rank);
+            out.dims(start);
+            out.dims(count);
+            out.u64(raw);
+            // Wire-integrity checksum over the compressed frame; the
+            // consumer recomputes it before decompressing.
+            out.u64(xxh);
+            out.bytes(frame);
+            frame_bytes += frame.len() as u64;
         }
     }
     let payload = out.into_vec();
@@ -463,7 +732,7 @@ fn merge_lane_payload(step: u64, msgs: &[Vec<u8>]) -> Result<Vec<u8>> {
             payload.len()
         )));
     }
-    Ok(payload)
+    Ok((payload, frame_bytes))
 }
 
 impl Engine for SstEngine {
@@ -501,6 +770,8 @@ impl Engine for SstEngine {
         let (msg, raw, stored) = self.pack_blocks()?;
         let tag = TAG_SST_BLOCKS + self.step as u64 * 4;
 
+        // Per-consumer wire bytes this rank shipped (aggregators only).
+        let mut egress = vec![0u64; self.nconsumers];
         if self.plan.is_aggregator(self.rank) {
             let mut own = Some(msg);
             let members = self.plan.members(self.rank);
@@ -512,62 +783,141 @@ impl Engine for SstEngine {
                     msgs.push(comm.recv(m, tag)?);
                 }
             }
-            let payload = merge_lane_payload(self.step as u64, &msgs)?;
-            // Enqueue for this lane's background sender (blocks only when
-            // the consumer is QUEUE_STEPS behind — per-lane back-pressure).
-            self.lane
-                .as_ref()
-                .expect("aggregator has a lane")
-                .tx
-                .send(payload)
-                .map_err(|_| Error::sst("lane sender thread died"))?;
+            let vars = collect_lane_vars(&msgs)?;
+            // A subscription box whose rank disagrees with its variable
+            // can never intersect anything; diagnose it once at the
+            // first step instead of letting the consumer chase a
+            // misleading coverage error.
+            if self.step == 0 {
+                for (c, sub) in self.subs.iter().enumerate() {
+                    for e in &sub.entries {
+                        let Some((s, _)) = e.sel.as_ref() else { continue };
+                        let Some(v) = vars.iter().find(|v| v.name == e.var) else {
+                            continue;
+                        };
+                        if s.len() != v.shape.len() {
+                            eprintln!(
+                                "sst: consumer {c}: subscription box for `{}` has \
+                                 rank {} but the variable is rank {} — it can never \
+                                 intersect and will ship nothing",
+                                e.var,
+                                s.len(),
+                                v.shape.len()
+                            );
+                        }
+                    }
+                }
+            }
+            // Checksums of the untouched member frames, computed once per
+            // step and reused by every full-subscription consumer —
+            // skipped entirely when every live consumer is boxed/partial
+            // (crops hash their own re-compressed bytes).
+            let any_full = self.subs.iter().enumerate().any(|(c, s)| {
+                self.lanes[c].is_some()
+                    && vars.iter().any(|v| s.wants(&v.name) == VarInterest::Full)
+            });
+            let full_xxh: Vec<Vec<u64>> = if any_full {
+                vars.iter()
+                    .map(|v| v.blocks.iter().map(|b| xxh64(&b.frame, 0)).collect())
+                    .collect()
+            } else {
+                vec![Vec::new(); vars.len()]
+            };
+            let operator = self.operator;
+            let step = self.step as u64;
+            for c in 0..self.lanes.len() {
+                if self.lanes[c].is_none() {
+                    continue; // consumer already dropped
+                }
+                let (payload, frame_bytes) =
+                    build_consumer_payload(step, &vars, &full_xxh, &self.subs[c], operator)?;
+                // Enqueue for this consumer's background sender (blocks
+                // only when that consumer is QUEUE_STEPS behind —
+                // back-pressure is per consumer × lane).
+                let alive = self.lanes[c]
+                    .as_ref()
+                    .expect("checked above")
+                    .tx
+                    .send(payload)
+                    .is_ok();
+                if alive {
+                    egress[c] = frame_bytes;
+                } else {
+                    // Sender thread exited: the consumer hung up.  Drop
+                    // its lane and keep serving the survivors.
+                    eprintln!(
+                        "sst: consumer {c} dropped at step {} (lane {}); \
+                         continuing with survivors",
+                        self.step,
+                        self.plan.subfile(self.rank).unwrap_or(0)
+                    );
+                    if let Some(LaneSender { tx, handle }) = self.lanes[c].take() {
+                        drop(tx);
+                        let _ = handle.join();
+                    }
+                }
+            }
         } else {
             comm.isend(self.plan.agg_of_rank[self.rank], tag, msg)?;
         }
 
-        // Stats funnel: exact raw/wire byte totals to rank 0.
+        // Stats funnel: exact raw / chain / per-consumer wire byte totals
+        // to rank 0.
         let mut stats = Writer::new();
         stats.u64(raw);
         stats.u64(stored);
+        stats.u32(self.nconsumers as u32);
+        for e in &egress {
+            stats.u64(*e);
+        }
         let gathered = comm.gather(0, stats.into_vec(), TAG_SST_STATS + self.step as u64 * 4)?;
 
         if self.rank == 0 {
             let mut t_raw = 0u64;
-            let mut t_stored = 0u64;
+            let mut t_chain = 0u64;
+            let mut t_egress = vec![0u64; self.nconsumers];
             for g in &gathered {
                 let mut r = Reader::new(g);
                 t_raw += r.u64()?;
-                t_stored += r.u64()?;
+                t_chain += r.u64()?;
+                let n = r.u32()? as usize;
+                for e in t_egress.iter_mut().take(n) {
+                    *e += r.u64()?;
+                }
             }
+            let t_wire: u64 = t_egress.iter().sum();
             let hw = &self.cost.hw;
             let v_raw = hw.scaled(t_raw);
-            let v_stored = hw.scaled(t_stored);
+            let v_chain = hw.scaled(t_chain);
+            let v_egress: Vec<f64> = t_egress.iter().map(|e| hw.scaled(*e)).collect();
             let naggs = self.plan.num_aggregators();
             let mut cost = crate::sim::WriteCost::default();
             cost.push("buffer", self.cost.t_buffer_copy(v_raw));
             match self.data_plane {
                 DataPlane::Funnel => {
                     // Every rank's wire bytes converge on the root before
-                    // anything ships: the serial-funnel bottleneck.
-                    cost.push("funnel", self.cost.t_gather_root(v_stored, hw.ranks()));
+                    // anything ships: the serial-funnel bottleneck.  The
+                    // root then ships every consumer's stream off one NIC.
+                    cost.push("funnel", self.cost.t_gather_root(v_chain, hw.ranks()));
                     cost.push("sync", 1e-3);
-                    cost.push_background("transfer", self.cost.t_stream_transfer(v_stored));
+                    cost.push_background("transfer", self.cost.t_stream_egress(&v_egress, 1));
                 }
                 DataPlane::Lanes => {
                     // Node-local chain to each lane's aggregator, then the
-                    // lanes ship concurrently.
-                    cost.push("chain", self.cost.t_chain_gather(v_stored, naggs));
+                    // lanes fan every consumer's stream out concurrently
+                    // (egress charged per consumer stream).
+                    cost.push("chain", self.cost.t_chain_gather(v_chain, naggs));
                     cost.push("sync", 1e-3);
                     cost.push_background(
                         "transfer",
-                        self.cost.t_stream_transfer_lanes(v_stored, naggs),
+                        self.cost.t_stream_egress(&v_egress, naggs),
                     );
                 }
             }
             self.report.steps.push(StepStats {
                 step: self.step,
                 bytes_raw: t_raw,
-                bytes_stored: t_stored,
+                bytes_stored: t_wire,
                 real_secs: sw.secs(),
                 cost,
             });
@@ -584,14 +934,33 @@ impl Engine for SstEngine {
         }
         self.closed = true;
         comm.barrier();
-        if let Some(LaneSender { tx, handle }) = self.lane.take() {
-            tx.send(Vec::new()).ok(); // bye sentinel
-            drop(tx);
-            handle
-                .join()
-                .map_err(|_| Error::sst("lane sender thread panicked"))??;
+        // Finish EVERY lane before reporting any failure: returning on
+        // the first bad lane would strand healthy consumers without
+        // their bye frame, blocking them until their step timeout.
+        let mut panicked = false;
+        for (c, lane) in self.lanes.iter_mut().enumerate() {
+            if let Some(LaneSender { tx, handle }) = lane.take() {
+                tx.send(Vec::new()).ok(); // bye sentinel
+                drop(tx);
+                match handle.join() {
+                    Err(_) => {
+                        eprintln!("sst: consumer {c} lane sender panicked");
+                        panicked = true;
+                    }
+                    // A consumer that hung up mid-stream is a survivor
+                    // policy question, not a producer failure: report it
+                    // and close cleanly.
+                    Ok(Err(e)) => {
+                        eprintln!("sst: consumer {c} lane closed with error: {e}")
+                    }
+                    Ok(Ok(())) => {}
+                }
+            }
         }
         comm.barrier();
+        if panicked {
+            return Err(Error::sst("lane sender thread panicked"));
+        }
         if self.rank == 0 {
             Ok(std::mem::take(&mut self.report))
         } else {
@@ -614,6 +983,35 @@ pub struct SstBlock {
     /// decompressed output before any data is returned).
     pub raw: u64,
     pub frame: Vec<u8>,
+}
+
+impl SstBlock {
+    /// Decompress this block's frame and validate it against both the
+    /// declared raw length and the block's extent — the single
+    /// decode-and-validate used by the producer's crop path and every
+    /// consumer read.  `var` only labels the error.
+    fn decode_f32(&self, var: &str) -> Result<Vec<f32>> {
+        let rawb = operator::decompress(&self.frame)?;
+        if rawb.len() as u64 != self.raw {
+            return Err(Error::sst(format!(
+                "block of `{var}` from rank {}: decompressed to {} bytes, \
+                 declared {}",
+                self.producer_rank,
+                rawb.len(),
+                self.raw
+            )));
+        }
+        let vals = crate::util::bytes_to_f32_vec(&rawb)?;
+        if vals.len() as u64 != checked_elems(&self.count)? {
+            return Err(Error::sst(format!(
+                "block of `{var}` from rank {}: {} elems vs extent {:?}",
+                self.producer_rank,
+                vals.len(),
+                self.count
+            )));
+        }
+        Ok(vals)
+    }
 }
 
 /// One variable in a received step.
@@ -647,31 +1045,96 @@ impl SstStep {
     /// Reconstitute the global array of one variable.  The wire-declared
     /// shape and every block's placement are validated before any
     /// allocation or scatter — a crafted frame must not drive an OOM or
-    /// an out-of-bounds write.
+    /// an out-of-bounds write — and the received blocks must cover the
+    /// whole shape: a consumer whose subscription cropped the variable
+    /// gets a descriptive error instead of silently fabricated zeros
+    /// (use [`SstStep::read_var_selection`] for partial reads).
     pub fn read_var_global(&self, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
+        let shape = self
+            .var_shape(name)
+            .ok_or_else(|| Error::sst(format!("step has no variable `{name}`")))?
+            .to_vec();
+        let zeros = vec![0u64; shape.len()];
+        let global = self.read_var_selection(name, &zeros, &shape)?;
+        Ok((shape, global))
+    }
+
+    /// Read the box `[start, start+count)` of a variable directly from
+    /// the received blocks — the consumer half of selection pushdown.
+    /// Only the box extent is allocated and only intersecting blocks are
+    /// decompressed, so a boxed subscriber never materializes (or even
+    /// receives) the global array.  Errors if the blocks this consumer
+    /// received do not cover the whole box (the subscription was narrower
+    /// than the read).
+    pub fn read_var_selection(
+        &self,
+        name: &str,
+        start: &[u64],
+        count: &[u64],
+    ) -> Result<Vec<f32>> {
         let v = self
             .vars
             .iter()
             .find(|v| v.name == name)
             .ok_or_else(|| Error::sst(format!("step has no variable `{name}`")))?;
-        let total = crate::adios::bp::checked_elems(&v.shape)?;
-        let mut global = vec![0.0f32; total as usize];
-        for b in &v.blocks {
-            crate::adios::bp::validate_block_geometry(&v.shape, &b.start, &b.count)?;
-            let rawb = operator::decompress(&b.frame)?;
-            if rawb.len() as u64 != b.raw {
-                return Err(Error::sst(format!(
-                    "block of `{name}` from rank {}: decompressed to {} bytes, \
-                     declared {}",
-                    b.producer_rank,
-                    rawb.len(),
-                    b.raw
-                )));
-            }
-            let vals = crate::util::bytes_to_f32_vec(&rawb)?;
-            scatter_block(&mut global, &v.shape, &b.start, &b.count, &vals)?;
+        validate_block_geometry(&v.shape, start, count)?;
+        let total = checked_elems(count)? as usize;
+        let nd = v.shape.len();
+        let mut out = vec![0.0f32; total];
+        let mut covered = vec![false; total];
+        // Row-major strides of the selection box.
+        let mut dstrides = vec![1u64; nd];
+        for d in (0..nd - 1).rev() {
+            dstrides[d] = dstrides[d + 1] * count[d + 1];
         }
-        Ok((v.shape.clone(), global))
+        for b in &v.blocks {
+            // Every block's placement is validated — intersecting or not —
+            // so a crafted frame surfaces as a geometry error, never as a
+            // silently skipped block.
+            validate_block_geometry(&v.shape, &b.start, &b.count)?;
+            let Some(ov) = block_intersection(&b.start, &b.count, start, count) else {
+                continue;
+            };
+            let vals = b.decode_f32(name)?;
+            // Row-major strides of the block.
+            let mut bstrides = vec![1u64; nd];
+            for d in (0..nd - 1).rev() {
+                bstrides[d] = bstrides[d + 1] * b.count[d + 1];
+            }
+            let lo: Vec<u64> = ov.iter().map(|(l, _)| *l).collect();
+            let cnt: Vec<u64> = ov.iter().map(|(l, h)| h - l).collect();
+            let row = cnt[nd - 1] as usize;
+            let rows: u64 = cnt[..nd - 1].iter().product();
+            let mut idx = vec![0u64; nd - 1];
+            for _ in 0..rows.max(1) {
+                let mut soff = lo[nd - 1] - b.start[nd - 1];
+                let mut doff = lo[nd - 1] - start[nd - 1];
+                for d in 0..nd - 1 {
+                    soff += (lo[d] + idx[d] - b.start[d]) * bstrides[d];
+                    doff += (lo[d] + idx[d] - start[d]) * dstrides[d];
+                }
+                let (s0, d0) = (soff as usize, doff as usize);
+                out[d0..d0 + row].copy_from_slice(&vals[s0..s0 + row]);
+                for c in &mut covered[d0..d0 + row] {
+                    *c = true;
+                }
+                for d in (0..nd - 1).rev() {
+                    idx[d] += 1;
+                    if idx[d] < cnt[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                }
+            }
+        }
+        if covered.iter().any(|c| !c) {
+            return Err(Error::sst(format!(
+                "selection [{start:?}, +{count:?}) of `{name}` is not fully covered \
+                 by the blocks this consumer received (subscription narrower than \
+                 the read?)"
+            )));
+        }
+        Ok(out)
     }
 
     /// Total stored (wire) bytes of this step.
@@ -721,7 +1184,19 @@ fn parse_step_payload(payload: &[u8]) -> Result<(u64, Vec<SstVar>)> {
                      (cap {MAX_FRAME_LEN})"
                 )));
             }
+            let declared_xxh = r.u64()?;
             let frame = r.bytes()?;
+            // Wire-integrity check *before* the frame ever reaches a
+            // decompressor: structural validation alone would accept
+            // silently corrupted payload bytes.
+            let actual_xxh = xxh64(&frame, 0);
+            if actual_xxh != declared_xxh {
+                return Err(Error::sst(format!(
+                    "block of `{name}` from rank {producer_rank}: payload checksum \
+                     mismatch (wire corruption): frame hashes to {actual_xxh:#018x}, \
+                     producer declared {declared_xxh:#018x}"
+                )));
+            }
             blocks.push(SstBlock {
                 producer_rank,
                 start,
@@ -917,12 +1392,17 @@ impl SstListener {
         Ok(self.listener.local_addr()?.to_string())
     }
 
-    /// Accept one lane connection and read its hello.  `deadline: None`
-    /// waits indefinitely for the *connection* (a producer may start much
+    /// Accept one lane connection, read its hello, and reply with this
+    /// consumer's encoded subscription.  `deadline: None` waits
+    /// indefinitely for the *connection* (a producer may start much
     /// later than the consumer); once connected, the hello itself is
     /// always deadline-bounded — a peer that connects and then sends
     /// nothing cannot hang the consumer.
-    fn accept_one(&self, deadline: Option<Instant>) -> Result<(TcpStream, u32, u32)> {
+    fn accept_one(
+        &self,
+        deadline: Option<Instant>,
+        sub_frame: &[u8],
+    ) -> Result<(TcpStream, u32, u32)> {
         let mut stream = match deadline {
             None => {
                 self.listener
@@ -977,20 +1457,54 @@ impl SstListener {
                 "invalid hello: lane {lane} of {nlanes}"
             )));
         }
+        // Handshake reply: this consumer's subscription, so the producer
+        // lane knows what to push down before the first step ships.
+        write_frame(&mut stream, TYPE_SUB, sub_frame)?;
         Ok((stream, lane, nlanes))
     }
 
-    /// Accept all lanes of one producer (the lane count is announced by
-    /// the first hello; ids must be dense and distinct).  The first
-    /// connection may arrive arbitrarily late; once it does, the engine
-    /// open is collective, so the remaining lanes must follow within
-    /// [`HELLO_TIMEOUT`].
+    /// Accept all lanes of one producer with a full subscription and no
+    /// overall deadline (the v2-compatible surface) — see
+    /// [`SstListener::accept_with`].
     pub fn accept(self) -> Result<SstConsumer> {
-        let (stream, lane, nlanes) = self.accept_one(None)?;
+        self.accept_with(&Subscription::all(), None)
+    }
+
+    /// Accept all lanes of one producer (the lane count is announced by
+    /// the first hello; ids must be dense and distinct), registering
+    /// `sub` as this consumer's subscription on every lane.
+    ///
+    /// `timeout` bounds the *whole* handshake, including the wait for the
+    /// first connection — without it a producer that never starts (or
+    /// connects only some lanes and dies) blocks the consumer forever.
+    /// On failure the error reports the partial-lane state (how many
+    /// lanes of how many expected had connected).  `timeout: None` keeps
+    /// the v2 semantics: wait indefinitely for the first connection, then
+    /// bound the remaining lanes by [`HELLO_TIMEOUT`].
+    pub fn accept_with(
+        self,
+        sub: &Subscription,
+        timeout: Option<Duration>,
+    ) -> Result<SstConsumer> {
+        let sub_frame = encode_subscription(sub);
+        let overall = timeout.map(|t| Instant::now() + t);
+        let (stream, lane, nlanes) = self.accept_one(overall, &sub_frame).map_err(|e| {
+            Error::sst(format!("accept: 0 lanes connected (of unknown count): {e}"))
+        })?;
         let mut lanes = vec![SstLane { stream, id: lane }];
-        let deadline = Instant::now() + HELLO_TIMEOUT;
+        let hello_deadline = Instant::now() + HELLO_TIMEOUT;
+        let deadline = match overall {
+            Some(o) => o.min(hello_deadline),
+            None => hello_deadline,
+        };
         for _ in 1..nlanes {
-            let (stream, lane, n2) = self.accept_one(Some(deadline))?;
+            let (stream, lane, n2) =
+                self.accept_one(Some(deadline), &sub_frame).map_err(|e| {
+                    Error::sst(format!(
+                        "accept: {} of {nlanes} lanes connected before failure: {e}",
+                        lanes.len()
+                    ))
+                })?;
             if n2 != nlanes {
                 return Err(Error::sst(format!(
                     "lane {lane} announced {n2} lanes, first lane said {nlanes}"
@@ -1096,6 +1610,18 @@ impl StepSource for SstSource {
 
     fn read_var_global(&mut self, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
         self.current()?.read_var_global(name)
+    }
+
+    /// True pushdown: assembled directly from the received (possibly
+    /// subscription-cropped) blocks — never materializes the global
+    /// array, unlike the trait's default fallback.
+    fn read_var_selection(
+        &mut self,
+        name: &str,
+        start: &[u64],
+        count: &[u64],
+    ) -> Result<Vec<f32>> {
+        self.current()?.read_var_selection(name, start, count)
     }
 
     fn step_stored_bytes(&self) -> u64 {
@@ -1376,6 +1902,116 @@ mod tests {
         assert_eq!(seen[0].0, 0);
         assert_eq!(seen[1].0, 1);
         assert_eq!(seen[1].1[9], 109.0);
+    }
+
+    #[test]
+    fn subscription_wire_roundtrip() {
+        for sub in [
+            Subscription::all(),
+            Subscription::var("T"),
+            Subscription::var_box("T", &[0, 1, 0], &[2, 2, 6]).and_var("PSFC"),
+        ] {
+            let decoded = decode_subscription(&encode_subscription(&sub)).unwrap();
+            assert_eq!(decoded, sub);
+        }
+        // Malformed subscriptions are rejected with descriptive errors.
+        let mut w = Writer::new();
+        w.u32(1);
+        w.str("X");
+        w.u8(7); // bad selector tag
+        assert!(decode_subscription(&w.into_vec()).is_err());
+        let overflow = Subscription::var_box("X", &[u64::MAX], &[2]);
+        assert!(decode_subscription(&encode_subscription(&overflow)).is_err());
+    }
+
+    #[test]
+    fn step_selection_pushdown_matches_extract_box() {
+        let (steps, _) = world_stream(Codec::None, 1, DataPlane::Lanes, 1);
+        let step = &steps[0];
+        let (shape, g) = step.read_var_global("THETA").unwrap();
+        let sel = step.read_var_selection("THETA", &[1, 2], &[2, 3]).unwrap();
+        let want = extract_box(&shape, &g, &[1, 2], &[2, 3]).unwrap();
+        assert_eq!(sel, want);
+        // A selection outside the shape errors, same as the fallback.
+        assert!(step.read_var_selection("THETA", &[3, 6], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn fanout_full_and_boxed_consumers() {
+        // One producer, two consumers: a full subscriber (byte-identical
+        // to the single-consumer path) and a boxed subscriber that must
+        // receive strictly fewer wire bytes (selection pushdown).
+        let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let l_box = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addrs = vec![
+            l_full.local_addr().unwrap(),
+            l_box.local_addr().unwrap(),
+        ];
+        let full_t = std::thread::spawn(move || {
+            let mut c = l_full
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap();
+            let mut got = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                got.push(s);
+            }
+            got
+        });
+        let box_t = std::thread::spawn(move || {
+            let mut c = l_box
+                .accept_with(
+                    &Subscription::var_box("THETA", &[1, 2], &[2, 3]),
+                    Some(Duration::from_secs(30)),
+                )
+                .unwrap();
+            let mut got = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                got.push(s);
+            }
+            got
+        });
+        run_world(4, 2, move |mut comm| {
+            let mut eng = SstEngine::open_multi(
+                &addrs,
+                OperatorConfig::none(),
+                CostModel::new(HardwareSpec::paper_testbed(2)),
+                &comm,
+                Duration::from_secs(5),
+                DataPlane::Lanes,
+                1,
+            )
+            .unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..2 {
+                eng.begin_step().unwrap();
+                let data: Vec<f32> =
+                    (0..8).map(|i| (s * 100) as f32 + (r * 8 + i) as f32).collect();
+                eng.put_f32(
+                    Variable::global("THETA", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                    data,
+                )
+                .unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap();
+        });
+        let full = full_t.join().unwrap();
+        let boxed = box_t.join().unwrap();
+        assert_eq!(full.len(), 2);
+        assert_eq!(boxed.len(), 2);
+        for (s, (f, b)) in full.iter().zip(&boxed).enumerate() {
+            let (shape, g) = f.read_var_global("THETA").unwrap();
+            let want = extract_box(&shape, &g, &[1, 2], &[2, 3]).unwrap();
+            let sel = b.read_var_selection("THETA", &[1, 2], &[2, 3]).unwrap();
+            assert_eq!(sel, want, "step {s}: boxed consumer disagrees");
+            assert!(
+                b.wire_bytes() < f.wire_bytes(),
+                "step {s}: pushdown must ship fewer wire bytes \
+                 ({} vs {})",
+                b.wire_bytes(),
+                f.wire_bytes()
+            );
+        }
     }
 
     #[test]

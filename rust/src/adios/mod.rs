@@ -35,7 +35,7 @@ use crate::{Error, Result};
 pub use config::{AdiosConfig, EngineKind, IoConfig};
 pub use engine::{DrainStats, Engine, EngineReport, Target};
 pub use operator::{Codec, OperatorConfig};
-pub use source::{StepSource, StepStatus};
+pub use source::{StepSource, StepStatus, Subscription};
 pub use variable::Variable;
 
 /// Top-level context (the `adios2::ADIOS` analog).
@@ -115,11 +115,22 @@ impl Adios {
                 let addr = io
                     .param("Address")
                     .ok_or_else(|| Error::config("SST io needs an Address parameter"))?;
+                // Multi-consumer fan-out: a comma-separated Address list
+                // opens one lane per aggregator per consumer, each with
+                // its own subscription (DESIGN.md §10).
+                let addrs: Vec<String> = addr
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                if addrs.is_empty() {
+                    return Err(Error::config("SST Address parameter is empty"));
+                }
                 // Parallel lanes by default; the rank-0 funnel stays
                 // available as the measured baseline.
                 let plane = engine::sst::DataPlane::parse(io.param("DataPlane").unwrap_or("lanes"))?;
-                Ok(Box::new(engine::sst::SstEngine::open(
-                    addr,
+                Ok(Box::new(engine::sst::SstEngine::open_multi(
+                    &addrs,
                     io.operator,
                     cost,
                     comm,

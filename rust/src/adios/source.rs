@@ -82,6 +82,95 @@ pub trait StepSource: Send {
     fn end_step(&mut self) -> Result<()>;
 }
 
+/// What a consumer wants to receive of one stream (selection pushdown,
+/// DESIGN.md §10).  An empty entry list subscribes to *everything*; a
+/// non-empty list limits the stream to the named variables, each either
+/// whole ([`SubEntry::sel`] = `None`) or cropped to a box.  Transports
+/// that understand subscriptions (the SST v3 data plane) ship only the
+/// intersecting sub-blocks; file sources ignore them (the data is on
+/// disk either way).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Subscription {
+    pub entries: Vec<SubEntry>,
+}
+
+/// One subscribed variable: whole extent, or a `[start, start+count)` box.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubEntry {
+    pub var: String,
+    pub sel: Option<(Vec<u64>, Vec<u64>)>,
+}
+
+/// The producer-side verdict of [`Subscription::wants`] for one variable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VarInterest {
+    /// Not subscribed: ship nothing of this variable.
+    Skip,
+    /// Ship every block whole.
+    Full,
+    /// Ship only the sub-blocks intersecting these boxes.
+    Boxes(Vec<(Vec<u64>, Vec<u64>)>),
+}
+
+impl Subscription {
+    /// Subscribe to everything (the v2-compatible default).
+    pub fn all() -> Self {
+        Subscription::default()
+    }
+
+    /// Subscribe to one whole variable (chain with [`Self::and_var`] /
+    /// [`Self::and_box`] for more).
+    pub fn var(name: &str) -> Self {
+        Subscription::default().and_var(name)
+    }
+
+    /// Subscribe to one box of one variable.
+    pub fn var_box(name: &str, start: &[u64], count: &[u64]) -> Self {
+        Subscription::default().and_box(name, start, count)
+    }
+
+    pub fn and_var(mut self, name: &str) -> Self {
+        self.entries.push(SubEntry {
+            var: name.to_string(),
+            sel: None,
+        });
+        self
+    }
+
+    pub fn and_box(mut self, name: &str, start: &[u64], count: &[u64]) -> Self {
+        self.entries.push(SubEntry {
+            var: name.to_string(),
+            sel: Some((start.to_vec(), count.to_vec())),
+        });
+        self
+    }
+
+    /// True if this subscription means "ship everything".
+    pub fn is_all(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// What this subscription wants of variable `name`.  A whole-variable
+    /// entry dominates any box entries for the same name.
+    pub fn wants(&self, name: &str) -> VarInterest {
+        if self.entries.is_empty() {
+            return VarInterest::Full;
+        }
+        let mut boxes = Vec::new();
+        for e in self.entries.iter().filter(|e| e.var == name) {
+            match &e.sel {
+                None => return VarInterest::Full,
+                Some((s, c)) => boxes.push((s.clone(), c.clone())),
+            }
+        }
+        if boxes.is_empty() {
+            VarInterest::Skip
+        } else {
+            VarInterest::Boxes(boxes)
+        }
+    }
+}
+
 /// Copy the box `[start, start+count)` out of a row-major global array
 /// (shared fallback for sources that materialize the global first).
 pub fn extract_box(
@@ -90,6 +179,14 @@ pub fn extract_box(
     start: &[u64],
     count: &[u64],
 ) -> Result<Vec<f32>> {
+    // Local rank guard: the `nd - 1` stride/row arithmetic below
+    // underflows on an empty shape, so the invariant must not depend on
+    // a remote validator keeping its rank check.
+    if shape.is_empty() {
+        return Err(Error::bp(
+            "extract_box: rank-0 (empty) shape; box selections need rank >= 1",
+        ));
+    }
     // One bounds check shared with the SST consumer and the BP reader
     // (rank, non-empty extents, overflow-checked `start+count <= shape`).
     crate::adios::bp::validate_block_geometry(shape, start, count)?;
@@ -161,5 +258,41 @@ mod tests {
         assert!(extract_box(&[2, 4], &g, &[0, 0], &[0, 4]).is_err());
         // Overflowing start+count must be rejected, not wrap past the check.
         assert!(extract_box(&[2, 4], &g, &[u64::MAX, 0], &[2, 4]).is_err());
+    }
+
+    #[test]
+    fn extract_box_rank0_guard_is_local() {
+        // Regression: an empty shape must surface as a descriptive error
+        // from extract_box itself — `nd - 1` would otherwise underflow if
+        // a caller bypassed validate_block_geometry's rank check.
+        let err = extract_box(&[], &[], &[], &[]).err().expect("rank-0 accepted");
+        assert!(
+            format!("{err}").contains("rank"),
+            "want local rank guard, got: {err}"
+        );
+    }
+
+    #[test]
+    fn subscription_wants() {
+        let all = Subscription::all();
+        assert!(all.is_all());
+        assert_eq!(all.wants("T"), VarInterest::Full);
+
+        let t_only = Subscription::var("T");
+        assert_eq!(t_only.wants("T"), VarInterest::Full);
+        assert_eq!(t_only.wants("PSFC"), VarInterest::Skip);
+
+        let boxed = Subscription::var_box("T", &[0, 1, 0], &[2, 2, 6]);
+        match boxed.wants("T") {
+            VarInterest::Boxes(b) => {
+                assert_eq!(b, vec![(vec![0, 1, 0], vec![2, 2, 6])]);
+            }
+            other => panic!("want boxes, got {other:?}"),
+        }
+        assert_eq!(boxed.wants("U"), VarInterest::Skip);
+
+        // A whole-variable entry dominates box entries for the same name.
+        let both = Subscription::var_box("T", &[0], &[1]).and_var("T");
+        assert_eq!(both.wants("T"), VarInterest::Full);
     }
 }

@@ -13,7 +13,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use crate::adios::source::{StepSource, StepStatus};
+use crate::adios::source::{StepSource, StepStatus, Subscription};
 use crate::metrics::Stopwatch;
 use crate::runtime::{AnalysisOutput, AnalysisStep};
 use crate::{Error, Result};
@@ -129,6 +129,14 @@ impl InsituAnalyzer {
             // (θ − 300 K) — the paper's plotted temperature field.
             var: "T".to_string(),
         }
+    }
+
+    /// The selection this consumer needs: just its analysis variable,
+    /// full extent.  A fan-out SST producer given this subscription ships
+    /// only `var` blocks down this consumer's lanes (selection pushdown)
+    /// instead of the whole ~100-variable history step.
+    pub fn subscription(&self) -> Subscription {
+        Subscription::var(&self.var)
     }
 
     /// Analyze the step currently open on `src`.
@@ -268,6 +276,16 @@ mod tests {
         assert_eq!(bytes.len(), 11 + 64);
         assert_eq!(*bytes.last().unwrap(), 255);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn analyzer_subscribes_to_its_variable_only() {
+        use crate::adios::source::VarInterest;
+        let a = InsituAnalyzer::new(None, None);
+        let sub = a.subscription();
+        assert!(!sub.is_all());
+        assert_eq!(sub.wants(&a.var), VarInterest::Full);
+        assert_eq!(sub.wants("PSFC"), VarInterest::Skip);
     }
 
     #[test]

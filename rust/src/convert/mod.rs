@@ -154,6 +154,94 @@ pub fn stream_to_nc(
     Ok(paths)
 }
 
+/// Magic of one archived step file ("SARC").
+const ARCHIVE_MAGIC: u32 = 0x5341_5243;
+
+/// Archive every step arriving on `src` as a raw little-endian step file
+/// (`<stem>_step<i>.stp`: magic | u32 nvars { str name | dims shape |
+/// bytes f32-data }) — the third consumer of the paper's fan-out
+/// pipeline: a lossless stream capture that later feeds
+/// [`read_archive_step`] or offline tooling without re-running the
+/// producer.  Returns the written paths in step order.
+pub fn stream_to_archive(
+    src: &mut dyn StepSource,
+    out_dir: &Path,
+    stem: &str,
+    step_timeout: Duration,
+) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    loop {
+        match src.begin_step(step_timeout)? {
+            StepStatus::EndOfStream => break,
+            StepStatus::Timeout => {
+                return Err(Error::Cdf(format!(
+                    "archive: {} source stalled, no step {} within {:.1}s",
+                    src.source_name(),
+                    paths.len(),
+                    step_timeout.as_secs_f64()
+                )))
+            }
+            StepStatus::Ready => {}
+        }
+        let p = out_dir.join(format!("{stem}_step{}.stp", src.step_index()));
+        archive_open_step(src, &p)?;
+        paths.push(p);
+        src.end_step()?;
+    }
+    Ok(paths)
+}
+
+/// Write the step currently open on `src` as one archive file (shared
+/// body of [`stream_to_archive`] and custom consumer loops).  Returns
+/// bytes written.
+pub fn archive_open_step(src: &mut dyn StepSource, path: &Path) -> Result<u64> {
+    let mut w = crate::util::byteio::Writer::new();
+    w.u32(ARCHIVE_MAGIC);
+    let names = src.var_names();
+    w.u32(names.len() as u32);
+    for n in &names {
+        let (shape, data) = src.read_var_global(n)?;
+        w.str(n);
+        w.dims(&shape);
+        w.bytes(crate::util::f32_slice_as_bytes(&data));
+    }
+    let bytes = w.into_vec();
+    std::fs::write(path, &bytes)?;
+    Ok(bytes.len() as u64)
+}
+
+/// Read one archived step back: `(name, shape, data)` per variable, in
+/// the archived order.
+pub fn read_archive_step(path: &Path) -> Result<Vec<(String, Vec<u64>, Vec<f32>)>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Cdf(format!("cannot read {}: {e}", path.display())))?;
+    let mut r = crate::util::byteio::Reader::new(&bytes);
+    let magic = r.u32()?;
+    if magic != ARCHIVE_MAGIC {
+        return Err(Error::Cdf(format!(
+            "{}: bad archive magic {magic:#010x}",
+            path.display()
+        )));
+    }
+    let n = r.u32()? as usize;
+    if n > r.remaining() {
+        return Err(Error::Cdf(format!(
+            "{}: corrupt archive: declares {n} variables in {} remaining bytes",
+            path.display(),
+            r.remaining()
+        )));
+    }
+    let mut out = Vec::with_capacity(n.min(256));
+    for _ in 0..n {
+        let name = r.str()?;
+        let shape = r.dims()?;
+        let data = crate::util::bytes_to_f32_vec(&r.bytes()?)?;
+        out.push((name, shape, data));
+    }
+    Ok(out)
+}
+
 /// Convert every step of a BP directory; returns the written paths.
 ///
 /// Since the streaming-read refactor this drains a [`BpFollower`] over
@@ -362,5 +450,57 @@ mod tests {
     #[test]
     fn stitch_empty_is_error() {
         assert!(stitch_split(&[], Path::new("/tmp/x.nc"), false).is_err());
+    }
+
+    #[test]
+    fn archive_roundtrip() {
+        let dir = tmp("arch");
+        let d2 = dir.clone();
+        run_world(4, 2, move |mut comm| {
+            let cfg = Bp4Config {
+                name: "hist".into(),
+                pfs_dir: d2.join("pfs"),
+                bb_root: d2.join("bb"),
+                target: Target::Pfs,
+                operator: OperatorConfig::blosc(Codec::Lz4),
+                aggs_per_node: 1,
+                cost: CostModel::new(HardwareSpec::paper_testbed(2)),
+                pack_threads: 0,
+                async_io: true,
+                drain_throttle: None,
+                live_publish: false,
+            };
+            let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..2u64 {
+                eng.begin_step().unwrap();
+                eng.put_f32(
+                    Variable::global("T2", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                    (0..6).map(|i| (s * 100 + r * 6 + i) as f32).collect(),
+                )
+                .unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap();
+        });
+        let mut src =
+            BpFollower::open(&dir.join("pfs/hist.bp"), Duration::from_millis(1)).unwrap();
+        let paths =
+            stream_to_archive(&mut src, &dir.join("arc"), "hist", Duration::from_secs(10))
+                .unwrap();
+        assert_eq!(paths.len(), 2);
+        for (s, p) in paths.iter().enumerate() {
+            let vars = read_archive_step(p).unwrap();
+            assert_eq!(vars.len(), 1);
+            let (name, shape, data) = &vars[0];
+            assert_eq!(name, "T2");
+            assert_eq!(shape, &vec![4, 6]);
+            assert_eq!(data.len(), 24);
+            assert_eq!(data[13], (s * 100 + 13) as f32);
+        }
+        // Corrupt magic is rejected with a descriptive error.
+        std::fs::write(dir.join("arc/bad.stp"), b"NOPENOPE").unwrap();
+        assert!(read_archive_step(&dir.join("arc/bad.stp")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

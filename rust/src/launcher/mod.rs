@@ -18,6 +18,7 @@
 //!   adios2_target          = 'pfs',    ! pfs | bb
 //!   adios2_drain           = .false.,
 //!   adios2_sst_data_plane  = 'lanes',  ! lanes | funnel (SST engines)
+//!   adios2_sst_address     = 'h:p,h:p',! SST consumer list (fan-out)
 //!   adios2_live_publish    = .false.,  ! per-step md.idx for followers
 //!   frames_per_outfile     = 1,        ! 0 = all frames in one BP file
 //!   nio_tasks              = 2,        ! quilt servers (io_form=901)
@@ -64,6 +65,9 @@ pub struct RunConfig {
     pub drain: bool,
     /// SST data plane: "lanes" (parallel, default) or "funnel" (baseline).
     pub sst_data_plane: String,
+    /// SST consumer addresses (comma-separated in the namelist): more
+    /// than one opens the multi-consumer fan-out (DESIGN.md §10).
+    pub sst_addresses: Vec<String>,
     /// Republish `md.idx` per step so live file-followers can tail the run.
     pub live_publish: bool,
     /// WRF `frames_per_outfile`: 0 = all history frames in one BP file.
@@ -127,6 +131,15 @@ impl RunConfig {
                 .get_str("adios2_sst_data_plane")
                 .unwrap_or("lanes")
                 .to_string(),
+            sst_addresses: tc
+                .get_str("adios2_sst_address")
+                .map(|s| {
+                    s.split(',')
+                        .map(|a| a.trim().to_string())
+                        .filter(|a| !a.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default(),
             live_publish: tc.get_bool("adios2_live_publish").unwrap_or(false),
             frames_per_outfile: get(tc, "frames_per_outfile", 1).max(0) as usize,
             out_dir: base_dir.join(out_dir),
@@ -170,6 +183,10 @@ impl RunConfig {
         } else if io.engine == EngineKind::Sst {
             io.params
                 .insert("DataPlane".into(), self.sst_data_plane.clone());
+            if !self.sst_addresses.is_empty() {
+                io.params
+                    .insert("Address".into(), self.sst_addresses.join(","));
+            }
         }
         io.operator = OperatorConfig::blosc(self.codec);
         Ok(adios)
@@ -223,6 +240,121 @@ pub fn run_from_namelist(path: &std::path::Path, artifacts: &std::path::Path) ->
     Ok(summary)
 }
 
+/// Run the paper's full in-situ pipeline from a namelist: one forecast
+/// producer streaming over the SST fan-out data plane to **three
+/// concurrent consumers** — in-situ analysis (subscribed to just its
+/// analysis variable: selection pushdown), live NetCDF conversion (full
+/// subscription), and a raw step archiver (full subscription).  This is
+/// the `stormio insitu` command: the multi-consumer analog of
+/// `stormio follow`, with zero file-system round-trip.
+pub fn run_insitu_from_namelist(
+    path: &std::path::Path,
+    artifacts: &std::path::Path,
+) -> Result<RunSummary> {
+    use crate::adios::engine::sst::{SstConsumer, SstSource};
+    use crate::adios::Subscription;
+    use crate::analysis::InsituAnalyzer;
+    use crate::runtime::AnalysisStep;
+    use std::time::Duration;
+
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::config(format!("cannot read {}: {e}", path.display())))?;
+    let nl = Namelist::parse(&text)?;
+    let base = path.parent().unwrap_or(std::path::Path::new("."));
+    let mut cfg = RunConfig::from_namelist(&nl, base)?;
+    // This command *is* the streaming pipeline: force the ADIOS2 backend
+    // regardless of the namelist's io_form so the SST engine below is
+    // what the driver constructs.
+    cfg.io_form = 22;
+
+    // Load the runtime first: fail fast before any consumer blocks in
+    // accept waiting for a producer that will never start.
+    let rt = XlaRuntime::new()?;
+    let man = Manifest::load(artifacts)?;
+    let driver = ForecastDriver::new(cfg.forecast.clone())?;
+    let (nyp, nxp) = driver.decomp.patch();
+    let step = Arc::new(ModelStep::load(&rt, &man, nyp, nxp)?);
+
+    let accept_timeout = Some(Duration::from_secs(300));
+    let step_timeout = Duration::from_secs(300);
+
+    let l_analysis = SstConsumer::listen("127.0.0.1:0")?;
+    let l_convert = SstConsumer::listen("127.0.0.1:0")?;
+    let l_archive = SstConsumer::listen("127.0.0.1:0")?;
+    let addrs = [
+        l_analysis.local_addr()?,
+        l_convert.local_addr()?,
+        l_archive.local_addr()?,
+    ];
+
+    let aot = AnalysisStep::load(&rt, &man, cfg.forecast.ny, cfg.forecast.nx).ok();
+    let img_dir = cfg.out_dir.join("frames");
+    let analysis_t = std::thread::spawn(move || -> Result<Vec<crate::analysis::AnalysisRecord>> {
+        let analyzer = InsituAnalyzer::new(aot, Some(img_dir));
+        let consumer = l_analysis.accept_with(&analyzer.subscription(), accept_timeout)?;
+        analyzer.run(&mut SstSource::new(consumer), step_timeout)
+    });
+    let nc_dir = cfg.out_dir.join("nc_live");
+    let nc_dir_t = nc_dir.clone();
+    let convert_t = std::thread::spawn(move || -> Result<Vec<PathBuf>> {
+        let consumer = l_convert.accept_with(&Subscription::all(), accept_timeout)?;
+        crate::convert::stream_to_nc(
+            &mut SstSource::new(consumer),
+            &nc_dir_t,
+            "wrfout",
+            true,
+            step_timeout,
+        )
+    });
+    let arc_dir = cfg.out_dir.join("archive");
+    let arc_dir_t = arc_dir.clone();
+    let archive_t = std::thread::spawn(move || -> Result<Vec<PathBuf>> {
+        let consumer = l_archive.accept_with(&Subscription::all(), accept_timeout)?;
+        crate::convert::stream_to_archive(
+            &mut SstSource::new(consumer),
+            &arc_dir_t,
+            "wrfout",
+            step_timeout,
+        )
+    });
+
+    // Producer: the forecast with an SST fan-out backend addressing all
+    // three consumers (namelist engine choice is overridden — this
+    // command *is* the streaming pipeline).
+    let mut adios = cfg.adios(base)?;
+    let io = adios.declare_io("wrf_history");
+    io.engine = EngineKind::Sst;
+    io.params.insert("Address".into(), addrs.join(","));
+    io.params
+        .insert("DataPlane".into(), cfg.sst_data_plane.clone());
+    let summary = driver.run(step, |_rank| {
+        cfg.make_backend(&adios).expect("backend construction failed")
+    })?;
+
+    let records = analysis_t
+        .join()
+        .map_err(|_| Error::model("analysis consumer panicked"))??;
+    let converted = convert_t
+        .join()
+        .map_err(|_| Error::model("conversion consumer panicked"))??;
+    let archived = archive_t
+        .join()
+        .map_err(|_| Error::model("archive consumer panicked"))??;
+
+    print_summary(&cfg, &summary);
+    println!(
+        "in-situ fan-out: {} frames analyzed (θ surface mean of last: {:.2}), \
+         {} NetCDF files in {}, {} archived steps in {}",
+        records.len(),
+        records.last().map(|r| r.surf_mean).unwrap_or(0.0),
+        converted.len(),
+        nc_dir.display(),
+        archived.len(),
+        arc_dir.display(),
+    );
+    Ok(summary)
+}
+
 /// WRF `rsl.out`-style end-of-run report.
 pub fn print_summary(cfg: &RunConfig, s: &RunSummary) {
     println!("stormio forecast complete — backend {}", s.backend);
@@ -273,6 +405,7 @@ mod tests {
    adios2_target = 'bb',
    adios2_drain = .true.,
    adios2_sst_data_plane = 'funnel',
+   adios2_sst_address = '127.0.0.1:5001, 127.0.0.1:5002',
    adios2_live_publish = .true.,
    frames_per_outfile = 0,
  /
@@ -295,6 +428,10 @@ mod tests {
         assert!(cfg.target_bb && cfg.drain);
         assert_eq!(cfg.aggs_per_node, 2);
         assert_eq!(cfg.sst_data_plane, "funnel");
+        assert_eq!(
+            cfg.sst_addresses,
+            vec!["127.0.0.1:5001".to_string(), "127.0.0.1:5002".to_string()]
+        );
         assert!(cfg.live_publish);
         assert_eq!(cfg.frames_per_outfile, 0);
         assert_eq!(cfg.forecast.frames, 2);
@@ -340,6 +477,9 @@ mod tests {
         let io = adios.config.io("wrf_history").unwrap();
         assert_eq!(io.engine, EngineKind::Sst);
         assert_eq!(io.param("DataPlane"), Some("funnel"));
+        // The namelist's consumer list overrides the XML Address (the
+        // multi-consumer fan-out surface).
+        assert_eq!(io.param("Address"), Some("127.0.0.1:5001,127.0.0.1:5002"));
         assert_eq!(io.aggregators_per_node().unwrap(), 2);
         let _ = std::fs::remove_dir_all(&dir);
     }

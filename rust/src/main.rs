@@ -23,6 +23,12 @@ USAGE:
       LivePublish) and convert each step to NetCDF as it is
       published; exits when the producer completes.
 
+  stormio insitu <namelist.input> [--artifacts DIR]
+      Run a forecast streaming over the SST fan-out data plane to
+      three concurrent consumers: in-situ analysis (subscribed to
+      its variable only — selection pushdown), live NetCDF
+      conversion, and a raw step archiver (paper §V-F, Fig 8).
+
   stormio stitch <out.nc> <part.nc> [part.nc ...]
       Stitch split-NetCDF (io_form=102) per-rank files into one file.
 
@@ -47,6 +53,13 @@ fn real_main() -> stormio::Result<i32> {
                 stormio::Error::config("run: missing namelist path".to_string())
             })?;
             launcher::run_from_namelist(Path::new(nl), &artifacts_flag(&args))?;
+            Ok(0)
+        }
+        Some("insitu") => {
+            let nl = args.get(1).ok_or_else(|| {
+                stormio::Error::config("insitu: missing namelist path".to_string())
+            })?;
+            launcher::run_insitu_from_namelist(Path::new(nl), &artifacts_flag(&args))?;
             Ok(0)
         }
         Some("convert") => {

@@ -223,6 +223,51 @@ impl CostModel {
         bytes / (self.hw.link_bw * parallel) + self.hw.link_lat_s
     }
 
+    /// Producer egress for a multi-consumer fan-out: every consumer's
+    /// stream carries its own (possibly subscription-cropped) copy, so
+    /// the wire pays the *sum* of per-consumer bytes; `lanes` concurrent
+    /// connections share the producer-side NICs exactly as in
+    /// [`Self::t_stream_transfer_lanes`], plus one per-message latency
+    /// per consumer stream.  With one full consumer this degenerates to
+    /// the single-stream transfer.
+    pub fn t_stream_egress(&self, per_consumer_bytes: &[f64], lanes: usize) -> f64 {
+        if per_consumer_bytes.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = per_consumer_bytes.iter().sum();
+        let parallel = lanes.clamp(1, self.hw.nodes.max(1)) as f64;
+        total / (self.hw.link_bw * parallel)
+            + self.hw.link_lat_s * per_consumer_bytes.len() as f64
+    }
+
+    /// Score direct fan-out (per-lane aggregators ship every consumer's
+    /// stream concurrently) against the funnel-and-relay alternative
+    /// (gather one full copy at rank 0, then the root re-ships each
+    /// consumer's stream through its single NIC).  `step_bytes` is the
+    /// full stored step volume — what members actually ship through the
+    /// gather/chain fabric in both designs, since subscription cropping
+    /// happens at the lane (cropped subscriptions shrink only the wire
+    /// egress).  Returns `relay_time / fanout_time`: > 1 means the
+    /// fan-out data plane wins, and the advantage grows with consumer
+    /// count because the relay serializes every copy on one NIC on top
+    /// of the serial gather.
+    pub fn fanout_advantage(
+        &self,
+        step_bytes: f64,
+        per_consumer_bytes: &[f64],
+        lanes: usize,
+    ) -> f64 {
+        let total: f64 = per_consumer_bytes.iter().sum();
+        if total <= 0.0 || step_bytes <= 0.0 {
+            return 1.0;
+        }
+        let relay =
+            self.t_gather_root(step_bytes, self.hw.ranks()) + self.t_stream_transfer(total);
+        let fanout = self.t_chain_gather(step_bytes, lanes.max(1))
+            + self.t_stream_egress(per_consumer_bytes, lanes);
+        relay / fanout
+    }
+
     /// Per-rank parallel compression: each rank compresses its share at
     /// the measured single-thread codec throughput.
     pub fn t_compress(&self, bytes: f64, codec_bw: f64) -> f64 {
@@ -319,6 +364,42 @@ mod tests {
         // the node-local chain to per-lane aggregators (the serial-funnel
         // bottleneck the parallel data plane removes).
         assert!(m.t_gather_root(v, 288) > 2.0 * m.t_chain_gather(v, 8));
+    }
+
+    #[test]
+    fn egress_degenerates_to_single_stream() {
+        let m = cm(8);
+        let v = 8e9;
+        // One full consumer over one lane == the v2 single-stream charge.
+        assert!((m.t_stream_egress(&[v], 1) - m.t_stream_transfer(v)).abs() < 1e-9);
+        // One full consumer over 8 lanes == the v2 lane charge.
+        assert!(
+            (m.t_stream_egress(&[v], 8) - m.t_stream_transfer_lanes(v, 8)).abs() < 1e-9
+        );
+        // Each extra consumer stream adds wire time (egress is per copy).
+        assert!(m.t_stream_egress(&[v, v], 8) > m.t_stream_egress(&[v], 8));
+        // A cropped subscription costs less egress than a full one.
+        assert!(m.t_stream_egress(&[v, v / 16.0], 8) < m.t_stream_egress(&[v, v], 8));
+        assert_eq!(m.t_stream_egress(&[], 8), 0.0);
+    }
+
+    #[test]
+    fn fanout_beats_funnel_relay_and_grows_with_consumers() {
+        let m = cm(8);
+        let v = 8e9;
+        let a1 = m.fanout_advantage(v, &[v], 8);
+        let a3 = m.fanout_advantage(v, &[v, v, v], 8);
+        assert!(a1 > 1.0, "fan-out must beat the relay for 1 consumer: {a1:.2}");
+        assert!(
+            a3 > a1,
+            "advantage must grow with consumer count: {a3:.2} vs {a1:.2}"
+        );
+        // Boxed consumers shrink only the egress terms: the chain/gather
+        // stage is still charged with the full step both ways.
+        let boxed = m.fanout_advantage(v, &[v / 100.0, v / 100.0], 8);
+        assert!(boxed > 0.0 && boxed.is_finite());
+        assert_eq!(m.fanout_advantage(v, &[], 8), 1.0);
+        assert_eq!(m.fanout_advantage(0.0, &[v], 8), 1.0);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! set, so the crate is std-threads based throughout.)
 
 pub mod byteio;
+pub mod hash;
 pub mod pool;
 pub mod rng;
 

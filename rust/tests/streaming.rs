@@ -1,8 +1,10 @@
 //! Streaming-read layer tests: wire-protocol hardening (garbage /
-//! truncation / length bombs), transport equivalence (funnel-SST vs
-//! parallel-lane SST vs the BP4 file-follower, byte-identical payloads
-//! and bit-identical analysis statistics), live NetCDF conversion off a
-//! tailed BP4 run, and follower timeout semantics.
+//! truncation / length bombs / payload checksums), transport equivalence
+//! (funnel-SST vs parallel-lane SST vs the BP4 file-follower,
+//! byte-identical payloads and bit-identical analysis statistics),
+//! multi-consumer SST fan-out with selection pushdown, consumer-drop
+//! survival, bounded accept, live NetCDF conversion off a tailed BP4
+//! run, and follower timeout semantics.
 
 use std::io::Write as _;
 use std::net::TcpStream;
@@ -17,13 +19,14 @@ use stormio::adios::engine::sst::{
 };
 use stormio::adios::engine::{Engine, Target};
 use stormio::adios::operator::{Codec, OperatorConfig};
-use stormio::adios::source::{StepSource, StepStatus};
+use stormio::adios::source::{extract_box, StepSource, StepStatus, Subscription};
 use stormio::adios::Variable;
 use stormio::analysis::{AnalysisRecord, InsituAnalyzer};
 use stormio::cluster::{run_world, Comm};
 use stormio::io::cdf::CdfReader;
 use stormio::sim::{CostModel, HardwareSpec};
 use stormio::util::byteio::Writer;
+use stormio::util::hash::xxh64;
 
 fn tmp(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("stormio_stream_{tag}_{}", std::process::id()));
@@ -141,6 +144,7 @@ fn wire_rejects_declared_raw_bomb() {
         w.dims(&[0]);
         w.dims(&[4]);
         w.u64(MAX_FRAME_LEN + 1); // declared raw length: bomb
+        w.u64(xxh64(&[0u8; 4], 0)); // v3 payload checksum
         w.bytes(&[0u8; 4]);
         s.write_all(&frame_bytes(TYPE_STEP, &w.into_vec())).unwrap();
         std::thread::sleep(Duration::from_millis(100));
@@ -176,6 +180,7 @@ fn wire_rejects_shape_and_geometry_bombs() {
         w.dims(&[0, 0]);
         w.dims(&[1, 1]);
         w.u64(4);
+        w.u64(xxh64(&tiny, 0));
         w.bytes(&tiny);
         w.str("OOB");
         w.dims(&[4]);
@@ -184,6 +189,7 @@ fn wire_rejects_shape_and_geometry_bombs() {
         w.dims(&[100]); // start beyond the extent
         w.dims(&[4]);
         w.u64(4);
+        w.u64(xxh64(&tiny, 0));
         w.bytes(&tiny);
         s.write_all(&frame_bytes(TYPE_STEP, &w.into_vec())).unwrap();
         std::thread::sleep(Duration::from_millis(100));
@@ -217,6 +223,7 @@ fn wire_rejects_raw_mismatch_at_read() {
         w.dims(&[0]);
         w.dims(&[4]);
         w.u64(16); // declares 16 raw bytes; the frame holds 8
+        w.u64(xxh64(&block, 0));
         w.bytes(&block);
         s.write_all(&frame_bytes(TYPE_STEP, &w.into_vec())).unwrap();
         std::thread::sleep(Duration::from_millis(100));
@@ -227,6 +234,79 @@ fn wire_rejects_raw_mismatch_at_read() {
     assert!(
         format!("{err}").contains("declared"),
         "want declared-length mismatch, got: {err}"
+    );
+    peer.join().unwrap();
+}
+
+#[test]
+fn wire_rejects_corrupted_payload_checksum() {
+    // A structurally valid frame whose payload bytes were flipped after
+    // the producer computed the checksum must be rejected *before*
+    // decompression — the wire-integrity satellite.
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&hello_frame(0, 1)).unwrap();
+        let block =
+            stormio::adios::operator::compress(&[9u8; 16], OperatorConfig::none()).unwrap();
+        let mut w = Writer::new();
+        w.u64(0); // step index
+        w.u32(1); // nvars
+        w.str("X");
+        w.dims(&[4]);
+        w.u32(1); // nblocks
+        w.u32(0); // producer rank
+        w.dims(&[0]);
+        w.dims(&[4]);
+        w.u64(16);
+        w.u64(xxh64(&block, 0)); // checksum of the *pristine* frame
+        let mut corrupt = block.clone();
+        *corrupt.last_mut().unwrap() ^= 0x40; // in-flight bit flip
+        w.bytes(&corrupt);
+        s.write_all(&frame_bytes(TYPE_STEP, &w.into_vec())).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+    });
+    let mut c = listener.accept().unwrap();
+    let err = c.next_step().err().expect("corrupted payload accepted");
+    assert!(
+        format!("{err}").contains("checksum"),
+        "want checksum-mismatch error, got: {err}"
+    );
+    peer.join().unwrap();
+}
+
+#[test]
+fn accept_deadline_reports_partial_lane_state() {
+    // No producer at all: the bounded accept returns instead of blocking
+    // forever, reporting that zero lanes connected.
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let t0 = Instant::now();
+    let err = listener
+        .accept_with(&Subscription::all(), Some(Duration::from_millis(200)))
+        .err()
+        .expect("accept with no producer succeeded");
+    assert!(t0.elapsed() < Duration::from_secs(5), "bounded accept stalled");
+    let msg = format!("{err}");
+    assert!(msg.contains("0 lanes"), "want partial-lane state, got: {msg}");
+
+    // One of two announced lanes connects, then silence: the error names
+    // the partial-lane state.
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&hello_frame(0, 2)).unwrap();
+        std::thread::sleep(Duration::from_millis(700));
+    });
+    let err = listener
+        .accept_with(&Subscription::all(), Some(Duration::from_millis(300)))
+        .err()
+        .expect("partial accept succeeded");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("1 of 2 lanes"),
+        "want partial-lane state, got: {msg}"
     );
     peer.join().unwrap();
 }
@@ -421,6 +501,223 @@ fn step_payloads_identical_across_all_transports() {
         }
     }
     src.end_step().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-consumer SST fan-out (selection pushdown, consumer drop)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fanout_three_consumers_equivalence_and_pushdown() {
+    // Single-consumer v2-compatible baseline for the byte-identity check.
+    let (baseline, _) = run_sst(DataPlane::Lanes, 1);
+
+    let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let l_var = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let l_box = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addrs = vec![
+        l_full.local_addr().unwrap(),
+        l_var.local_addr().unwrap(),
+        l_box.local_addr().unwrap(),
+    ];
+
+    // Consumer 1 — full subscription: must see byte-identical canonical
+    // payloads vs. the single-consumer path.
+    let full_t = std::thread::spawn(move || {
+        let mut src = SstSource::new(
+            l_full
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        let mut canons = Vec::new();
+        let mut wire = 0u64;
+        loop {
+            match src.begin_step(Duration::from_secs(30)).unwrap() {
+                StepStatus::Ready => {}
+                StepStatus::EndOfStream => break,
+                StepStatus::Timeout => panic!("full consumer timed out"),
+            }
+            wire += src.step_stored_bytes();
+            canons.push(canon_step(&mut src));
+            src.end_step().unwrap();
+        }
+        (canons, wire)
+    });
+
+    // Consumer 2 — whole-variable subscription (PSFC only): variable-level
+    // pushdown; T never crosses this consumer's wire.
+    let var_t = std::thread::spawn(move || {
+        let mut c = l_var
+            .accept_with(&Subscription::var("PSFC"), Some(Duration::from_secs(30)))
+            .unwrap();
+        let mut fields = Vec::new();
+        let mut wire = 0u64;
+        while let Some(s) = c.next_step().unwrap() {
+            assert_eq!(s.var_names(), vec!["PSFC"], "pushdown must drop other vars");
+            wire += s.wire_bytes();
+            fields.push(s.read_var_global("PSFC").unwrap());
+        }
+        (fields, wire)
+    });
+
+    // Consumer 3 — boxed subscription of T: receives only intersecting
+    // sub-blocks; the selection read must bit-match extract_box of the
+    // full global.
+    let box_t = std::thread::spawn(move || {
+        let mut c = l_box
+            .accept_with(
+                &Subscription::var_box("T", &[0, 1, 2], &[2, 2, 3]),
+                Some(Duration::from_secs(30)),
+            )
+            .unwrap();
+        let mut sels = Vec::new();
+        let mut wire = 0u64;
+        while let Some(s) = c.next_step().unwrap() {
+            wire += s.wire_bytes();
+            sels.push(s.read_var_selection("T", &[0, 1, 2], &[2, 2, 3]).unwrap());
+        }
+        (sels, wire)
+    });
+
+    run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_multi(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+        )
+        .unwrap();
+        produce(&mut eng, &mut comm, STEPS);
+        eng.close(&mut comm).unwrap();
+    });
+
+    let (full_canons, full_wire) = full_t.join().unwrap();
+    let (var_fields, var_wire) = var_t.join().unwrap();
+    let (box_sels, box_wire) = box_t.join().unwrap();
+
+    // Byte-identical to the single-consumer baseline.
+    assert_eq!(full_canons.len(), STEPS);
+    assert_eq!(
+        full_canons, baseline,
+        "full-subscription consumer differs from the v2 single-consumer path"
+    );
+
+    // The PSFC-only consumer agrees bit-for-bit with the baseline PSFC.
+    assert_eq!(var_fields.len(), STEPS);
+    for (s, (shape, data)) in var_fields.iter().enumerate() {
+        let (_, bshape, bbytes) = baseline[s]
+            .iter()
+            .find(|(n, _, _)| n == "PSFC")
+            .expect("baseline has PSFC");
+        assert_eq!(shape, bshape, "step {s}");
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(&bytes, bbytes, "step {s}: PSFC data differs");
+    }
+
+    // The boxed consumer's pushdown selection bit-matches extract_box of
+    // the baseline global.
+    assert_eq!(box_sels.len(), STEPS);
+    for (s, sel) in box_sels.iter().enumerate() {
+        let (_, tshape, tbytes) = baseline[s]
+            .iter()
+            .find(|(n, _, _)| n == "T")
+            .expect("baseline has T");
+        let global: Vec<f32> = tbytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let want = extract_box(tshape, &global, &[0, 1, 2], &[2, 2, 3]).unwrap();
+        assert_eq!(sel, &want, "step {s}: boxed selection differs");
+    }
+
+    // Selection pushdown measurably ships fewer wire bytes.
+    assert!(
+        var_wire < full_wire,
+        "PSFC-only subscription must ship fewer bytes ({var_wire} vs {full_wire})"
+    );
+    assert!(
+        box_wire < full_wire,
+        "boxed subscription must ship fewer bytes ({box_wire} vs {full_wire})"
+    );
+}
+
+#[test]
+fn producer_keeps_serving_survivors_after_consumer_drop() {
+    // Two consumers; one hangs up after the first step.  The producer
+    // must keep streaming every remaining step to the survivor and close
+    // cleanly — a dropped consumer is not a producer failure.
+    let l_quitter = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let l_survivor = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addrs = vec![
+        l_quitter.local_addr().unwrap(),
+        l_survivor.local_addr().unwrap(),
+    ];
+    let nsteps = 12usize;
+    let nelems = 32 * 1024usize; // 128 KiB/step: outgrows socket buffering
+
+    let quitter = std::thread::spawn(move || {
+        let mut c = l_quitter
+            .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+            .unwrap();
+        let s = c.next_step().unwrap().expect("first step");
+        let (_, g) = s.read_var_global("X").unwrap();
+        drop(c); // hang up with steps still in flight
+        g[0]
+    });
+    let survivor = std::thread::spawn(move || {
+        let mut c = l_survivor
+            .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+            .unwrap();
+        let mut firsts = Vec::new();
+        while let Some(s) = c.next_step().unwrap() {
+            let (_, g) = s.read_var_global("X").unwrap();
+            firsts.push(g[0]);
+        }
+        firsts
+    });
+
+    run_world(2, 2, move |mut comm| {
+        let mut eng = SstEngine::open_multi(
+            &addrs,
+            OperatorConfig::none(),
+            CostModel::new(HardwareSpec::paper_testbed(1)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+        )
+        .unwrap();
+        for s in 0..nsteps {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global(
+                    "X",
+                    &[2, nelems as u64],
+                    &[comm.rank() as u64, 0],
+                    &[1, nelems as u64],
+                )
+                .unwrap(),
+                vec![s as f32; nelems],
+            )
+            .unwrap();
+            eng.end_step(&mut comm).unwrap();
+        }
+        // Close must succeed despite the dropped consumer.
+        eng.close(&mut comm).unwrap();
+    });
+
+    assert_eq!(quitter.join().unwrap(), 0.0, "quitter saw step 0");
+    let firsts = survivor.join().unwrap();
+    assert_eq!(firsts.len(), nsteps, "survivor must receive every step");
+    for (s, v) in firsts.iter().enumerate() {
+        assert_eq!(*v, s as f32, "step {s} corrupted/reordered for survivor");
+    }
 }
 
 // ---------------------------------------------------------------------------
