@@ -14,16 +14,15 @@ use stormio::adios::{Adios, Codec, OperatorConfig};
 use stormio::io::adios2::Adios2Backend;
 use stormio::io::pnetcdf::PnetCdfBackend;
 use stormio::io::split_nc::SplitNcBackend;
-use stormio::metrics::Table;
+use stormio::metrics::{BenchReport, Table};
 use stormio::sim::CostModel;
-use stormio::workload::{bench_write, Workload};
+use stormio::workload::{bench_nodes, bench_reps, bench_smoke, bench_write, Workload};
 
 fn main() {
     let wl = Workload::conus_proxy();
-    let reps: usize = std::env::var("STORMIO_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let reps = bench_reps(3);
+    let mut json = BenchReport::new("fig1");
+    json.flag("smoke", bench_smoke()).int("reps", reps as u64);
     let rpn = 36;
     let tmp = std::env::temp_dir().join(format!("stormio_fig1_{}", std::process::id()));
 
@@ -32,7 +31,7 @@ fn main() {
         &["nodes", "ranks", "PnetCDF", "SplitNC", "ADIOS2", "ADIOS2 speedup vs PnetCDF"],
     );
 
-    for nodes in [1usize, 2, 4, 8] {
+    for nodes in bench_nodes() {
         let hw = wl.hardware(nodes);
         let dir = tmp.join(format!("n{nodes}"));
 
@@ -79,9 +78,13 @@ fn main() {
             format!("{:.2}", adios2.mean_perceived()),
             format!("{:.1}x", pnetcdf.mean_perceived() / adios2.mean_perceived()),
         ]);
+        json.num(&format!("pnetcdf_s_n{nodes}"), pnetcdf.mean_perceived())
+            .num(&format!("splitnc_s_n{nodes}"), split.mean_perceived())
+            .num(&format!("adios2_s_n{nodes}"), adios2.mean_perceived());
         let _ = std::fs::remove_dir_all(&dir);
     }
     table.emit(Some(std::path::Path::new("bench_results/fig1.csv")));
+    json.write();
     println!(
         "paper: PnetCDF rises to 93 s @8 nodes; ADIOS2 flat ~8.2 s (>10x); SplitNC degrades 4->8 nodes."
     );

@@ -7,9 +7,9 @@
 
 use stormio::adios::{Adios, Codec, OperatorConfig, Target};
 use stormio::io::adios2::Adios2Backend;
-use stormio::metrics::Table;
+use stormio::metrics::{BenchReport, Table};
 use stormio::sim::CostModel;
-use stormio::workload::{bench_write, Workload, WriteBench};
+use stormio::workload::{bench_nodes, bench_reps, bench_smoke, bench_write, Workload, WriteBench};
 
 fn adios_bench(
     wl: &Workload,
@@ -49,17 +49,16 @@ fn adios_bench(
 
 fn main() {
     let wl = Workload::conus_proxy();
-    let reps: usize = std::env::var("STORMIO_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let reps = bench_reps(3);
+    let mut json = BenchReport::new("fig2");
+    json.flag("smoke", bench_smoke()).int("reps", reps as u64);
     let tmp = std::env::temp_dir().join(format!("stormio_fig2_{}", std::process::id()));
 
     let mut table = Table::new(
         "Fig 2: ADIOS2 history write time [s] — PFS vs node-local burst buffer",
         &["nodes", "ranks", "PFS", "BurstBuffer", "BB+drain", "BB speedup"],
     );
-    for nodes in [1usize, 2, 4, 8] {
+    for nodes in bench_nodes() {
         let pfs = adios_bench(&wl, nodes, reps, tmp.join(format!("p{nodes}")), Target::Pfs);
         let bb = adios_bench(
             &wl,
@@ -94,8 +93,13 @@ fn main() {
             d.close_join_secs * 1e3,
             d.overlapped_secs * 1e3
         );
+        json.num(&format!("pfs_s_n{nodes}"), pfs.mean_perceived())
+            .num(&format!("bb_s_n{nodes}"), bb.mean_perceived())
+            .num(&format!("bb_drain_s_n{nodes}"), bbd.mean_perceived())
+            .num(&format!("drain_overlap_ms_n{nodes}"), d.overlapped_secs * 1e3);
     }
     table.emit(Some(std::path::Path::new("bench_results/fig2.csv")));
+    json.write();
     println!("paper: similar at 1 node; BB dramatically lower as nodes are added (supplemental NVMe bandwidth/node).");
     println!("BB+drain perceived ~= BB perceived: the physical drain overlaps the application (async pipeline).");
     let _ = std::fs::remove_dir_all(&tmp);

@@ -7,22 +7,21 @@
 use stormio::adios::{Adios, Codec, OperatorConfig};
 use stormio::io::adios2::Adios2Backend;
 use stormio::io::pnetcdf::PnetCdfBackend;
-use stormio::metrics::Table;
+use stormio::metrics::{BenchReport, Table};
 use stormio::sim::CostModel;
-use stormio::workload::{bench_write, Workload};
+use stormio::workload::{bench_nodes, bench_reps, bench_smoke, bench_write, Workload};
 
 fn main() {
     let wl = Workload::conus_proxy();
-    let reps: usize = std::env::var("STORMIO_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let reps = bench_reps(3);
+    let mut json = BenchReport::new("fig3");
+    json.flag("smoke", bench_smoke()).int("reps", reps as u64);
     let tmp = std::env::temp_dir().join(format!("stormio_fig3_{}", std::process::id()));
 
     let mut bb_times = Vec::new();
     let mut bbd_times = Vec::new();
     let mut pnc_times = Vec::new();
-    for nodes in [1usize, 2, 4, 8] {
+    for nodes in bench_nodes() {
         let dir = tmp.join(format!("n{nodes}"));
         let hw = wl.hardware(nodes);
         let bb_bench = |drain: bool, sub: &str| {
@@ -87,8 +86,13 @@ fn main() {
             format!("{nodes}.00x"),
             format!("{:.2}x", base_pnc / pnc_times[i].1),
         ]);
+        json.num(&format!("bb_s_n{nodes}"), *t)
+            .num(&format!("bb_speedup_n{nodes}"), base_bb / t)
+            .num(&format!("bb_drain_speedup_n{nodes}"), base_bbd / bbd_times[i].1)
+            .num(&format!("pnetcdf_speedup_n{nodes}"), base_pnc / pnc_times[i].1);
     }
     table.emit(Some(std::path::Path::new("bench_results/fig3.csv")));
+    json.write();
     println!("paper: ~ideal BB scaling to 4 nodes, small deviation at 8; PnetCDF speedup < 1 (slows down).");
     println!("BB+drain tracks BB: the background drain does not break the scaling curve.");
     let _ = std::fs::remove_dir_all(&tmp);

@@ -10,24 +10,28 @@
 
 use stormio::adios::{Adios, Codec, OperatorConfig};
 use stormio::io::adios2::Adios2Backend;
-use stormio::metrics::Table;
+use stormio::metrics::{BenchReport, Table};
 use stormio::sim::CostModel;
-use stormio::workload::{bench_write, Workload};
+use stormio::workload::{bench_reps, bench_smoke, bench_write, Workload};
 
 fn main() {
     let wl = Workload::conus_proxy();
-    let reps: usize = std::env::var("STORMIO_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let reps = bench_reps(3);
+    let smoke = bench_smoke();
+    let mut json = BenchReport::new("fig4");
+    json.flag("smoke", smoke).int("reps", reps as u64);
     let tmp = std::env::temp_dir().join(format!("stormio_fig4_{}", std::process::id()));
 
-    let aggs_sweep = [1usize, 2, 4, 6, 12, 18, 36];
+    let aggs_sweep: &[usize] = if smoke {
+        &[1, 4, 36]
+    } else {
+        &[1, 2, 4, 6, 12, 18, 36]
+    };
     let mut table = Table::new(
         "Fig 4: ADIOS2 write time [s] vs aggregators per node",
         &["aggs/node", "1 node (36 ranks)", "8 nodes (288 ranks)"],
     );
-    for aggs in aggs_sweep {
+    for &aggs in aggs_sweep {
         let mut cells = vec![aggs.to_string()];
         for nodes in [1usize, 8] {
             let dir = tmp.join(format!("a{aggs}n{nodes}"));
@@ -51,11 +55,13 @@ fn main() {
             })
             .expect("bench");
             cells.push(format!("{:.2}", b.mean_perceived()));
+            json.num(&format!("adios2_s_a{aggs}_n{nodes}"), b.mean_perceived());
             let _ = std::fs::remove_dir_all(&tmp.join(format!("a{aggs}n{nodes}")));
         }
         table.row(&cells);
     }
     table.emit(Some(std::path::Path::new("bench_results/fig4.csv")));
+    json.write();
     println!("paper: 1 node — many aggregators substantially faster; 8 nodes — ~1/node optimal, large counts degrade.");
     let _ = std::fs::remove_dir_all(&tmp);
 }

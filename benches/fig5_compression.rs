@@ -9,16 +9,15 @@
 
 use stormio::adios::{Adios, Codec, OperatorConfig};
 use stormio::io::adios2::Adios2Backend;
-use stormio::metrics::Table;
+use stormio::metrics::{BenchReport, Table};
 use stormio::sim::CostModel;
-use stormio::workload::{bench_write, Workload};
+use stormio::workload::{bench_nodes, bench_reps, bench_smoke, bench_write, Workload};
 
 fn main() {
     let wl = Workload::conus_proxy();
-    let reps: usize = std::env::var("STORMIO_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let reps = bench_reps(3);
+    let mut json = BenchReport::new("fig5");
+    json.flag("smoke", bench_smoke()).int("reps", reps as u64);
     let tmp = std::env::temp_dir().join(format!("stormio_fig5_{}", std::process::id()));
 
     let codecs = [
@@ -32,7 +31,7 @@ fn main() {
         "Fig 5: ADIOS2 write time [s] by compression codec (PFS, 1 agg/node)",
         &["nodes", "none", "blosclz", "lz4", "zlib", "zstd", "best"],
     );
-    for nodes in [1usize, 2, 4, 8] {
+    for nodes in bench_nodes() {
         let mut cells = vec![nodes.to_string()];
         let mut best = ("none", f64::INFINITY);
         for codec in codecs {
@@ -60,12 +59,14 @@ fn main() {
                 best = (codec.name(), t);
             }
             cells.push(format!("{t:.2}"));
+            json.num(&format!("{}_s_n{nodes}", codec.name()), t);
             let _ = std::fs::remove_dir_all(&tmp.join(format!("c{}n{nodes}", codec.name())));
         }
         cells.push(best.0.to_string());
         table.row(&cells);
     }
     table.emit(Some(std::path::Path::new("bench_results/fig5.csv")));
+    json.write();
     println!("paper: compression cuts write time ~50% across the range; Zstd fastest in 3 of 4 node counts.");
     let _ = std::fs::remove_dir_all(&tmp);
 }

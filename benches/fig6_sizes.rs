@@ -12,15 +12,21 @@ use stormio::adios::{Adios, Codec, OperatorConfig};
 use stormio::io::adios2::Adios2Backend;
 use stormio::io::pnetcdf::PnetCdfBackend;
 use stormio::io::serial_nc::SerialNcBackend;
-use stormio::metrics::Table;
+use stormio::metrics::{BenchReport, Table};
 use stormio::sim::CostModel;
 use stormio::util::human_bytes;
-use stormio::workload::{bench_write, Workload, PAPER_FRAME_BYTES};
+use stormio::workload::{bench_smoke, bench_write, Workload, PAPER_FRAME_BYTES};
 
 fn main() {
-    let wl = Workload::conus_proxy();
+    // Smoke mode swaps in the tiny grid: the codecs/backends are still
+    // exercised end to end, only on less data.
+    let smoke = bench_smoke();
+    let wl = if smoke { Workload::tiny() } else { Workload::conus_proxy() };
+    let mut json = BenchReport::new("fig6");
+    json.flag("smoke", smoke);
     let tmp = std::env::temp_dir().join(format!("stormio_fig6_{}", std::process::id()));
     let nodes = 2; // size is node-count independent; keep the world small
+    let rpn = if smoke { 4 } else { 36 };
     let hw = wl.hardware(nodes);
 
     let mut table = Table::new(
@@ -30,6 +36,7 @@ fn main() {
     let raw = wl.frame_bytes();
     let scale = PAPER_FRAME_BYTES / raw as f64;
 
+    json.int("raw_bytes", raw);
     let mut row = |name: &str, stored: u64| {
         table.row(&[
             name.to_string(),
@@ -37,13 +44,15 @@ fn main() {
             format!("{:.2}x", raw as f64 / stored as f64),
             human_bytes((stored as f64 * scale) as u64),
         ]);
+        let key = BenchReport::slug(name);
+        json.int(&format!("{key}_stored_bytes"), stored);
     };
 
     // ADIOS2, uncompressed + each codec.
     for codec in [Codec::None, Codec::BloscLz, Codec::Lz4, Codec::Zlib, Codec::Zstd] {
         let dir = tmp.join(format!("a_{}", codec.name()));
         let hwc = hw.clone();
-        let b = bench_write(&wl, nodes, 36, 1, move |_| {
+        let b = bench_write(&wl, nodes, rpn, 1, move |_| {
             let mut adios = Adios::default();
             let io = adios.declare_io("hist");
             io.operator = OperatorConfig::blosc(codec);
@@ -59,7 +68,7 @@ fn main() {
     // Serial NetCDF4 (Zlib deflate through the funnel path).
     let dir = tmp.join("snc");
     let hwc = hw.clone();
-    let snc = bench_write(&wl, nodes, 36, 1, move |_| {
+    let snc = bench_write(&wl, nodes, rpn, 1, move |_| {
         Box::new(SerialNcBackend::new(dir.clone(), CostModel::new(hwc.clone())))
     })
     .expect("serial nc bench");
@@ -69,7 +78,7 @@ fn main() {
     // PnetCDF (uncompressed shared file).
     let dir = tmp.join("pnc");
     let hwc = hw.clone();
-    let pnc = bench_write(&wl, nodes, 36, 1, move |_| {
+    let pnc = bench_write(&wl, nodes, rpn, 1, move |_| {
         Box::new(PnetCdfBackend::new(dir.clone(), CostModel::new(hwc.clone())))
     })
     .expect("pnetcdf bench");
@@ -77,6 +86,7 @@ fn main() {
     let _ = std::fs::remove_dir_all(&tmp.join("pnc"));
 
     table.emit(Some(std::path::Path::new("bench_results/fig6.csv")));
+    json.write();
     println!("paper: ratio ~4 for ADIOS2-Blosc (zstd/zlib) and NetCDF4; zstd smallest among fast Blosc codecs.");
     let _ = std::fs::remove_dir_all(&tmp);
 }

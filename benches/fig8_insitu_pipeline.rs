@@ -31,7 +31,7 @@ use stormio::io::adios2::Adios2Backend;
 use stormio::io::api::HistoryBackend;
 use stormio::io::cdf::CdfReader;
 use stormio::io::pnetcdf::PnetCdfBackend;
-use stormio::metrics::{Stopwatch, Table};
+use stormio::metrics::{BenchReport, Stopwatch, Table};
 use stormio::model::{ForecastConfig, ForecastDriver};
 use stormio::runtime::{AnalysisStep, Manifest, ModelStep, XlaRuntime};
 use stormio::sim::{CostModel, SpanKind, Timeline};
@@ -44,15 +44,15 @@ const CONUS_INIT_SECS: f64 = 30.0;
 /// Consumer-side wait bound per step at demo scale.
 const STEP_TIMEOUT: Duration = Duration::from_secs(120);
 
-fn demo_cfg() -> ForecastConfig {
+fn demo_cfg(smoke: bool) -> ForecastConfig {
     ForecastConfig {
         ny: 192,
         nx: 192,
         nz: 4,
         ranks: 4,
         ranks_per_node: 2,
-        steps_per_interval: 10,
-        frames: 4, // 2-hour forecast, one frame per 30 sim-minutes
+        steps_per_interval: if smoke { 2 } else { 10 },
+        frames: if smoke { 2 } else { 4 }, // one frame per 30 sim-minutes
         write_t0: true,
         io_ranks: 0,
         halo: 2,
@@ -94,15 +94,22 @@ fn stream_lanes(
 }
 
 fn main() {
+    let smoke = stormio::workload::bench_smoke();
+    let mut json = BenchReport::new("fig8");
+    json.flag("smoke", smoke);
     let art = std::path::Path::new("artifacts");
     if !art.join("manifest.txt").exists() {
         eprintln!("fig8: artifacts not built; run `make artifacts` first");
+        json.flag("skipped", true).text("reason", "AOT artifacts not built");
+        json.write();
         return;
     }
     let rt = match XlaRuntime::new() {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("fig8: XLA runtime unavailable, skipping: {e}");
+            json.flag("skipped", true).text("reason", "XLA runtime unavailable");
+            json.write();
             return;
         }
     };
@@ -110,7 +117,7 @@ fn main() {
     let tmp = std::env::temp_dir().join(format!("stormio_fig8_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&tmp);
     std::fs::create_dir_all(&tmp).unwrap();
-    let cfg = demo_cfg();
+    let cfg = demo_cfg(smoke);
     let mut hw = stormio::sim::HardwareSpec::paper_testbed(8);
     // Frame volume of the demo grid → CONUS scale.
     let demo_frame: u64 = {
@@ -464,6 +471,15 @@ fn main() {
     ]);
     table.emit(Some(std::path::Path::new("bench_results/fig8.csv")));
     std::fs::write("bench_results/fig8_timeline.csv", tl.to_csv()).ok();
+    json.num("lanes_total_s", lanes_total)
+        .num("funnel_total_s", funnel_total)
+        .num("follower_total_s", follow_total)
+        .num("pnetcdf_total_s", pnc_total)
+        .num("fanout_wall_s", fan_wall)
+        .int("wire_analysis_bytes", wire_analysis)
+        .int("wire_full_bytes", wire_full)
+        .num("fanout_advantage", cm.fanout_advantage(v, &[v, v, v], 8));
+    json.write();
 
     assert!(
         lanes_total < funnel_total,

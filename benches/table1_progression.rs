@@ -13,9 +13,9 @@
 use stormio::adios::{Adios, Codec, OperatorConfig};
 use stormio::io::adios2::Adios2Backend;
 use stormio::io::pnetcdf::PnetCdfBackend;
-use stormio::metrics::Table;
+use stormio::metrics::{BenchReport, Table};
 use stormio::sim::CostModel;
-use stormio::workload::{bench_write, Workload};
+use stormio::workload::{bench_reps, bench_smoke, bench_write, Workload};
 
 fn adios_time(wl: &Workload, tmp: &std::path::Path, tag: &str, bb: bool, codec: Codec, reps: usize) -> f64 {
     let dir = tmp.join(tag);
@@ -45,10 +45,9 @@ fn adios_time(wl: &Workload, tmp: &std::path::Path, tag: &str, bb: bool, codec: 
 
 fn main() {
     let wl = Workload::conus_proxy();
-    let reps: usize = std::env::var("STORMIO_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let reps = bench_reps(3);
+    let mut json = BenchReport::new("table1");
+    json.flag("smoke", bench_smoke()).int("reps", reps as u64);
     let tmp = std::env::temp_dir().join(format!("stormio_t1_{}", std::process::id()));
 
     let hw = wl.hardware(8);
@@ -81,7 +80,10 @@ fn main() {
             p.to_string(),
             ps.to_string(),
         ]);
+        let key = BenchReport::slug(name);
+        json.num(&format!("{key}_s"), t).num(&format!("{key}_speedup"), pnc / t);
     }
     table.emit(Some(std::path::Path::new("bench_results/table1.csv")));
+    json.write();
     let _ = std::fs::remove_dir_all(&tmp);
 }

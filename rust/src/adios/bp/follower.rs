@@ -20,11 +20,12 @@
 //!    follower stays usable, so callers choose between retrying and
 //!    giving up on a stalled producer.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use super::reader::BpReader;
-use crate::adios::source::{StepSource, StepStatus};
+use crate::adios::source::{ServedTier, StepSource, StepStatus};
 use crate::{Error, Result};
 
 /// Default sleep between index polls.
@@ -192,6 +193,395 @@ impl StepSource for BpFollower {
     fn end_step(&mut self) -> Result<()> {
         match self.current.take() {
             Some(_) => {
+                self.consumed += 1;
+                Ok(())
+            }
+            None => Err(Error::bp("end_step without begin_step")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiered follow: burst buffer first, PFS behind the drain watermark
+// ---------------------------------------------------------------------------
+
+/// Tail a BP4 run across its storage hierarchy (DESIGN.md §11).
+///
+/// A BB-live producer (`LivePublish` + `Target::BurstBuffer { drain }`)
+/// publishes two indexes: a burst-buffer-local `md.idx` the moment a step
+/// is durable on NVMe, and the PFS `md.idx` lazily as the background
+/// drain's per-sub-file watermarks advance.  This follower opens both
+/// roots and serves every step from the **fastest tier that holds it**:
+///
+/// * a step not yet fully drained is read from the node-local BB replica
+///   (time-to-first-analysis at NVMe latency, while the drain proceeds);
+/// * once the watermark-gated PFS index names the step, reads fail over
+///   to the PFS copy — so BB replicas can be reaped behind the drain;
+/// * if the chosen tier disappears mid-step (replica reaped, or a lagging
+///   index), the read retries transparently on the other tier;
+/// * after a producer crash it resumes from whichever tier has the newer
+///   index — the BB index normally leads, and a reaped BB falls back to
+///   whatever the PFS watermarks proved durable.
+///
+/// Which tier served each step is reported through
+/// [`StepSource::step_tier`] and [`TieredFollower::tier_history`].
+pub struct TieredFollower {
+    /// `<pfs>/<name>.bp`: drain destination (index + sub-files + `.wm`s).
+    pfs_dir: PathBuf,
+    /// Burst-buffer root holding `node{n}/<name>.bp/` replicas.
+    bb_root: PathBuf,
+    /// `<bb_root>/<name>.bp`: the BB-local index directory.
+    bb_meta: PathBuf,
+    pfs: Option<BpReader>,
+    bb: Option<BpReader>,
+    /// Steps fully delivered (`end_step`ped).
+    consumed: usize,
+    /// Currently open step and the tier chosen to serve it.
+    current: Option<(usize, ServedTier)>,
+    /// Tier that served each delivered step, in step order.
+    tiers: Vec<ServedTier>,
+    poll: Duration,
+    last_pfs_len: Option<u64>,
+    last_bb_len: Option<u64>,
+    /// An index was seen at least once (distinguishes "not started" from
+    /// "both indexes vanished under us").
+    seen_any: bool,
+}
+
+impl TieredFollower {
+    /// Open a tiered follower on a run named by its PFS BP directory
+    /// (`<pfs>/<name>.bp`) and the burst-buffer root the producer was
+    /// configured with.  Neither tier needs to exist yet.
+    pub fn open(
+        pfs_bp_dir: impl AsRef<Path>,
+        bb_root: impl AsRef<Path>,
+        poll: Duration,
+    ) -> Result<TieredFollower> {
+        let pfs_dir = pfs_bp_dir.as_ref().to_path_buf();
+        let name = pfs_dir
+            .file_name()
+            .ok_or_else(|| Error::bp("tiered follower needs a <name>.bp directory path"))?
+            .to_owned();
+        let bb_root = bb_root.as_ref().to_path_buf();
+        let bb_meta = bb_root.join(&name);
+        Ok(TieredFollower {
+            pfs_dir,
+            bb_root,
+            bb_meta,
+            pfs: None,
+            bb: None,
+            consumed: 0,
+            current: None,
+            tiers: Vec::new(),
+            poll: poll.max(Duration::from_millis(1)),
+            last_pfs_len: None,
+            last_bb_len: None,
+            seen_any: false,
+        })
+    }
+
+    /// Tier that served each delivered step so far, in step order.
+    pub fn tier_history(&self) -> &[ServedTier] {
+        &self.tiers
+    }
+
+    /// Steps served from (burst buffer, PFS) so far.
+    pub fn tier_counts(&self) -> (usize, usize) {
+        let bb = self
+            .tiers
+            .iter()
+            .filter(|t| **t == ServedTier::BurstBuffer)
+            .count();
+        (bb, self.tiers.len() - bb)
+    }
+
+    /// Decode [`super::BB_MAP_ATTR`] into per-sub-file replica
+    /// directories under the BB root.
+    fn bb_subfile_dirs(&self, rd: &BpReader) -> HashMap<u32, PathBuf> {
+        let mut map = HashMap::new();
+        let Some(spec) = rd.attr(super::BB_MAP_ATTR) else {
+            return map;
+        };
+        let name = self.bb_meta.file_name().expect("bb meta dir has a name");
+        for entry in spec.split(',') {
+            let Some((sub, node)) = entry.split_once(':') else {
+                continue;
+            };
+            if let Ok(sub) = sub.trim().parse::<u32>() {
+                map.insert(sub, self.bb_root.join(node.trim()).join(name));
+            }
+        }
+        map
+    }
+
+    /// Refresh one tier's index view.  A missing index unloads the tier
+    /// (reaped replica / not published yet) instead of erroring — the
+    /// other tier may still serve; parse errors propagate.
+    fn load_tier(&mut self, tier: ServedTier) -> Result<()> {
+        let dir = match tier {
+            ServedTier::BurstBuffer => self.bb_meta.clone(),
+            ServedTier::Pfs => self.pfs_dir.clone(),
+        };
+        let idx = dir.join("md.idx");
+        let Ok(meta) = std::fs::metadata(&idx) else {
+            match tier {
+                ServedTier::BurstBuffer => {
+                    self.bb = None;
+                    self.last_bb_len = None;
+                }
+                ServedTier::Pfs => {
+                    self.pfs = None;
+                    self.last_pfs_len = None;
+                }
+            }
+            return Ok(());
+        };
+        let len = meta.len();
+        let (slot, last) = match tier {
+            ServedTier::BurstBuffer => (&mut self.bb, &mut self.last_bb_len),
+            ServedTier::Pfs => (&mut self.pfs, &mut self.last_pfs_len),
+        };
+        if slot.is_some() && *last == Some(len) {
+            return Ok(());
+        }
+        match slot.as_mut() {
+            Some(rd) => match rd.refresh() {
+                Ok(()) => *last = Some(len),
+                // Lost the race with a reaper/restart between stat and
+                // read: the tier is simply unavailable this tick.
+                Err(_) if !idx.exists() => {
+                    *slot = None;
+                    *last = None;
+                }
+                Err(e) => return Err(e),
+            },
+            None => match BpReader::open(&dir) {
+                Ok(rd) => {
+                    *last = Some(len);
+                    *slot = Some(rd);
+                }
+                Err(_) if !idx.exists() => {
+                    *last = None;
+                }
+                Err(e) => return Err(e),
+            },
+        }
+        if tier == ServedTier::BurstBuffer {
+            if let Some(rd) = self.bb.take() {
+                let dirs = self.bb_subfile_dirs(&rd);
+                let mut rd = rd;
+                rd.set_subfile_dirs(dirs);
+                self.bb = Some(rd);
+            }
+        }
+        self.seen_any = self.seen_any || self.bb.is_some() || self.pfs.is_some();
+        Ok(())
+    }
+
+    /// Refresh both tiers; `Ok(true)` if at least one index is loaded.
+    fn load(&mut self) -> Result<bool> {
+        self.load_tier(ServedTier::BurstBuffer)?;
+        self.load_tier(ServedTier::Pfs)?;
+        if self.bb.is_none() && self.pfs.is_none() {
+            if self.seen_any {
+                return Err(Error::bp(format!(
+                    "{}: md.idx vanished from both tiers — producer restarted \
+                     into this directory; re-open the follower",
+                    self.pfs_dir.display()
+                )));
+            }
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    fn reader_ref(&self, tier: ServedTier) -> Option<&BpReader> {
+        match tier {
+            ServedTier::BurstBuffer => self.bb.as_ref(),
+            ServedTier::Pfs => self.pfs.as_ref(),
+        }
+    }
+
+    fn steps_in(&self, tier: ServedTier) -> usize {
+        self.reader_ref(tier).map(|rd| rd.num_steps()).unwrap_or(0)
+    }
+
+    /// Steps any loaded tier can serve.
+    fn available(&self) -> usize {
+        self.steps_in(ServedTier::BurstBuffer).max(self.steps_in(ServedTier::Pfs))
+    }
+
+    /// The loaded reader with the most steps (the "newer" index).
+    fn best_reader(&self) -> Option<&BpReader> {
+        if self.steps_in(ServedTier::BurstBuffer) > self.steps_in(ServedTier::Pfs) {
+            self.bb.as_ref()
+        } else {
+            self.pfs.as_ref().or_else(|| self.bb.as_ref())
+        }
+    }
+
+    /// Preferred tier for `step`: the PFS once the watermark-gated PFS
+    /// index names it (its data is then complete on the final target and
+    /// the BB replica may be reaped), else the burst buffer.
+    fn choose_tier(&self, step: usize) -> ServedTier {
+        if step < self.steps_in(ServedTier::Pfs) {
+            ServedTier::Pfs
+        } else {
+            ServedTier::BurstBuffer
+        }
+    }
+
+    fn other(tier: ServedTier) -> ServedTier {
+        match tier {
+            ServedTier::BurstBuffer => ServedTier::Pfs,
+            ServedTier::Pfs => ServedTier::BurstBuffer,
+        }
+    }
+
+    /// Run a read against the open step's tier, transparently failing
+    /// over to the other tier (after an index refresh) if the chosen
+    /// replica cannot serve it — the mid-stream reap path.
+    fn with_step_reader<T>(
+        &mut self,
+        f: impl Fn(&BpReader, usize) -> Result<T>,
+    ) -> Result<T> {
+        let (step, tier) = self
+            .current
+            .ok_or_else(|| Error::bp("no step open (call begin_step first)"))?;
+        let first_err = match self.reader_ref(tier) {
+            Some(rd) if step < rd.num_steps() => match f(rd, step) {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            },
+            _ => Error::bp(format!(
+                "step {step} not available on the {} tier",
+                tier.name()
+            )),
+        };
+        // Failover: refresh the indexes, then retry on the other tier.
+        self.load()?;
+        let alt = Self::other(tier);
+        match self.reader_ref(alt) {
+            Some(rd) if step < rd.num_steps() => {
+                let v = f(rd, step)?;
+                self.current = Some((step, alt));
+                Ok(v)
+            }
+            _ => Err(Error::bp(format!(
+                "step {step} unreadable from the {} tier ({first_err}) and \
+                 not yet available on the {} tier",
+                tier.name(),
+                alt.name()
+            ))),
+        }
+    }
+}
+
+impl StepSource for TieredFollower {
+    fn source_name(&self) -> &'static str {
+        "bp-tiered-follower"
+    }
+
+    fn begin_step(&mut self, timeout: Duration) -> Result<StepStatus> {
+        if self.current.is_some() {
+            return Err(Error::bp("begin_step while a step is open"));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.load()? {
+                if self.consumed < self.available() {
+                    let tier = self.choose_tier(self.consumed);
+                    self.current = Some((self.consumed, tier));
+                    return Ok(StepStatus::Ready);
+                }
+                let complete = self
+                    .best_reader()
+                    .map(|rd| rd.attr(super::COMPLETE_ATTR).is_some())
+                    .unwrap_or(false);
+                if complete {
+                    return Ok(StepStatus::EndOfStream);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(StepStatus::Timeout);
+            }
+            std::thread::sleep(self.poll.min(deadline - now));
+        }
+    }
+
+    fn step_index(&self) -> usize {
+        self.current.map(|(s, _)| s).unwrap_or(self.consumed)
+    }
+
+    fn var_names(&self) -> Vec<String> {
+        match self.current {
+            Some((s, tier)) => self
+                .reader_ref(tier)
+                .or_else(|| self.reader_ref(Self::other(tier)))
+                .and_then(|rd| rd.var_names(s).ok())
+                .map(|ns| ns.into_iter().map(|n| n.to_string()).collect())
+                .unwrap_or_default(),
+            None => Vec::new(),
+        }
+    }
+
+    fn var_shape(&self, name: &str) -> Result<Vec<u64>> {
+        let (s, tier) = self
+            .current
+            .ok_or_else(|| Error::bp("no step open (call begin_step first)"))?;
+        self.reader_ref(tier)
+            .or_else(|| self.reader_ref(Self::other(tier)))
+            .ok_or_else(|| Error::bp("tiered follower has no index loaded"))?
+            .var_shape(s, name)
+    }
+
+    fn read_var_global(&mut self, name: &str) -> Result<(Vec<u64>, Vec<f32>)> {
+        self.with_step_reader(|rd, s| rd.read_var_global(s, name))
+    }
+
+    fn read_var_selection(
+        &mut self,
+        name: &str,
+        start: &[u64],
+        count: &[u64],
+    ) -> Result<Vec<f32>> {
+        self.with_step_reader(|rd, s| rd.read_var_selection(s, name, start, count))
+    }
+
+    fn step_stored_bytes(&self) -> u64 {
+        match self.current {
+            Some((s, tier)) => self
+                .reader_ref(tier)
+                .or_else(|| self.reader_ref(Self::other(tier)))
+                .and_then(|rd| rd.stored_bytes(s).ok())
+                .unwrap_or(0),
+            None => 0,
+        }
+    }
+
+    fn attrs(&self) -> Vec<(String, String)> {
+        self.pfs
+            .as_ref()
+            .or_else(|| self.bb.as_ref())
+            .map(|rd| {
+                rd.attrs
+                    .iter()
+                    .filter(|(k, _)| !k.starts_with("__"))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn step_tier(&self) -> Option<ServedTier> {
+        self.current.map(|(_, t)| t).or_else(|| self.tiers.last().copied())
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        match self.current.take() {
+            Some((_, tier)) => {
+                self.tiers.push(tier);
                 self.consumed += 1;
                 Ok(())
             }

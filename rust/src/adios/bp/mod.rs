@@ -31,6 +31,60 @@ pub const MD_VERSION: u32 = 1;
 /// conversions/reports.
 pub const COMPLETE_ATTR: &str = "__stormio_complete";
 
+/// Internal attribute in a **burst-buffer-local** `md.idx` mapping each
+/// sub-file to the node-local directory holding its replica, as
+/// `"sub:node{n}"` entries joined by commas (e.g. `"0:node0,1:node1"`).
+/// A [`follower::TieredFollower`] resolves each entry against the BB root
+/// to read sub-file bytes from the fastest tier (DESIGN.md §11).
+pub const BB_MAP_ATTR: &str = "__stormio_bb_map";
+
+// ---------------------------------------------------------------------------
+// Drain watermarks (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// Path of the drain watermark for one sub-file: a tiny ASCII file next to
+/// the PFS copy recording how many whole step frames of `data.{subfile}`
+/// are durable on the PFS.  Advanced by the drain thread after each frame
+/// lands; a tiered follower may serve step `s` from the PFS only once
+/// *every* sub-file's watermark is `> s`.
+pub fn drain_watermark_path(pfs_bp_dir: &std::path::Path, subfile: u32) -> std::path::PathBuf {
+    pfs_bp_dir.join(format!("data.{subfile}.wm"))
+}
+
+/// Atomically publish a sub-file's drain watermark (write temp + rename,
+/// same protocol as `md.idx`, so a concurrent reader never sees a torn
+/// value).  Only the one drain thread owning `subfile` writes it.
+pub fn write_drain_watermark(
+    pfs_bp_dir: &std::path::Path,
+    subfile: u32,
+    frames: u64,
+) -> Result<()> {
+    std::fs::create_dir_all(pfs_bp_dir)?;
+    let tmp = pfs_bp_dir.join(format!("data.{subfile}.wm.tmp"));
+    std::fs::write(&tmp, frames.to_string())?;
+    std::fs::rename(&tmp, drain_watermark_path(pfs_bp_dir, subfile))?;
+    Ok(())
+}
+
+/// Read one sub-file's drain watermark; absent or unparsable means 0
+/// frames drained (a producer that has not started draining).
+pub fn read_drain_watermark(pfs_bp_dir: &std::path::Path, subfile: u32) -> u64 {
+    std::fs::read_to_string(drain_watermark_path(pfs_bp_dir, subfile))
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Number of whole steps durable on the PFS across *all* sub-files (the
+/// min over per-sub-file watermarks): the step range a reader may safely
+/// serve from the PFS replica while the drain is still running.
+pub fn drained_steps(pfs_bp_dir: &std::path::Path, subfiles: u32) -> u64 {
+    (0..subfiles)
+        .map(|s| read_drain_watermark(pfs_bp_dir, s))
+        .min()
+        .unwrap_or(0)
+}
+
 /// One written block of one variable at one step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockRecord {
@@ -424,6 +478,28 @@ mod tests {
     fn scatter_size_mismatch_rejected() {
         let mut g = vec![0.0f32; 8];
         assert!(scatter_block(&mut g, &[2, 4], &[0, 0], &[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn drain_watermarks_roundtrip_and_min() {
+        let dir = std::env::temp_dir().join(format!("stormio_wm_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Absent watermarks read as zero drained steps.
+        assert_eq!(read_drain_watermark(&dir, 0), 0);
+        assert_eq!(drained_steps(&dir, 2), 0);
+        write_drain_watermark(&dir, 0, 3).unwrap();
+        assert_eq!(read_drain_watermark(&dir, 0), 3);
+        // The global drained count is the min over sub-files.
+        assert_eq!(drained_steps(&dir, 2), 0);
+        write_drain_watermark(&dir, 1, 2).unwrap();
+        assert_eq!(drained_steps(&dir, 2), 2);
+        write_drain_watermark(&dir, 1, 5).unwrap();
+        assert_eq!(drained_steps(&dir, 2), 3);
+        // Garbage content degrades to zero, not an error.
+        std::fs::write(drain_watermark_path(&dir, 1), b"not a number").unwrap();
+        assert_eq!(drained_steps(&dir, 2), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -23,6 +23,13 @@ pub struct BpReader {
     subfiles: u32,
     /// Global attributes recorded at write time.
     pub attrs: Vec<(String, String)>,
+    /// Per-sub-file directory overrides: where `data.{sub}` physically
+    /// lives when it is *not* next to `md.idx`.  The burst-buffer tier of
+    /// a [`super::follower::TieredFollower`] keeps its index in one meta
+    /// directory while each node's replica holds only that node's
+    /// sub-files (`<bb_root>/node{n}/<name>.bp/data.{sub}`); the map is
+    /// decoded from [`super::BB_MAP_ATTR`].  Empty for plain directories.
+    subfile_dirs: HashMap<u32, PathBuf>,
     /// Open sub-file handles, keyed by sub-file index.  A global read of a
     /// many-block variable touches the same few sub-files over and over;
     /// without this cache every block paid an `open()` (an MDS round-trip
@@ -44,9 +51,22 @@ impl BpReader {
             steps,
             subfiles,
             attrs,
+            subfile_dirs: HashMap::new(),
             handles: Mutex::new(HashMap::new()),
             opens: AtomicUsize::new(0),
         })
+    }
+
+    /// Override where individual sub-files live (see `subfile_dirs`).
+    /// When the layout actually changes, cached handles are cleared so
+    /// already-open files under the old layout are not reused; re-applying
+    /// an identical map (every follower poll tick) keeps the cache.
+    pub fn set_subfile_dirs(&mut self, dirs: HashMap<u32, PathBuf>) {
+        if self.subfile_dirs == dirs {
+            return;
+        }
+        self.subfile_dirs = dirs;
+        self.handles.lock().expect("subfile handle cache poisoned").clear();
     }
 
     /// Re-read `md.idx`, picking up steps a live producer has published
@@ -120,7 +140,8 @@ impl BpReader {
         let f = match handles.entry(subfile) {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
             std::collections::hash_map::Entry::Vacant(e) => {
-                let path = self.dir.join(format!("data.{subfile}"));
+                let base = self.subfile_dirs.get(&subfile).unwrap_or(&self.dir);
+                let path = base.join(format!("data.{subfile}"));
                 let f = fs::File::open(&path)
                     .map_err(|e| Error::bp(format!("cannot open {}: {e}", path.display())))?;
                 self.opens.fetch_add(1, Ordering::Relaxed);

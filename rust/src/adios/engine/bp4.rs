@@ -103,6 +103,12 @@ enum IoJob {
     Append(Vec<u8>),
     /// Ack once everything enqueued before this point is durable.
     Flush(Sender<()>),
+    /// Ack once everything enqueued before this point is durable on the
+    /// *local* (burst-buffer) sub-file — without waiting for the drain.
+    /// This is the publish gate of burst-buffer-local live follow: the
+    /// BB-side `md.idx` may name a step as soon as its bytes are on NVMe
+    /// (DESIGN.md §11).
+    FlushLocal(Sender<()>),
 }
 
 enum DrainJob {
@@ -132,10 +138,13 @@ struct IoPipeline {
 
 impl IoPipeline {
     /// Spawn the pipeline for one aggregator's sub-file.  `drain_dst` is
-    /// the PFS destination when the target is a drained burst buffer.
+    /// the PFS destination when the target is a drained burst buffer;
+    /// `wm_subfile` is this sub-file's index, used by the drainer to
+    /// advance its drain watermark next to the PFS copy.
     fn spawn(
         local_path: PathBuf,
         drain_dst: Option<PathBuf>,
+        wm_subfile: u32,
         throttle: Option<Duration>,
     ) -> IoPipeline {
         let stats = Arc::new(PipeStats::default());
@@ -147,7 +156,7 @@ impl IoPipeline {
             let (stats, busy) = (stats.clone(), busy.clone());
             let src = local_path.clone();
             drainer = Some(crate::util::pool::spawn_named("bp4-drain", move || {
-                drain_loop(src, dst, drx, throttle, stats, busy)
+                drain_loop(src, dst, wm_subfile, drx, throttle, stats, busy)
             }));
             dtx
         });
@@ -243,6 +252,12 @@ fn writer_loop(
                     let _ = ack.send(());
                 }
             },
+            // Local durability only: every append enqueued before this
+            // job has already been written + flushed by this loop, so
+            // the ack does not route through the drainer.
+            IoJob::FlushLocal(ack) => {
+                let _ = ack.send(());
+            }
         }
     }
     Ok(())
@@ -254,6 +269,7 @@ fn writer_loop(
 fn drain_loop(
     src_path: PathBuf,
     dst_path: PathBuf,
+    wm_subfile: u32,
     rx: Receiver<DrainJob>,
     throttle: Option<Duration>,
     stats: Arc<PipeStats>,
@@ -268,11 +284,13 @@ fn drain_loop(
         .truncate(true)
         .open(&dst_path)?;
     let mut src = fs::File::open(&src_path)?;
+    let wm_dir = dst_path.parent().expect("drain dst has a parent dir").to_path_buf();
     // Fixed streaming buffer: a frame is a whole step's aggregated
     // sub-file bytes (tens of MB at bench scale) — copy it in chunks
     // instead of materializing it next to the writer's in-flight data.
     const DRAIN_CHUNK: usize = 1 << 20;
     let mut buf = vec![0u8; DRAIN_CHUNK];
+    let mut frames_drained = 0u64;
     for job in rx {
         match job {
             DrainJob::Copy { offset, len } => {
@@ -289,6 +307,11 @@ fn drain_loop(
                     remaining -= n;
                 }
                 dst.flush()?;
+                // Advance this sub-file's drain watermark only after the
+                // frame's bytes are flushed: a tiered follower reading
+                // `wm > s` may then serve step `s` from the PFS copy.
+                frames_drained += 1;
+                crate::adios::bp::write_drain_watermark(&wm_dir, wm_subfile, frames_drained)?;
                 busy.add_secs(sw.secs());
                 stats.durable.fetch_add(1, Ordering::SeqCst);
             }
@@ -348,6 +371,9 @@ pub struct Bp4Engine {
     attrs: Vec<(String, String)>,
     /// Rank 0 only: accumulated index + stats.
     steps_index: Vec<StepIndex>,
+    /// Rank 0 only, BB-live mode: steps already named by the *PFS*
+    /// `md.idx` (watermark-gated republish bookkeeping).
+    pfs_published: usize,
     report: EngineReport,
     closed: bool,
 }
@@ -368,6 +394,7 @@ impl Bp4Engine {
             pipeline: None,
             attrs: Vec::new(),
             steps_index: Vec::new(),
+            pfs_published: 0,
             report: EngineReport::default(),
             closed: false,
         };
@@ -378,6 +405,15 @@ impl Bp4Engine {
             }
             // Truncate any stale sub-file.
             fs::write(&p, b"")?;
+            if let Target::BurstBuffer { drain: true } = eng.cfg.target {
+                // A previous run's drain watermark must not let a tiered
+                // follower serve this run's steps from the PFS before
+                // this run's drain republishes it.
+                let sub = eng.plan.subfile(rank).expect("aggregator has a sub-file");
+                fs::create_dir_all(eng.bp_dir_pfs())?;
+                let _ =
+                    fs::remove_file(crate::adios::bp::drain_watermark_path(&eng.bp_dir_pfs(), sub));
+            }
             if eng.cfg.async_io {
                 let drain_dst = match eng.cfg.target {
                     Target::BurstBuffer { drain: true } => {
@@ -385,7 +421,8 @@ impl Bp4Engine {
                     }
                     _ => None,
                 };
-                eng.pipeline = Some(IoPipeline::spawn(p, drain_dst, eng.cfg.drain_throttle));
+                let sub = eng.plan.subfile(rank).expect("aggregator has a sub-file");
+                eng.pipeline = Some(IoPipeline::spawn(p, drain_dst, sub, eng.cfg.drain_throttle));
             } else if let Target::BurstBuffer { drain: true } = eng.cfg.target {
                 // Synchronous drain appends incrementally during the run
                 // (`append_missing_suffix`), so the final target must
@@ -405,8 +442,41 @@ impl Bp4Engine {
             // stale offsets (or a stale completion marker) against the
             // just-truncated sub-files.
             let _ = fs::remove_file(eng.bp_dir_pfs().join("md.idx"));
+            if eng.bb_live() {
+                let _ = fs::remove_file(eng.bb_meta_dir().join("md.idx"));
+            }
         }
         Ok(eng)
+    }
+
+    /// True when the write path publishes at burst-buffer durability: a
+    /// live-published run targeting a draining burst buffer (DESIGN.md
+    /// §11).  In this mode `end_step` publishes a BB-local index as soon
+    /// as the step is on NVMe, and the *PFS* index advances lazily behind
+    /// the drain watermarks instead of blocking the step on the drain.
+    fn bb_live(&self) -> bool {
+        self.cfg.live_publish
+            && matches!(self.cfg.target, Target::BurstBuffer { drain: true })
+    }
+
+    /// Directory of the burst-buffer-local index (`<bb_root>/<name>.bp`).
+    /// On the real cluster each node holds a replica of this index next
+    /// to its sub-files; the shared-FS testbed keeps one copy at the BB
+    /// root with [`crate::adios::bp::BB_MAP_ATTR`] naming each sub-file's
+    /// node directory.
+    fn bb_meta_dir(&self) -> PathBuf {
+        self.cfg.bb_root.join(format!("{}.bp", self.cfg.name))
+    }
+
+    /// The sub-file → node-directory map stamped into the BB-local index.
+    fn bb_map_attr(&self) -> String {
+        let parts: Vec<String> = self
+            .plan
+            .subfile_of_agg
+            .iter()
+            .map(|&(rank, sub)| format!("{sub}:node{}", rank / self.plan.ranks_per_node))
+            .collect();
+        parts.join(",")
     }
 
     fn bp_dir_pfs(&self) -> PathBuf {
@@ -543,23 +613,75 @@ impl Bp4Engine {
         Ok(step)
     }
 
-    /// Rank 0: publish the current index.  The write is atomic
-    /// (temp file + rename) so a concurrent follower never parses a
-    /// half-written `md.idx`.
-    fn publish_metadata(&self, complete: bool) -> Result<()> {
+    /// Rank 0: publish an index covering `steps` into `dir`.  The write
+    /// is atomic (temp file + rename) so a concurrent follower never
+    /// parses a half-written `md.idx`.
+    fn publish_index(
+        &self,
+        dir: &std::path::Path,
+        steps: &[StepIndex],
+        complete: bool,
+        extra: &[(String, String)],
+    ) -> Result<()> {
         let mut attrs = self.attrs.clone();
+        attrs.extend_from_slice(extra);
         if complete {
             attrs.push((crate::adios::bp::COMPLETE_ATTR.to_string(), "1".to_string()));
         }
-        let md = crate::adios::bp::write_metadata(
-            &self.steps_index,
-            self.plan.num_aggregators() as u32,
-            &attrs,
-        );
-        let dir = self.bp_dir_pfs();
+        let md =
+            crate::adios::bp::write_metadata(steps, self.plan.num_aggregators() as u32, &attrs);
+        fs::create_dir_all(dir)?;
         let tmp = dir.join("md.idx.tmp");
         fs::write(&tmp, &md)?;
         fs::rename(&tmp, dir.join("md.idx"))?;
+        Ok(())
+    }
+
+    /// Rank 0: publish the full current index to the PFS directory.
+    fn publish_metadata(&mut self, complete: bool) -> Result<()> {
+        self.publish_index(&self.bp_dir_pfs(), &self.steps_index, complete, &[])?;
+        self.pfs_published = self.steps_index.len();
+        Ok(())
+    }
+
+    /// Rank 0, BB-live mode: publish the burst-buffer-local index (every
+    /// step that is durable on NVMe) with the sub-file → node map.
+    fn publish_bb_metadata(&self, complete: bool) -> Result<()> {
+        let map = [(crate::adios::bp::BB_MAP_ATTR.to_string(), self.bb_map_attr())];
+        self.publish_index(&self.bb_meta_dir(), &self.steps_index, complete, &map)
+    }
+
+    /// Rank 0, BB-live mode: advance the PFS index to the steps the drain
+    /// watermarks prove durable on the PFS.  Never blocks on the drain —
+    /// it only reports progress the background threads already made, so
+    /// the PFS `md.idx` keeps the live-follower contract (it names only
+    /// durable bytes) while the application runs ahead.
+    fn publish_pfs_drained(&mut self) -> Result<()> {
+        let naggs = self.plan.num_aggregators() as u32;
+        let drained = crate::adios::bp::drained_steps(&self.bp_dir_pfs(), naggs) as usize;
+        let drained = drained.min(self.steps_index.len());
+        if drained > self.pfs_published {
+            let dir = self.bp_dir_pfs();
+            self.publish_index(&dir, &self.steps_index[..drained], false, &[])?;
+            self.pfs_published = drained;
+        }
+        Ok(())
+    }
+
+    /// Block until every step already ended by this rank is durable on the
+    /// *burst buffer* (NVMe) — without waiting for the PFS drain.  The
+    /// publish gate of BB-live mode; a no-op without the async pipeline
+    /// because synchronous appends complete inside `end_step`.
+    fn wait_bb_durable(&mut self) -> Result<()> {
+        if let Some(pipe) = &self.pipeline {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            pipe.tx
+                .send(IoJob::FlushLocal(ack_tx))
+                .map_err(|_| Error::adios("bp4 i/o pipeline terminated early"))?;
+            ack_rx
+                .recv()
+                .map_err(|_| Error::adios("bp4 i/o pipeline died before local flush ack"))?;
+        }
         Ok(())
     }
 
@@ -740,19 +862,36 @@ impl Engine for Bp4Engine {
                 step: self.step,
                 bytes_raw: traw,
                 bytes_stored: tstored,
+                egress_per_consumer: Vec::new(),
                 real_secs: 0.0, // patched after the closing barrier below
                 cost,
             });
         }
         if self.cfg.live_publish {
-            // Live follower contract: the index may only name bytes that
-            // are already durable on the final target, so flush this
-            // rank's pipeline (or drain synchronously), synchronize, and
-            // only then let rank 0 republish.
-            self.wait_durable()?;
-            comm.barrier();
-            if self.rank == 0 {
-                self.publish_metadata(false)?;
+            if self.bb_live() {
+                // "Follow the drain": publish at *burst-buffer* durability.
+                // Wait only for this rank's frame to be on NVMe (the local
+                // flush never routes through the drainer), synchronize,
+                // then rank 0 publishes the BB-local index — a tiered
+                // follower can analyze this step at NVMe latency while the
+                // PFS drain proceeds in the background.  The PFS index
+                // advances lazily behind the drain watermarks.
+                self.wait_bb_durable()?;
+                comm.barrier();
+                if self.rank == 0 {
+                    self.publish_bb_metadata(false)?;
+                    self.publish_pfs_drained()?;
+                }
+            } else {
+                // Live follower contract: the index may only name bytes
+                // that are already durable on the final target, so flush
+                // this rank's pipeline (or drain synchronously),
+                // synchronize, and only then let rank 0 republish.
+                self.wait_durable()?;
+                comm.barrier();
+                if self.rank == 0 {
+                    self.publish_metadata(false)?;
+                }
             }
         }
         comm.barrier();
@@ -780,7 +919,19 @@ impl Engine for Bp4Engine {
             // durability contract here by draining the missing suffix now.
             if self.plan.is_aggregator(self.rank) {
                 append_missing_suffix(&self.subfile_path(), &self.final_subfile_path())?;
+                let sub = self.plan.subfile(self.rank).expect("aggregator has a sub-file");
+                crate::adios::bp::write_drain_watermark(
+                    &self.bp_dir_pfs(),
+                    sub,
+                    self.step as u64,
+                )?;
             }
+        }
+        // BB-live mode: this rank's drain is flushed, so the PFS index can
+        // name whatever the watermarks (all ranks') now prove durable —
+        // the resume-after-crash path for PFS-side followers.
+        if self.rank == 0 && self.bb_live() {
+            self.publish_pfs_drained()?;
         }
         Ok(())
     }
@@ -805,6 +956,12 @@ impl Engine for Bp4Engine {
             if self.plan.is_aggregator(self.rank) {
                 let sw = Stopwatch::start();
                 append_missing_suffix(&self.subfile_path(), &self.final_subfile_path())?;
+                let sub = self.plan.subfile(self.rank).expect("aggregator has a sub-file");
+                crate::adios::bp::write_drain_watermark(
+                    &self.bp_dir_pfs(),
+                    sub,
+                    self.step as u64,
+                )?;
                 local.frames_enqueued = self.step;
                 local.close_join_secs = sw.secs();
                 local.drain_busy_secs = local.close_join_secs;
@@ -851,6 +1008,12 @@ impl Engine for Bp4Engine {
                 });
             }
             self.publish_metadata(true)?;
+            if self.bb_live() {
+                // Stamp completion into the BB-local index too, so a
+                // follower still riding the burst-buffer tier terminates
+                // instead of timing out.
+                self.publish_bb_metadata(true)?;
+            }
             self.report.files_created = self.plan.num_aggregators() + 1;
             self.report.drain = drain;
             Ok(std::mem::take(&mut self.report))

@@ -29,6 +29,10 @@ pub struct StepStats {
     pub step: usize,
     pub bytes_raw: u64,
     pub bytes_stored: u64,
+    /// Wire bytes shipped to each consumer of a fan-out stream, in
+    /// consumer order (`bytes_stored` is their sum).  Empty for file
+    /// engines and single-consumer transports without a fan-out.
+    pub egress_per_consumer: Vec<u64>,
     pub real_secs: f64,
     pub cost: WriteCost,
 }

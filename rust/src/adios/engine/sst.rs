@@ -918,6 +918,7 @@ impl Engine for SstEngine {
                 step: self.step,
                 bytes_raw: t_raw,
                 bytes_stored: t_wire,
+                egress_per_consumer: t_egress,
                 real_secs: sw.secs(),
                 cost,
             });
@@ -1284,7 +1285,7 @@ impl SstConsumer {
     /// timed-out poll consumes nothing: lanes that already delivered
     /// their frame keep it staged, and a later poll resumes where this
     /// one stopped.  Once a lane's frame has started arriving it gets a
-    /// bounded grace ([`FRAME_GRACE`] past the deadline) to finish, so a
+    /// bounded grace (`FRAME_GRACE` past the deadline) to finish, so a
     /// healthy-but-slow frame near the deadline is not torn mid-read —
     /// but a producer that stalls *mid-frame* surfaces as a descriptive
     /// error (the stream is unrecoverable at that point), never a hang.
@@ -1480,7 +1481,7 @@ impl SstListener {
     /// On failure the error reports the partial-lane state (how many
     /// lanes of how many expected had connected).  `timeout: None` keeps
     /// the v2 semantics: wait indefinitely for the first connection, then
-    /// bound the remaining lanes by [`HELLO_TIMEOUT`].
+    /// bound the remaining lanes by `HELLO_TIMEOUT`.
     pub fn accept_with(
         self,
         sub: &Subscription,

@@ -35,7 +35,7 @@ use crate::{Error, Result};
 pub use config::{AdiosConfig, EngineKind, IoConfig};
 pub use engine::{DrainStats, Engine, EngineReport, Target};
 pub use operator::{Codec, OperatorConfig};
-pub use source::{StepSource, StepStatus, Subscription};
+pub use source::{ServedTier, StepSource, StepStatus, Subscription};
 pub use variable::Variable;
 
 /// Top-level context (the `adios2::ADIOS` analog).

@@ -31,6 +31,25 @@ pub enum StepStatus {
     Timeout,
 }
 
+/// Which storage tier served a step to a tiered file source (DESIGN.md
+/// §11).  Streaming transports have no tiers and report nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServedTier {
+    /// The node-local NVMe replica, read before the PFS drain completed.
+    BurstBuffer,
+    /// The parallel-file-system copy (drain watermark covered the step).
+    Pfs,
+}
+
+impl ServedTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServedTier::BurstBuffer => "burst-buffer",
+            ServedTier::Pfs => "pfs",
+        }
+    }
+}
+
 /// A step-based reader over a streaming transport or a followed file.
 ///
 /// Lifecycle: `begin_step` blocks up to its timeout for the next step;
@@ -76,6 +95,13 @@ pub trait StepSource: Send {
     /// attributes prefixed `__` are implementation details and excluded).
     fn attrs(&self) -> Vec<(String, String)> {
         Vec::new()
+    }
+
+    /// Storage tier that served the open step, for sources reading from a
+    /// tiered store ([`crate::adios::bp::follower::TieredFollower`]);
+    /// `None` for single-tier and streaming sources.
+    fn step_tier(&self) -> Option<ServedTier> {
+        None
     }
 
     /// Release the open step.

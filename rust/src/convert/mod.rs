@@ -22,7 +22,7 @@ use crate::{Error, Result};
 /// Convert one step of a BP directory into a CDF-lite NetCDF-style file.
 /// Returns bytes written.
 ///
-/// Shares [`write_open_step`] with the streaming converters: a
+/// Shares `write_open_step` with the streaming converters: a
 /// [`BpFollower`] is positioned on `step`, so single-step and streaming
 /// conversions can never drift apart.
 pub fn bp_to_nc(bp_dir: &Path, out: &Path, step: usize, compress: bool) -> Result<u64> {
@@ -94,6 +94,11 @@ fn write_open_step(
         w.def_dim(&format!("dim{d}"), *d)?;
     }
     w.put_attr("TITLE", title);
+    if let Some(tier) = src.step_tier() {
+        // Provenance for tiered sources: which storage tier this step was
+        // read from (burst buffer before the drain completed, or PFS).
+        w.put_attr("SERVED_TIER", tier.name());
+    }
     for (k, v) in extra_attrs {
         w.put_attr(k, v);
     }

@@ -42,7 +42,9 @@ pub enum Error {
     Model(String),
 }
 
-#[cfg(feature = "xla-runtime")]
+// Gated like `runtime::pjrt`: the `xla` crate only exists when the
+// operator vendored it and set `STORMIO_XLA_BINDINGS=1` (see build.rs).
+#[cfg(all(feature = "xla-runtime", xla_bindings))]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -76,6 +76,7 @@ impl Adios2Backend {
                 cost: s.cost,
                 bytes_raw: s.bytes_raw,
                 bytes_stored: s.bytes_stored,
+                egress_per_consumer: s.egress_per_consumer,
                 files_created: rep.files_created,
                 drain: rep.drain,
             });

@@ -31,6 +31,11 @@ pub struct FrameReport {
     pub cost: WriteCost,
     pub bytes_raw: u64,
     pub bytes_stored: u64,
+    /// Wire bytes shipped to each consumer of a fan-out stream, in
+    /// consumer order (SST multi-consumer engines; empty elsewhere).
+    /// Lets the launcher print a per-consumer egress table after
+    /// `stormio insitu`.
+    pub egress_per_consumer: Vec<u64>,
     pub files_created: usize,
     /// Measured background-drain pipeline statistics (engines with async
     /// data movement; zero for synchronous backends).

@@ -247,6 +247,15 @@ pub fn run_from_namelist(path: &std::path::Path, artifacts: &std::path::Path) ->
 /// subscription), and a raw step archiver (full subscription).  This is
 /// the `stormio insitu` command: the multi-consumer analog of
 /// `stormio follow`, with zero file-system round-trip.
+///
+/// When the namelist targets a **draining burst buffer**
+/// (`adios2_target = 'bb'`, `adios2_drain = .true.`) the pipeline rides
+/// the BB-local file path instead of SST: the producer writes one
+/// live-published BP4 stream to the node-local NVMe and the same three
+/// consumers follow it through
+/// [`crate::adios::bp::follower::TieredFollower`]s — analyzing each step
+/// at burst-buffer latency while the PFS drain proceeds behind them
+/// (DESIGN.md §11).
 pub fn run_insitu_from_namelist(
     path: &std::path::Path,
     artifacts: &std::path::Path,
@@ -263,8 +272,8 @@ pub fn run_insitu_from_namelist(
     let base = path.parent().unwrap_or(std::path::Path::new("."));
     let mut cfg = RunConfig::from_namelist(&nl, base)?;
     // This command *is* the streaming pipeline: force the ADIOS2 backend
-    // regardless of the namelist's io_form so the SST engine below is
-    // what the driver constructs.
+    // regardless of the namelist's io_form so the engine below is what
+    // the driver constructs.
     cfg.io_form = 22;
 
     // Load the runtime first: fail fast before any consumer blocks in
@@ -274,6 +283,10 @@ pub fn run_insitu_from_namelist(
     let driver = ForecastDriver::new(cfg.forecast.clone())?;
     let (nyp, nxp) = driver.decomp.patch();
     let step = Arc::new(ModelStep::load(&rt, &man, nyp, nxp)?);
+
+    if cfg.target_bb && cfg.drain {
+        return run_insitu_bb_local(cfg, base, driver, step, &rt, &man);
+    }
 
     let accept_timeout = Some(Duration::from_secs(300));
     let step_timeout = Duration::from_secs(300);
@@ -352,7 +365,153 @@ pub fn run_insitu_from_namelist(
         archived.len(),
         arc_dir.display(),
     );
+    print_consumer_egress(&summary.frames, &["analysis", "convert", "archive"]);
     Ok(summary)
+}
+
+/// The BB-local in-situ pipeline (`stormio insitu` over a draining burst
+/// buffer): one BP4 single-file producer publishing at burst-buffer
+/// durability, three concurrent
+/// [`crate::adios::bp::follower::TieredFollower`] consumers reading each
+/// step from the fastest tier that holds it.
+fn run_insitu_bb_local(
+    cfg: RunConfig,
+    base: &std::path::Path,
+    driver: ForecastDriver,
+    step: Arc<ModelStep>,
+    rt: &XlaRuntime,
+    man: &Manifest,
+) -> Result<RunSummary> {
+    use crate::adios::bp::follower::TieredFollower;
+    use crate::analysis::InsituAnalyzer;
+    use crate::runtime::AnalysisStep;
+    use std::time::Duration;
+
+    let step_timeout = Duration::from_secs(300);
+    let poll = Duration::from_millis(20);
+
+    // One long-lived BP4 stream (all frames in one outfile) publishing the
+    // BB-local index per step — the producer never waits for the drain.
+    // Start from the namelist/XML-resolved config (same as the SST path)
+    // and force only what this pipeline requires: the BP4 engine on a
+    // live-published draining burst buffer, all frames in one outfile.
+    let mut adios = cfg.adios(base)?;
+    let io = adios.declare_io("wrf_history");
+    io.engine = EngineKind::Bp4;
+    io.params.insert("Target".into(), "burstbuffer".into());
+    io.params.insert("DrainBB".into(), "true".into());
+    io.params.insert("LivePublish".into(), "true".into());
+    io.params.insert("FramesPerOutfile".into(), "0".into());
+
+    let first_frame = usize::from(!cfg.forecast.write_t0);
+    let bp_dir = cfg
+        .out_dir
+        .join("pfs")
+        .join(format!("{}.bp", cfg.forecast.frame_name(first_frame)));
+    let bb_root = cfg.out_dir.join("bb");
+
+    let aot = AnalysisStep::load(rt, man, cfg.forecast.ny, cfg.forecast.nx).ok();
+    let img_dir = cfg.out_dir.join("frames");
+    let (bp_a, bb_a) = (bp_dir.clone(), bb_root.clone());
+    let analysis_t = std::thread::spawn(
+        move || -> Result<(Vec<crate::analysis::AnalysisRecord>, (usize, usize))> {
+            let mut src = TieredFollower::open(&bp_a, &bb_a, poll)?;
+            let analyzer = InsituAnalyzer::new(aot, Some(img_dir));
+            let records = analyzer.run(&mut src, step_timeout)?;
+            Ok((records, src.tier_counts()))
+        },
+    );
+    let nc_dir = cfg.out_dir.join("nc_live");
+    let (bp_c, bb_c, nc_dir_t) = (bp_dir.clone(), bb_root.clone(), nc_dir.clone());
+    let convert_t = std::thread::spawn(
+        move || -> Result<(Vec<PathBuf>, (usize, usize))> {
+            let mut src = TieredFollower::open(&bp_c, &bb_c, poll)?;
+            let paths =
+                crate::convert::stream_to_nc(&mut src, &nc_dir_t, "wrfout", true, step_timeout)?;
+            Ok((paths, src.tier_counts()))
+        },
+    );
+    let arc_dir = cfg.out_dir.join("archive");
+    let (bp_r, bb_r, arc_dir_t) = (bp_dir, bb_root, arc_dir.clone());
+    let archive_t = std::thread::spawn(
+        move || -> Result<(Vec<PathBuf>, (usize, usize))> {
+            let mut src = TieredFollower::open(&bp_r, &bb_r, poll)?;
+            let paths =
+                crate::convert::stream_to_archive(&mut src, &arc_dir_t, "wrfout", step_timeout)?;
+            Ok((paths, src.tier_counts()))
+        },
+    );
+
+    let summary = driver.run(step, |_rank| {
+        cfg.make_backend(&adios).expect("backend construction failed")
+    })?;
+
+    let (records, tiers_a) = analysis_t
+        .join()
+        .map_err(|_| Error::model("analysis consumer panicked"))??;
+    let (converted, tiers_c) = convert_t
+        .join()
+        .map_err(|_| Error::model("conversion consumer panicked"))??;
+    let (archived, tiers_r) = archive_t
+        .join()
+        .map_err(|_| Error::model("archive consumer panicked"))??;
+
+    print_summary(&cfg, &summary);
+    println!(
+        "in-situ over the burst buffer: {} frames analyzed (θ surface mean of \
+         last: {:.2}), {} NetCDF files in {}, {} archived steps in {}",
+        records.len(),
+        records.last().map(|r| r.surf_mean).unwrap_or(0.0),
+        converted.len(),
+        nc_dir.display(),
+        archived.len(),
+        arc_dir.display(),
+    );
+    let mut t = Table::new(
+        "steps served per tier (burst-buffer-local follow)",
+        &["consumer", "burst buffer", "pfs"],
+    );
+    for (label, (bb, pfs)) in
+        [("analysis", tiers_a), ("convert", tiers_c), ("archive", tiers_r)]
+    {
+        t.row(&[label.to_string(), bb.to_string(), pfs.to_string()]);
+    }
+    println!("{}", t.render());
+    Ok(summary)
+}
+
+/// Print the per-consumer wire-egress table of a fan-out run (empty
+/// egress vectors — file engines, single-consumer streams — print
+/// nothing).  `labels` name the consumers in address order.
+pub fn print_consumer_egress(frames: &[crate::io::api::FrameReport], labels: &[&str]) {
+    let n = frames
+        .iter()
+        .map(|f| f.egress_per_consumer.len())
+        .max()
+        .unwrap_or(0);
+    if n == 0 {
+        return;
+    }
+    let mut totals = vec![0u64; n];
+    for f in frames {
+        for (i, e) in f.egress_per_consumer.iter().enumerate() {
+            totals[i] += e;
+        }
+    }
+    let sum: u64 = totals.iter().sum();
+    let mut t = Table::new(
+        "per-consumer wire egress (fan-out)",
+        &["consumer", "label", "egress", "share"],
+    );
+    for (i, tot) in totals.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            labels.get(i).copied().unwrap_or("-").to_string(),
+            crate::util::human_bytes(*tot),
+            format!("{:.1}%", 100.0 * *tot as f64 / sum.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.render());
 }
 
 /// WRF `rsl.out`-style end-of-run report.

@@ -18,10 +18,14 @@ USAGE:
       Convert every step of a BP directory to NetCDF-style files
       (the paper's §IV backwards-compatibility converter).
 
-  stormio follow <dir.bp> <out_dir> [--timeout SECS] [--no-compress]
+  stormio follow <dir.bp> <out_dir> [--bb BB_ROOT] [--timeout SECS]
+                 [--no-compress]
       Tail a *live* BP directory (a producer running with
       LivePublish) and convert each step to NetCDF as it is
-      published; exits when the producer completes.
+      published; exits when the producer completes.  With --bb, tail
+      a draining burst-buffer run through both tiers: each step is
+      read from the node-local replica until the drain watermark
+      says its PFS copy is complete ("follow the drain").
 
   stormio insitu <namelist.input> [--artifacts DIR]
       Run a forecast streaming over the SST fan-out data plane to
@@ -100,24 +104,37 @@ fn real_main() -> stormio::Result<i32> {
                 .file_stem()
                 .map(|s| s.to_string_lossy().to_string())
                 .unwrap_or_else(|| "out".into());
-            let mut src = stormio::adios::bp::follower::BpFollower::open(
-                &bp,
-                std::time::Duration::from_millis(50),
-            )?;
+            let bb_root = args
+                .windows(2)
+                .find(|w| w[0] == "--bb")
+                .map(|w| PathBuf::from(&w[1]));
+            let poll = std::time::Duration::from_millis(50);
+            let timeout = std::time::Duration::from_secs(secs);
             let sw = stormio::metrics::Stopwatch::start();
-            let paths = convert::stream_to_nc(
-                &mut src,
-                &out,
-                &stem,
-                compress,
-                std::time::Duration::from_secs(secs),
-            )?;
-            println!(
-                "followed {} live: converted {} step(s) in {:.2}s",
-                bp.display(),
-                paths.len(),
-                sw.secs()
-            );
+            if let Some(bb_root) = bb_root {
+                // Tiered follow: serve each step from the fastest tier
+                // that holds it (burst buffer until drained, then PFS).
+                let mut src =
+                    stormio::adios::bp::follower::TieredFollower::open(&bp, &bb_root, poll)?;
+                let paths = convert::stream_to_nc(&mut src, &out, &stem, compress, timeout)?;
+                let (bb, pfs) = src.tier_counts();
+                println!(
+                    "followed {} live across tiers: converted {} step(s) in {:.2}s \
+                     ({bb} served from the burst buffer, {pfs} from the PFS)",
+                    bp.display(),
+                    paths.len(),
+                    sw.secs()
+                );
+            } else {
+                let mut src = stormio::adios::bp::follower::BpFollower::open(&bp, poll)?;
+                let paths = convert::stream_to_nc(&mut src, &out, &stem, compress, timeout)?;
+                println!(
+                    "followed {} live: converted {} step(s) in {:.2}s",
+                    bp.display(),
+                    paths.len(),
+                    sw.secs()
+                );
+            }
             Ok(0)
         }
         Some("stitch") => {

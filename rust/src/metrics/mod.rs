@@ -192,6 +192,110 @@ impl Table {
     }
 }
 
+/// Machine-readable bench result writer for CI artifacts (serde is not in
+/// the offline vendor set, so the JSON is hand-assembled).
+///
+/// Every `fig*`/`table1` bench collects its headline metrics here and
+/// writes `BENCH_<name>.json` next to its CSV so the CI bench-smoke job
+/// can upload a perf trajectory per commit.  Values are scalars only —
+/// numbers (non-finite values degrade to `null`), strings, and booleans —
+/// keyed in insertion order.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    name: String,
+    /// key → pre-rendered JSON value.
+    fields: Vec<(String, String)>,
+}
+
+/// Escape a string for a JSON literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl BenchReport {
+    pub fn new(name: impl Into<String>) -> Self {
+        BenchReport {
+            name: name.into(),
+            fields: Vec::new(),
+        }
+    }
+
+    /// Turn a human-readable row label ("ADIOS2 (zstd)") into a JSON key
+    /// slug ("adios2__zstd_"): lowercase alphanumerics, everything else
+    /// an underscore.  Shared by benches that key metrics off table rows.
+    pub fn slug(name: &str) -> String {
+        name.chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect()
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        let rendered = if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    pub fn int(&mut self, key: &str, v: u64) -> &mut Self {
+        self.fields.push((key.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn flag(&mut self, key: &str, v: bool) -> &mut Self {
+        self.fields.push((key.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn text(&mut self, key: &str, v: &str) -> &mut Self {
+        self.fields
+            .push((key.to_string(), format!("\"{}\"", json_escape(v))));
+        self
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\"", json_escape(&self.name)));
+        for (k, v) in &self.fields {
+            out.push_str(&format!(",\n  \"{}\": {v}", json_escape(k)));
+        }
+        out.push_str("\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json` into `bench_results/` (next to the CSVs
+    /// every bench table emits, so one bench's outputs never split across
+    /// directories) and return the path.  IO failures are reported, not
+    /// fatal — a bench's measurements are still printed even if the
+    /// artifact directory is unwritable.
+    pub fn write(&self) -> std::path::PathBuf {
+        let dir = std::path::PathBuf::from("bench_results");
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        if let Err(e) = std::fs::create_dir_all(&dir)
+            .and_then(|_| std::fs::write(&path, self.to_json()))
+        {
+            eprintln!("bench report {} not written: {e}", path.display());
+        } else {
+            println!("bench report: {}", path.display());
+        }
+        path
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +352,28 @@ mod tests {
             h.join().unwrap();
         }
         assert!((m.secs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bench_report_json_shape() {
+        let mut r = BenchReport::new("fig_test");
+        r.num("mean", 1.5)
+            .num("bad", f64::NAN)
+            .int("steps", 4)
+            .flag("smoke", true)
+            .text("note", "a \"quoted\" line\n");
+        assert_eq!(BenchReport::slug("ADIOS2 (zstd)"), "adios2__zstd_");
+        let j = r.to_json();
+        assert!(j.starts_with("{\n  \"bench\": \"fig_test\""));
+        assert!(j.contains("\"mean\": 1.5"));
+        assert!(j.contains("\"bad\": null"));
+        assert!(j.contains("\"steps\": 4"));
+        assert!(j.contains("\"smoke\": true"));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.ends_with("}\n"));
+        // Balanced braces / no raw control characters.
+        assert_eq!(j.matches('{').count(), 1);
+        assert!(!j.contains('\u{9}'));
     }
 
     #[test]

@@ -1,11 +1,13 @@
-//! Stub runtime (default build, no `xla-runtime` feature).
+//! Stub runtime (default build, and any build without the PJRT bindings).
 //!
 //! The offline image has no `xla` crate / xla_extension, so the PJRT path
-//! is feature-gated and this stub keeps the rest of the crate — the
-//! ADIOS2-workalike, the baseline backends, the launcher plumbing and
-//! every bench — compiling and testable.  The API mirrors
-//! [`super::pjrt`] exactly; every constructor returns a descriptive
-//! [`Error::Xla`], so artifact-gated tests and tools skip gracefully.
+//! is gated on `all(feature = "xla-runtime", xla_bindings)` (the cfg is
+//! emitted by build.rs when `STORMIO_XLA_BINDINGS=1`) and this stub keeps
+//! the rest of the crate — the ADIOS2-workalike, the baseline backends,
+//! the launcher plumbing and every bench — compiling and testable in both
+//! feature configurations.  The API mirrors the PJRT module exactly;
+//! every constructor returns a descriptive [`Error::Xla`], so
+//! artifact-gated tests and tools skip gracefully.
 
 use std::path::Path;
 
@@ -14,12 +16,14 @@ use super::AnalysisOutput;
 use crate::{Error, Result};
 
 fn unavailable() -> Error {
-    Error::Xla(
+    let detail = if cfg!(feature = "xla-runtime") {
+        "the `xla-runtime` feature is on but the PJRT bindings are absent: \
+         vendor the `xla` crate and rebuild with STORMIO_XLA_BINDINGS=1"
+    } else {
         "stormio was built without the `xla-runtime` feature; the PJRT model \
-         runtime needs the `xla` crate, which is not in the offline vendor \
-         set (see DESIGN.md §8)"
-            .to_string(),
-    )
+         runtime needs the `xla` crate, which is not in the offline vendor set"
+    };
+    Error::Xla(format!("{detail} (see DESIGN.md §8)"))
 }
 
 /// Stub of the shared PJRT CPU client; `new` always errors.

@@ -159,6 +159,51 @@ impl CostModel {
         read.max(write)
     }
 
+    /// Read `bytes` from the PFS through `streams` concurrent reader
+    /// streams (post-hoc analysis / PFS-side follow): the backend's
+    /// bandwidth curve is symmetric with writes at this model's fidelity.
+    pub fn t_pfs_read(&self, bytes: f64, streams: usize) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.pfs_bw(streams.max(1))
+    }
+
+    /// Read `bytes` from the node-local burst-buffer replicas (`nodes`
+    /// drives in parallel — the BB-local follow path, DESIGN.md §11).
+    /// While the background drain is still shipping the same sub-files to
+    /// the PFS, its reader and the follower's reads contend for each
+    /// NVMe's read bandwidth, so the effective rate halves.
+    pub fn t_bb_follow_read(&self, bytes: f64, nodes: usize, drain_active: bool) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let share = if drain_active { 0.5 } else { 1.0 };
+        bytes / nodes.max(1) as f64 / (self.hw.nvme_read_bw * share)
+    }
+
+    /// Virtual seconds from a step leaving the application's buffers to
+    /// the first in-situ analysis read of it completing — the metric the
+    /// BB-local follow optimizes (fig 9 bench).
+    ///
+    /// * `bb_follow = true`: the consumer reads the NVMe replica as soon
+    ///   as the BB-local index is published, contending with the
+    ///   still-running drain.
+    /// * `bb_follow = false`: the consumer waits for the PFS copy (the
+    ///   drain itself) and then reads it back off the PFS as one stream
+    ///   per node-local consumer.
+    pub fn time_to_first_analysis(&self, step_bytes: f64, bb_follow: bool) -> f64 {
+        let nodes = self.hw.nodes.max(1);
+        let land_on_bb = self.t_nvme_write(step_bytes, nodes);
+        if bb_follow {
+            land_on_bb + self.t_bb_follow_read(step_bytes, nodes, true)
+        } else {
+            land_on_bb
+                + self.t_bb_drain(step_bytes, nodes)
+                + self.t_pfs_read(step_bytes, nodes)
+        }
+    }
+
     // ---- communication primitives -------------------------------------------
 
     /// Funnel `bytes` from all ranks to rank 0 (serial-NetCDF gather):
@@ -400,6 +445,33 @@ mod tests {
         assert!(boxed > 0.0 && boxed.is_finite());
         assert_eq!(m.fanout_advantage(v, &[], 8), 1.0);
         assert_eq!(m.fanout_advantage(0.0, &[v], 8), 1.0);
+    }
+
+    #[test]
+    fn bb_follow_first_analysis_strictly_below_pfs_follow() {
+        // Acceptance gate of the tiered-follow PR: reading the fastest
+        // tier the data has reached must beat waiting for the drain at
+        // every paper node count — and the drain contention charge must
+        // not erase the win.
+        let v = 8e9;
+        for nodes in [1usize, 2, 4, 8] {
+            let m = cm(nodes);
+            let bb = m.time_to_first_analysis(v, true);
+            let pfs = m.time_to_first_analysis(v, false);
+            assert!(
+                bb < pfs,
+                "{nodes} nodes: BB-follow {bb:.2}s !< PFS-follow {pfs:.2}s"
+            );
+            // Contended BB reads are slower than uncontended, but still on
+            // the NVMe latency scale.
+            let contended = m.t_bb_follow_read(v, nodes, true);
+            let free = m.t_bb_follow_read(v, nodes, false);
+            assert!(contended > free && contended <= 2.0 * free + 1e-9);
+        }
+        // Zero-byte guards.
+        let m = cm(8);
+        assert_eq!(m.t_pfs_read(0.0, 4), 0.0);
+        assert_eq!(m.t_bb_follow_read(0.0, 4, true), 0.0);
     }
 
     #[test]

@@ -19,6 +19,36 @@ use crate::adios::Variable;
 use crate::sim::HardwareSpec;
 use crate::Result;
 
+/// True when benches should run in reduced-size smoke mode: the CI
+/// bench-smoke job sets `STORMIO_SMOKE=1` (or passes `--smoke`) so every
+/// measurement path is exercised per commit without multi-minute sweeps.
+pub fn bench_smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("STORMIO_SMOKE")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false)
+}
+
+/// Repetitions for a write bench: `STORMIO_REPS` override, else 1 in
+/// smoke mode, else `full`.
+pub fn bench_reps(full: usize) -> usize {
+    std::env::var("STORMIO_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if bench_smoke() { 1 } else { full })
+        .max(1)
+}
+
+/// Node counts a scaling bench sweeps: the paper's 1–8 in full mode, a
+/// two-point smoke subset in CI.
+pub fn bench_nodes() -> Vec<usize> {
+    if bench_smoke() {
+        vec![1, 2]
+    } else {
+        vec![1, 2, 4, 8]
+    }
+}
+
 /// Uncompressed CONUS 2.5 km history-frame volume we scale to (bytes).
 /// 1901×1301×35 cells × 4 B ≈ 346 MB per 3-D field; WRF-ARW history holds
 /// ~20+ 3-D fields plus the 2-D tail → ≈ 8 GB (consistent with the

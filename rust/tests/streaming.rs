@@ -11,15 +11,15 @@ use std::net::TcpStream;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use stormio::adios::bp::follower::BpFollower;
-use stormio::adios::bp::{read_metadata, write_metadata};
+use stormio::adios::bp::follower::{BpFollower, TieredFollower};
+use stormio::adios::bp::{drained_steps, read_metadata, write_metadata};
 use stormio::adios::engine::bp4::{Bp4Config, Bp4Engine};
 use stormio::adios::engine::sst::{
     DataPlane, SstConsumer, SstEngine, SstSource, MAGIC, MAX_FRAME_LEN, TYPE_HELLO, TYPE_STEP,
 };
 use stormio::adios::engine::{Engine, Target};
 use stormio::adios::operator::{Codec, OperatorConfig};
-use stormio::adios::source::{extract_box, StepSource, StepStatus, Subscription};
+use stormio::adios::source::{extract_box, ServedTier, StepSource, StepStatus, Subscription};
 use stormio::adios::Variable;
 use stormio::analysis::{AnalysisRecord, InsituAnalyzer};
 use stormio::cluster::{run_world, Comm};
@@ -723,6 +723,275 @@ fn producer_keeps_serving_survivors_after_consumer_drop() {
 // ---------------------------------------------------------------------------
 // Follower timeout / completion protocol
 // ---------------------------------------------------------------------------
+
+// ---------------------------------------------------------------------------
+// Tiered follow over a draining burst buffer (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// A BB-live config: draining burst buffer + per-step publish at NVMe
+/// durability, with an artificial per-frame drain latency so the tiers
+/// are observably distinct regardless of disk speed.
+fn bb_live_cfg(dir: &std::path::Path, name: &str, throttle_ms: u64) -> Bp4Config {
+    Bp4Config {
+        name: name.into(),
+        pfs_dir: dir.join("pfs"),
+        bb_root: dir.join("bb"),
+        target: Target::BurstBuffer { drain: true },
+        operator: OperatorConfig::blosc(Codec::Lz4),
+        aggs_per_node: 1,
+        cost: CostModel::new(HardwareSpec::paper_testbed(2)),
+        pack_threads: 0,
+        async_io: true,
+        drain_throttle: Some(Duration::from_millis(throttle_ms)),
+        live_publish: true,
+    }
+}
+
+#[test]
+fn tiered_follower_serves_step_from_bb_while_throttle_holds_pfs() {
+    // Acceptance: a follower observes step 0 from the burst buffer while
+    // `drain_throttle` still holds step 0 off the PFS.
+    let dir = tmp("bb_first");
+    let cfg = bb_live_cfg(&dir, "live", 1500);
+    let bp = dir.join("pfs/live.bp");
+    let bb_root = dir.join("bb");
+    let producer = std::thread::spawn(move || {
+        run_world(4, 2, move |mut comm| {
+            let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+            produce(&mut eng, &mut comm, 2);
+            eng.close(&mut comm).unwrap();
+        });
+    });
+
+    let mut f = TieredFollower::open(&bp, &bb_root, Duration::from_millis(2)).unwrap();
+    assert_eq!(f.begin_step(Duration::from_secs(20)).unwrap(), StepStatus::Ready);
+    // The step is open well inside the 1.5 s throttle window: no frame
+    // has reached the PFS yet, so this read can only come from NVMe.
+    assert_eq!(drained_steps(&bp, 2), 0, "throttle failed to hold the drain");
+    assert!(
+        !bp.join("md.idx").exists(),
+        "PFS index must not name undurable steps"
+    );
+    assert_eq!(f.step_tier(), Some(ServedTier::BurstBuffer));
+    let (shape, g) = f.read_var_global("PSFC").unwrap();
+    assert_eq!(shape, vec![4, 6]);
+    for r in 0..4u64 {
+        for i in 0..6usize {
+            assert_eq!(g[r as usize * 6 + i], field(0, r + 10, 6)[i]);
+        }
+    }
+    f.end_step().unwrap();
+
+    // Drain the rest of the stream; completion arrives once the producer
+    // closes (which also drains both steps to the PFS).
+    let mut consumed = 1;
+    loop {
+        match f.begin_step(Duration::from_secs(30)).unwrap() {
+            StepStatus::Ready => {
+                let (_, g) = f.read_var_global("T").unwrap();
+                assert_eq!(g.len(), 2 * 4 * 6);
+                f.end_step().unwrap();
+                consumed += 1;
+            }
+            StepStatus::EndOfStream => break,
+            StepStatus::Timeout => panic!("tiered follower stalled"),
+        }
+    }
+    producer.join().unwrap();
+    assert_eq!(consumed, 2);
+    assert_eq!(f.tier_history()[0], ServedTier::BurstBuffer);
+    // After close every frame is durable on the PFS and byte-identical
+    // with its BB replica.
+    assert_eq!(drained_steps(&bp, 2), 2);
+    for (node, sub) in [(0usize, 0u32), (1, 1)] {
+        let bb = std::fs::read(dir.join(format!("bb/node{node}/live.bp/data.{sub}"))).unwrap();
+        let pfs = std::fs::read(dir.join(format!("pfs/live.bp/data.{sub}"))).unwrap();
+        assert_eq!(bb, pfs, "sub-file {sub} differs between tiers");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiered_follower_fails_over_when_bb_replica_reaped() {
+    let dir = tmp("bb_reap");
+    let cfg = bb_live_cfg(&dir, "reap", 400);
+    let bp = dir.join("pfs/reap.bp");
+    let bb_root = dir.join("bb");
+    let producer = std::thread::spawn(move || {
+        run_world(4, 2, move |mut comm| {
+            let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+            produce(&mut eng, &mut comm, 2);
+            eng.close(&mut comm).unwrap();
+        });
+    });
+
+    // Step 0 arrives over the burst buffer while the drain is throttled.
+    let mut f = TieredFollower::open(&bp, &bb_root, Duration::from_millis(2)).unwrap();
+    assert_eq!(f.begin_step(Duration::from_secs(20)).unwrap(), StepStatus::Ready);
+    assert_eq!(f.step_tier(), Some(ServedTier::BurstBuffer));
+    let c0 = canon_step(&mut f);
+    f.end_step().unwrap();
+
+    // Reap the whole burst buffer once the run is complete (the drain has
+    // shipped everything): the follower must transparently continue from
+    // the PFS replica.
+    producer.join().unwrap();
+    std::fs::remove_dir_all(&bb_root).unwrap();
+    assert_eq!(f.begin_step(Duration::from_secs(20)).unwrap(), StepStatus::Ready);
+    assert_eq!(f.step_tier(), Some(ServedTier::Pfs));
+    let c1 = canon_step(&mut f);
+    f.end_step().unwrap();
+    assert_eq!(f.begin_step(Duration::from_secs(10)).unwrap(), StepStatus::EndOfStream);
+    assert_eq!(f.tier_history(), &[ServedTier::BurstBuffer, ServedTier::Pfs]);
+
+    // Both steps round-tripped with the canonical content (the reaped
+    // tier's step 0 was read before the reap, step 1 off the PFS).
+    assert_eq!(c0.len(), 2);
+    assert_eq!(c1.len(), 2);
+    assert_ne!(c0, c1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiered_follower_fails_over_mid_step_when_chosen_tier_vanishes() {
+    // In-step failover: the PFS tier is chosen (drain complete), then its
+    // data files vanish under the open step — the read must retry on the
+    // burst-buffer replica instead of erroring.
+    let dir = tmp("bb_midstep");
+    let cfg = bb_live_cfg(&dir, "mid", 0);
+    let bp = dir.join("pfs/mid.bp");
+    let bb_root = dir.join("bb");
+    run_world(4, 2, move |mut comm| {
+        let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+        produce(&mut eng, &mut comm, 1);
+        eng.close(&mut comm).unwrap();
+    });
+
+    let mut f = TieredFollower::open(&bp, &bb_root, Duration::from_millis(2)).unwrap();
+    assert_eq!(f.begin_step(Duration::from_secs(10)).unwrap(), StepStatus::Ready);
+    // Completed run: the watermark covers the step, so the PFS serves it.
+    assert_eq!(f.step_tier(), Some(ServedTier::Pfs));
+    for sub in 0..2u32 {
+        std::fs::remove_file(bp.join(format!("data.{sub}"))).unwrap();
+    }
+    let (shape, _) = f.read_var_global("T").unwrap();
+    assert_eq!(shape, vec![2, 4, 6]);
+    // The failover is recorded: the step ends up served by the BB tier.
+    assert_eq!(f.step_tier(), Some(ServedTier::BurstBuffer));
+    f.end_step().unwrap();
+    assert_eq!(f.tier_history(), &[ServedTier::BurstBuffer]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiered_follower_resumes_from_bb_after_producer_crash() {
+    // Producer dies without close: no completion marker anywhere, PFS
+    // index lagging behind the throttled drain — the BB-local index is
+    // the newer one and the follower resumes from it, then reports a
+    // clean timeout (not end-of-stream, not an error).
+    let dir = tmp("bb_crash");
+    let cfg = bb_live_cfg(&dir, "crash", 400);
+    let bp = dir.join("pfs/crash.bp");
+    let bb_root = dir.join("bb");
+    run_world(4, 2, move |mut comm| {
+        let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+        produce(&mut eng, &mut comm, 2);
+        // Crash: the engine is dropped with the drain still in flight.
+    });
+
+    let mut f = TieredFollower::open(&bp, &bb_root, Duration::from_millis(2)).unwrap();
+    for expect in 0..2usize {
+        assert_eq!(f.begin_step(Duration::from_secs(20)).unwrap(), StepStatus::Ready);
+        assert_eq!(f.step_index(), expect);
+        assert_eq!(f.step_tier(), Some(ServedTier::BurstBuffer));
+        let (_, g) = f.read_var_global("PSFC").unwrap();
+        assert_eq!(g.len(), 24);
+        f.end_step().unwrap();
+    }
+    assert_eq!(
+        f.begin_step(Duration::from_millis(80)).unwrap(),
+        StepStatus::Timeout
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiered_follower_resumes_from_pfs_after_producer_crash() {
+    // Producer crashes after its drains were flushed (wait_durable) and
+    // the watermark-gated PFS index was republished; the burst buffer is
+    // then reaped.  A fresh follower must serve every published step from
+    // the PFS alone, then time out cleanly.
+    let dir = tmp("pfs_crash");
+    let cfg = bb_live_cfg(&dir, "pcrash", 50);
+    let bp = dir.join("pfs/pcrash.bp");
+    let bb_root = dir.join("bb");
+    run_world(4, 2, move |mut comm| {
+        let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+        produce(&mut eng, &mut comm, 2);
+        // Flush this rank's drain, then let rank 0 republish the PFS
+        // index once every rank's watermark is on disk.
+        eng.wait_durable().unwrap();
+        comm.barrier();
+        if comm.rank() == 0 {
+            eng.wait_durable().unwrap();
+        }
+        comm.barrier();
+        // Crash without close.
+    });
+    std::fs::remove_dir_all(&bb_root).unwrap();
+
+    let mut f = TieredFollower::open(&bp, &bb_root, Duration::from_millis(2)).unwrap();
+    for expect in 0..2usize {
+        assert_eq!(f.begin_step(Duration::from_secs(10)).unwrap(), StepStatus::Ready);
+        assert_eq!(f.step_index(), expect);
+        assert_eq!(f.step_tier(), Some(ServedTier::Pfs));
+        let (_, g) = f.read_var_global("T").unwrap();
+        assert_eq!(g.len(), 48);
+        f.end_step().unwrap();
+    }
+    assert_eq!(
+        f.begin_step(Duration::from_millis(80)).unwrap(),
+        StepStatus::Timeout
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiered_follow_payloads_consistent_under_racing_drain() {
+    // The drain-throttle race: while frames trickle to the PFS behind the
+    // application, a concurrent tiered follower must deliver every step
+    // exactly once with canonical content, whichever tier serves it.
+    let dir = tmp("bb_race");
+    let cfg = bb_live_cfg(&dir, "race", 150);
+    let bp = dir.join("pfs/race.bp");
+    let bb_root = dir.join("bb");
+    let steps = 4usize;
+    let producer = std::thread::spawn(move || {
+        run_world(4, 2, move |mut comm| {
+            let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+            produce(&mut eng, &mut comm, 4);
+            eng.close(&mut comm).unwrap();
+        });
+    });
+
+    let mut f = TieredFollower::open(&bp, &bb_root, Duration::from_millis(2)).unwrap();
+    let (canons, _) = drain_source(&mut f);
+    producer.join().unwrap();
+    assert_eq!(canons.len(), steps);
+    for (s, canon) in canons.iter().enumerate() {
+        let names: Vec<&str> = canon.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["PSFC", "T"], "step {s}");
+        // Spot-check the PSFC payload against the generator.
+        let (_, _, psfc) = &canon[0];
+        let want = field(s, 10, 6); // rank 0's row
+        for (i, w) in want.iter().enumerate() {
+            let got = f32::from_le_bytes(psfc[i * 4..i * 4 + 4].try_into().unwrap());
+            assert_eq!(got, *w, "step {s} psfc[{i}]");
+        }
+    }
+    assert_eq!(f.tier_history().len(), steps);
+    let _ = std::fs::remove_dir_all(&dir);
+}
 
 #[test]
 fn follower_times_out_on_stalled_producer_and_resumes() {
