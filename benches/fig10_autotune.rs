@@ -1,0 +1,153 @@
+//! Fig 10 (repro extension) — cost-model autotuning of the I/O plan.
+//!
+//! Races the planner-chosen configuration against the **worst** fixed
+//! setting of the same knob, at two node counts:
+//!
+//! * **aggregators per node** (BP4 → PFS, the paper's fig 4 knob): the
+//!   `'auto'` sweep argmin vs the sweep's worst candidate, both actually
+//!   written through the engine — the autotuned plan must never be
+//!   slower in virtual (CONUS-scale) perceived time;
+//! * **SST data plane** (lanes vs funnel, 3-consumer fan-out): the
+//!   planner's `fanout_advantage` choice vs the worse-scored plane.
+//!
+//! Emits `BENCH_fig10_autotune.json` with the resolved plan's provenance
+//! ([`stormio::plan::IoPlan::stamp`]) for the CI bench-smoke artifact
+//! trail.
+
+use stormio::adios::engine::sst::DataPlane;
+use stormio::adios::{EngineKind, Target};
+use stormio::io::adios2::Adios2Backend;
+use stormio::metrics::{BenchReport, Table};
+use stormio::plan::{IoIntent, Knob, Planner, Setting, WorkloadShape};
+use stormio::sim::CostModel;
+use stormio::workload::{bench_reps, bench_smoke, bench_write, Workload};
+
+fn main() {
+    let wl = Workload::conus_proxy();
+    let reps = bench_reps(2);
+    let smoke = bench_smoke();
+    let mut json = BenchReport::new("fig10_autotune");
+    json.flag("smoke", smoke).int("reps", reps as u64);
+    let tmp = std::env::temp_dir().join(format!("stormio_fig10_{}", std::process::id()));
+
+    let node_counts: [usize; 2] = if smoke { [1, 2] } else { [1, 8] };
+    let mut table = Table::new(
+        "Fig 10: autotuned vs worst fixed aggregators (virtual write time [s])",
+        &["nodes", "auto aggs/node", "auto [s]", "worst aggs/node", "worst [s]", "speedup"],
+    );
+    let mut last_plan = None;
+    for nodes in node_counts {
+        let hw = wl.hardware(nodes);
+        let planner = Planner::new(
+            CostModel::new(hw.clone()),
+            WorkloadShape::from_physical(wl.frame_bytes(), hw.volume_scale),
+        );
+        // Autotune the aggregator knob on the PFS path (where fig 4 shows
+        // it is load-bearing); codec pinned off so the race is pure
+        // aggregation, exactly like fig 4.
+        let intent = IoIntent {
+            aggregators: Knob::namelist(Setting::Auto),
+            target: Knob::namelist(Setting::Explicit(Target::Pfs)),
+            ..IoIntent::default()
+        };
+        let plan = planner.plan(EngineKind::Bp4, &intent).expect("auto plan");
+        // Worst fixed candidate under the same scoring.
+        let worst_aggs = planner
+            .agg_candidates()
+            .into_iter()
+            .max_by(|a, b| {
+                let sa = planner.score_aggregators(*a, planner.shape.step_bytes, Target::Pfs, 1);
+                let sb = planner.score_aggregators(*b, planner.shape.step_bytes, Target::Pfs, 1);
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .unwrap();
+        let worst_intent = IoIntent {
+            aggregators: Knob::namelist(Setting::Explicit(worst_aggs)),
+            target: Knob::namelist(Setting::Explicit(Target::Pfs)),
+            ..IoIntent::default()
+        };
+        let worst_plan = planner
+            .plan(EngineKind::Bp4, &worst_intent)
+            .expect("worst plan");
+
+        let mut results = Vec::new();
+        for (tag, p) in [("auto", &plan), ("worst", &worst_plan)] {
+            let dir = tmp.join(format!("{tag}_n{nodes}"));
+            let (p2, d2, hw2) = (p.clone(), dir.clone(), hw.clone());
+            let b = bench_write(&wl, nodes, 36, reps, move |_| {
+                Box::new(
+                    Adios2Backend::from_plan(
+                        p2.clone(),
+                        d2.join("pfs"),
+                        d2.join("bb"),
+                        CostModel::new(hw2.clone()),
+                    )
+                    .unwrap(),
+                )
+            })
+            .expect("bench");
+            results.push(b.mean_perceived());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        let (auto_s, worst_s) = (results[0], results[1]);
+        assert!(
+            auto_s <= worst_s * 1.0001,
+            "{nodes} nodes: autotuned plan slower than the worst fixed \
+             setting ({auto_s:.3}s vs {worst_s:.3}s)"
+        );
+        table.row(&[
+            nodes.to_string(),
+            plan.aggs_per_node.value.to_string(),
+            format!("{auto_s:.3}"),
+            worst_aggs.to_string(),
+            format!("{worst_s:.3}"),
+            format!("{:.2}x", worst_s / auto_s.max(1e-9)),
+        ]);
+        json.num(&format!("auto_s_n{nodes}"), auto_s)
+            .num(&format!("worst_s_n{nodes}"), worst_s)
+            .int(&format!("auto_aggs_n{nodes}"), plan.aggs_per_node.value as u64)
+            .int(&format!("worst_aggs_n{nodes}"), worst_aggs as u64);
+
+        // Data-plane race (scored): the planner's lanes/funnel choice
+        // must never exceed the worse-scored plane for a 3-consumer
+        // CONUS fan-out.
+        let cm = &planner.cost;
+        let v = planner.shape.step_bytes;
+        let lanes = plan.aggs_per_node.value * nodes;
+        let per_consumer = vec![v; 3];
+        let lanes_s = cm.t_chain_gather(v, lanes) + cm.t_stream_egress(&per_consumer, lanes);
+        let funnel_s = cm.t_gather_root(v, cm.hw.ranks())
+            + cm.t_stream_transfer(per_consumer.iter().sum());
+        let chosen = planner.choose_data_plane(v, &per_consumer, lanes);
+        let chosen_s = match chosen {
+            DataPlane::Lanes => lanes_s,
+            DataPlane::Funnel => funnel_s,
+        };
+        assert!(
+            chosen_s <= lanes_s.min(funnel_s) + 1e-12,
+            "{nodes} nodes: planner chose the worse-scored data plane \
+             (chosen {chosen_s:.4}s, lanes {lanes_s:.4}s, funnel {funnel_s:.4}s)"
+        );
+        json.num(&format!("plane_lanes_s_n{nodes}"), lanes_s)
+            .num(&format!("plane_funnel_s_n{nodes}"), funnel_s)
+            .text(
+                &format!("plane_auto_n{nodes}"),
+                match chosen {
+                    DataPlane::Lanes => "lanes",
+                    DataPlane::Funnel => "funnel",
+                },
+            );
+        last_plan = Some(plan);
+    }
+    // Plan provenance of the (largest-node-count) autotuned plan.
+    if let Some(p) = &last_plan {
+        p.stamp(&mut json);
+    }
+    table.emit(Some(std::path::Path::new("bench_results/fig10_autotune.csv")));
+    json.write();
+    println!(
+        "autotuned (aggregators, data plane) never slower than the worst fixed \
+         setting — ROADMAP lane-count autotuning item closed."
+    );
+    let _ = std::fs::remove_dir_all(&tmp);
+}

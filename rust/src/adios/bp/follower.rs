@@ -9,6 +9,11 @@
 //! analysis *and* live NetCDF conversion off the same run) need zero
 //! producer changes beyond the publish flag.
 //!
+//! Followers are layout-agnostic: [`super::read_metadata`] parses both
+//! the full-rewrite `md.idx` (PFS tier) and the incremental segmented
+//! layout ([`super::MD_VERSION_SEG`]) a BB-live producer appends to, so
+//! the same polling loop tails either tier.
+//!
 //! The polling protocol (DESIGN.md §9):
 //!
 //! 1. until `md.idx` exists, the directory is treated as "not started";

@@ -23,6 +23,21 @@ use crate::{Error, Result};
 
 pub const MD_MAGIC: u32 = 0x42504C54; // "BPLT"
 pub const MD_VERSION: u32 = 1;
+/// Version of the **incremental** (segmented) `md.idx` layout: a base
+/// header (magic, version, sub-file count, attributes) followed by
+/// appended per-step segments, so a long-running producer publishes each
+/// step with one O(1) append instead of rewriting the O(steps) full list.
+/// [`read_metadata`] parses both layouts; the burst-buffer-local index of
+/// a BB-live run (DESIGN.md §11) is written this way.
+pub const MD_VERSION_SEG: u32 = 2;
+
+/// Per-segment frame marker ("BPSG").
+const SEG_MAGIC: u32 = 0x42505347;
+/// Segment kinds: one step's index, or appended attributes (the
+/// completion stamp).  Unknown kinds are skipped for forward
+/// compatibility.
+const SEG_STEP: u32 = 0;
+const SEG_ATTRS: u32 = 1;
 
 /// Internal attribute rank 0 stamps into the final `md.idx` at `close`.
 /// Its presence tells a live [`follower::BpFollower`] that the producer
@@ -216,14 +231,74 @@ pub fn write_metadata(steps: &[StepIndex], subfiles: u32, attrs: &[(String, Stri
     w.into_vec()
 }
 
-/// Parse `md.idx`; returns (steps, subfile count, attributes).
+/// Serialize the base header of an **incremental** `md.idx`
+/// ([`MD_VERSION_SEG`]): written once (atomically, temp + rename), then
+/// grown by [`append_segment`]-appended step/attr segments.
+pub fn write_metadata_base(subfiles: u32, attrs: &[(String, String)]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MD_MAGIC);
+    w.u32(MD_VERSION_SEG);
+    w.u32(subfiles);
+    w.u32(attrs.len() as u32);
+    for (k, v) in attrs {
+        w.str(k);
+        w.str(v);
+    }
+    w.into_vec()
+}
+
+fn segment(kind: u32, payload: Vec<u8>) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(SEG_MAGIC);
+    w.u32(kind);
+    w.u32(payload.len() as u32);
+    let mut out = w.into_vec();
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// One step's index as an appendable segment.
+pub fn step_segment(step: &StepIndex) -> Vec<u8> {
+    let mut w = Writer::new();
+    step.write(&mut w);
+    segment(SEG_STEP, w.into_vec())
+}
+
+/// Appended attributes (e.g. the [`COMPLETE_ATTR`] completion stamp) as
+/// a segment; readers merge them over the base header's attributes.
+pub fn attrs_segment(attrs: &[(&str, &str)]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(attrs.len() as u32);
+    for (k, v) in attrs {
+        w.str(k);
+        w.str(v);
+    }
+    segment(SEG_ATTRS, w.into_vec())
+}
+
+/// Append one segment to an incremental `md.idx`.  A single writer (rank
+/// 0) appends whole segments with one `write_all`; a concurrent reader
+/// that catches a partially-visible tail simply ignores it until the next
+/// poll ([`read_metadata`]'s prefix tolerance).
+pub fn append_segment(md_path: &std::path::Path, seg: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().append(true).open(md_path)?;
+    f.write_all(seg)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Parse `md.idx`; returns (steps, subfile count, attributes).  Handles
+/// both layouts: the full rewrite ([`MD_VERSION`]) and the incremental
+/// segmented one ([`MD_VERSION_SEG`]), whose trailing partial segment (an
+/// append in flight) is ignored rather than an error.
 pub fn read_metadata(bytes: &[u8]) -> Result<(Vec<StepIndex>, u32, Vec<(String, String)>)> {
     let mut r = Reader::new(bytes);
     if r.u32()? != MD_MAGIC {
         return Err(Error::bp("bad md.idx magic"));
     }
     let ver = r.u32()?;
-    if ver != MD_VERSION {
+    if ver != MD_VERSION && ver != MD_VERSION_SEG {
         return Err(Error::bp(format!("unsupported md.idx version {ver}")));
     }
     let subfiles = r.u32()?;
@@ -232,10 +307,39 @@ pub fn read_metadata(bytes: &[u8]) -> Result<(Vec<StepIndex>, u32, Vec<(String, 
     for _ in 0..nattrs {
         attrs.push((r.str()?, r.str()?));
     }
-    let nsteps = r.u32()? as usize;
-    let mut steps = Vec::with_capacity(nsteps.min(256));
-    for _ in 0..nsteps {
-        steps.push(StepIndex::read(&mut r)?);
+    let mut steps = Vec::new();
+    if ver == MD_VERSION {
+        let nsteps = r.u32()? as usize;
+        steps.reserve(nsteps.min(256));
+        for _ in 0..nsteps {
+            steps.push(StepIndex::read(&mut r)?);
+        }
+    } else {
+        // Segmented layout: consume whole segments; stop at a partial
+        // tail (producer's append still in flight).
+        while r.remaining() >= 12 {
+            if r.u32()? != SEG_MAGIC {
+                return Err(Error::bp("bad md.idx segment magic"));
+            }
+            let kind = r.u32()?;
+            let len = r.u32()? as usize;
+            if r.remaining() < len {
+                break;
+            }
+            let payload = r.take(len)?;
+            let mut pr = Reader::new(payload);
+            match kind {
+                SEG_STEP => steps.push(StepIndex::read(&mut pr)?),
+                SEG_ATTRS => {
+                    let n = pr.u32()? as usize;
+                    for _ in 0..n {
+                        attrs.push((pr.str()?, pr.str()?));
+                    }
+                }
+                // Unknown segment kinds are skipped (forward compat).
+                _ => {}
+            }
+        }
     }
     Ok((steps, subfiles, attrs))
 }
@@ -404,6 +508,80 @@ mod tests {
         assert_eq!(back, steps);
         assert_eq!(back_attrs, attrs);
         assert_eq!(back[0].var("T").unwrap().minmax(), (-1.0, 3.0));
+    }
+
+    #[test]
+    fn segmented_metadata_roundtrip_matches_full_format() {
+        let steps: Vec<StepIndex> = (0..3)
+            .map(|s| StepIndex {
+                vars: vec![VarIndex {
+                    name: format!("V{s}"),
+                    shape: vec![4, 40],
+                    blocks: (0..2).map(rec).collect(),
+                }],
+            })
+            .collect();
+        let attrs = vec![("TITLE".to_string(), "seg".to_string())];
+        let mut inc = write_metadata_base(2, &attrs);
+        for s in &steps {
+            inc.extend_from_slice(&step_segment(s));
+        }
+        inc.extend_from_slice(&attrs_segment(&[(COMPLETE_ATTR, "1")]));
+        let (back, subfiles, back_attrs) = read_metadata(&inc).unwrap();
+        assert_eq!(subfiles, 2);
+        assert_eq!(back, steps);
+        assert_eq!(back_attrs[0], attrs[0]);
+        assert_eq!(
+            back_attrs[1],
+            (COMPLETE_ATTR.to_string(), "1".to_string())
+        );
+        // Same steps as the full-rewrite layout would carry.
+        let full = write_metadata(&steps, 2, &attrs);
+        let (full_steps, _, _) = read_metadata(&full).unwrap();
+        assert_eq!(full_steps, steps);
+    }
+
+    #[test]
+    fn segmented_metadata_tolerates_partial_tail() {
+        // A reader racing an in-flight append sees a byte prefix of the
+        // file: every truncation point must parse to a (shorter) valid
+        // step list, never an error — until the cut bites into the base
+        // header itself.
+        let steps: Vec<StepIndex> = (0..2)
+            .map(|s| StepIndex {
+                vars: vec![VarIndex {
+                    name: format!("V{s}"),
+                    shape: vec![4, 40],
+                    blocks: vec![rec(s as u32)],
+                }],
+            })
+            .collect();
+        let mut inc = write_metadata_base(1, &[]);
+        let base_len = inc.len();
+        for s in &steps {
+            inc.extend_from_slice(&step_segment(s));
+        }
+        let mut last_steps = 0;
+        for cut in base_len..=inc.len() {
+            let (got, _, _) = read_metadata(&inc[..cut]).unwrap();
+            assert!(got.len() >= last_steps, "step count must be monotone");
+            assert_eq!(&steps[..got.len()], &got[..]);
+            last_steps = got.len();
+        }
+        assert_eq!(last_steps, 2);
+        // Publish is O(1): a step's segment size does not depend on how
+        // many steps precede it.
+        assert_eq!(
+            step_segment(&steps[0]).len(),
+            step_segment(&StepIndex {
+                vars: steps[0].vars.clone()
+            })
+            .len()
+        );
+        // Corrupt segment magic is an error, not silence.
+        let mut bad = inc.clone();
+        bad[base_len] ^= 0xFF;
+        assert!(read_metadata(&bad).is_err());
     }
 
     #[test]

@@ -24,10 +24,14 @@
 //! The paper (§IV) notes per-variable operator entries in XML don't scale
 //! to WRF's 200+ variables, so — like their implementation — operators are
 //! configured once per IO (and overridable from `namelist.input`).
+//!
+//! This module only *stores* engine parameters as strings; interpreting
+//! them (aggregator count, target, data plane, the `'auto'` sentinel) is
+//! the planning layer's job — see [`crate::plan::IoIntent`] and
+//! [`crate::plan::resolve_io`], the single knob-parsing path.
 
 use std::collections::BTreeMap;
 
-use crate::adios::engine::Target;
 use crate::adios::operator::{Codec, OperatorConfig};
 use crate::xml;
 use crate::{Error, Result};
@@ -96,27 +100,6 @@ impl IoConfig {
                 "false" | "0" | "no" | "off" => Ok(false),
                 _ => Err(Error::config(format!("parameter {key}={v} is not a bool"))),
             },
-        }
-    }
-
-    /// Aggregators per node (the paper's primary tuning knob).
-    pub fn aggregators_per_node(&self) -> Result<usize> {
-        self.param_usize("NumAggregatorsPerNode", 1)
-    }
-
-    /// File-engine target store.
-    pub fn target(&self) -> Result<Target> {
-        match self
-            .param("Target")
-            .unwrap_or("pfs")
-            .to_ascii_lowercase()
-            .as_str()
-        {
-            "pfs" | "filesystem" => Ok(Target::Pfs),
-            "burstbuffer" | "bb" | "nvme" => Ok(Target::BurstBuffer {
-                drain: self.param_bool("DrainBB", false)?,
-            }),
-            other => Err(Error::config(format!("unknown Target `{other}`"))),
         }
     }
 }
@@ -228,11 +211,10 @@ mod tests {
         let cfg = AdiosConfig::from_xml(DOC).unwrap();
         let hist = cfg.io("wrf_history").unwrap();
         assert_eq!(hist.engine, EngineKind::Bp4);
-        assert_eq!(hist.aggregators_per_node().unwrap(), 2);
-        assert_eq!(
-            hist.target().unwrap(),
-            Target::BurstBuffer { drain: true }
-        );
+        assert_eq!(hist.param("NumAggregatorsPerNode"), Some("2"));
+        assert_eq!(hist.param_usize("NumAggregatorsPerNode", 1).unwrap(), 2);
+        assert_eq!(hist.param("Target"), Some("BurstBuffer"));
+        assert!(hist.param_bool("DrainBB", false).unwrap());
         assert_eq!(hist.operator.codec, Codec::Zstd);
         assert!(hist.operator.shuffle);
 
@@ -250,8 +232,8 @@ mod tests {
         )
         .unwrap();
         let io = cfg.io("x").unwrap();
-        assert_eq!(io.aggregators_per_node().unwrap(), 1);
-        assert_eq!(io.target().unwrap(), Target::Pfs);
+        assert_eq!(io.param("NumAggregatorsPerNode"), None);
+        assert_eq!(io.param_usize("NumAggregatorsPerNode", 1).unwrap(), 1);
         assert_eq!(io.operator.codec, Codec::None);
     }
 

@@ -374,6 +374,16 @@ pub struct Bp4Engine {
     /// Rank 0 only, BB-live mode: steps already named by the *PFS*
     /// `md.idx` (watermark-gated republish bookkeeping).
     pfs_published: usize,
+    /// Rank 0 only, BB-live mode: steps already appended to the
+    /// **incremental** BB-local `md.idx` (base header written once, one
+    /// O(1) segment per step — [`crate::adios::bp::MD_VERSION_SEG`]).
+    bb_published: usize,
+    /// Rank 0 only: the BB-local base header exists on disk.
+    bb_base_written: bool,
+    /// Rank 0 only: `self.attrs` entries already in the BB-local index
+    /// (base header or appended attr segments) — attributes added after
+    /// the first publish are appended so both tiers stay in agreement.
+    bb_attrs_published: usize,
     report: EngineReport,
     closed: bool,
 }
@@ -395,6 +405,9 @@ impl Bp4Engine {
             attrs: Vec::new(),
             steps_index: Vec::new(),
             pfs_published: 0,
+            bb_published: 0,
+            bb_base_written: false,
+            bb_attrs_published: 0,
             report: EngineReport::default(),
             closed: false,
         };
@@ -646,9 +659,53 @@ impl Bp4Engine {
 
     /// Rank 0, BB-live mode: publish the burst-buffer-local index (every
     /// step that is durable on NVMe) with the sub-file → node map.
-    fn publish_bb_metadata(&self, complete: bool) -> Result<()> {
-        let map = [(crate::adios::bp::BB_MAP_ATTR.to_string(), self.bb_map_attr())];
-        self.publish_index(&self.bb_meta_dir(), &self.steps_index, complete, &map)
+    ///
+    /// Watermark-aware incremental layout: the base header (attributes +
+    /// sub-file map) is written once atomically, then each new step is
+    /// **appended** as one segment — per-step publish cost is O(1)
+    /// instead of O(steps), which matters on very long live runs.
+    /// Completion is an appended attribute segment.  Followers parse both
+    /// layouts through [`crate::adios::bp::read_metadata`].
+    fn publish_bb_metadata(&mut self, complete: bool) -> Result<()> {
+        let dir = self.bb_meta_dir();
+        let md = dir.join("md.idx");
+        if !self.bb_base_written {
+            let mut attrs = self.attrs.clone();
+            attrs.push((crate::adios::bp::BB_MAP_ATTR.to_string(), self.bb_map_attr()));
+            let base =
+                crate::adios::bp::write_metadata_base(self.plan.num_aggregators() as u32, &attrs);
+            fs::create_dir_all(&dir)?;
+            let tmp = dir.join("md.idx.tmp");
+            fs::write(&tmp, &base)?;
+            fs::rename(&tmp, &md)?;
+            self.bb_base_written = true;
+            self.bb_published = 0;
+            self.bb_attrs_published = self.attrs.len();
+        }
+        if self.attrs.len() > self.bb_attrs_published {
+            // Attributes attached after the first publish: append them so
+            // the BB tier never lags the PFS index's attribute view.
+            let fresh: Vec<(&str, &str)> = self.attrs[self.bb_attrs_published..]
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.as_str()))
+                .collect();
+            crate::adios::bp::append_segment(&md, &crate::adios::bp::attrs_segment(&fresh))?;
+            self.bb_attrs_published = self.attrs.len();
+        }
+        while self.bb_published < self.steps_index.len() {
+            crate::adios::bp::append_segment(
+                &md,
+                &crate::adios::bp::step_segment(&self.steps_index[self.bb_published]),
+            )?;
+            self.bb_published += 1;
+        }
+        if complete {
+            crate::adios::bp::append_segment(
+                &md,
+                &crate::adios::bp::attrs_segment(&[(crate::adios::bp::COMPLETE_ATTR, "1")]),
+            )?;
+        }
+        Ok(())
     }
 
     /// Rank 0, BB-live mode: advance the PFS index to the steps the drain

@@ -7,6 +7,7 @@
 //! |---------------------------|-------------------------------------------|
 //! | `adios2::ADIOS` + XML     | [`Adios`], [`config::AdiosConfig`]        |
 //! | `adios2::IO`              | [`config::IoConfig`] + [`Adios::open_write`] |
+//! | engine parameters         | [`crate::plan::IoPlan`] (typed, planner-resolved) |
 //! | `Variable<T>` + selection | [`variable::Variable`]                    |
 //! | BP4 engine + sub-files    | [`engine::bp4`], [`bp`]                   |
 //! | aggregators (N→M)         | [`aggregation::AggregationPlan`]          |
@@ -26,7 +27,6 @@ pub mod source;
 pub mod variable;
 
 use std::path::Path;
-use std::time::Duration;
 
 use crate::cluster::Comm;
 use crate::sim::CostModel;
@@ -75,7 +75,13 @@ impl Adios {
     /// Collective open of a write engine for `io_name`.
     ///
     /// `pfs_dir`/`bb_root` locate the physical stores; `cost` is the
-    /// virtual testbed the engine charges.
+    /// virtual testbed the engine charges.  All engine-knob parameters
+    /// are interpreted by the planning layer: this resolves the
+    /// [`IoConfig`] into a [`crate::plan::IoPlan`] (defaulting the
+    /// workload shape to the paper's CONUS frame — only `'auto'` knobs
+    /// consult it) and opens the engine from the plan.  Callers with a
+    /// fully-resolved plan (the launcher) use
+    /// [`crate::plan::open_engine`] directly.
     pub fn open_write(
         &self,
         io_name: &str,
@@ -89,58 +95,8 @@ impl Adios {
             .config
             .io(io_name)
             .ok_or_else(|| Error::config(format!("io `{io_name}` not declared")))?;
-        match io.engine {
-            EngineKind::Bp4 => {
-                let cfg = engine::bp4::Bp4Config {
-                    name: output_name.to_string(),
-                    pfs_dir: pfs_dir.to_path_buf(),
-                    bb_root: bb_root.to_path_buf(),
-                    target: io.target()?,
-                    operator: io.operator,
-                    aggs_per_node: io.aggregators_per_node()?,
-                    cost,
-                    // Per-block compression fan-out (0 = auto).
-                    pack_threads: io.param_usize("PackThreads", 0)?,
-                    // Pipelined append/drain is the default; `false`
-                    // restores the synchronous baseline (perf_hotpath
-                    // measures both).
-                    async_io: io.param_bool("AsyncIO", true)?,
-                    drain_throttle: None,
-                    // Per-step atomic md.idx republish for live followers.
-                    live_publish: io.param_bool("LivePublish", false)?,
-                };
-                Ok(Box::new(engine::bp4::Bp4Engine::open(cfg, comm)?))
-            }
-            EngineKind::Sst => {
-                let addr = io
-                    .param("Address")
-                    .ok_or_else(|| Error::config("SST io needs an Address parameter"))?;
-                // Multi-consumer fan-out: a comma-separated Address list
-                // opens one lane per aggregator per consumer, each with
-                // its own subscription (DESIGN.md §10).
-                let addrs: Vec<String> = addr
-                    .split(',')
-                    .map(|s| s.trim().to_string())
-                    .filter(|s| !s.is_empty())
-                    .collect();
-                if addrs.is_empty() {
-                    return Err(Error::config("SST Address parameter is empty"));
-                }
-                // Parallel lanes by default; the rank-0 funnel stays
-                // available as the measured baseline.
-                let plane = engine::sst::DataPlane::parse(io.param("DataPlane").unwrap_or("lanes"))?;
-                Ok(Box::new(engine::sst::SstEngine::open_multi(
-                    &addrs,
-                    io.operator,
-                    cost,
-                    comm,
-                    Duration::from_secs(30),
-                    plane,
-                    io.aggregators_per_node()?,
-                )?))
-            }
-            EngineKind::Null => Ok(Box::new(NullEngine::default())),
-        }
+        let plan = crate::plan::resolve_io(io, &cost, crate::plan::WorkloadShape::paper())?;
+        crate::plan::open_engine(&plan, output_name, pfs_dir, bb_root, cost, comm)
     }
 }
 
@@ -194,10 +150,14 @@ mod tests {
         let io = a.declare_io("new_io");
         assert_eq!(io.engine, EngineKind::Bp4);
         io.params.insert("NumAggregatorsPerNode".into(), "4".into());
-        assert_eq!(
-            a.config.io("new_io").unwrap().aggregators_per_node().unwrap(),
-            4
-        );
+        let io = a.config.io("new_io").unwrap();
+        let plan = crate::plan::resolve_io(
+            io,
+            &CostModel::new(HardwareSpec::paper_testbed(1)),
+            crate::plan::WorkloadShape::paper(),
+        )
+        .unwrap();
+        assert_eq!(plan.aggs_per_node.value, 4);
     }
 
     #[test]

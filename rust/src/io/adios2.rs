@@ -2,14 +2,20 @@
 //! contribution (§IV): WRF history frames routed through the
 //! ADIOS2-workalike library.
 //!
+//! The backend is driven by one resolved [`IoPlan`] (DESIGN.md §12): the
+//! launcher (or [`Adios2Backend::new`]'s XML-resolution convenience)
+//! hands it the typed engine decisions, and every engine open goes
+//! through [`crate::plan::open_engine`] — no string parameters are
+//! re-parsed here.
+//!
 //! Three modes, matching the paper's deployments:
 //! * **file mode** — one BP4 output per history frame
 //!   (`frames_per_outfile=1`), sub-files + aggregators + operators;
 //! * **stream mode** — one long-lived SST engine; each history frame is
 //!   one SST step delivered to the in-situ consumer (§V-F);
-//! * **single-file mode** — `FramesPerOutfile=0` (WRF's "all frames in
+//! * **single-file mode** — `frames_per_outfile=0` (WRF's "all frames in
 //!   one outfile"): one long-lived BP4 engine, every history frame one
-//!   step of the same BP directory.  Combined with `LivePublish` this is
+//!   step of the same BP directory.  Combined with `live_publish` this is
 //!   what live file-followers tail (DESIGN.md §9).
 
 use std::path::PathBuf;
@@ -17,13 +23,13 @@ use std::path::PathBuf;
 use crate::adios::{Adios, Engine, EngineKind};
 use crate::cluster::Comm;
 use crate::io::api::{FrameFields, FrameReport, HistoryBackend};
+use crate::plan::{self, IoPlan};
 use crate::sim::CostModel;
 use crate::{Error, Result};
 
 /// ADIOS2-backed history writer.
 pub struct Adios2Backend {
-    pub adios: Adios,
-    pub io_name: String,
+    pub plan: IoPlan,
     pub pfs_dir: PathBuf,
     pub bb_root: PathBuf,
     pub cost: CostModel,
@@ -35,6 +41,9 @@ pub struct Adios2Backend {
 }
 
 impl Adios2Backend {
+    /// Convenience constructor: resolve the named [`crate::adios::IoConfig`]
+    /// into an [`IoPlan`] (paper-CONUS workload shape — only `'auto'`
+    /// parameters consult it) and build the backend from that plan.
     pub fn new(
         adios: Adios,
         io_name: impl Into<String>,
@@ -47,13 +56,23 @@ impl Adios2Backend {
             .config
             .io(&io_name)
             .ok_or_else(|| Error::config(format!("io `{io_name}` not in adios config")))?;
+        let plan = plan::resolve_io(io, &cost, plan::WorkloadShape::paper())?;
+        Self::from_plan(plan, pfs_dir, bb_root, cost)
+    }
+
+    /// Construct from a fully-resolved plan (the launcher path).
+    pub fn from_plan(
+        plan: IoPlan,
+        pfs_dir: PathBuf,
+        bb_root: PathBuf,
+        cost: CostModel,
+    ) -> Result<Self> {
         // One long-lived multi-step engine: SST always; BP4 when every
-        // frame goes into one outfile (FramesPerOutfile=0).
-        let is_sst = io.engine == EngineKind::Sst;
-        let is_stream = is_sst || io.param_usize("FramesPerOutfile", 1)? == 0;
+        // frame goes into one outfile (frames_per_outfile=0).
+        let is_sst = plan.engine == EngineKind::Sst;
+        let is_stream = is_sst || plan.frames_per_outfile == 0;
         Ok(Adios2Backend {
-            adios,
-            io_name,
+            plan,
             pfs_dir,
             bb_root,
             cost,
@@ -62,6 +81,17 @@ impl Adios2Backend {
             is_sst,
             reports: Vec::new(),
         })
+    }
+
+    fn open_engine(&self, output_name: &str, comm: &Comm) -> Result<Box<dyn Engine>> {
+        plan::open_engine(
+            &self.plan,
+            output_name,
+            &self.pfs_dir,
+            &self.bb_root,
+            self.cost.clone(),
+            comm,
+        )
     }
 
     fn push_reports(&mut self, rep: crate::adios::EngineReport, first_frame: usize, names: &[String]) {
@@ -105,14 +135,7 @@ impl HistoryBackend for Adios2Backend {
     ) -> Result<()> {
         if self.is_stream {
             if self.stream_engine.is_none() {
-                let mut eng = self.adios.open_write(
-                    &self.io_name,
-                    frame_name,
-                    &self.pfs_dir,
-                    &self.bb_root,
-                    self.cost.clone(),
-                    comm,
-                )?;
+                let mut eng = self.open_engine(frame_name, comm)?;
                 if comm.rank() == 0 {
                     // Same WRF-style global attributes as per-frame mode
                     // (SST engines ignore attributes; BP4 single-file
@@ -131,14 +154,7 @@ impl HistoryBackend for Adios2Backend {
             let _ = frame;
             Ok(())
         } else {
-            let mut eng = self.adios.open_write(
-                &self.io_name,
-                frame_name,
-                &self.pfs_dir,
-                &self.bb_root,
-                self.cost.clone(),
-                comm,
-            )?;
+            let mut eng = self.open_engine(frame_name, comm)?;
             if comm.rank() == 0 {
                 // WRF-style global attributes on every history file.
                 eng.put_attr("TITLE", "OUTPUT FROM STORMIO (WRF-analog) V4.2-repro")?;

@@ -3,7 +3,15 @@
 //! This is the `wrf.exe` surface of the repo: everything the paper tunes
 //! (io_form, aggregator count, compression codec, burst-buffer target,
 //! node count) is configured here exactly the way their WRF patch does it
-//! — namelist first, XML for the ADIOS2-specific engine details.
+//! — namelist first, XML for the ADIOS2-specific engine details.  The
+//! engine knobs flow through the planning layer (DESIGN.md §12): the
+//! namelist's `adios2_*` entries become a typed [`IoIntent`], every knob
+//! accepts the `'auto'` sentinel (cost-model-chosen value), and the
+//! resolved [`IoPlan`] is the only thing the engines see.  Inspect the
+//! decisions without running: `stormio plan <namelist.input>` prints the
+//! decision table plus predicted virtual costs (`t_write`,
+//! `time_to_first_analysis`) — the same provenance every run and bench
+//! report carries.
 //!
 //! Recognized namelist entries (beyond standard WRF ones):
 //!
@@ -13,11 +21,11 @@
 //!   frames                 = 4,        ! history frames to write
 //!   io_form_history        = 22,       ! 2 | 11 | 102 | 22 | 901(quilt)
 //!   adios2_xml             = 'adios2.xml',
-//!   adios2_num_aggregators = 1,        ! per node (overrides XML)
-//!   adios2_compression     = 'lz4',    ! none|blosclz|lz4|zlib|zstd
-//!   adios2_target          = 'pfs',    ! pfs | bb
+//!   adios2_num_aggregators = 1,        ! per node, or 'auto'
+//!   adios2_compression     = 'lz4',    ! none|blosclz|lz4|zlib|zstd|auto
+//!   adios2_target          = 'pfs',    ! pfs | bb | auto
 //!   adios2_drain           = .false.,
-//!   adios2_sst_data_plane  = 'lanes',  ! lanes | funnel (SST engines)
+//!   adios2_sst_data_plane  = 'lanes',  ! lanes | funnel | auto (SST)
 //!   adios2_sst_address     = 'h:p,h:p',! SST consumer list (fan-out)
 //!   adios2_live_publish    = .false.,  ! per-step md.idx for followers
 //!   frames_per_outfile     = 1,        ! 0 = all frames in one BP file
@@ -38,7 +46,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::adios::{Adios, Codec, EngineKind, OperatorConfig};
+use crate::adios::{Adios, EngineKind};
 use crate::io::adios2::Adios2Backend;
 use crate::io::api::HistoryBackend;
 use crate::io::pnetcdf::PnetCdfBackend;
@@ -48,6 +56,7 @@ use crate::io::split_nc::SplitNcBackend;
 use crate::metrics::Table;
 use crate::model::{ForecastConfig, ForecastDriver, RunSummary};
 use crate::namelist::Namelist;
+use crate::plan::{IoIntent, IoPlan, Planner, WorkloadShape};
 use crate::runtime::{Manifest, ModelStep, XlaRuntime};
 use crate::sim::{CostModel, HardwareSpec};
 use crate::{Error, Result};
@@ -59,19 +68,11 @@ pub struct RunConfig {
     pub io_form: i64,
     pub nio_tasks: usize,
     pub adios_xml: Option<String>,
-    pub aggs_per_node: usize,
-    pub codec: Codec,
-    pub target_bb: bool,
-    pub drain: bool,
-    /// SST data plane: "lanes" (parallel, default) or "funnel" (baseline).
-    pub sst_data_plane: String,
-    /// SST consumer addresses (comma-separated in the namelist): more
-    /// than one opens the multi-consumer fan-out (DESIGN.md §10).
-    pub sst_addresses: Vec<String>,
-    /// Republish `md.idx` per step so live file-followers can tail the run.
-    pub live_publish: bool,
-    /// WRF `frames_per_outfile`: 0 = all history frames in one BP file.
-    pub frames_per_outfile: usize,
+    /// Typed engine-knob intent parsed from the `adios2_*` namelist
+    /// entries ([`IoIntent::from_time_control`] — the only string parser
+    /// for those keys).  Resolved into an [`IoPlan`] by
+    /// [`RunConfig::resolve_plan`].
+    pub intent: IoIntent,
     pub out_dir: PathBuf,
     pub nodes: usize,
     pub volume_scale: f64,
@@ -120,28 +121,7 @@ impl RunConfig {
             io_form: get(tc, "io_form_history", 22),
             nio_tasks: get(tc, "nio_tasks", 0) as usize,
             adios_xml: tc.get_str("adios2_xml").map(|s| s.to_string()),
-            aggs_per_node: get(tc, "adios2_num_aggregators", 1) as usize,
-            codec: Codec::parse(tc.get_str("adios2_compression").unwrap_or("none"))?,
-            target_bb: tc
-                .get_str("adios2_target")
-                .map(|s| s.eq_ignore_ascii_case("bb"))
-                .unwrap_or(false),
-            drain: tc.get_bool("adios2_drain").unwrap_or(false),
-            sst_data_plane: tc
-                .get_str("adios2_sst_data_plane")
-                .unwrap_or("lanes")
-                .to_string(),
-            sst_addresses: tc
-                .get_str("adios2_sst_address")
-                .map(|s| {
-                    s.split(',')
-                        .map(|a| a.trim().to_string())
-                        .filter(|a| !a.is_empty())
-                        .collect()
-                })
-                .unwrap_or_default(),
-            live_publish: tc.get_bool("adios2_live_publish").unwrap_or(false),
-            frames_per_outfile: get(tc, "frames_per_outfile", 1).max(0) as usize,
+            intent: IoIntent::from_time_control(tc)?,
             out_dir: base_dir.join(out_dir),
             nodes,
             volume_scale: st
@@ -158,42 +138,48 @@ impl RunConfig {
         hw
     }
 
-    /// Build the ADIOS2 context for io_form=22 (namelist overrides XML,
-    /// per the paper's §IV integration).
+    /// The workload shape the planner scores against: this grid's history
+    /// frame, scaled to virtual (CONUS-equivalent) bytes.
+    pub fn shape(&self) -> WorkloadShape {
+        let wl = crate::workload::Workload::for_grid(
+            self.forecast.ny,
+            self.forecast.nx,
+            self.forecast.nz,
+        );
+        WorkloadShape::from_physical(wl.frame_bytes(), self.volume_scale)
+    }
+
+    /// Load the ADIOS2 context (XML engine details only — the namelist
+    /// knobs live in [`RunConfig::intent`] and meet the XML in
+    /// [`RunConfig::resolve_plan`]).
     pub fn adios(&self, base_dir: &std::path::Path) -> Result<Adios> {
         let mut adios = match &self.adios_xml {
             Some(p) => Adios::from_xml_file(base_dir.join(p))?,
             None => Adios::default(),
         };
-        let io = adios.declare_io("wrf_history");
-        io.params
-            .insert("NumAggregatorsPerNode".into(), self.aggs_per_node.to_string());
-        if io.engine == EngineKind::Bp4 {
-            io.params.insert(
-                "Target".into(),
-                if self.target_bb { "burstbuffer" } else { "pfs" }.into(),
-            );
-            io.params.insert("DrainBB".into(), self.drain.to_string());
-            io.params
-                .insert("LivePublish".into(), self.live_publish.to_string());
-            io.params.insert(
-                "FramesPerOutfile".into(),
-                self.frames_per_outfile.to_string(),
-            );
-        } else if io.engine == EngineKind::Sst {
-            io.params
-                .insert("DataPlane".into(), self.sst_data_plane.clone());
-            if !self.sst_addresses.is_empty() {
-                io.params
-                    .insert("Address".into(), self.sst_addresses.join(","));
-            }
-        }
-        io.operator = OperatorConfig::blosc(self.codec);
+        adios.declare_io("wrf_history");
         Ok(adios)
     }
 
-    /// Construct one rank's history backend.
-    pub fn make_backend(&self, adios: &Adios) -> Result<Box<dyn HistoryBackend>> {
+    /// The planner for this run's testbed and workload shape.
+    pub fn planner(&self) -> Planner {
+        Planner::new(CostModel::new(self.hardware()), self.shape())
+    }
+
+    /// Resolve the run's [`IoPlan`]: namelist intent over XML parameters,
+    /// `'auto'` knobs decided by the cost model (the paper's §IV
+    /// precedence, now through one typed path).
+    pub fn resolve_plan(&self, adios: &Adios) -> Result<IoPlan> {
+        let io = adios
+            .config
+            .io("wrf_history")
+            .ok_or_else(|| Error::config("io `wrf_history` not declared"))?;
+        let intent = self.intent.merge_io_config(io)?;
+        self.planner().plan(io.engine.clone(), &intent)
+    }
+
+    /// Construct one rank's history backend from the resolved plan.
+    pub fn make_backend(&self, plan: &IoPlan) -> Result<Box<dyn HistoryBackend>> {
         let cost = CostModel::new(self.hardware());
         let pfs = self.out_dir.join("pfs");
         let bb = self.out_dir.join("bb");
@@ -201,13 +187,7 @@ impl RunConfig {
             2 => Box::new(SerialNcBackend::new(pfs, cost)),
             11 => Box::new(PnetCdfBackend::new(pfs, cost)),
             102 => Box::new(SplitNcBackend::new(pfs, cost)),
-            22 => Box::new(Adios2Backend::new(
-                adios.clone(),
-                "wrf_history",
-                pfs,
-                bb,
-                cost,
-            )?),
+            22 => Box::new(Adios2Backend::from_plan(plan.clone(), pfs, bb, cost)?),
             901 => Box::new(QuiltBackend::new(pfs, cost, self.nio_tasks.max(1))),
             other => {
                 return Err(Error::config(format!(
@@ -232,12 +212,43 @@ pub fn run_from_namelist(path: &std::path::Path, artifacts: &std::path::Path) ->
     let (nyp, nxp) = driver.decomp.patch();
     let step = Arc::new(ModelStep::load(&rt, &man, nyp, nxp)?);
     let adios = cfg.adios(base)?;
+    let plan = if cfg.io_form == 22 {
+        let plan = cfg.resolve_plan(&adios)?;
+        println!("{}", plan.summary_line());
+        plan
+    } else {
+        // Non-ADIOS io_forms never consult the plan; a trivial null plan
+        // keeps the backend constructor uniform.
+        cfg.planner().plan(EngineKind::Null, &IoIntent::default())?
+    };
 
     let summary = driver.run(step, |_rank| {
-        cfg.make_backend(&adios).expect("backend construction failed")
+        cfg.make_backend(&plan).expect("backend construction failed")
     })?;
     print_summary(&cfg, &summary);
     Ok(summary)
+}
+
+/// Resolve and print the run's I/O plan without running it (the
+/// `stormio plan` dry-run): decision table, provenance, and predicted
+/// virtual costs.  Needs no AOT artifacts.
+pub fn plan_from_namelist(path: &std::path::Path) -> Result<IoPlan> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::config(format!("cannot read {}: {e}", path.display())))?;
+    let nl = Namelist::parse(&text)?;
+    let base = path.parent().unwrap_or(std::path::Path::new("."));
+    let cfg = RunConfig::from_namelist(&nl, base)?;
+    let adios = cfg.adios(base)?;
+    let plan = cfg.resolve_plan(&adios)?;
+    println!(
+        "stormio plan — {} nodes x {} ranks/node, io_form {}",
+        cfg.nodes, cfg.forecast.ranks_per_node, cfg.io_form
+    );
+    if cfg.io_form != 22 {
+        println!("note: io_form {} does not use the ADIOS2 engine plan", cfg.io_form);
+    }
+    print!("{}", plan.render("wrf_history"));
+    Ok(plan)
 }
 
 /// Run the paper's full in-situ pipeline from a namelist: one forecast
@@ -248,11 +259,11 @@ pub fn run_from_namelist(path: &std::path::Path, artifacts: &std::path::Path) ->
 /// the `stormio insitu` command: the multi-consumer analog of
 /// `stormio follow`, with zero file-system round-trip.
 ///
-/// When the namelist targets a **draining burst buffer**
-/// (`adios2_target = 'bb'`, `adios2_drain = .true.`) the pipeline rides
-/// the BB-local file path instead of SST: the producer writes one
-/// live-published BP4 stream to the node-local NVMe and the same three
-/// consumers follow it through
+/// When the resolved plan targets a **draining burst buffer**
+/// (`adios2_target = 'bb'` + `adios2_drain = .true.`, or `'auto'`
+/// resolving there) the pipeline rides the BB-local file path instead of
+/// SST: the producer writes one live-published BP4 stream to the
+/// node-local NVMe and the same three consumers follow it through
 /// [`crate::adios::bp::follower::TieredFollower`]s — analyzing each step
 /// at burst-buffer latency while the PFS drain proceeds behind them
 /// (DESIGN.md §11).
@@ -284,8 +295,30 @@ pub fn run_insitu_from_namelist(
     let (nyp, nxp) = driver.decomp.patch();
     let step = Arc::new(ModelStep::load(&rt, &man, nyp, nxp)?);
 
-    if cfg.target_bb && cfg.drain {
-        return run_insitu_bb_local(cfg, base, driver, step, &rt, &man);
+    let adios = cfg.adios(base)?;
+    // Route on the *target intent* alone (not a fully-resolved plan):
+    // this command provides its own SST consumer addresses below, so an
+    // Address-less SST XML must not fail here, and a bb+drain request
+    // must reach the BB-local pipeline regardless of the XML engine.
+    let io = adios
+        .config
+        .io("wrf_history")
+        .expect("declared by cfg.adios");
+    let merged = cfg.intent.merge_io_config(io)?;
+    let bb_local = match merged.target.setting {
+        crate::plan::Setting::Explicit(crate::adios::Target::BurstBuffer { drain: true }) => true,
+        crate::plan::Setting::Auto => {
+            merged.drain.unwrap_or(true)
+                && matches!(
+                    cfg.planner()
+                        .choose_target(merged.frames_per_outfile.unwrap_or(1)),
+                    crate::adios::Target::BurstBuffer { .. }
+                )
+        }
+        _ => false,
+    };
+    if bb_local {
+        return run_insitu_bb_local(cfg, &adios, driver, step, &rt, &man);
     }
 
     let accept_timeout = Some(Duration::from_secs(300));
@@ -331,17 +364,15 @@ pub fn run_insitu_from_namelist(
         )
     });
 
-    // Producer: the forecast with an SST fan-out backend addressing all
+    // Producer: the forecast with an SST fan-out plan addressing all
     // three consumers (namelist engine choice is overridden — this
     // command *is* the streaming pipeline).
-    let mut adios = cfg.adios(base)?;
-    let io = adios.declare_io("wrf_history");
-    io.engine = EngineKind::Sst;
-    io.params.insert("Address".into(), addrs.join(","));
-    io.params
-        .insert("DataPlane".into(), cfg.sst_data_plane.clone());
+    let mut intent = merged;
+    intent.addresses = addrs.iter().map(|a| a.to_string()).collect();
+    let plan = cfg.planner().plan(EngineKind::Sst, &intent)?;
+    println!("{}", plan.summary_line());
     let summary = driver.run(step, |_rank| {
-        cfg.make_backend(&adios).expect("backend construction failed")
+        cfg.make_backend(&plan).expect("backend construction failed")
     })?;
 
     let records = analysis_t
@@ -376,7 +407,7 @@ pub fn run_insitu_from_namelist(
 /// step from the fastest tier that holds it.
 fn run_insitu_bb_local(
     cfg: RunConfig,
-    base: &std::path::Path,
+    adios: &Adios,
     driver: ForecastDriver,
     step: Arc<ModelStep>,
     rt: &XlaRuntime,
@@ -392,16 +423,21 @@ fn run_insitu_bb_local(
 
     // One long-lived BP4 stream (all frames in one outfile) publishing the
     // BB-local index per step — the producer never waits for the drain.
-    // Start from the namelist/XML-resolved config (same as the SST path)
-    // and force only what this pipeline requires: the BP4 engine on a
-    // live-published draining burst buffer, all frames in one outfile.
-    let mut adios = cfg.adios(base)?;
-    let io = adios.declare_io("wrf_history");
-    io.engine = EngineKind::Bp4;
-    io.params.insert("Target".into(), "burstbuffer".into());
-    io.params.insert("DrainBB".into(), "true".into());
-    io.params.insert("LivePublish".into(), "true".into());
-    io.params.insert("FramesPerOutfile".into(), "0".into());
+    // Start from the namelist/XML-resolved intent and force only what
+    // this pipeline requires: the BP4 engine on a live-published draining
+    // burst buffer, all frames in one outfile.
+    let io = adios
+        .config
+        .io("wrf_history")
+        .expect("declared by cfg.adios");
+    let mut intent = cfg.intent.merge_io_config(io)?;
+    intent.target = crate::plan::Knob::namelist(crate::plan::Setting::Explicit(
+        crate::adios::Target::BurstBuffer { drain: true },
+    ));
+    intent.live_publish = Some(true);
+    intent.frames_per_outfile = Some(0);
+    let plan = cfg.planner().plan(EngineKind::Bp4, &intent)?;
+    println!("{}", plan.summary_line());
 
     let first_frame = usize::from(!cfg.forecast.write_t0);
     let bp_dir = cfg
@@ -443,7 +479,7 @@ fn run_insitu_bb_local(
     );
 
     let summary = driver.run(step, |_rank| {
-        cfg.make_backend(&adios).expect("backend construction failed")
+        cfg.make_backend(&plan).expect("backend construction failed")
     })?;
 
     let (records, tiers_a) = analysis_t
@@ -553,6 +589,9 @@ pub fn print_summary(cfg: &RunConfig, s: &RunSummary) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adios::operator::Codec;
+    use crate::adios::Target;
+    use crate::plan::{DecisionSource, Setting};
 
     const NL: &str = r#"
  &time_control
@@ -583,38 +622,94 @@ mod tests {
         let nl = Namelist::parse(NL).unwrap();
         let cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/base")).unwrap();
         assert_eq!(cfg.io_form, 22);
-        assert_eq!(cfg.codec, Codec::Zstd);
-        assert!(cfg.target_bb && cfg.drain);
-        assert_eq!(cfg.aggs_per_node, 2);
-        assert_eq!(cfg.sst_data_plane, "funnel");
+        assert_eq!(cfg.intent.codec.setting, Setting::Explicit(Codec::Zstd));
+        assert_eq!(cfg.intent.aggregators.setting, Setting::Explicit(2));
         assert_eq!(
-            cfg.sst_addresses,
+            cfg.intent.target.setting,
+            Setting::Explicit(Target::BurstBuffer { drain: true })
+        );
+        assert_eq!(
+            cfg.intent.addresses,
             vec!["127.0.0.1:5001".to_string(), "127.0.0.1:5002".to_string()]
         );
-        assert!(cfg.live_publish);
-        assert_eq!(cfg.frames_per_outfile, 0);
+        assert_eq!(cfg.intent.live_publish, Some(true));
+        assert_eq!(cfg.intent.frames_per_outfile, Some(0));
         assert_eq!(cfg.forecast.frames, 2);
         assert_eq!(cfg.forecast.steps_per_interval, 3);
         assert_eq!(cfg.out_dir, PathBuf::from("/base/out"));
         assert_eq!(cfg.hardware().volume_scale, 16.0);
         assert_eq!(cfg.hardware().nodes, 2);
+        assert!(cfg.shape().step_bytes > 0.0);
     }
 
     #[test]
-    fn adios_config_respects_namelist_overrides() {
+    fn plan_respects_namelist_overrides() {
         let nl = Namelist::parse(NL).unwrap();
         let cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/base")).unwrap();
         let adios = cfg.adios(std::path::Path::new("/base")).unwrap();
-        let io = adios.config.io("wrf_history").unwrap();
-        assert_eq!(io.aggregators_per_node().unwrap(), 2);
-        assert_eq!(
-            io.target().unwrap(),
-            crate::adios::Target::BurstBuffer { drain: true }
-        );
-        assert_eq!(io.operator.codec, Codec::Zstd);
-        // Follower-enablement knobs flow through to the engine params.
-        assert_eq!(io.param("LivePublish"), Some("true"));
-        assert_eq!(io.param("FramesPerOutfile"), Some("0"));
+        let plan = cfg.resolve_plan(&adios).unwrap();
+        assert_eq!(plan.aggs_per_node.value, 2);
+        assert_eq!(plan.aggs_per_node.source, DecisionSource::Namelist);
+        assert_eq!(plan.codec.value, Codec::Zstd);
+        assert_eq!(plan.target.value, Target::BurstBuffer { drain: true });
+        assert!(plan.live_publish && plan.bb_live());
+        assert_eq!(plan.frames_per_outfile, 0);
+        // The provenance surfaces: decision table + summary line.
+        assert!(plan.render("wrf_history").contains("[namelist]"));
+        assert!(plan.summary_line().contains("aggs/node 2 [namelist]"));
+    }
+
+    #[test]
+    fn auto_knobs_resolve_via_cost_model() {
+        let nl = Namelist::parse(
+            r#"
+ &time_control
+   io_form_history = 22,
+   adios2_num_aggregators = 'auto',
+   adios2_compression = 'auto',
+   adios2_target = 'auto',
+ /
+ &domains
+   e_we = 64, e_sn = 64, e_vert = 2,
+ /
+ &stormio
+   ranks = 8, ranks_per_node = 4, nodes = 2, volume_scale = 160.0,
+ /
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/base")).unwrap();
+        let adios = cfg.adios(std::path::Path::new("/base")).unwrap();
+        let plan = cfg.resolve_plan(&adios).unwrap();
+        assert_eq!(plan.aggs_per_node.source, DecisionSource::Auto);
+        assert!(plan.aggs_per_node.value >= 1 && plan.aggs_per_node.value <= 4);
+        assert_eq!(plan.codec.source, DecisionSource::Auto);
+        assert_eq!(plan.target.source, DecisionSource::Auto);
+        assert!(plan.predicted.t_write > 0.0);
+        // Explicit values in the same namelist still override 'auto'
+        // elsewhere (round-trip proof: re-parse with one pinned knob).
+        let nl2 = Namelist::parse(
+            r#"
+ &time_control
+   io_form_history = 22,
+   adios2_num_aggregators = 3,
+   adios2_compression = 'auto',
+ /
+ &domains
+   e_we = 64, e_sn = 64, e_vert = 2,
+ /
+ &stormio
+   ranks = 8, ranks_per_node = 4, nodes = 2,
+ /
+"#,
+        )
+        .unwrap();
+        let cfg2 = RunConfig::from_namelist(&nl2, std::path::Path::new("/base")).unwrap();
+        let adios2 = cfg2.adios(std::path::Path::new("/base")).unwrap();
+        let plan2 = cfg2.resolve_plan(&adios2).unwrap();
+        assert_eq!(plan2.aggs_per_node.value, 3);
+        assert_eq!(plan2.aggs_per_node.source, DecisionSource::Namelist);
+        assert_eq!(plan2.codec.source, DecisionSource::Auto);
     }
 
     #[test]
@@ -633,13 +728,20 @@ mod tests {
         let mut cfg = cfg;
         cfg.adios_xml = Some("adios2.xml".to_string());
         let adios = cfg.adios(&dir).unwrap();
-        let io = adios.config.io("wrf_history").unwrap();
-        assert_eq!(io.engine, EngineKind::Sst);
-        assert_eq!(io.param("DataPlane"), Some("funnel"));
+        let plan = cfg.resolve_plan(&adios).unwrap();
+        assert_eq!(plan.engine, EngineKind::Sst);
+        assert_eq!(
+            plan.data_plane.value,
+            crate::adios::engine::sst::DataPlane::Funnel
+        );
+        assert_eq!(plan.data_plane.source, DecisionSource::Namelist);
         // The namelist's consumer list overrides the XML Address (the
         // multi-consumer fan-out surface).
-        assert_eq!(io.param("Address"), Some("127.0.0.1:5001,127.0.0.1:5002"));
-        assert_eq!(io.aggregators_per_node().unwrap(), 2);
+        assert_eq!(
+            plan.addresses(),
+            vec!["127.0.0.1:5001".to_string(), "127.0.0.1:5002".to_string()]
+        );
+        assert_eq!(plan.aggs_per_node.value, 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -648,12 +750,13 @@ mod tests {
         let nl = Namelist::parse(NL).unwrap();
         let mut cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/tmp")).unwrap();
         let adios = cfg.adios(std::path::Path::new("/tmp")).unwrap();
+        let plan = cfg.resolve_plan(&adios).unwrap();
         for form in [2, 11, 102, 22, 901] {
             cfg.io_form = form;
             cfg.nio_tasks = 1;
-            assert!(cfg.make_backend(&adios).is_ok(), "io_form {form}");
+            assert!(cfg.make_backend(&plan).is_ok(), "io_form {form}");
         }
         cfg.io_form = 7;
-        assert!(cfg.make_backend(&adios).is_err());
+        assert!(cfg.make_backend(&plan).is_err());
     }
 }

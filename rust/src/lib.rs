@@ -40,6 +40,7 @@ pub mod launcher;
 pub mod metrics;
 pub mod model;
 pub mod namelist;
+pub mod plan;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -14,6 +14,12 @@ USAGE:
   stormio run <namelist.input> [--artifacts DIR]
       Run a forecast configured by a WRF-style namelist.
 
+  stormio plan <namelist.input>
+      Dry-run the I/O planner: resolve every adios2_* knob (including
+      'auto' sentinels, decided from the cost model) and print the
+      decision table with provenance plus the predicted virtual costs
+      (t_write, time_to_first_analysis) — without running the model.
+
   stormio convert <dir.bp> <out_dir> [--no-compress]
       Convert every step of a BP directory to NetCDF-style files
       (the paper's §IV backwards-compatibility converter).
@@ -57,6 +63,13 @@ fn real_main() -> stormio::Result<i32> {
                 stormio::Error::config("run: missing namelist path".to_string())
             })?;
             launcher::run_from_namelist(Path::new(nl), &artifacts_flag(&args))?;
+            Ok(0)
+        }
+        Some("plan") => {
+            let nl = args.get(1).ok_or_else(|| {
+                stormio::Error::config("plan: missing namelist path".to_string())
+            })?;
+            launcher::plan_from_namelist(Path::new(nl))?;
             Ok(0)
         }
         Some("insitu") => {

@@ -19,6 +19,10 @@
 //! compression codec, burst-buffer target) as new namelist entries in
 //! `&time_control` — we reproduce exactly that configuration path, so every
 //! example and bench in this repo is driven by a real `namelist.input`.
+//! This module only parses namelist *syntax*; the `adios2_*` knob values
+//! (including the `'auto'` sentinel that delegates a knob to the
+//! cost-model planner) are interpreted by
+//! [`crate::plan::IoIntent::from_time_control`].
 //!
 //! Supported value syntax: integers, reals (incl. Fortran `1.5d0`),
 //! logicals (`.true.`/`.false.`/`T`/`F`), quoted strings, comma-separated

@@ -1,0 +1,387 @@
+//! User *intent* for the I/O configuration knobs: the typed, `'auto'`-aware
+//! form of every `adios2_*` namelist entry and engine XML parameter.
+//!
+//! This module is the **only** place in the crate that parses the engine
+//! tuning strings (`adios2_num_aggregators`, `adios2_compression`,
+//! `adios2_target`/`adios2_drain`, `adios2_sst_data_plane`, and their XML
+//! parameter twins `NumAggregatorsPerNode`, `Target`/`DrainBB`,
+//! `DataPlane`).  Everything downstream consumes the typed
+//! [`crate::plan::IoPlan`] the [`crate::plan::Planner`] derives from an
+//! [`IoIntent`] — engines never re-parse knob strings.
+//!
+//! Every knob is a [`Knob`]: a three-state [`Setting`] (unset / `'auto'` /
+//! explicit value) plus the [`Origin`] it came from, so the resolved plan
+//! can report *why* each value was chosen (`stormio plan`).
+
+use crate::adios::engine::sst::DataPlane;
+use crate::adios::engine::Target;
+use crate::adios::operator::{Codec, OperatorConfig};
+use crate::adios::IoConfig;
+use crate::namelist::{Group, Value};
+use crate::{Error, Result};
+
+/// Three-state knob value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Setting<T> {
+    /// Not specified anywhere: fall through to the built-in default.
+    Unset,
+    /// The `'auto'` sentinel: delegate the decision to the cost-model
+    /// planner.
+    Auto,
+    /// Pinned by the user (namelist or XML); the planner must honor it.
+    Explicit(T),
+}
+
+impl<T> Setting<T> {
+    pub fn is_unset(&self) -> bool {
+        matches!(self, Setting::Unset)
+    }
+}
+
+// Manual impls: the derived `Default` would demand `T: Default` even
+// though the default variants never hold a `T`.
+impl<T> Default for Setting<T> {
+    fn default() -> Self {
+        Setting::Unset
+    }
+}
+
+/// Where a knob's setting came from (provenance for the decision table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Origin {
+    /// Neither namelist nor XML mentioned the knob.
+    #[default]
+    None,
+    /// A WRF `namelist.input` `adios2_*` entry (highest precedence).
+    Namelist,
+    /// An `adios2.xml` engine `<parameter>`.
+    Xml,
+}
+
+/// One knob: setting + provenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Knob<T> {
+    pub setting: Setting<T>,
+    pub origin: Origin,
+}
+
+impl<T> Default for Knob<T> {
+    fn default() -> Self {
+        Knob {
+            setting: Setting::Unset,
+            origin: Origin::None,
+        }
+    }
+}
+
+impl<T> Knob<T> {
+    pub fn namelist(setting: Setting<T>) -> Self {
+        Knob {
+            setting,
+            origin: Origin::Namelist,
+        }
+    }
+    fn xml(setting: Setting<T>) -> Self {
+        Knob {
+            setting,
+            origin: Origin::Xml,
+        }
+    }
+    /// Fill an unset knob from a lower-precedence source.
+    fn or(self, fallback: Knob<T>) -> Knob<T> {
+        if self.setting.is_unset() {
+            fallback
+        } else {
+            self
+        }
+    }
+}
+
+/// The declarative I/O intent: what the user asked for, before the
+/// planner turns it into an [`crate::plan::IoPlan`].
+#[derive(Debug, Clone, Default)]
+pub struct IoIntent {
+    /// `adios2_num_aggregators` / `NumAggregatorsPerNode` (per node).
+    pub aggregators: Knob<usize>,
+    /// `adios2_compression` / the XML `<operator>` codec.
+    pub codec: Knob<Codec>,
+    /// `adios2_target` + `adios2_drain` / `Target` + `DrainBB`.
+    pub target: Knob<Target>,
+    /// Namelist `adios2_drain`, kept separately so it still applies when
+    /// the *target* comes from XML (whose `DrainBB` it overrides) or is
+    /// left to the planner.
+    pub drain: Option<bool>,
+    /// `adios2_sst_data_plane` / `DataPlane`.
+    pub data_plane: Knob<DataPlane>,
+    /// SST consumer addresses (`adios2_sst_address`, comma-separated, or
+    /// the XML `Address` parameter).
+    pub addresses: Vec<String>,
+    /// `adios2_live_publish` / `LivePublish`.
+    pub live_publish: Option<bool>,
+    /// `frames_per_outfile` / `FramesPerOutfile` (0 = single-file mode).
+    pub frames_per_outfile: Option<usize>,
+    /// `PackThreads` (compression fan-out; 0 = auto).
+    pub pack_threads: Option<usize>,
+    /// `AsyncIO` (background append/drain pipeline).
+    pub async_io: Option<bool>,
+    /// Operator template from the XML `<operator>` element: preserves
+    /// shuffle / lossy bit-rounding settings when only the codec is
+    /// (re)decided.
+    pub operator_base: Option<OperatorConfig>,
+}
+
+/// `'auto'`-aware string classifier shared by all knob parsers.
+fn auto_or<T>(s: &str, parse: impl FnOnce(&str) -> Result<T>) -> Result<Setting<T>> {
+    if s.eq_ignore_ascii_case("auto") {
+        Ok(Setting::Auto)
+    } else {
+        Ok(Setting::Explicit(parse(s)?))
+    }
+}
+
+fn parse_target(s: &str, drain: bool) -> Result<Target> {
+    match s.to_ascii_lowercase().as_str() {
+        "pfs" | "filesystem" => Ok(Target::Pfs),
+        "bb" | "burstbuffer" | "nvme" => Ok(Target::BurstBuffer { drain }),
+        other => Err(Error::config(format!("unknown target `{other}`"))),
+    }
+}
+
+impl IoIntent {
+    /// Parse the `adios2_*` knobs out of a namelist `&time_control` group.
+    /// Absent keys stay [`Setting::Unset`] (so XML, then defaults, apply);
+    /// the string `'auto'` delegates to the planner.
+    pub fn from_time_control(tc: &Group) -> Result<IoIntent> {
+        let mut intent = IoIntent::default();
+
+        if let Some(v) = tc.get("adios2_num_aggregators") {
+            let setting = match v {
+                Value::Int(i) if *i >= 1 => Setting::Explicit(*i as usize),
+                Value::Int(i) => {
+                    return Err(Error::config(format!(
+                        "adios2_num_aggregators = {i} must be >= 1 (or 'auto')"
+                    )))
+                }
+                Value::Str(s) => auto_or(s, |s| {
+                    s.parse::<usize>().map_err(|_| {
+                        Error::config(format!(
+                            "adios2_num_aggregators = '{s}' is neither an integer nor 'auto'"
+                        ))
+                    })
+                })?,
+                other => {
+                    return Err(Error::config(format!(
+                        "adios2_num_aggregators = {other} is neither an integer nor 'auto'"
+                    )))
+                }
+            };
+            intent.aggregators = Knob::namelist(setting);
+        }
+
+        if let Some(s) = tc.get_str("adios2_compression") {
+            intent.codec = Knob::namelist(auto_or(s, Codec::parse)?);
+        }
+
+        intent.drain = tc.get_bool("adios2_drain");
+        let drain = intent.drain.unwrap_or(false);
+        if let Some(s) = tc.get_str("adios2_target") {
+            intent.target = Knob::namelist(auto_or(s, |s| parse_target(s, drain))?);
+        }
+
+        if let Some(s) = tc.get_str("adios2_sst_data_plane") {
+            intent.data_plane = Knob::namelist(auto_or(s, DataPlane::parse)?);
+        }
+
+        if let Some(s) = tc.get_str("adios2_sst_address") {
+            intent.addresses = split_addresses(s);
+        }
+        if let Some(b) = tc.get_bool("adios2_live_publish") {
+            intent.live_publish = Some(b);
+        }
+        if let Some(n) = tc.get_i64("frames_per_outfile") {
+            intent.frames_per_outfile = Some(n.max(0) as usize);
+        }
+        Ok(intent)
+    }
+
+    /// Fill every unset knob from an `adios2.xml` [`IoConfig`]'s engine
+    /// parameters (namelist wins over XML, matching the paper's §IV
+    /// precedence), and pick up the XML `<operator>` as the codec
+    /// template.  XML parameter values may also be `'auto'`.
+    pub fn merge_io_config(&self, io: &IoConfig) -> Result<IoIntent> {
+        let mut merged = self.clone();
+
+        if let Some(s) = io.param("NumAggregatorsPerNode") {
+            let setting = auto_or(s, |s| {
+                s.parse::<usize>()
+                    .ok()
+                    .filter(|n| *n >= 1)
+                    .ok_or_else(|| {
+                        Error::config(format!(
+                            "NumAggregatorsPerNode={s} is neither a positive integer nor 'auto'"
+                        ))
+                    })
+            })?;
+            merged.aggregators = merged.aggregators.or(Knob::xml(setting));
+        }
+        // The namelist's standalone adios2_drain overrides XML DrainBB.
+        let drain = match self.drain {
+            Some(d) => d,
+            None => io.param_bool("DrainBB", false)?,
+        };
+        if let Some(s) = io.param("Target") {
+            merged.target = merged
+                .target
+                .or(Knob::xml(auto_or(s, |s| parse_target(s, drain))?));
+        }
+        if let Some(s) = io.param("DataPlane") {
+            merged.data_plane = merged
+                .data_plane
+                .or(Knob::xml(auto_or(s, DataPlane::parse)?));
+        }
+        if io.operator.codec != Codec::None || self.codec.setting.is_unset() {
+            merged.operator_base = Some(io.operator);
+        }
+        if merged.codec.setting.is_unset() && io.operator.codec != Codec::None {
+            merged.codec = Knob::xml(Setting::Explicit(io.operator.codec));
+        }
+        if merged.addresses.is_empty() {
+            if let Some(s) = io.param("Address") {
+                merged.addresses = split_addresses(s);
+            }
+        }
+        if merged.live_publish.is_none() {
+            merged.live_publish = Some(io.param_bool("LivePublish", false)?);
+        }
+        if merged.frames_per_outfile.is_none() {
+            merged.frames_per_outfile = Some(io.param_usize("FramesPerOutfile", 1)?);
+        }
+        if merged.pack_threads.is_none() {
+            merged.pack_threads = Some(io.param_usize("PackThreads", 0)?);
+        }
+        if merged.async_io.is_none() {
+            merged.async_io = Some(io.param_bool("AsyncIO", true)?);
+        }
+        Ok(merged)
+    }
+}
+
+/// Split a comma-separated SST consumer address list.
+pub fn split_addresses(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::EngineKind;
+    use crate::namelist::Namelist;
+
+    fn tc(body: &str) -> Group {
+        let nl = Namelist::parse(&format!("&time_control\n{body}\n/\n")).unwrap();
+        nl.group("time_control").unwrap().clone()
+    }
+
+    #[test]
+    fn explicit_auto_and_unset_parse() {
+        let g = tc("adios2_num_aggregators = 2,\n adios2_compression = 'auto',");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.aggregators.setting, Setting::Explicit(2));
+        assert_eq!(i.aggregators.origin, Origin::Namelist);
+        assert_eq!(i.codec.setting, Setting::Auto);
+        assert!(i.target.setting.is_unset());
+        assert!(i.data_plane.setting.is_unset());
+    }
+
+    #[test]
+    fn aggregator_auto_string_and_bad_values() {
+        let g = tc("adios2_num_aggregators = 'auto',");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.aggregators.setting, Setting::Auto);
+        assert!(IoIntent::from_time_control(&tc("adios2_num_aggregators = 0,")).is_err());
+        assert!(IoIntent::from_time_control(&tc("adios2_num_aggregators = 'many',")).is_err());
+        assert!(IoIntent::from_time_control(&tc("adios2_compression = 'snappy',")).is_err());
+        assert!(IoIntent::from_time_control(&tc("adios2_target = 'tape',")).is_err());
+    }
+
+    #[test]
+    fn target_folds_drain_flag() {
+        let g = tc("adios2_target = 'bb',\n adios2_drain = .true.,");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(
+            i.target.setting,
+            Setting::Explicit(Target::BurstBuffer { drain: true })
+        );
+        let g = tc("adios2_target = 'auto',\n adios2_drain = .true.,");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.target.setting, Setting::Auto);
+    }
+
+    #[test]
+    fn xml_fills_only_unset_knobs() {
+        let g = tc("adios2_num_aggregators = 4,");
+        let nl_intent = IoIntent::from_time_control(&g).unwrap();
+        let mut io = IoConfig::new("hist", EngineKind::Bp4);
+        io.params
+            .insert("NumAggregatorsPerNode".into(), "2".into());
+        io.params.insert("Target".into(), "burstbuffer".into());
+        io.params.insert("DrainBB".into(), "true".into());
+        io.operator = OperatorConfig::blosc(Codec::Zstd);
+        let m = nl_intent.merge_io_config(&io).unwrap();
+        // Namelist value survives the merge; XML fills the rest.
+        assert_eq!(m.aggregators.setting, Setting::Explicit(4));
+        assert_eq!(m.aggregators.origin, Origin::Namelist);
+        assert_eq!(
+            m.target.setting,
+            Setting::Explicit(Target::BurstBuffer { drain: true })
+        );
+        assert_eq!(m.target.origin, Origin::Xml);
+        assert_eq!(m.codec.setting, Setting::Explicit(Codec::Zstd));
+        assert_eq!(m.codec.origin, Origin::Xml);
+        assert_eq!(m.operator_base, Some(OperatorConfig::blosc(Codec::Zstd)));
+        assert_eq!(m.frames_per_outfile, Some(1));
+        assert_eq!(m.async_io, Some(true));
+    }
+
+    #[test]
+    fn namelist_drain_overrides_xml_drainbb() {
+        // adios2_drain without adios2_target must still apply when the
+        // target itself comes from XML (which says DrainBB=false).
+        let g = tc("adios2_drain = .true.,");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        let mut io = IoConfig::new("hist", EngineKind::Bp4);
+        io.params.insert("Target".into(), "burstbuffer".into());
+        io.params.insert("DrainBB".into(), "false".into());
+        let m = i.merge_io_config(&io).unwrap();
+        assert_eq!(
+            m.target.setting,
+            Setting::Explicit(Target::BurstBuffer { drain: true })
+        );
+    }
+
+    #[test]
+    fn xml_auto_sentinel_accepted() {
+        let mut io = IoConfig::new("hist", EngineKind::Bp4);
+        io.params
+            .insert("NumAggregatorsPerNode".into(), "auto".into());
+        let m = IoIntent::default().merge_io_config(&io).unwrap();
+        assert_eq!(m.aggregators.setting, Setting::Auto);
+        assert_eq!(m.aggregators.origin, Origin::Xml);
+    }
+
+    #[test]
+    fn address_lists_split_and_precedence() {
+        let g = tc("adios2_sst_address = '127.0.0.1:5001, 127.0.0.1:5002',");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.addresses, vec!["127.0.0.1:5001", "127.0.0.1:5002"]);
+        let mut io = IoConfig::new("hist", EngineKind::Sst);
+        io.params.insert("Address".into(), "127.0.0.1:9".into());
+        let m = i.merge_io_config(&io).unwrap();
+        assert_eq!(m.addresses, vec!["127.0.0.1:5001", "127.0.0.1:5002"]);
+        let m2 = IoIntent::default().merge_io_config(&io).unwrap();
+        assert_eq!(m2.addresses, vec!["127.0.0.1:9"]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Cost-model-driven I/O planning (DESIGN.md §12).
+//!
+//! One typed [`IoPlan`] carries every engine knob from the configuration
+//! surface (namelist `adios2_*` entries, `adios2.xml` parameters) to the
+//! engines.  The flow is:
+//!
+//! ```text
+//! namelist &time_control ──► IoIntent::from_time_control  (the ONLY
+//! adios2.xml <io> params ──► IoIntent::merge_io_config     knob parsers)
+//!                                  │
+//!              workload shape ──► Planner::plan ◄── sim::CostModel
+//!                                  │
+//!                                IoPlan ──► open_engine (BP4 / SST / null)
+//! ```
+//!
+//! Every knob supports the `'auto'` sentinel: the [`Planner`] then derives
+//! the value from the cost model (aggregator sweep, fan-out-vs-relay
+//! scoring, codec-throughput-vs-store-bandwidth) and records the decision
+//! with its provenance, which `stormio plan` prints as a dry-run table and
+//! [`IoPlan::stamp`] embeds into `BENCH_*.json` artifacts.
+
+pub mod intent;
+pub mod planner;
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::adios::engine::{bp4, sst};
+use crate::adios::{Engine, EngineKind, IoConfig, NullEngine};
+use crate::cluster::Comm;
+use crate::sim::CostModel;
+use crate::Result;
+
+pub use intent::{IoIntent, Knob, Origin, Setting};
+pub use planner::{
+    CodecProfile, ConsumerPlan, Decision, DecisionSource, IoPlan, PlanCosts, Planner,
+    WorkloadShape,
+};
+
+/// Resolve an XML/declared [`IoConfig`] into an [`IoPlan`] with no
+/// namelist intent on top — the library-level path used by
+/// [`crate::adios::Adios::open_write`] (benches and tests that configure
+/// engines straight from XML params).  `shape` defaults to the paper's
+/// CONUS frame when the caller has no better estimate; it only matters
+/// for `'auto'` knobs.
+pub fn resolve_io(io: &IoConfig, cost: &CostModel, shape: WorkloadShape) -> Result<IoPlan> {
+    let intent = IoIntent::default().merge_io_config(io)?;
+    Planner::new(cost.clone(), shape).plan(io.engine.clone(), &intent)
+}
+
+/// Open a write engine from a resolved plan — the single construction
+/// path for every engine: no string params are re-parsed here.
+pub fn open_engine(
+    plan: &IoPlan,
+    output_name: &str,
+    pfs_dir: &Path,
+    bb_root: &Path,
+    cost: CostModel,
+    comm: &Comm,
+) -> Result<Box<dyn Engine>> {
+    match plan.engine {
+        EngineKind::Bp4 => {
+            let cfg = bp4::Bp4Config {
+                name: output_name.to_string(),
+                pfs_dir: pfs_dir.to_path_buf(),
+                bb_root: bb_root.to_path_buf(),
+                target: plan.target.value,
+                operator: plan.operator,
+                aggs_per_node: plan.aggs_per_node.value,
+                cost,
+                pack_threads: plan.pack_threads,
+                async_io: plan.async_io,
+                drain_throttle: None,
+                live_publish: plan.live_publish,
+            };
+            Ok(Box::new(bp4::Bp4Engine::open(cfg, comm)?))
+        }
+        EngineKind::Sst => Ok(Box::new(sst::SstEngine::open_multi(
+            &plan.addresses(),
+            plan.operator,
+            cost,
+            comm,
+            Duration::from_secs(30),
+            plan.data_plane.value,
+            plan.aggs_per_node.value,
+        )?)),
+        EngineKind::Null => Ok(Box::new(NullEngine::default())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::operator::{Codec, OperatorConfig};
+    use crate::adios::Target;
+    use crate::sim::HardwareSpec;
+
+    #[test]
+    fn resolve_io_honors_xml_params_and_defaults() {
+        let cm = CostModel::new(HardwareSpec::paper_testbed(2));
+        let mut io = IoConfig::new("hist", EngineKind::Bp4);
+        io.params
+            .insert("NumAggregatorsPerNode".into(), "2".into());
+        io.params.insert("Target".into(), "burstbuffer".into());
+        io.params.insert("DrainBB".into(), "true".into());
+        io.operator = OperatorConfig::blosc(Codec::Zstd);
+        let plan = resolve_io(&io, &cm, WorkloadShape::paper()).unwrap();
+        assert_eq!(plan.aggs_per_node.value, 2);
+        assert_eq!(plan.aggs_per_node.source, DecisionSource::Xml);
+        assert_eq!(plan.target.value, Target::BurstBuffer { drain: true });
+        assert_eq!(plan.codec.value, Codec::Zstd);
+        assert_eq!(plan.operator, OperatorConfig::blosc(Codec::Zstd));
+        // Bare defaults: one aggregator, no codec, PFS.
+        let bare = IoConfig::new("hist", EngineKind::Bp4);
+        let plan = resolve_io(&bare, &cm, WorkloadShape::paper()).unwrap();
+        assert_eq!(plan.aggs_per_node.value, 1);
+        assert_eq!(plan.aggs_per_node.source, DecisionSource::Default);
+        assert_eq!(plan.codec.value, Codec::None);
+        assert_eq!(plan.target.value, Target::Pfs);
+        assert_eq!(plan.frames_per_outfile, 1);
+        assert!(plan.async_io);
+    }
+}

@@ -1,0 +1,984 @@
+//! The cost-model planner: turns an [`IoIntent`] plus the workload shape
+//! and virtual-testbed [`CostModel`] into one fully-resolved [`IoPlan`].
+//!
+//! Decision rules (DESIGN.md §12):
+//!
+//! * **aggregators per node** — sweep the divisors of `ranks_per_node`
+//!   and take the argmin of the per-step cost `t_chain_gather +
+//!   write + amortized MDS creates` ([`CostModel::t_bp4_perceived`]);
+//! * **target** — burst buffer (with drain) when the best NVMe-landing
+//!   sweep point beats the best PFS sweep point, else PFS;
+//! * **codec** — argmin over `{none} ∪ codecs` of `t_compress +
+//!   t_chain_gather(stored) + write(stored)` using the [`CodecProfile`]
+//!   throughput/ratio table: compression is chosen only when the codec
+//!   can keep up with the landing store's bandwidth;
+//! * **data plane** — [`CostModel::fanout_advantage`] ≥ 1 picks the
+//!   parallel lanes, < 1 the rank-0 funnel (latency-dominated
+//!   many-consumer cases).
+//!
+//! Every decision records its [`DecisionSource`] so `stormio plan` and
+//! the bench provenance ([`IoPlan::stamp`]) can show *why* each knob has
+//! its value.
+
+use std::fmt;
+
+use crate::adios::engine::sst::DataPlane;
+use crate::adios::engine::Target;
+use crate::adios::operator::{Codec, CodecThroughput, OperatorConfig};
+use crate::adios::EngineKind;
+use crate::metrics::BenchReport;
+use crate::sim::CostModel;
+use crate::{Error, Result};
+
+use super::intent::{IoIntent, Knob, Origin, Setting};
+
+/// Where a resolved plan value came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionSource {
+    /// Pinned in the namelist.
+    Namelist,
+    /// Pinned in `adios2.xml`.
+    Xml,
+    /// Built-in default (knob unset everywhere).
+    Default,
+    /// Chosen by the cost-model planner (`'auto'`).
+    Auto,
+}
+
+impl fmt::Display for DecisionSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DecisionSource::Namelist => "namelist",
+            DecisionSource::Xml => "xml",
+            DecisionSource::Default => "default",
+            DecisionSource::Auto => "auto",
+        })
+    }
+}
+
+/// A resolved knob value plus its provenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision<T> {
+    pub value: T,
+    pub source: DecisionSource,
+}
+
+impl<T> Decision<T> {
+    fn new(value: T, source: DecisionSource) -> Self {
+        Decision { value, source }
+    }
+}
+
+/// Resolve one knob: explicit values pass through with their origin,
+/// `'auto'` runs the planner's chooser, unset takes the default.
+fn decide<T>(knob: Knob<T>, auto: impl FnOnce() -> T, default: T) -> Decision<T> {
+    match knob.setting {
+        Setting::Explicit(v) => Decision::new(
+            v,
+            match knob.origin {
+                Origin::Namelist => DecisionSource::Namelist,
+                Origin::Xml => DecisionSource::Xml,
+                Origin::None => DecisionSource::Default,
+            },
+        ),
+        Setting::Auto => Decision::new(auto(), DecisionSource::Auto),
+        Setting::Unset => Decision::new(default, DecisionSource::Default),
+    }
+}
+
+/// The workload shape the planner scores against: the virtual
+/// (CONUS-scale) byte volume of one history step.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadShape {
+    /// Uncompressed virtual bytes of one step (physical × volume_scale).
+    pub step_bytes: f64,
+}
+
+impl WorkloadShape {
+    /// The paper's CONUS 2.5 km frame (~8 GB).
+    pub fn paper() -> WorkloadShape {
+        WorkloadShape {
+            step_bytes: crate::workload::PAPER_FRAME_BYTES,
+        }
+    }
+
+    /// From physically-moved frame bytes and the run's volume scale.
+    pub fn from_physical(frame_bytes: u64, volume_scale: f64) -> WorkloadShape {
+        WorkloadShape {
+            step_bytes: frame_bytes as f64 * volume_scale,
+        }
+    }
+}
+
+/// Single-thread codec throughput/ratio table the codec decision scores
+/// against.  [`CodecProfile::paper_defaults`] pins the numbers measured
+/// on the paper testbed's smooth meteorological fields, so planning (and
+/// the `stormio plan` golden output) is deterministic;
+/// [`CodecProfile::measured`] re-measures on this host.
+#[derive(Debug, Clone)]
+pub struct CodecProfile {
+    entries: Vec<(Codec, CodecThroughput)>,
+}
+
+impl CodecProfile {
+    /// Deterministic defaults: single-thread compress bandwidth (bytes/s)
+    /// and compression ratio on smooth WRF-like f32 fields (fig 5/6
+    /// orderings: zstd/zlib tightest, lz4/blosclz fastest).
+    pub fn paper_defaults() -> CodecProfile {
+        CodecProfile {
+            entries: vec![
+                (
+                    Codec::BloscLz,
+                    CodecThroughput {
+                        compress_bps: 1.1e9,
+                        ratio: 1.8,
+                    },
+                ),
+                (
+                    Codec::Lz4,
+                    CodecThroughput {
+                        compress_bps: 0.9e9,
+                        ratio: 2.0,
+                    },
+                ),
+                (
+                    Codec::Zlib,
+                    CodecThroughput {
+                        compress_bps: 0.09e9,
+                        ratio: 3.6,
+                    },
+                ),
+                (
+                    Codec::Zstd,
+                    CodecThroughput {
+                        compress_bps: 0.35e9,
+                        ratio: 3.9,
+                    },
+                ),
+            ],
+        }
+    }
+
+    /// Measure every codec on `sample` (host-dependent; not used for the
+    /// golden-checked plan output).
+    pub fn measured(sample: &[u8]) -> Result<CodecProfile> {
+        let mut entries = Vec::new();
+        for codec in Codec::ALL {
+            let t = crate::adios::operator::measure_throughput(
+                sample,
+                OperatorConfig::blosc(codec),
+            )?;
+            entries.push((codec, t));
+        }
+        Ok(CodecProfile { entries })
+    }
+
+    /// Inject a synthetic profile (planner unit tests).
+    pub fn from_entries(entries: Vec<(Codec, CodecThroughput)>) -> CodecProfile {
+        CodecProfile { entries }
+    }
+
+    pub fn entries(&self) -> &[(Codec, CodecThroughput)] {
+        &self.entries
+    }
+}
+
+/// Predicted virtual costs of the resolved plan (provenance for
+/// [`BenchReport`] and `stormio plan`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanCosts {
+    /// Application-perceived virtual seconds per step.
+    pub t_write: f64,
+    /// Virtual seconds until the step is durable on the final target.
+    pub t_durable: f64,
+    /// Virtual seconds from the step leaving the app to the first
+    /// analysis read completing ([`CostModel::time_to_first_analysis`];
+    /// ~`t_write` for streaming engines).
+    pub time_to_first_analysis: f64,
+    /// Fan-out vs funnel-relay score for the streaming data plane
+    /// (1.0 for file engines).
+    pub fanout_advantage: f64,
+    /// Predicted stored bytes per step after the chosen codec.
+    pub stored_bytes: f64,
+}
+
+/// One per-consumer placement entry of a streaming plan.
+#[derive(Debug, Clone)]
+pub struct ConsumerPlan {
+    pub address: String,
+    /// Estimated wire bytes per step shipped to this consumer (full-step
+    /// subscriptions assumed at plan time; pushdown shrinks this live).
+    pub est_bytes: f64,
+}
+
+/// The fully-resolved I/O plan: one typed decision record carrying every
+/// engine knob from the namelist/XML/planner to the engines.
+#[derive(Debug, Clone)]
+pub struct IoPlan {
+    pub engine: EngineKind,
+    pub aggs_per_node: Decision<usize>,
+    pub codec: Decision<Codec>,
+    pub target: Decision<Target>,
+    pub data_plane: Decision<DataPlane>,
+    /// Codec + shuffle/lossy template the engines apply.
+    pub operator: OperatorConfig,
+    /// SST consumer placement (one lane per aggregator per consumer).
+    pub consumers: Vec<ConsumerPlan>,
+    pub live_publish: bool,
+    pub frames_per_outfile: usize,
+    pub pack_threads: usize,
+    pub async_io: bool,
+    pub predicted: PlanCosts,
+}
+
+impl IoPlan {
+    pub fn addresses(&self) -> Vec<String> {
+        self.consumers.iter().map(|c| c.address.clone()).collect()
+    }
+
+    /// True when the plan publishes at burst-buffer durability (the
+    /// "follow the drain" mode, DESIGN.md §11).
+    pub fn bb_live(&self) -> bool {
+        self.live_publish && matches!(self.target.value, Target::BurstBuffer { drain: true })
+    }
+
+    fn target_name(&self) -> &'static str {
+        match self.target.value {
+            Target::Pfs => "pfs",
+            Target::BurstBuffer { drain: true } => "burstbuffer+drain",
+            Target::BurstBuffer { drain: false } => "burstbuffer",
+        }
+    }
+
+    fn engine_name(&self) -> &'static str {
+        match self.engine {
+            EngineKind::Bp4 => "BP4",
+            EngineKind::Sst => "SST",
+            EngineKind::Null => "null",
+        }
+    }
+
+    fn plane_name(&self) -> &'static str {
+        match self.data_plane.value {
+            DataPlane::Lanes => "lanes",
+            DataPlane::Funnel => "funnel",
+        }
+    }
+
+    /// One-line provenance summary for run reports.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "io plan: engine {} · aggs/node {} [{}] · codec {} [{}] · target {} [{}] · \
+             data plane {} [{}] · predicted write {:.3}s",
+            self.engine_name(),
+            self.aggs_per_node.value,
+            self.aggs_per_node.source,
+            self.codec.value.name(),
+            self.codec.source,
+            self.target_name(),
+            self.target.source,
+            self.plane_name(),
+            self.data_plane.source,
+            self.predicted.t_write,
+        )
+    }
+
+    /// The `stormio plan` decision table.  The format is deliberately
+    /// plain and stable: CI diffs it against a checked-in golden snapshot
+    /// so planner regressions are visible in review.
+    pub fn render(&self, io_name: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("io plan: {io_name}\n"));
+        out.push_str(&format!("  {:<22}= {}\n", "engine", self.engine_name()));
+        out.push_str(&format!(
+            "  {:<22}= {:<18} [{}]\n",
+            "aggregators_per_node", self.aggs_per_node.value, self.aggs_per_node.source
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {:<18} [{}]\n",
+            "codec",
+            self.codec.value.name(),
+            self.codec.source
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {:<18} [{}]\n",
+            "target",
+            self.target_name(),
+            self.target.source
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {:<18} [{}]\n",
+            "data_plane",
+            self.plane_name(),
+            self.data_plane.source
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {}\n",
+            "live_publish", self.live_publish
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {}\n",
+            "frames_per_outfile", self.frames_per_outfile
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {}\n",
+            "consumers",
+            self.consumers.len()
+        ));
+        out.push_str("predicted (virtual, CONUS-scale):\n");
+        out.push_str(&format!(
+            "  {:<22}= {:.3}\n",
+            "step_gb",
+            self.predicted.stored_bytes.max(0.0) / 1e9
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {:.3} s\n",
+            "t_write", self.predicted.t_write
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {:.3} s\n",
+            "t_durable", self.predicted.t_durable
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {:.3} s\n",
+            "time_to_first_analysis", self.predicted.time_to_first_analysis
+        ));
+        out.push_str(&format!(
+            "  {:<22}= {:.2}\n",
+            "fanout_advantage", self.predicted.fanout_advantage
+        ));
+        out
+    }
+
+    /// Record the plan's chosen values and predicted times as provenance
+    /// fields of a bench report (`BENCH_*.json`).
+    pub fn stamp(&self, r: &mut BenchReport) {
+        r.text("plan_engine", self.engine_name());
+        r.int("plan_aggs_per_node", self.aggs_per_node.value as u64);
+        r.text("plan_aggs_source", &self.aggs_per_node.source.to_string());
+        r.text("plan_codec", self.codec.value.name());
+        r.text("plan_codec_source", &self.codec.source.to_string());
+        r.text("plan_target", self.target_name());
+        r.text("plan_target_source", &self.target.source.to_string());
+        r.text("plan_data_plane", self.plane_name());
+        r.text("plan_data_plane_source", &self.data_plane.source.to_string());
+        r.int("plan_consumers", self.consumers.len() as u64);
+        r.num("plan_t_write", self.predicted.t_write);
+        r.num("plan_t_durable", self.predicted.t_durable);
+        r.num(
+            "plan_time_to_first_analysis",
+            self.predicted.time_to_first_analysis,
+        );
+        r.num("plan_fanout_advantage", self.predicted.fanout_advantage);
+    }
+}
+
+/// The planner: scores intents against the virtual testbed.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    pub cost: CostModel,
+    pub shape: WorkloadShape,
+    pub codecs: CodecProfile,
+}
+
+impl Planner {
+    pub fn new(cost: CostModel, shape: WorkloadShape) -> Planner {
+        Planner {
+            cost,
+            shape,
+            codecs: CodecProfile::paper_defaults(),
+        }
+    }
+
+    /// Override the codec throughput table (tests / `--measure`).
+    pub fn with_codec_profile(mut self, codecs: CodecProfile) -> Planner {
+        self.codecs = codecs;
+        self
+    }
+
+    /// Aggregators-per-node candidates: the divisors of `ranks_per_node`
+    /// (every candidate yields equal-sized member groups).
+    pub fn agg_candidates(&self) -> Vec<usize> {
+        let rpn = self.cost.hw.ranks_per_node.max(1);
+        (1..=rpn).filter(|c| rpn % c == 0).collect()
+    }
+
+    /// MDS create amortization: sub-file creates are paid once per
+    /// outfile, spread over the frames it holds (single-file mode writes
+    /// many steps into one outfile).
+    fn frames_per_file(&self, frames_per_outfile: usize) -> f64 {
+        if frames_per_outfile == 0 {
+            16.0
+        } else {
+            frames_per_outfile as f64
+        }
+    }
+
+    /// Per-step virtual cost of a BP4 write with `aggs_per_node`
+    /// aggregators landing `stored` bytes on `target`.
+    pub fn score_aggregators(
+        &self,
+        aggs_per_node: usize,
+        stored: f64,
+        target: Target,
+        frames_per_outfile: usize,
+    ) -> f64 {
+        let naggs = aggs_per_node * self.cost.hw.nodes.max(1);
+        let bb = matches!(target, Target::BurstBuffer { .. });
+        self.cost.t_bp4_perceived(stored, naggs, bb)
+            + self.cost.t_mds_creates(naggs + 1) / self.frames_per_file(frames_per_outfile)
+    }
+
+    /// Sweep the aggregator candidates; returns (argmin, its score).
+    pub fn choose_aggregators(
+        &self,
+        target: Target,
+        frames_per_outfile: usize,
+    ) -> (usize, f64) {
+        let v = self.shape.step_bytes;
+        let mut best = (1usize, f64::INFINITY);
+        for c in self.agg_candidates() {
+            let s = self.score_aggregators(c, v, target, frames_per_outfile);
+            if s < best.1 {
+                best = (c, s);
+            }
+        }
+        best
+    }
+
+    /// Auto target: burst buffer (with drain back to the PFS) when its
+    /// best sweep point beats the best pure-PFS sweep point.
+    pub fn choose_target(&self, frames_per_outfile: usize) -> Target {
+        let (_, pfs) = self.choose_aggregators(Target::Pfs, frames_per_outfile);
+        let (_, bb) = self.choose_aggregators(
+            Target::BurstBuffer { drain: true },
+            frames_per_outfile,
+        );
+        if bb < pfs {
+            Target::BurstBuffer { drain: true }
+        } else {
+            Target::Pfs
+        }
+    }
+
+    /// Per-step perceived cost of writing through `codec` (throughput
+    /// `prof`): per-rank compression + chain + landing write of the
+    /// compressed volume.
+    pub fn score_codec(
+        &self,
+        prof: Option<CodecThroughput>,
+        aggs_per_node: usize,
+        target: Target,
+    ) -> f64 {
+        let v = self.shape.step_bytes;
+        let naggs = aggs_per_node * self.cost.hw.nodes.max(1);
+        let bb = matches!(target, Target::BurstBuffer { .. });
+        match prof {
+            None => self.cost.t_bp4_perceived(v, naggs, bb),
+            Some(p) => {
+                let stored = v / p.ratio.max(1.0);
+                self.cost.t_compress(v, p.compress_bps)
+                    + self.cost.t_bp4_perceived(stored, naggs, bb)
+            }
+        }
+    }
+
+    /// Auto codec: the argmin over `{none} ∪ codecs`.  Falls back to
+    /// `none` when no codec's compression throughput keeps up with the
+    /// landing store (e.g. NVMe faster than the codec's per-rank rate).
+    pub fn choose_codec(&self, aggs_per_node: usize, target: Target) -> Codec {
+        let mut best = (Codec::None, self.score_codec(None, aggs_per_node, target));
+        for (codec, prof) in self.codecs.entries() {
+            let s = self.score_codec(Some(*prof), aggs_per_node, target);
+            if s < best.1 {
+                best = (*codec, s);
+            }
+        }
+        best.0
+    }
+
+    /// Per-step perceived cost of streaming through `codec` over the SST
+    /// data plane: per-rank compression + chain to the lane aggregators +
+    /// wire egress of one (compressed) copy per consumer.  The streaming
+    /// twin of [`Planner::score_codec`] — SST never pays a file landing,
+    /// so its `'auto'` codec choice must weigh the NIC, not the store.
+    pub fn score_codec_stream(
+        &self,
+        prof: Option<CodecThroughput>,
+        lanes: usize,
+        consumers: usize,
+    ) -> f64 {
+        let v = self.shape.step_bytes;
+        let (t_comp, stored) = match prof {
+            None => (0.0, v),
+            Some(p) => (self.cost.t_compress(v, p.compress_bps), v / p.ratio.max(1.0)),
+        };
+        let per_consumer = vec![stored; consumers.max(1)];
+        t_comp
+            + self.cost.t_chain_gather(stored, lanes.max(1))
+            + self.cost.t_stream_egress(&per_consumer, lanes)
+    }
+
+    /// Auto codec for an SST plan: argmin of [`Planner::score_codec_stream`]
+    /// over `{none} ∪ codecs`.
+    pub fn choose_codec_stream(&self, lanes: usize, consumers: usize) -> Codec {
+        let mut best = (Codec::None, self.score_codec_stream(None, lanes, consumers));
+        for (codec, prof) in self.codecs.entries() {
+            let s = self.score_codec_stream(Some(*prof), lanes, consumers);
+            if s < best.1 {
+                best = (*codec, s);
+            }
+        }
+        best.0
+    }
+
+    /// Auto data plane for a fan-out of `per_consumer_bytes` over
+    /// `lanes`: parallel lanes when the fan-out beats the rank-0
+    /// funnel-and-relay, the funnel otherwise.
+    pub fn choose_data_plane(&self, stored: f64, per_consumer: &[f64], lanes: usize) -> DataPlane {
+        if self.cost.fanout_advantage(stored, per_consumer, lanes) >= 1.0 {
+            DataPlane::Lanes
+        } else {
+            DataPlane::Funnel
+        }
+    }
+
+    /// Resolve every knob of `intent` for `engine` into an [`IoPlan`].
+    pub fn plan(&self, engine: EngineKind, intent: &IoIntent) -> Result<IoPlan> {
+        let frames_per_outfile = intent.frames_per_outfile.unwrap_or(1);
+        let live_publish = intent.live_publish.unwrap_or(false);
+
+        // Target first (SST never touches storage: pin PFS there).  When
+        // the planner picks the burst buffer, an explicit standalone
+        // `adios2_drain` still decides whether frames drain to the PFS
+        // (the paper's §V-B ran drain-disabled); absent a preference the
+        // auto choice drains.
+        let target = if engine == EngineKind::Sst {
+            Decision::new(Target::Pfs, DecisionSource::Default)
+        } else {
+            decide(
+                intent.target,
+                || match self.choose_target(frames_per_outfile) {
+                    Target::BurstBuffer { .. } => Target::BurstBuffer {
+                        drain: intent.drain.unwrap_or(true),
+                    },
+                    t => t,
+                },
+                Target::Pfs,
+            )
+        };
+        let aggs = decide(
+            intent.aggregators,
+            || self.choose_aggregators(target.value, frames_per_outfile).0,
+            1,
+        );
+        if aggs.value < 1 || aggs.value > self.cost.hw.ranks_per_node {
+            return Err(Error::config(format!(
+                "aggregators_per_node {} out of range 1..={}",
+                aggs.value, self.cost.hw.ranks_per_node
+            )));
+        }
+        let codec = decide(
+            intent.codec,
+            || {
+                if engine == EngineKind::Sst {
+                    self.choose_codec_stream(
+                        aggs.value * self.cost.hw.nodes.max(1),
+                        intent.addresses.len(),
+                    )
+                } else {
+                    self.choose_codec(aggs.value, target.value)
+                }
+            },
+            Codec::None,
+        );
+        let stored = match self
+            .codecs
+            .entries()
+            .iter()
+            .find(|(c, _)| *c == codec.value)
+        {
+            Some((_, p)) => self.shape.step_bytes / p.ratio.max(1.0),
+            None => self.shape.step_bytes,
+        };
+
+        let consumers: Vec<ConsumerPlan> = intent
+            .addresses
+            .iter()
+            .map(|a| ConsumerPlan {
+                address: a.clone(),
+                est_bytes: stored,
+            })
+            .collect();
+        if engine == EngineKind::Sst && consumers.is_empty() {
+            return Err(Error::config("SST io needs an Address parameter"));
+        }
+        let per_consumer: Vec<f64> = consumers.iter().map(|c| c.est_bytes).collect();
+        let lanes = aggs.value * self.cost.hw.nodes.max(1);
+        // Score the fan-out against one full-step consumer when no
+        // addresses are configured (file engines).
+        let solo = [stored];
+        let fan_consumers: &[f64] = if per_consumer.is_empty() {
+            &solo
+        } else {
+            &per_consumer
+        };
+        let data_plane = decide(
+            intent.data_plane,
+            || self.choose_data_plane(stored, fan_consumers, lanes),
+            DataPlane::Lanes,
+        );
+
+        // Operator: keep the XML shuffle/lossy template when it already
+        // carries the chosen codec; otherwise the blosc default stack.
+        let operator = match intent.operator_base {
+            Some(op) if op.codec == codec.value => op,
+            _ => OperatorConfig::blosc(codec.value),
+        };
+
+        let predicted = self.predict(
+            engine.clone(),
+            aggs.value,
+            codec.value,
+            target.value,
+            stored,
+            fan_consumers,
+            lanes,
+            frames_per_outfile,
+            live_publish,
+        );
+
+        Ok(IoPlan {
+            engine,
+            aggs_per_node: aggs,
+            codec,
+            target,
+            data_plane,
+            operator,
+            consumers,
+            live_publish,
+            frames_per_outfile,
+            pack_threads: intent.pack_threads.unwrap_or(0),
+            async_io: intent.async_io.unwrap_or(true),
+            predicted,
+        })
+    }
+
+    /// Compose the predicted per-step virtual costs of a resolved plan.
+    #[allow(clippy::too_many_arguments)]
+    fn predict(
+        &self,
+        engine: EngineKind,
+        aggs_per_node: usize,
+        codec: Codec,
+        target: Target,
+        stored: f64,
+        per_consumer: &[f64],
+        lanes: usize,
+        frames_per_outfile: usize,
+        live_publish: bool,
+    ) -> PlanCosts {
+        let cm = &self.cost;
+        let v = self.shape.step_bytes;
+        let naggs = aggs_per_node * cm.hw.nodes.max(1);
+        let t_comp = match self.codecs.entries().iter().find(|(c, _)| *c == codec) {
+            Some((_, p)) => cm.t_compress(v, p.compress_bps),
+            None => 0.0,
+        };
+        match engine {
+            EngineKind::Bp4 => {
+                let bb = matches!(target, Target::BurstBuffer { .. });
+                let t_write = t_comp
+                    + cm.t_bp4_perceived(stored, naggs, bb)
+                    + cm.t_mds_creates(naggs + 1) / self.frames_per_file(frames_per_outfile);
+                let t_drain = match target {
+                    Target::BurstBuffer { drain: true } => {
+                        cm.t_bb_drain(stored, cm.hw.nodes.max(1))
+                    }
+                    _ => 0.0,
+                };
+                let bb_follow = live_publish && matches!(target, Target::BurstBuffer { drain: true });
+                PlanCosts {
+                    t_write,
+                    t_durable: t_write + t_drain,
+                    time_to_first_analysis: cm.time_to_first_analysis(stored, bb_follow),
+                    fanout_advantage: 1.0,
+                    stored_bytes: stored,
+                }
+            }
+            EngineKind::Sst => {
+                let chain = cm.t_chain_gather(stored, lanes);
+                let egress = cm.t_stream_egress(per_consumer, lanes);
+                let t_write = t_comp + chain + egress;
+                PlanCosts {
+                    t_write,
+                    t_durable: t_write,
+                    time_to_first_analysis: t_write,
+                    fanout_advantage: cm.fanout_advantage(stored, per_consumer, lanes),
+                    stored_bytes: stored,
+                }
+            }
+            EngineKind::Null => PlanCosts {
+                fanout_advantage: 1.0,
+                stored_bytes: 0.0,
+                ..PlanCosts::default()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namelist::Namelist;
+    use crate::sim::HardwareSpec;
+
+    fn planner(nodes: usize) -> Planner {
+        Planner::new(
+            CostModel::new(HardwareSpec::paper_testbed(nodes)),
+            WorkloadShape::paper(),
+        )
+    }
+
+    fn intent(body: &str) -> IoIntent {
+        let nl = Namelist::parse(&format!("&time_control\n{body}\n/\n")).unwrap();
+        IoIntent::from_time_control(nl.group("time_control").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn aggregator_sweep_picks_cost_model_argmin() {
+        for nodes in [1usize, 8] {
+            let p = planner(nodes);
+            let (best, score) = p.choose_aggregators(Target::Pfs, 1);
+            // Brute-force argmin over the same candidate set.
+            for c in p.agg_candidates() {
+                let s = p.score_aggregators(c, p.shape.step_bytes, Target::Pfs, 1);
+                assert!(
+                    score <= s + 1e-12,
+                    "{nodes} nodes: sweep missed candidate {c} ({s} < {score})"
+                );
+            }
+            assert!(p.agg_candidates().contains(&best));
+            // Paper fig 4 shape: a single node needs several streams to
+            // saturate BeeGFS; at 8 nodes the full 36/node thrashes.
+            if nodes == 1 {
+                assert!(best > 1, "1 node: one stream cannot saturate the PFS");
+            } else {
+                assert!(best < 36, "8 nodes: 288 streams must not be optimal");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_aggregators_resolve_via_sweep() {
+        let p = planner(8);
+        let plan = p
+            .plan(EngineKind::Bp4, &intent("adios2_num_aggregators = 'auto',"))
+            .unwrap();
+        assert_eq!(plan.aggs_per_node.source, DecisionSource::Auto);
+        assert_eq!(
+            plan.aggs_per_node.value,
+            p.choose_aggregators(Target::Pfs, 1).0
+        );
+        // Explicit value passes through untouched.
+        let plan = p
+            .plan(EngineKind::Bp4, &intent("adios2_num_aggregators = 36,"))
+            .unwrap();
+        assert_eq!(plan.aggs_per_node.value, 36);
+        assert_eq!(plan.aggs_per_node.source, DecisionSource::Namelist);
+    }
+
+    #[test]
+    fn funnel_chosen_when_fanout_advantage_below_one() {
+        // Latency-dominated shape: a tiny step fanned out to many
+        // consumers through one lane — the per-consumer message latency
+        // of the direct fan-out exceeds the relay's serial gather.
+        let p = Planner::new(
+            CostModel::new(HardwareSpec::paper_testbed(1)),
+            WorkloadShape { step_bytes: 1.0e4 },
+        );
+        let per_consumer = vec![1.0e4; 64];
+        let adv = p.cost.fanout_advantage(1.0e4, &per_consumer, 1);
+        assert!(adv < 1.0, "shape must be latency-dominated: {adv}");
+        assert_eq!(p.choose_data_plane(1.0e4, &per_consumer, 1), DataPlane::Funnel);
+        // A CONUS-scale fan-out picks the parallel lanes.
+        let p8 = planner(8);
+        let v = p8.shape.step_bytes;
+        assert_eq!(
+            p8.choose_data_plane(v, &[v, v, v], 8),
+            DataPlane::Lanes
+        );
+    }
+
+    #[test]
+    fn codec_falls_back_to_none_when_throughput_cannot_keep_up() {
+        // All codecs crawl at 1 MB/s: per-rank compression time dwarfs
+        // what the NVMe landing saves, so 'auto' must pick none.
+        let slow = CodecProfile::from_entries(
+            Codec::ALL
+                .iter()
+                .map(|c| {
+                    (
+                        *c,
+                        CodecThroughput {
+                            compress_bps: 1.0e6,
+                            ratio: 4.0,
+                        },
+                    )
+                })
+                .collect(),
+        );
+        let p = planner(8).with_codec_profile(slow);
+        let bb = Target::BurstBuffer { drain: true };
+        assert_eq!(p.choose_codec(1, bb), Codec::None);
+        let plan = p
+            .plan(
+                EngineKind::Bp4,
+                &intent("adios2_compression = 'auto',\n adios2_target = 'bb',\n adios2_drain = .true.,"),
+            )
+            .unwrap();
+        assert_eq!(plan.codec.value, Codec::None);
+        assert_eq!(plan.codec.source, DecisionSource::Auto);
+        // With the real profile, compression wins on the slow PFS.
+        let p = planner(8);
+        assert_ne!(p.choose_codec(1, Target::Pfs), Codec::None);
+    }
+
+    #[test]
+    fn auto_target_picks_burst_buffer_at_paper_scale() {
+        let p = planner(8);
+        assert_eq!(
+            p.choose_target(1),
+            Target::BurstBuffer { drain: true },
+            "NVMe landing must beat the spinning PFS at CONUS scale"
+        );
+        let plan = p
+            .plan(EngineKind::Bp4, &intent("adios2_target = 'auto',"))
+            .unwrap();
+        assert_eq!(plan.target.source, DecisionSource::Auto);
+        assert!(matches!(
+            plan.target.value,
+            Target::BurstBuffer { drain: true }
+        ));
+        // Predicted durable time includes the background drain.
+        assert!(plan.predicted.t_durable > plan.predicted.t_write);
+    }
+
+    #[test]
+    fn all_auto_plan_is_consistent_and_stampable() {
+        let p = planner(8);
+        let plan = p
+            .plan(
+                EngineKind::Bp4,
+                &intent(
+                    "adios2_num_aggregators = 'auto',\n adios2_compression = 'auto',\n \
+                     adios2_target = 'auto',\n adios2_sst_data_plane = 'auto',",
+                ),
+            )
+            .unwrap();
+        assert!(plan.predicted.t_write > 0.0);
+        assert!(plan.predicted.time_to_first_analysis > 0.0);
+        let mut r = BenchReport::new("plan_test");
+        plan.stamp(&mut r);
+        let j = r.to_json();
+        assert!(j.contains("\"plan_aggs_source\": \"auto\""));
+        assert!(j.contains("\"plan_t_write\""));
+        let table = plan.render("wrf_history");
+        assert!(table.contains("aggregators_per_node"));
+        assert!(table.contains("[auto]"));
+        assert!(plan.summary_line().contains("io plan"));
+    }
+
+    #[test]
+    fn sst_plan_requires_addresses_and_scores_fanout() {
+        let p = planner(2);
+        assert!(p.plan(EngineKind::Sst, &IoIntent::default()).is_err());
+        let plan = p
+            .plan(
+                EngineKind::Sst,
+                &intent("adios2_sst_address = '127.0.0.1:1, 127.0.0.1:2',"),
+            )
+            .unwrap();
+        assert_eq!(plan.consumers.len(), 2);
+        assert!(plan.predicted.fanout_advantage > 0.0);
+        assert_eq!(plan.addresses(), vec!["127.0.0.1:1", "127.0.0.1:2"]);
+    }
+
+    #[test]
+    fn sst_auto_codec_scores_egress_not_file_write() {
+        let p = planner(8);
+        // Consistency: the streaming choice is the argmin of the
+        // streaming objective, never worse than sending uncompressed.
+        let chosen = p.choose_codec_stream(8, 1);
+        let prof = p
+            .codecs
+            .entries()
+            .iter()
+            .find(|(c, _)| *c == chosen)
+            .map(|(_, t)| *t);
+        assert!(
+            p.score_codec_stream(prof, 8, 1) <= p.score_codec_stream(None, 8, 1) + 1e-12
+        );
+        // A crawling codec must lose to raw egress on a 100 GbE lane set.
+        let slow = CodecProfile::from_entries(
+            Codec::ALL
+                .iter()
+                .map(|c| {
+                    (
+                        *c,
+                        CodecThroughput {
+                            compress_bps: 1.0e6,
+                            ratio: 4.0,
+                        },
+                    )
+                })
+                .collect(),
+        );
+        let p = planner(8).with_codec_profile(slow);
+        assert_eq!(p.choose_codec_stream(8, 3), Codec::None);
+        let plan = p
+            .plan(
+                EngineKind::Sst,
+                &intent(
+                    "adios2_compression = 'auto',\n \
+                     adios2_sst_address = '127.0.0.1:1',",
+                ),
+            )
+            .unwrap();
+        assert_eq!(plan.codec.value, Codec::None);
+        assert_eq!(plan.codec.source, DecisionSource::Auto);
+    }
+
+    #[test]
+    fn auto_target_honors_standalone_drain_flag() {
+        let p = planner(8);
+        let plan = p
+            .plan(
+                EngineKind::Bp4,
+                &intent("adios2_target = 'auto',\n adios2_drain = .false.,"),
+            )
+            .unwrap();
+        assert_eq!(
+            plan.target.value,
+            Target::BurstBuffer { drain: false },
+            "explicit adios2_drain=.false. must survive an auto target"
+        );
+        assert!(!plan.bb_live());
+    }
+
+    #[test]
+    fn autotuned_never_slower_than_any_fixed_aggregator_count() {
+        // The fig10 acceptance property at the score level: the sweep's
+        // argmin is ≤ every fixed candidate, at both paper node counts.
+        for nodes in [1usize, 8] {
+            let p = planner(nodes);
+            for target in [Target::Pfs, Target::BurstBuffer { drain: true }] {
+                let (_, best) = p.choose_aggregators(target, 1);
+                for c in p.agg_candidates() {
+                    let s = p.score_aggregators(c, p.shape.step_bytes, target, 1);
+                    assert!(best <= s + 1e-12, "{nodes} nodes {target:?}: {best} > {s}");
+                }
+            }
+        }
+    }
+}

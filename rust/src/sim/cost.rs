@@ -313,6 +313,22 @@ impl CostModel {
         relay / fanout
     }
 
+    /// Per-step perceived time of the BP4 sub-file write path: the
+    /// node-local chain to `aggregators` sub-file streams plus the
+    /// landing write (NVMe burst buffer or PFS).  The canonical scoring
+    /// formula of the planner's aggregator sweep
+    /// ([`crate::plan::Planner::choose_aggregators`]), consistent with the
+    /// engine's per-step charge (`chain` + `write-*` phases).
+    pub fn t_bp4_perceived(&self, stored_bytes: f64, aggregators: usize, bb: bool) -> f64 {
+        let chain = self.t_chain_gather(stored_bytes, aggregators);
+        let write = if bb {
+            self.t_nvme_write(stored_bytes, self.hw.nodes.max(1))
+        } else {
+            self.t_pfs_write(stored_bytes, aggregators)
+        };
+        chain + write
+    }
+
     /// Per-rank parallel compression: each rank compresses its share at
     /// the measured single-thread codec throughput.
     pub fn t_compress(&self, bytes: f64, codec_bw: f64) -> f64 {
@@ -472,6 +488,23 @@ mod tests {
         let m = cm(8);
         assert_eq!(m.t_pfs_read(0.0, 4), 0.0);
         assert_eq!(m.t_bb_follow_read(0.0, 4, true), 0.0);
+    }
+
+    #[test]
+    fn bp4_perceived_matches_paper_fig4_shape() {
+        // The planner's sweep formula must reproduce fig 4: at 1 node a
+        // single stream cannot saturate BeeGFS (more aggregators win); at
+        // 8 nodes 288 streams thrash the 8 targets (36/node loses to
+        // 1/node), and the NVMe landing is aggregator-count-insensitive.
+        let v = 8e9;
+        let m1 = cm(1);
+        assert!(m1.t_bp4_perceived(v, 8, false) < m1.t_bp4_perceived(v, 1, false) / 2.0);
+        let m8 = cm(8);
+        assert!(m8.t_bp4_perceived(v, 288, false) > m8.t_bp4_perceived(v, 8, false));
+        let bb1 = m8.t_bp4_perceived(v, 8, true);
+        let bb36 = m8.t_bp4_perceived(v, 288, true);
+        assert!((bb1 - bb36).abs() < bb1 * 0.2, "NVMe path ~flat in aggs");
+        assert!(bb1 < m8.t_bp4_perceived(v, 8, false), "BB beats PFS");
     }
 
     #[test]

@@ -57,7 +57,9 @@ impl<'a> Reader<'a> {
     pub fn new(b: &'a [u8]) -> Self {
         Reader { b, pos: 0 }
     }
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    /// Consume exactly `n` raw bytes (segment payloads of the
+    /// incremental `md.idx` format carry their own length prefix).
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         // `pos <= len` is an invariant; comparing against the remainder
         // keeps an attacker-chosen huge `n` from overflowing `pos + n`.
         if n > self.b.len() - self.pos {

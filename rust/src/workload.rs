@@ -77,6 +77,19 @@ impl Workload {
         }
     }
 
+    /// The WRF history variable set on an arbitrary grid — what the
+    /// launcher/planner use to size one history frame for a namelist's
+    /// `&domains` ([`crate::plan::WorkloadShape`]).
+    pub fn for_grid(ny: usize, nx: usize, nz: usize) -> Workload {
+        Workload {
+            ny,
+            nx,
+            nz,
+            vars: wrf_history_vars(),
+            seed: 2022,
+        }
+    }
+
     /// A smaller grid for tests.
     pub fn tiny() -> Workload {
         Workload {

@@ -812,6 +812,90 @@ fn tiered_follower_serves_step_from_bb_while_throttle_holds_pfs() {
 }
 
 #[test]
+fn bb_index_is_incremental_append_only() {
+    // Watermark-aware incremental BB index: the BB-local md.idx is a base
+    // header plus one appended segment per step (O(1) per publish), never
+    // a full rewrite — and followers parse it like the full layout.
+    use stormio::adios::bp::{MD_MAGIC, MD_VERSION_SEG};
+    let dir = tmp("bb_incidx");
+    let cfg = bb_live_cfg(&dir, "incidx", 0);
+    let bb_md = dir.join("bb/incidx.bp/md.idx");
+    let md2 = bb_md.clone();
+    let snaps = run_world(4, 2, move |mut comm| {
+        let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+        let mut snaps: Vec<Vec<u8>> = Vec::new();
+        for s in 0..3 {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("X", &[4, 6], &[comm.rank() as u64, 0], &[1, 6]).unwrap(),
+                field(s, comm.rank() as u64, 6),
+            )
+            .unwrap();
+            eng.end_step(&mut comm).unwrap();
+            if comm.rank() == 0 {
+                // Rank 0 is the publisher: after its end_step returns, the
+                // BB index for this step is on disk.
+                snaps.push(std::fs::read(&md2).unwrap());
+            }
+        }
+        eng.close(&mut comm).unwrap();
+        snaps
+    });
+    let snaps = &snaps[0];
+    assert_eq!(snaps.len(), 3);
+    // Segmented layout, and each publish strictly appends.
+    assert_eq!(&snaps[0][0..4], &MD_MAGIC.to_le_bytes());
+    assert_eq!(&snaps[0][4..8], &MD_VERSION_SEG.to_le_bytes());
+    for i in 0..2 {
+        assert!(snaps[i + 1].len() > snaps[i].len());
+        assert_eq!(
+            &snaps[i + 1][..snaps[i].len()],
+            &snaps[i][..],
+            "publish {i} rewrote already-published bytes"
+        );
+    }
+    // O(1) publish: every step appends the same-sized segment (identical
+    // block geometry per step), independent of how many steps precede it.
+    let d1 = snaps[1].len() - snaps[0].len();
+    let d2 = snaps[2].len() - snaps[1].len();
+    assert_eq!(d1, d2, "per-step append size must not grow with step count");
+    // After close: completion stamped by appending, both tiers agree.
+    let final_md = std::fs::read(&bb_md).unwrap();
+    assert_eq!(&final_md[..snaps[2].len()], &snaps[2][..]);
+    let (bb_steps, bb_subs, bb_attrs) = read_metadata(&final_md).unwrap();
+    assert_eq!(bb_steps.len(), 3);
+    assert_eq!(bb_subs, 2);
+    assert!(bb_attrs
+        .iter()
+        .any(|(k, v)| k == "__stormio_complete" && v == "1"));
+    let pfs_md = std::fs::read(dir.join("pfs/incidx.bp/md.idx")).unwrap();
+    let (pfs_steps, _, _) = read_metadata(&pfs_md).unwrap();
+    assert_eq!(pfs_steps, bb_steps, "tiers must index identical steps");
+    // A TieredFollower reads the whole (completed) stream off it.
+    let mut f = TieredFollower::open(
+        dir.join("pfs/incidx.bp"),
+        dir.join("bb"),
+        Duration::from_millis(2),
+    )
+    .unwrap();
+    let mut n = 0;
+    loop {
+        match f.begin_step(Duration::from_secs(10)).unwrap() {
+            StepStatus::Ready => {
+                let (_, g) = f.read_var_global("X").unwrap();
+                assert_eq!(g.len(), 24);
+                f.end_step().unwrap();
+                n += 1;
+            }
+            StepStatus::EndOfStream => break,
+            StepStatus::Timeout => panic!("follower stalled on incremental index"),
+        }
+    }
+    assert_eq!(n, 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn tiered_follower_fails_over_when_bb_replica_reaped() {
     let dir = tmp("bb_reap");
     let cfg = bb_live_cfg(&dir, "reap", 400);
