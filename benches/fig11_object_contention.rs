@@ -1,0 +1,217 @@
+//! Fig 11 (repro extension) — ensemble writer contention: N concurrent
+//! runs landing history on one shared PFS vs one shared object space.
+//!
+//! Two halves:
+//!
+//! * **virtual** — the planner's three-way target sweep at N = 1..16
+//!   ensemble members: per-member time-to-durable on the shared PFS
+//!   (cross-run seek contention, `1 + c·(N−1)`), the draining burst
+//!   buffer (its drain pays the same contention), and the object space
+//!   (per-writer put pipeline capped by a fair share of aggregate
+//!   ingest, flat per-key metadata).  Asserts the object advantage
+//!   *grows* with N and that `adios2_target = 'auto'` resolves to the
+//!   object space for every N > 1, with `auto` provenance.
+//! * **measured** — N writer threads racing on this host: a shared
+//!   [`SubfileStore`] (one append file behind a store-wide offset lock —
+//!   the PFS-style layout) vs a shared [`DirStore`] (independently named
+//!   objects, natively parallel puts).  Correctness is asserted (every
+//!   object lands, listings complete, payloads read back bit-identical);
+//!   the wall-clock ratio is reported, not asserted — single-core CI
+//!   containers cannot promise parallel speedup.
+//!
+//! Emits `BENCH_fig11_object_contention.json` with the per-N sweep and
+//! the resolved N=8 plan provenance for the CI bench-smoke artifact
+//! trail.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use stormio::adios::store::{DirStore, LandingStore, ObjKey, SubfileStore};
+use stormio::adios::{EngineKind, Target};
+use stormio::metrics::{BenchReport, Table};
+use stormio::plan::{IoIntent, Knob, Planner, Setting, WorkloadShape};
+use stormio::sim::CostModel;
+use stormio::workload::{bench_smoke, Workload};
+
+fn main() {
+    let smoke = bench_smoke();
+    let mut json = BenchReport::new("fig11_object_contention");
+    json.flag("smoke", smoke);
+
+    // ---- virtual: three-way sweep vs ensemble size -----------------------
+    let wl = Workload::conus_proxy();
+    let hw = wl.hardware(8);
+    let writer_counts: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let mut table = Table::new(
+        "Fig 11: per-member time-to-durable vs ensemble size (virtual, CONUS-scale)",
+        &[
+            "writers",
+            "shared pfs [s]",
+            "bb+drain [s]",
+            "object [s]",
+            "pfs/object",
+            "auto target",
+        ],
+    );
+    let mut first_adv = 0.0f64;
+    let mut prev_adv = 0.0f64;
+    let mut last_plan = None;
+    for &n in writer_counts {
+        let planner = Planner::new(
+            CostModel::new(hw.clone()),
+            WorkloadShape::from_physical(wl.frame_bytes(), hw.volume_scale).with_writers(n),
+        );
+        let v = planner.shape.step_bytes;
+        let (_, pfs) = planner.choose_aggregators(Target::Pfs, 1);
+        let (_, bb) = planner.choose_aggregators(Target::BurstBuffer { drain: true }, 1);
+        let (_, obj) = planner.choose_aggregators(Target::Object, 1);
+        let c = planner.cost.cross_run_contention(n);
+        let pfs_durable = pfs * c;
+        let bb_durable = bb + planner.cost.t_bb_drain(v, planner.cost.hw.nodes.max(1)) * c;
+        let adv = pfs_durable / obj.max(1e-12);
+        let target = planner.choose_target(1);
+        assert!(
+            adv > prev_adv,
+            "{n} writers: object advantage must grow with ensemble size \
+             ({adv:.2} after {prev_adv:.2})"
+        );
+        if n == writer_counts[0] {
+            first_adv = adv;
+        }
+        prev_adv = adv;
+        if n > 1 {
+            assert!(
+                matches!(target, Target::Object),
+                "{n} writers: auto target must resolve to the object space, got {target:?}"
+            );
+            // Full-plan path: the namelist knob carries the same answer
+            // with auto provenance.
+            let intent = IoIntent {
+                target: Knob::namelist(Setting::Auto),
+                ensemble_writers: Some(n),
+                ..IoIntent::default()
+            };
+            let single = Planner::new(
+                CostModel::new(hw.clone()),
+                WorkloadShape::from_physical(wl.frame_bytes(), hw.volume_scale),
+            );
+            let plan = single.plan(EngineKind::Bp4, &intent).expect("auto plan");
+            assert_eq!(plan.target.value, Target::Object);
+            assert_eq!(
+                plan.target.source,
+                stormio::plan::DecisionSource::Auto
+            );
+            last_plan = Some(plan);
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{pfs_durable:.3}"),
+            format!("{bb_durable:.3}"),
+            format!("{obj:.3}"),
+            format!("{adv:.2}x"),
+            match target {
+                Target::Object => "object".into(),
+                Target::Pfs => "pfs".into(),
+                Target::BurstBuffer { .. } => "bb".into(),
+            },
+        ]);
+        json.num(&format!("pfs_durable_s_n{n}"), pfs_durable)
+            .num(&format!("bb_durable_s_n{n}"), bb_durable)
+            .num(&format!("object_s_n{n}"), obj)
+            .num(&format!("advantage_n{n}"), adv);
+    }
+    if let Some(p) = &last_plan {
+        p.stamp(&mut json);
+    }
+
+    // ---- measured: racing writer threads on this host --------------------
+    let (members, objects, obj_bytes) = if smoke { (2usize, 8usize, 64 * 1024usize) } else { (4, 32, 256 * 1024) };
+    let tmp = std::env::temp_dir().join(format!("stormio_fig11_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+
+    let sub: Arc<dyn LandingStore> =
+        Arc::new(SubfileStore::open(tmp.join("pfs_style"), 1).expect("subfile store"));
+    let sub_wall = race_writers(sub.clone(), members, objects, obj_bytes);
+    let dir: Arc<dyn LandingStore> =
+        Arc::new(DirStore::open(tmp.join("obj_space")).expect("dir store"));
+    let obj_wall = race_writers(dir.clone(), members, objects, obj_bytes);
+
+    // Correctness: every object landed in both stores and reads back
+    // bit-identical through the trait.
+    for store in [&sub, &dir] {
+        let listed = store.list_step(0).expect("list");
+        assert_eq!(
+            listed.len(),
+            members * objects,
+            "{}: expected {} objects, listed {}",
+            store.store_name(),
+            members * objects,
+            listed.len()
+        );
+        let key = ObjKey::new(0, "member0", 0);
+        let got = store.get(&key).expect("get");
+        assert_eq!(got, payload(0, 0, obj_bytes), "{}: payload drift", store.store_name());
+    }
+
+    let ratio = sub_wall / obj_wall.max(1e-9);
+    let mut t2 = Table::new(
+        "Fig 11 (measured): racing writer threads, one shared store",
+        &["layout", "writers", "objects", "wall [s]"],
+    );
+    t2.row(&[
+        "subfile+offset lock".into(),
+        members.to_string(),
+        (members * objects).to_string(),
+        format!("{sub_wall:.3}"),
+    ]);
+    t2.row(&[
+        "object space".into(),
+        members.to_string(),
+        (members * objects).to_string(),
+        format!("{obj_wall:.3}"),
+    ]);
+    json.int("measured_members", members as u64)
+        .int("measured_objects", (members * objects) as u64)
+        .num("measured_subfile_wall_s", sub_wall)
+        .num("measured_object_wall_s", obj_wall)
+        .num("measured_ratio", ratio);
+
+    table.emit(Some(std::path::Path::new(
+        "bench_results/fig11_object_contention.csv",
+    )));
+    t2.emit(None);
+    json.write();
+    println!(
+        "object landing: virtual advantage grows {first_adv:.2}x → {prev_adv:.2}x \
+         across the writer sweep; measured subfile/object wall ratio {ratio:.2}x"
+    );
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// `members` threads each put `objects` payloads of `obj_bytes` into the
+/// shared `store` as step-0 objects; returns the wall seconds for all
+/// writers to finish.
+fn race_writers(store: Arc<dyn LandingStore>, members: usize, objects: usize, obj_bytes: usize) -> f64 {
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for m in 0..members {
+        let st = store.clone();
+        handles.push(std::thread::spawn(move || {
+            for b in 0..objects {
+                let key = ObjKey::new(0, format!("member{m}"), b as u32);
+                st.put(&key, &payload(m, b, obj_bytes)).expect("put");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("writer thread");
+    }
+    start.elapsed().as_secs_f64()
+}
+
+/// Deterministic per-object payload (verifiable after the race).
+fn payload(member: usize, block: usize, len: usize) -> Vec<u8> {
+    (0..len)
+        .map(|i| ((member * 131 + block * 17 + i) % 251) as u8)
+        .collect()
+}

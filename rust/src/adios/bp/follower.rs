@@ -290,7 +290,8 @@ impl TieredFollower {
         &self.tiers
     }
 
-    /// Steps served from (burst buffer, PFS) so far.
+    /// Steps served from (burst buffer, final target — PFS or object
+    /// space) so far.
     pub fn tier_counts(&self) -> (usize, usize) {
         let bb = self
             .tiers
@@ -325,7 +326,9 @@ impl TieredFollower {
     fn load_tier(&mut self, tier: ServedTier) -> Result<()> {
         let dir = match tier {
             ServedTier::BurstBuffer => self.bb_meta.clone(),
-            ServedTier::Pfs => self.pfs_dir.clone(),
+            // An object run's index lives in the PFS slot: same md.idx
+            // directory, object-backed reader.
+            ServedTier::Pfs | ServedTier::Object => self.pfs_dir.clone(),
         };
         let idx = dir.join("md.idx");
         let Ok(meta) = std::fs::metadata(&idx) else {
@@ -334,7 +337,7 @@ impl TieredFollower {
                     self.bb = None;
                     self.last_bb_len = None;
                 }
-                ServedTier::Pfs => {
+                ServedTier::Pfs | ServedTier::Object => {
                     self.pfs = None;
                     self.last_pfs_len = None;
                 }
@@ -344,7 +347,7 @@ impl TieredFollower {
         let len = meta.len();
         let (slot, last) = match tier {
             ServedTier::BurstBuffer => (&mut self.bb, &mut self.last_bb_len),
-            ServedTier::Pfs => (&mut self.pfs, &mut self.last_pfs_len),
+            ServedTier::Pfs | ServedTier::Object => (&mut self.pfs, &mut self.last_pfs_len),
         };
         if slot.is_some() && *last == Some(len) {
             return Ok(());
@@ -403,8 +406,23 @@ impl TieredFollower {
     fn reader_ref(&self, tier: ServedTier) -> Option<&BpReader> {
         match tier {
             ServedTier::BurstBuffer => self.bb.as_ref(),
-            ServedTier::Pfs => self.pfs.as_ref(),
+            ServedTier::Pfs | ServedTier::Object => self.pfs.as_ref(),
         }
+    }
+
+    /// How the final-target slot should be labeled: `Object` when its
+    /// reader serves blocks from an object space, `Pfs` otherwise.
+    fn final_tier(&self) -> ServedTier {
+        match &self.pfs {
+            Some(rd) if rd.is_object_backed() => ServedTier::Object,
+            _ => ServedTier::Pfs,
+        }
+    }
+
+    /// The final-target slot's tier label (`"pfs"`, or `"object"` for an
+    /// object-backed stream) — `stormio follow` reporting.
+    pub fn final_tier_name(&self) -> &'static str {
+        self.final_tier().name()
     }
 
     fn steps_in(&self, tier: ServedTier) -> usize {
@@ -430,7 +448,7 @@ impl TieredFollower {
     /// the BB replica may be reaped), else the burst buffer.
     fn choose_tier(&self, step: usize) -> ServedTier {
         if step < self.steps_in(ServedTier::Pfs) {
-            ServedTier::Pfs
+            self.final_tier()
         } else {
             ServedTier::BurstBuffer
         }
@@ -439,7 +457,7 @@ impl TieredFollower {
     fn other(tier: ServedTier) -> ServedTier {
         match tier {
             ServedTier::BurstBuffer => ServedTier::Pfs,
-            ServedTier::Pfs => ServedTier::BurstBuffer,
+            ServedTier::Pfs | ServedTier::Object => ServedTier::BurstBuffer,
         }
     }
 
@@ -593,6 +611,58 @@ impl StepSource for TieredFollower {
             None => Err(Error::bp("end_step without begin_step")),
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Burst-buffer replica reaper
+// ---------------------------------------------------------------------------
+
+/// Trim burst-buffer sub-file replicas (`node{n}/<name>.bp/data.{sub}`)
+/// that the PFS copy has fully superseded, returning the bytes freed.
+///
+/// Conservative by construction: a replica is removed only when the run
+/// is complete (the producer holds no open append handles on it) *and*
+/// that sub-file's drain watermark covers every indexed step — exactly
+/// the regime in which [`TieredFollower::choose_tier`] already prefers
+/// the PFS copy.  A follower holding an open step on a reaped replica
+/// fails over transparently (`with_step_reader`); the BB-local `md.idx`
+/// is left in place so such followers keep terminating cleanly.
+pub fn reap_bb_replicas(
+    pfs_bp_dir: impl AsRef<Path>,
+    bb_root: impl AsRef<Path>,
+) -> Result<u64> {
+    let pfs_dir = pfs_bp_dir.as_ref();
+    let bb_root = bb_root.as_ref();
+    let name = pfs_dir
+        .file_name()
+        .ok_or_else(|| Error::bp("reaper needs a <name>.bp directory path"))?
+        .to_owned();
+    // No PFS index yet means nothing is proven durable: reap nothing.
+    let Ok(md) = std::fs::read(pfs_dir.join("md.idx")) else {
+        return Ok(0);
+    };
+    let (steps, subfiles, attrs) = super::read_metadata(&md)?;
+    if !attrs.iter().any(|(k, _)| k == super::COMPLETE_ATTR) {
+        return Ok(0);
+    }
+    let Ok(nodes) = std::fs::read_dir(bb_root) else {
+        return Ok(0);
+    };
+    let nodes: Vec<PathBuf> = nodes.flatten().map(|e| e.path()).collect();
+    let mut freed = 0u64;
+    for sub in 0..subfiles {
+        if super::read_drain_watermark(pfs_dir, sub) < steps.len() as u64 {
+            continue;
+        }
+        for node in &nodes {
+            let replica = node.join(&name).join(format!("data.{sub}"));
+            if let Ok(meta) = std::fs::metadata(&replica) {
+                std::fs::remove_file(&replica)?;
+                freed += meta.len();
+            }
+        }
+    }
+    Ok(freed)
 }
 
 // Liveness tests (publish/poll/complete protocol) live in

@@ -53,6 +53,15 @@ pub const COMPLETE_ATTR: &str = "__stormio_complete";
 /// to read sub-file bytes from the fastest tier (DESIGN.md §11).
 pub const BB_MAP_ATTR: &str = "__stormio_bb_map";
 
+/// Internal attribute naming the shared object space of a
+/// [`crate::adios::engine::Target::Object`] run, as a path relative to
+/// the parent of the `.bp` metadata directory (normally `<name>.obj`).
+/// Its presence switches [`reader::BpReader`] from sub-file byte ranges
+/// to per-block [`crate::adios::store::LandingStore`] gets — the index's
+/// `{subfile, offset}` fields are ignored and blocks are addressed as
+/// `{step, var, producer_rank}` objects (DESIGN.md §13).
+pub const OBJ_SPACE_ATTR: &str = "__stormio_obj_space";
+
 // ---------------------------------------------------------------------------
 // Drain watermarks (DESIGN.md §11)
 // ---------------------------------------------------------------------------

@@ -12,8 +12,9 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use super::{read_metadata, StepIndex};
+use super::{read_metadata, BlockRecord, StepIndex};
 use crate::adios::operator;
+use crate::adios::store::{DirStore, LandingStore, ObjKey};
 use crate::{Error, Result};
 
 /// Reader over a BP4-lite directory.
@@ -38,6 +39,10 @@ pub struct BpReader {
     /// Number of physical sub-file `open()` calls performed (test/report
     /// instrumentation for the caching guarantee).
     opens: AtomicUsize,
+    /// Object-backed runs ([`super::OBJ_SPACE_ATTR`] present): block
+    /// frames come from per-object store gets instead of sub-file byte
+    /// ranges.  The index's `{subfile, offset}` fields are ignored.
+    store: Option<Box<dyn LandingStore>>,
 }
 
 impl BpReader {
@@ -46,6 +51,7 @@ impl BpReader {
         let md = fs::read(dir.join("md.idx"))
             .map_err(|e| Error::bp(format!("cannot read {}/md.idx: {e}", dir.display())))?;
         let (steps, subfiles, attrs) = read_metadata(&md)?;
+        let store = Self::open_store(&dir, &attrs)?;
         Ok(BpReader {
             dir,
             steps,
@@ -54,7 +60,33 @@ impl BpReader {
             subfile_dirs: HashMap::new(),
             handles: Mutex::new(HashMap::new()),
             opens: AtomicUsize::new(0),
+            store,
         })
+    }
+
+    /// Resolve the landing store of an object-backed run from its
+    /// [`super::OBJ_SPACE_ATTR`] (a path relative to the `.bp`
+    /// directory's parent).  `None` for sub-file runs.
+    fn open_store(
+        dir: &Path,
+        attrs: &[(String, String)],
+    ) -> Result<Option<Box<dyn LandingStore>>> {
+        let Some((_, rel)) = attrs.iter().find(|(k, _)| k == super::OBJ_SPACE_ATTR) else {
+            return Ok(None);
+        };
+        let base = dir.parent().ok_or_else(|| {
+            Error::bp(format!(
+                "{}: object-backed index but the .bp directory has no parent",
+                dir.display()
+            ))
+        })?;
+        Ok(Some(Box::new(DirStore::open(base.join(rel))?)))
+    }
+
+    /// True when block frames come from an object space rather than
+    /// sub-file byte ranges (drives tier labeling in the follower).
+    pub fn is_object_backed(&self) -> bool {
+        self.store.is_some()
     }
 
     /// Override where individual sub-files live (see `subfile_dirs`).
@@ -79,6 +111,11 @@ impl BpReader {
         self.steps = steps;
         self.subfiles = subfiles;
         self.attrs = attrs;
+        if self.store.is_none() {
+            // A producer stamps the object-space attribute at its first
+            // publish, so a follower that opened early picks it up here.
+            self.store = Self::open_store(&self.dir, &self.attrs)?;
+        }
         Ok(())
     }
 
@@ -159,6 +196,25 @@ impl BpReader {
         Ok(buf)
     }
 
+    /// Fetch one block's (possibly compressed) frame bytes: a
+    /// checksummed object get on object-backed runs, a sub-file byte
+    /// range otherwise.
+    fn read_block(&self, step: usize, var: &str, b: &BlockRecord) -> Result<Vec<u8>> {
+        if let Some(store) = &self.store {
+            let key = ObjKey::new(step as u64, var, b.producer_rank);
+            let frame = store.get(&key)?;
+            if frame.len() as u64 != b.stored {
+                return Err(Error::bp(format!(
+                    "object {key} holds {} bytes, index claims {}",
+                    frame.len(),
+                    b.stored
+                )));
+            }
+            return Ok(frame);
+        }
+        self.read_frame(b.subfile, b.offset, b.stored)
+    }
+
     /// Reconstitute the full global array of `name` at `step`.  The
     /// index is untrusted input: the shape and every block's placement
     /// are validated before any allocation or scatter.
@@ -172,7 +228,7 @@ impl BpReader {
         let mut global = vec![0.0f32; total as usize];
         for b in &v.blocks {
             super::validate_block_geometry(&v.shape, &b.start, &b.count)?;
-            let frame = self.read_frame(b.subfile, b.offset, b.stored)?;
+            let frame = self.read_block(step, name, b)?;
             let raw = operator::decompress(&frame)?;
             if raw.len() as u64 != b.raw {
                 return Err(Error::bp(format!(
@@ -224,7 +280,7 @@ impl BpReader {
             else {
                 continue;
             };
-            let frame = self.read_frame(b.subfile, b.offset, b.stored)?;
+            let frame = self.read_block(step, name, b)?;
             let raw = crate::adios::operator::decompress(&frame)?;
             let vals = crate::util::bytes_to_f32_vec(&raw)?;
             let want: u64 = b.count.iter().product();

@@ -41,6 +41,7 @@ use std::time::Duration;
 use crate::adios::aggregation::AggregationPlan;
 use crate::adios::bp::{BlockRecord, StepIndex, VarIndex};
 use crate::adios::operator::{self, OperatorConfig};
+use crate::adios::store::{DirStore, LandingStore, ObjKey};
 use crate::adios::variable::{block_minmax, Variable};
 use crate::cluster::Comm;
 use crate::metrics::{BusyMeter, Stopwatch};
@@ -367,6 +368,9 @@ pub struct Bp4Engine {
     subfile_len: u64,
     /// Aggregator-only: background append/drain pipeline (`async_io`).
     pipeline: Option<IoPipeline>,
+    /// `Target::Object` only: handle on the shared object space
+    /// (aggregators put blocks; rank 0 additionally commits steps).
+    store: Option<DirStore>,
     /// Global attributes (rank 0 writes them into md.idx).
     attrs: Vec<(String, String)>,
     /// Rank 0 only: accumulated index + stats.
@@ -402,6 +406,7 @@ impl Bp4Engine {
             in_step: false,
             subfile_len: 0,
             pipeline: None,
+            store: None,
             attrs: Vec::new(),
             steps_index: Vec::new(),
             pfs_published: 0,
@@ -411,7 +416,22 @@ impl Bp4Engine {
             report: EngineReport::default(),
             closed: false,
         };
-        if eng.plan.is_aggregator(rank) {
+        if matches!(eng.cfg.target, Target::Object) {
+            // Object landing: no sub-files, no pipeline — aggregators put
+            // per-block objects into the shared space at end_step and the
+            // puts are durable on return.  Stale objects from a previous
+            // run need no sweep (puts overwrite atomically and readers are
+            // gated by the freshly republished md.idx), but stale commit
+            // markers must go: rank 0 is the only writer of markers, so
+            // clearing them here races with nobody.
+            if eng.plan.is_aggregator(rank) || rank == 0 {
+                let store = DirStore::open(eng.obj_space_dir())?;
+                if rank == 0 {
+                    store.clear_commit_markers()?;
+                }
+                eng.store = Some(store);
+            }
+        } else if eng.plan.is_aggregator(rank) {
             let p = eng.subfile_path();
             if let Some(dir) = p.parent() {
                 fs::create_dir_all(dir)?;
@@ -458,6 +478,14 @@ impl Bp4Engine {
             if eng.bb_live() {
                 let _ = fs::remove_file(eng.bb_meta_dir().join("md.idx"));
             }
+            if matches!(eng.cfg.target, Target::Object) {
+                // Readers find the object space through this attribute
+                // (value is relative to the .bp directory's parent).
+                eng.attrs.push((
+                    crate::adios::bp::OBJ_SPACE_ATTR.to_string(),
+                    format!("{}.obj", eng.cfg.name),
+                ));
+            }
         }
         Ok(eng)
     }
@@ -498,13 +526,20 @@ impl Bp4Engine {
 
     fn bp_dir_local(&self, node: usize) -> PathBuf {
         match self.cfg.target {
-            Target::Pfs => self.bp_dir_pfs(),
+            // Object runs have no sub-files; md.idx lives on the PFS.
+            Target::Pfs | Target::Object => self.bp_dir_pfs(),
             Target::BurstBuffer { .. } => self
                 .cfg
                 .bb_root
                 .join(format!("node{node}"))
                 .join(format!("{}.bp", self.cfg.name)),
         }
+    }
+
+    /// Shared object space of an `Object`-target run: sibling of the
+    /// `.bp` metadata directory (`<pfs>/<name>.obj`).
+    fn obj_space_dir(&self) -> PathBuf {
+        self.cfg.pfs_dir.join(format!("{}.obj", self.cfg.name))
     }
 
     fn subfile_path(&self) -> PathBuf {
@@ -755,8 +790,14 @@ impl Bp4Engine {
         }
         cost.push("chain", cm.t_chain_gather(v_stored, naggs));
         if first_step {
-            // Sub-file creates + md.idx create hit the MDS once per file.
-            cost.push("mds", cm.t_mds_creates(naggs + 1));
+            // Sub-file creates + md.idx create hit the MDS once per file;
+            // an object space makes no POSIX creates beyond md.idx (the
+            // per-object key-value inserts are charged below instead).
+            let creates = match self.cfg.target {
+                Target::Object => 1,
+                _ => naggs + 1,
+            };
+            cost.push("mds", cm.t_mds_creates(creates));
         }
         match self.cfg.target {
             Target::Pfs => {
@@ -767,6 +808,17 @@ impl Bp4Engine {
                 if drain {
                     cost.push_background("drain", cm.t_bb_drain(v_stored, hw.nodes));
                 }
+            }
+            Target::Object => {
+                // One run = one writer of the shared object space; the
+                // cross-run contention factor only enters the planner's
+                // N-ensemble sweep.
+                cost.push("write-obj", cm.t_obj_put(v_stored, 1));
+                let objects = self
+                    .steps_index
+                    .last()
+                    .map_or(0, |s| s.vars.iter().map(|v| v.blocks.len()).sum());
+                cost.push("obj-md", cm.t_obj_md(objects));
             }
         }
         // Metadata collation: aggregators → rank 0, then md.idx append.
@@ -845,7 +897,22 @@ impl Engine for Bp4Engine {
                 self.absorb_member(m, &data, subfile, &mut out, &mut vars)?;
             }
             let out_len = out.len() as u64;
-            if let Some(pipe) = &self.pipeline {
+            if let Some(store) = &self.store {
+                // Object landing: every absorbed block becomes one
+                // independently checksummed `{step, var, block}` object —
+                // no shared append offset, no pipeline, durable on return.
+                let base = self.subfile_len;
+                for v in &vars {
+                    for b in &v.blocks {
+                        let lo = (b.offset - base) as usize;
+                        let frame = &out[lo..lo + b.stored as usize];
+                        store.put(
+                            &ObjKey::new(self.step as u64, &v.name, b.producer_rank),
+                            frame,
+                        )?;
+                    }
+                }
+            } else if let Some(pipe) = &self.pipeline {
                 // Double-buffered hand-off: sample how far the background
                 // stage lags (overlap evidence), enqueue, move on.  The
                 // bounded queue provides back-pressure, never data loss.
@@ -893,6 +960,12 @@ impl Engine for Bp4Engine {
             }
             let index = Self::merge_index(fragments)?;
             self.steps_index.push(index);
+            if let Some(store) = &self.store {
+                // Every aggregator's puts for this step happened before it
+                // shipped its index fragment, so the step is fully landed
+                // in the object space: make it visible.
+                store.commit_step(self.step as u64)?;
+            }
 
             let mut traw = 0u64;
             let mut tstored = 0u64;
@@ -1026,8 +1099,9 @@ impl Engine for Bp4Engine {
         }
 
         // Durability check: the final-target sub-file must hold every byte
-        // this aggregator accounted before metadata is published.
-        if self.plan.is_aggregator(self.rank) {
+        // this aggregator accounted before metadata is published.  Object
+        // runs have no sub-file — puts were durable on return.
+        if self.plan.is_aggregator(self.rank) && !matches!(self.cfg.target, Target::Object) {
             let fin = self.final_subfile_path();
             let have = fs::metadata(&fin).map(|m| m.len()).unwrap_or(0);
             if have != self.subfile_len {
@@ -1378,6 +1452,192 @@ mod tests {
         assert!(rd.read_var_selection(0, "T", &[0, 0, 10], &[2, 8, 7]).is_err());
         assert!(rd.read_var_selection(0, "T", &[0, 0], &[2, 8]).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn roundtrip_object_target() {
+        let dir = tmpdir("obj_rt");
+        let report = write_world(&dir, Target::Object, Codec::None, 1, 2);
+        assert_eq!(report.steps.len(), 2);
+        // The cost charges the object path, not a pfs/bb write.
+        let s0 = &report.steps[0];
+        assert!(s0.cost.phases.iter().any(|p| p.name == "write-obj"));
+        assert!(s0.cost.phases.iter().any(|p| p.name == "obj-md"));
+        assert!(!s0.cost.phases.iter().any(|p| p.name == "write-pfs"));
+        // No POSIX sub-files were created.
+        assert!(!dir.join("pfs/wrfout_test.bp/data.0").exists());
+        // The space is sibling to the metadata dir and fully visible.
+        let store = crate::adios::store::DirStore::open(dir.join("pfs/wrfout_test.obj")).unwrap();
+        assert_eq!(store.visible_steps().unwrap(), 2);
+        assert_eq!(store.list_step(0).unwrap().len(), 16, "8 ranks × 2 vars");
+        // Reads go through the object space via the reader dispatch.
+        let rd = BpReader::open(dir.join("pfs/wrfout_test.bp")).unwrap();
+        assert!(rd.is_object_backed());
+        assert_eq!(rd.num_steps(), 2);
+        for s in 0..2 {
+            let (shape, g) = rd.read_var_global(s, "T2").unwrap();
+            assert_eq!(shape, vec![8, 16]);
+            assert_eq!(g[17], (s * 1000) as f32 + 17.0);
+        }
+        // Selection reads dispatch through objects too.
+        let sel = rd.read_var_selection(1, "T2", &[3, 2], &[2, 5]).unwrap();
+        assert_eq!(sel[0], 1000.0 + (3 * 16 + 2) as f32);
+        assert_eq!(sel.len(), 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_object_read_is_descriptive_error() {
+        let dir = tmpdir("obj_corrupt");
+        let _ = write_world(&dir, Target::Object, Codec::None, 1, 1);
+        // Flip one payload byte of one object behind the reader's back.
+        let space = dir.join("pfs/wrfout_test.obj/step00000000");
+        let obj = std::fs::read_dir(&space)
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .find(|p| p.extension().map_or(false, |e| e == "obj"))
+            .unwrap();
+        let mut bytes = std::fs::read(&obj).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&obj, &bytes).unwrap();
+        let rd = BpReader::open(dir.join("pfs/wrfout_test.bp")).unwrap();
+        let mut failed = false;
+        for var in ["T2", "PSFC"] {
+            if let Err(e) = rd.read_var_global(0, var) {
+                assert!(e.to_string().contains("checksum mismatch"), "{e}");
+                failed = true;
+            }
+        }
+        assert!(failed, "corrupted object was read back without error");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn three_targets_step_reads_back_bit_identical() {
+        use crate::adios::bp::follower::TieredFollower;
+        use crate::adios::source::{ServedTier, StepSource, StepStatus};
+        let mut reads: Vec<(ServedTier, Vec<u32>)> = Vec::new();
+        for (tag, target) in [
+            ("pfs", Target::Pfs),
+            ("bb", Target::BurstBuffer { drain: true }),
+            ("obj", Target::Object),
+        ] {
+            let dir = tmpdir(&format!("ident_{tag}"));
+            let _ = write_world(&dir, target, Codec::Lz4, 2, 1);
+            let mut f = TieredFollower::open(
+                dir.join("pfs/wrfout_test.bp"),
+                dir.join("bb"),
+                Duration::from_millis(2),
+            )
+            .unwrap();
+            assert_eq!(f.begin_step(Duration::from_secs(10)).unwrap(), StepStatus::Ready);
+            let (shape, g) = f.read_var_global("T2").unwrap();
+            assert_eq!(shape, vec![8, 16]);
+            let tier = f.step_tier().unwrap();
+            f.end_step().unwrap();
+            reads.push((tier, g.iter().map(|v| v.to_bits()).collect()));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        assert_eq!(reads[0].1, reads[1].1, "pfs vs burst-buffer");
+        assert_eq!(reads[0].1, reads[2].1, "pfs vs object");
+        // ...and the serving tiers are reported truthfully.
+        assert_eq!(reads[0].0, ServedTier::Pfs);
+        assert_eq!(reads[2].0, ServedTier::Object);
+    }
+
+    #[test]
+    fn object_follow_times_out_when_step_objects_never_arrive() {
+        use crate::adios::bp::follower::TieredFollower;
+        use crate::adios::source::{ServedTier, StepSource, StepStatus};
+        let dir = tmpdir("obj_follow_timeout");
+        let mut cfg = test_cfg(&dir, Target::Object, Codec::None, 1);
+        cfg.live_publish = true;
+        // The producer publishes one step and then goes away *without
+        // closing* — the follower must surface a clean timeout for the
+        // never-arriving step 1, not an error or a hang.
+        run_world(8, 4, move |mut comm| {
+            let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+            let r = comm.rank() as u64;
+            eng.begin_step().unwrap();
+            let var = Variable::global("T2", &[8, 4], &[r, 0], &[1, 4]).unwrap();
+            eng.put_f32(var, vec![r as f32; 4]).unwrap();
+            eng.end_step(&mut comm).unwrap();
+        });
+        let mut f = TieredFollower::open(
+            dir.join("pfs/wrfout_test.bp"),
+            dir.join("bb"),
+            Duration::from_millis(2),
+        )
+        .unwrap();
+        assert_eq!(f.begin_step(Duration::from_secs(10)).unwrap(), StepStatus::Ready);
+        assert_eq!(f.step_tier(), Some(ServedTier::Object));
+        let (_, g) = f.read_var_global("T2").unwrap();
+        assert_eq!(g[4], 1.0);
+        f.end_step().unwrap();
+        assert_eq!(
+            f.begin_step(Duration::from_millis(60)).unwrap(),
+            StepStatus::Timeout
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn follow_continues_across_bb_replica_reap() {
+        use crate::adios::bp::follower::{reap_bb_replicas, TieredFollower};
+        use crate::adios::source::{ServedTier, StepSource, StepStatus};
+        let dir = tmpdir("reap");
+        let mut cfg = test_cfg(&dir, Target::BurstBuffer { drain: true }, Codec::None, 1);
+        cfg.live_publish = true;
+        cfg.drain_throttle = Some(Duration::from_millis(150));
+        let steps = 4usize;
+        let d2 = dir.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut f = TieredFollower::open(
+                d2.join("pfs/wrfout_test.bp"),
+                d2.join("bb"),
+                Duration::from_millis(5),
+            )
+            .unwrap();
+            let mut tiers = Vec::new();
+            let mut sums = Vec::new();
+            loop {
+                match f.begin_step(Duration::from_secs(30)).unwrap() {
+                    StepStatus::Ready => {}
+                    StepStatus::EndOfStream => break,
+                    StepStatus::Timeout => panic!("follower starved"),
+                }
+                let (_, g) = f.read_var_global("T2").unwrap();
+                sums.push(g.iter().sum::<f32>());
+                tiers.push(f.step_tier().unwrap());
+                f.end_step().unwrap();
+                // Stay behind the producer so steps are still unread when
+                // the reaper runs after close.
+                std::thread::sleep(Duration::from_millis(250));
+            }
+            (tiers, sums)
+        });
+        let _ = write_world_cfg(cfg, steps);
+        // Producer closed: everything drained + complete.  Reap the BB
+        // replicas while the consumer is still mid-stream.
+        let freed =
+            reap_bb_replicas(dir.join("pfs/wrfout_test.bp"), dir.join("bb")).unwrap();
+        assert!(freed > 0, "reaper found nothing to trim");
+        assert!(!dir.join("bb/node0/wrfout_test.bp/data.0").exists());
+        assert!(!dir.join("bb/node1/wrfout_test.bp/data.1").exists());
+        let (tiers, sums) = consumer.join().unwrap();
+        assert_eq!(sums.len(), steps);
+        for (s, sum) in sums.iter().enumerate() {
+            let want: f32 = (0..8)
+                .flat_map(|r| (0..16).map(move |i| (s * 1000) as f32 + (r * 16 + i) as f32))
+                .sum();
+            assert_eq!(*sum, want, "step {s} data wrong after reap");
+        }
+        // Early steps were served live from the burst buffer, later ones
+        // (post-reap) from the PFS copy.
+        assert!(tiers.contains(&ServedTier::BurstBuffer), "{tiers:?}");
+        assert!(tiers.contains(&ServedTier::Pfs), "{tiers:?}");
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::cluster::Comm;
 use crate::sim::WriteCost;
 use crate::Result;
 
-/// Where a file engine physically lands its sub-files.
+/// Where a file engine physically lands its output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Target {
     /// Parallel file system (BeeGFS analog).
@@ -21,6 +21,12 @@ pub enum Target {
     /// Node-local NVMe burst buffer; `drain` copies back to PFS in the
     /// background (paper §V-B ran with drain disabled).
     BurstBuffer { drain: bool },
+    /// Shared key-value object space ([`crate::adios::store`]): every
+    /// block lands as an independently named `{step, var, block}` object
+    /// with its own checksum, so N concurrent writers never serialize on
+    /// a shared append offset (the DAOS-style landing tier, DESIGN.md
+    /// §13).  Puts are durable on return — there is no drain.
+    Object,
 }
 
 /// Per-step write statistics (rank-0 view, CONUS-scale virtual times).

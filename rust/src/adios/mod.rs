@@ -12,6 +12,7 @@
 //! | BP4 engine + sub-files    | [`engine::bp4`], [`bp`]                   |
 //! | aggregators (N→M)         | [`aggregation::AggregationPlan`]          |
 //! | burst buffer + drain      | [`engine::Target::BurstBuffer`]           |
+//! | object landing (DAOS-like)| [`engine::Target::Object`], [`store`]     |
 //! | operators (Blosc)         | [`operator`]                              |
 //! | SST staging               | [`engine::sst`]                           |
 //!
@@ -24,6 +25,7 @@ pub mod config;
 pub mod engine;
 pub mod operator;
 pub mod source;
+pub mod store;
 pub mod variable;
 
 use std::path::Path;
@@ -36,6 +38,7 @@ pub use config::{AdiosConfig, EngineKind, IoConfig};
 pub use engine::{DrainStats, Engine, EngineReport, Target};
 pub use operator::{Codec, OperatorConfig};
 pub use source::{ServedTier, StepSource, StepStatus, Subscription};
+pub use store::{DirStore, LandingStore, MemStore, ObjKey, SubfileStore};
 pub use variable::Variable;
 
 /// Top-level context (the `adios2::ADIOS` analog).

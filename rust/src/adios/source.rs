@@ -39,6 +39,10 @@ pub enum ServedTier {
     BurstBuffer,
     /// The parallel-file-system copy (drain watermark covered the step).
     Pfs,
+    /// The shared key-value object space of a
+    /// [`crate::adios::engine::Target::Object`] run — blocks read back as
+    /// per-object checksummed gets (DESIGN.md §13).
+    Object,
 }
 
 impl ServedTier {
@@ -46,6 +50,7 @@ impl ServedTier {
         match self {
             ServedTier::BurstBuffer => "burst-buffer",
             ServedTier::Pfs => "pfs",
+            ServedTier::Object => "object",
         }
     }
 }

@@ -1,0 +1,692 @@
+//! Landing-store abstraction: step/variable/block-addressed object
+//! storage behind the engine (DESIGN.md §13).
+//!
+//! The BP4 engine historically assumed its landing target is a POSIX
+//! file tree — sub-files, append offsets, rename-published indexes and
+//! per-sub-file drain watermarks.  The DAOS weather-workflow study
+//! (PAPERS.md) shows NWP pipelines at scale sidestepping file-system
+//! contention by landing on a key-value object store instead, where
+//! every block is an independently named object and N writers never
+//! serialize on a shared byte offset.
+//!
+//! [`LandingStore`] is the neutral seam: a put/get/list/delete surface
+//! addressed by [`ObjKey`] `{step, var, block}`.  Integrity is the
+//! store's job — every `put` stamps the payload's XXH64 and every `get`
+//! re-verifies it, subsuming the SST wire checksum for data at rest.
+//! Visibility is the store's job too: a step becomes *visible* when the
+//! writer commits it, which generalizes the drain watermark (`data.N.wm`
+//! files) of the POSIX layout into an object-visibility listing.
+//!
+//! Three implementations:
+//!
+//! * [`DirStore`] — the reference object space: one file per object
+//!   under `<root>/step<NNNNNNNN>/`, written atomically (temp + rename)
+//!   with a small header carrying the payload digest.  This is what
+//!   [`crate::adios::engine::Target::Object`] lands on.
+//! * [`MemStore`] — an in-memory store with fault injection (failed
+//!   puts, silent payload corruption) for failure-mode tests.
+//! * [`SubfileStore`] — the existing POSIX sub-file layout expressed as
+//!   a `LandingStore`: puts append to `data.{sub}` behind a store-wide
+//!   lock (exactly the offset-arithmetic serialization the object space
+//!   removes), and step visibility is the drain-watermark listing.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::fmt;
+use std::fs;
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::hash::xxh64;
+use crate::{Error, Result};
+
+/// Magic prefix of a [`DirStore`] object file (`"OBJ1"`).
+const OBJ_MAGIC: u32 = 0x4F42_4A31;
+/// Header bytes: magic u32 + payload-len u64 + xxh64 u64.
+const OBJ_HEADER: usize = 4 + 8 + 8;
+/// Per-step commit marker written by [`LandingStore::commit_step`].
+const COMMIT_MARKER: &str = ".commit";
+
+/// Address of one landed object: one block of one variable at one step.
+///
+/// `block` is the producer rank that wrote the block — the same identity
+/// [`crate::adios::bp::BlockRecord::producer_rank`] records — so readers
+/// translate an index entry into a key with no offset arithmetic.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjKey {
+    pub step: u64,
+    pub var: String,
+    pub block: u32,
+}
+
+impl ObjKey {
+    pub fn new(step: u64, var: impl Into<String>, block: u32) -> ObjKey {
+        ObjKey {
+            step,
+            var: var.into(),
+            block,
+        }
+    }
+
+    /// Directory name of a step's object namespace.
+    fn step_dir(step: u64) -> String {
+        format!("step{step:08}")
+    }
+
+    /// File name of this object inside its step directory.  WRF variable
+    /// names are `[A-Za-z0-9_]`; anything else is escaped so a hostile
+    /// name cannot traverse out of the space.
+    fn file_name(&self) -> String {
+        let safe: String = self
+            .var
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+            .collect();
+        format!("{safe}.b{:05}.obj", self.block)
+    }
+
+    /// Parse a [`Self::file_name`] back into `(var, block)`.
+    fn parse_file_name(name: &str) -> Option<(String, u32)> {
+        let stem = name.strip_suffix(".obj")?;
+        let (var, block) = stem.rsplit_once(".b")?;
+        Some((var.to_string(), block.parse().ok()?))
+    }
+}
+
+impl fmt::Display for ObjKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "step {} / {} / block {}", self.step, self.var, self.block)
+    }
+}
+
+/// A step/variable/block-addressed landing target.
+///
+/// Contract: `put` is atomic per object (a reader never observes a torn
+/// payload, though a *step's* object set may be partially visible until
+/// [`Self::commit_step`]); `get` verifies the payload digest recorded at
+/// put time and returns a descriptive error — never corrupt bytes — on
+/// mismatch; `visible_steps` is the committed contiguous step prefix,
+/// the object-store generalization of [`crate::adios::bp::drained_steps`].
+pub trait LandingStore: Send + Sync {
+    /// Short name for reports ("object-dir", "object-mem", "subfile").
+    fn store_name(&self) -> &'static str;
+
+    /// Land one object.  Overwrites an existing object at the same key.
+    fn put(&self, key: &ObjKey, payload: &[u8]) -> Result<()>;
+
+    /// Fetch one object, digest-verified.
+    fn get(&self, key: &ObjKey) -> Result<Vec<u8>>;
+
+    /// All objects landed at `step` so far, sorted by key.  Uncommitted
+    /// partial puts are visible here — listing is observation, not a
+    /// durability promise; that is what [`Self::commit_step`] adds.
+    fn list_step(&self, step: u64) -> Result<Vec<ObjKey>>;
+
+    /// Remove one object (the reaper path).  Removing a missing object
+    /// is an error: the caller's view of the space is stale.
+    fn delete(&self, key: &ObjKey) -> Result<()>;
+
+    /// Mark `step` complete: every object of the step is landed and the
+    /// step may be served to followers.
+    fn commit_step(&self, step: u64) -> Result<()>;
+
+    /// Number of contiguously committed steps from step 0.
+    fn visible_steps(&self) -> Result<u64>;
+}
+
+// ---------------------------------------------------------------------------
+// DirStore: local-directory reference implementation
+// ---------------------------------------------------------------------------
+
+/// Reference object space: one file per object under a local root.
+///
+/// Layout: `<root>/step00000007/T2.b00003.obj`, each file carrying a
+/// 20-byte header (`OBJ1`, payload length, XXH64) followed by the
+/// payload.  Puts write a temp file and rename, so concurrent writers
+/// (N aggregators, or N ensemble members sharing one space) never
+/// coordinate — there is no shared offset to serialize on.
+pub struct DirStore {
+    root: PathBuf,
+}
+
+impl DirStore {
+    /// Open (creating if needed) an object space rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<DirStore> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root).map_err(|e| {
+            Error::adios(format!("cannot create object space {}: {e}", root.display()))
+        })?;
+        Ok(DirStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Remove every step's commit marker (the writer's open-time stale
+    /// cleanup: a previous run's markers must not make this run's
+    /// still-unwritten steps look visible).  Objects themselves need no
+    /// cleanup — puts overwrite atomically and readers are gated by the
+    /// freshly republished index.
+    pub fn clear_commit_markers(&self) -> Result<()> {
+        if let Ok(entries) = fs::read_dir(&self.root) {
+            for entry in entries.flatten() {
+                let _ = fs::remove_file(entry.path().join(COMMIT_MARKER));
+            }
+        }
+        Ok(())
+    }
+
+    fn obj_path(&self, key: &ObjKey) -> PathBuf {
+        self.root.join(ObjKey::step_dir(key.step)).join(key.file_name())
+    }
+}
+
+impl LandingStore for DirStore {
+    fn store_name(&self) -> &'static str {
+        "object-dir"
+    }
+
+    fn put(&self, key: &ObjKey, payload: &[u8]) -> Result<()> {
+        let dir = self.root.join(ObjKey::step_dir(key.step));
+        fs::create_dir_all(&dir)?;
+        let digest = xxh64(payload, 0);
+        let mut buf = Vec::with_capacity(OBJ_HEADER + payload.len());
+        buf.extend_from_slice(&OBJ_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&digest.to_le_bytes());
+        buf.extend_from_slice(payload);
+        // Atomic publish: a concurrent get/list sees the old object or
+        // the new one, never a torn write.
+        let tmp = dir.join(format!(".put.{}.{}", key.file_name(), std::process::id()));
+        fs::write(&tmp, &buf)?;
+        fs::rename(&tmp, self.obj_path(key))?;
+        Ok(())
+    }
+
+    fn get(&self, key: &ObjKey) -> Result<Vec<u8>> {
+        let path = self.obj_path(key);
+        let bytes = fs::read(&path)
+            .map_err(|e| Error::adios(format!("object {key} missing: {e}")))?;
+        if bytes.len() < OBJ_HEADER {
+            return Err(Error::adios(format!(
+                "object {key}: {} bytes is shorter than the {OBJ_HEADER}-byte header",
+                bytes.len()
+            )));
+        }
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        if magic != OBJ_MAGIC {
+            return Err(Error::adios(format!(
+                "object {key}: bad magic {magic:#010x} (not an object file)"
+            )));
+        }
+        let len = u64::from_le_bytes(bytes[4..12].try_into().unwrap()) as usize;
+        let digest = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        if bytes.len() - OBJ_HEADER != len {
+            return Err(Error::adios(format!(
+                "object {key}: header claims {len} payload bytes, file holds {}",
+                bytes.len() - OBJ_HEADER
+            )));
+        }
+        let payload = &bytes[OBJ_HEADER..];
+        let computed = xxh64(payload, 0);
+        if computed != digest {
+            return Err(Error::adios(format!(
+                "object {key}: checksum mismatch (stored {digest:#018x}, computed \
+                 {computed:#018x}) — corrupted object payload"
+            )));
+        }
+        Ok(payload.to_vec())
+    }
+
+    fn list_step(&self, step: u64) -> Result<Vec<ObjKey>> {
+        let dir = self.root.join(ObjKey::step_dir(step));
+        let mut keys = Vec::new();
+        let entries = match fs::read_dir(&dir) {
+            Ok(e) => e,
+            // A step with no objects yet simply lists empty.
+            Err(_) => return Ok(keys),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some((var, block)) = ObjKey::parse_file_name(name) {
+                keys.push(ObjKey { step, var, block });
+            }
+        }
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn delete(&self, key: &ObjKey) -> Result<()> {
+        let path = self.obj_path(key);
+        fs::remove_file(&path)
+            .map_err(|e| Error::adios(format!("cannot delete object {key}: {e}")))
+    }
+
+    fn commit_step(&self, step: u64) -> Result<()> {
+        let dir = self.root.join(ObjKey::step_dir(step));
+        fs::create_dir_all(&dir)?;
+        let tmp = dir.join(format!(".commit.tmp.{}", std::process::id()));
+        fs::write(&tmp, b"committed\n")?;
+        fs::rename(&tmp, dir.join(COMMIT_MARKER))?;
+        Ok(())
+    }
+
+    fn visible_steps(&self) -> Result<u64> {
+        let mut n = 0u64;
+        while self
+            .root
+            .join(ObjKey::step_dir(n))
+            .join(COMMIT_MARKER)
+            .exists()
+        {
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemStore: fault-injectable in-memory implementation
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct MemInner {
+    /// key → (digest stamped at put time, payload bytes).
+    objects: BTreeMap<ObjKey, (u64, Vec<u8>)>,
+    committed: BTreeSet<u64>,
+    /// Remaining puts that succeed before injected failures begin
+    /// (`None` = never fail).
+    puts_before_failure: Option<usize>,
+}
+
+/// In-memory [`LandingStore`] with fault injection, for failure-mode
+/// tests: puts can be made to fail after a budget, and payloads can be
+/// corrupted in place without updating the stored digest.
+#[derive(Default)]
+pub struct MemStore {
+    inner: Mutex<MemInner>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    /// Allow `n` more successful puts; every put after that errors
+    /// (simulating a store that went away mid-step — the partial-put
+    /// regime a lister must still observe coherently).
+    pub fn fail_puts_after(&self, n: usize) {
+        self.inner.lock().expect("mem store poisoned").puts_before_failure = Some(n);
+    }
+
+    /// Flip one payload byte of an existing object *without* updating
+    /// its digest — the silent-corruption case `get` must catch.
+    pub fn corrupt(&self, key: &ObjKey) -> Result<()> {
+        let mut inner = self.inner.lock().expect("mem store poisoned");
+        let (_, payload) = inner
+            .objects
+            .get_mut(key)
+            .ok_or_else(|| Error::adios(format!("cannot corrupt missing object {key}")))?;
+        if payload.is_empty() {
+            payload.push(0xFF);
+        } else {
+            payload[0] ^= 0x01;
+        }
+        Ok(())
+    }
+
+    /// Number of objects currently held (test introspection).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("mem store poisoned").objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl LandingStore for MemStore {
+    fn store_name(&self) -> &'static str {
+        "object-mem"
+    }
+
+    fn put(&self, key: &ObjKey, payload: &[u8]) -> Result<()> {
+        let mut inner = self.inner.lock().expect("mem store poisoned");
+        if let Some(budget) = inner.puts_before_failure.as_mut() {
+            if *budget == 0 {
+                return Err(Error::adios(format!(
+                    "injected fault: put of object {key} refused"
+                )));
+            }
+            *budget -= 1;
+        }
+        let digest = xxh64(payload, 0);
+        inner.objects.insert(key.clone(), (digest, payload.to_vec()));
+        Ok(())
+    }
+
+    fn get(&self, key: &ObjKey) -> Result<Vec<u8>> {
+        let inner = self.inner.lock().expect("mem store poisoned");
+        let (digest, payload) = inner
+            .objects
+            .get(key)
+            .ok_or_else(|| Error::adios(format!("object {key} missing")))?;
+        let computed = xxh64(payload, 0);
+        if computed != *digest {
+            return Err(Error::adios(format!(
+                "object {key}: checksum mismatch (stored {digest:#018x}, computed \
+                 {computed:#018x}) — corrupted object payload"
+            )));
+        }
+        Ok(payload.clone())
+    }
+
+    fn list_step(&self, step: u64) -> Result<Vec<ObjKey>> {
+        let inner = self.inner.lock().expect("mem store poisoned");
+        Ok(inner
+            .objects
+            .keys()
+            .filter(|k| k.step == step)
+            .cloned()
+            .collect())
+    }
+
+    fn delete(&self, key: &ObjKey) -> Result<()> {
+        let mut inner = self.inner.lock().expect("mem store poisoned");
+        inner
+            .objects
+            .remove(key)
+            .map(|_| ())
+            .ok_or_else(|| Error::adios(format!("cannot delete missing object {key}")))
+    }
+
+    fn commit_step(&self, step: u64) -> Result<()> {
+        self.inner.lock().expect("mem store poisoned").committed.insert(step);
+        Ok(())
+    }
+
+    fn visible_steps(&self) -> Result<u64> {
+        let inner = self.inner.lock().expect("mem store poisoned");
+        let mut n = 0u64;
+        while inner.committed.contains(&n) {
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SubfileStore: the POSIX sub-file layout behind the same trait
+// ---------------------------------------------------------------------------
+
+/// The BP4 POSIX landing layout (`data.{sub}` append files plus drain
+/// watermarks) expressed as a [`LandingStore`].
+///
+/// This is the proof that the trait subsumes the old layout: a put is an
+/// append to the block's sub-file at the next offset, which forces every
+/// writer through one lock per sub-file set — the serialization
+/// [`DirStore`] does not have (and what `fig11_object_contention`
+/// measures).  Object placement (sub-file, offset, length, digest) lives
+/// in the store's in-memory index, exactly the information `md.idx`
+/// records for the real engine; digests are writer-side only because the
+/// byte-compatible sub-file format has no per-object header.
+pub struct SubfileStore {
+    dir: PathBuf,
+    subfiles: u32,
+    /// key → (subfile, offset, length, digest).
+    index: Mutex<HashMap<ObjKey, (u32, u64, u64, u64)>>,
+    /// Serializes appends — the offset arithmetic the object space removes.
+    append_lock: Mutex<()>,
+}
+
+impl SubfileStore {
+    /// Open (creating if needed) a sub-file landing space with
+    /// `subfiles` append files under `dir`.
+    pub fn open(dir: impl AsRef<Path>, subfiles: u32) -> Result<SubfileStore> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        Ok(SubfileStore {
+            dir,
+            subfiles: subfiles.max(1),
+            index: Mutex::new(HashMap::new()),
+            append_lock: Mutex::new(()),
+        })
+    }
+
+    fn subfile_path(&self, sub: u32) -> PathBuf {
+        self.dir.join(format!("data.{sub}"))
+    }
+}
+
+impl LandingStore for SubfileStore {
+    fn store_name(&self) -> &'static str {
+        "subfile"
+    }
+
+    fn put(&self, key: &ObjKey, payload: &[u8]) -> Result<()> {
+        let sub = key.block % self.subfiles;
+        let digest = xxh64(payload, 0);
+        // One writer at a time: the append offset is shared state.
+        let _held = self.append_lock.lock().expect("subfile append lock poisoned");
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.subfile_path(sub))?;
+        let offset = f.seek(SeekFrom::End(0))?;
+        f.write_all(payload)?;
+        f.flush()?;
+        self.index
+            .lock()
+            .expect("subfile index poisoned")
+            .insert(key.clone(), (sub, offset, payload.len() as u64, digest));
+        Ok(())
+    }
+
+    fn get(&self, key: &ObjKey) -> Result<Vec<u8>> {
+        let (sub, offset, len, digest) = *self
+            .index
+            .lock()
+            .expect("subfile index poisoned")
+            .get(key)
+            .ok_or_else(|| Error::adios(format!("object {key} missing from sub-file index")))?;
+        let mut f = fs::File::open(self.subfile_path(sub))?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)?;
+        let computed = xxh64(&buf, 0);
+        if computed != digest {
+            return Err(Error::adios(format!(
+                "object {key}: checksum mismatch (stored {digest:#018x}, computed \
+                 {computed:#018x}) — corrupted object payload"
+            )));
+        }
+        Ok(buf)
+    }
+
+    fn list_step(&self, step: u64) -> Result<Vec<ObjKey>> {
+        let mut keys: Vec<ObjKey> = self
+            .index
+            .lock()
+            .expect("subfile index poisoned")
+            .keys()
+            .filter(|k| k.step == step)
+            .cloned()
+            .collect();
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn delete(&self, key: &ObjKey) -> Result<()> {
+        // Appended bytes cannot be unwritten; deleting drops the index
+        // entry, which is what reaping means for this layout.
+        self.index
+            .lock()
+            .expect("subfile index poisoned")
+            .remove(key)
+            .map(|_| ())
+            .ok_or_else(|| Error::adios(format!("cannot delete missing object {key}")))
+    }
+
+    fn commit_step(&self, step: u64) -> Result<()> {
+        // Visibility for this layout *is* the drain watermark: committing
+        // step S advances every sub-file's watermark to S+1 frames.
+        for sub in 0..self.subfiles {
+            crate::adios::bp::write_drain_watermark(&self.dir, sub, step + 1)?;
+        }
+        Ok(())
+    }
+
+    fn visible_steps(&self) -> Result<u64> {
+        Ok(crate::adios::bp::drained_steps(&self.dir, self.subfiles))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("stormio_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn stores(dir: &Path) -> Vec<Box<dyn LandingStore>> {
+        vec![
+            Box::new(DirStore::open(dir.join("obj")).unwrap()),
+            Box::new(MemStore::new()),
+            Box::new(SubfileStore::open(dir.join("sub"), 2).unwrap()),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_list_delete_all_impls() {
+        let dir = tmp("roundtrip");
+        for store in stores(&dir) {
+            let k0 = ObjKey::new(0, "T2", 0);
+            let k1 = ObjKey::new(0, "T2", 1);
+            let k2 = ObjKey::new(1, "PSFC", 0);
+            store.put(&k0, b"alpha").unwrap();
+            store.put(&k1, b"beta").unwrap();
+            store.put(&k2, b"gamma").unwrap();
+            assert_eq!(store.get(&k0).unwrap(), b"alpha", "{}", store.store_name());
+            assert_eq!(store.get(&k1).unwrap(), b"beta");
+            assert_eq!(store.list_step(0).unwrap(), vec![k0.clone(), k1.clone()]);
+            assert_eq!(store.list_step(1).unwrap(), vec![k2.clone()]);
+            assert_eq!(store.list_step(7).unwrap(), vec![]);
+            // Overwrite is allowed and total.
+            store.put(&k0, b"alpha2").unwrap();
+            assert_eq!(store.get(&k0).unwrap(), b"alpha2");
+            store.delete(&k1).unwrap();
+            assert!(store.get(&k1).is_err());
+            assert!(store.delete(&k1).is_err(), "double delete must error");
+            assert_eq!(store.list_step(0).unwrap(), vec![k0.clone()]);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn visibility_is_committed_prefix() {
+        let dir = tmp("visibility");
+        for store in stores(&dir) {
+            assert_eq!(store.visible_steps().unwrap(), 0);
+            store.put(&ObjKey::new(0, "T2", 0), b"x").unwrap();
+            // Landed but uncommitted: listed, not visible.
+            assert_eq!(store.list_step(0).unwrap().len(), 1, "{}", store.store_name());
+            assert_eq!(store.visible_steps().unwrap(), 0);
+            store.commit_step(0).unwrap();
+            assert_eq!(store.visible_steps().unwrap(), 1);
+            // A gap keeps the visible prefix short.
+            store.commit_step(2).unwrap();
+            assert_eq!(store.visible_steps().unwrap(), 1);
+            store.commit_step(1).unwrap();
+            assert_eq!(store.visible_steps().unwrap(), 3);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_payload_is_descriptive_error_not_panic() {
+        // MemStore: corrupt in place under the digest.
+        let mem = MemStore::new();
+        let key = ObjKey::new(3, "U", 5);
+        mem.put(&key, b"weather data").unwrap();
+        mem.corrupt(&key).unwrap();
+        let err = mem.get(&key).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("corrupted object payload"), "{err}");
+
+        // DirStore: flip a payload byte on disk behind the store's back.
+        let dir = tmp("corrupt");
+        let ds = DirStore::open(&dir).unwrap();
+        ds.put(&key, b"weather data").unwrap();
+        let path = ds.obj_path(&key);
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        let err = ds.get(&key).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // Truncation below the header is its own descriptive error.
+        fs::write(&path, b"OB").unwrap();
+        assert!(ds.get(&key).unwrap_err().to_string().contains("header"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_put_is_visible_to_lister() {
+        // A writer that dies mid-step leaves the landed prefix listable
+        // (and readable), while visibility stays behind the commit.
+        let mem = MemStore::new();
+        mem.fail_puts_after(2);
+        mem.put(&ObjKey::new(0, "T2", 0), b"a").unwrap();
+        mem.put(&ObjKey::new(0, "T2", 1), b"b").unwrap();
+        let err = mem.put(&ObjKey::new(0, "T2", 2), b"c").unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        let listed = mem.list_step(0).unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(mem.get(&listed[0]).unwrap(), b"a");
+        assert_eq!(mem.visible_steps().unwrap(), 0);
+    }
+
+    #[test]
+    fn subfile_store_watermarks_are_visibility() {
+        // The POSIX layout's drain watermark files double as the
+        // object-visibility listing.
+        let dir = tmp("wm");
+        let ss = SubfileStore::open(dir.join("sub"), 3).unwrap();
+        ss.put(&ObjKey::new(0, "T2", 0), b"one").unwrap();
+        ss.put(&ObjKey::new(0, "T2", 1), b"two").unwrap();
+        assert_eq!(ss.visible_steps().unwrap(), 0);
+        ss.commit_step(0).unwrap();
+        assert_eq!(ss.visible_steps().unwrap(), 1);
+        assert_eq!(
+            crate::adios::bp::drained_steps(&dir.join("sub"), 3),
+            1,
+            "commit must be expressed through the real watermark files"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_file_names_roundtrip() {
+        for key in [
+            ObjKey::new(0, "T2", 0),
+            ObjKey::new(12, "SOIL_M", 31),
+            ObjKey::new(3, "Q vapor/2", 7), // hostile name is escaped
+        ] {
+            let name = key.file_name();
+            assert!(!name.contains('/'), "{name}");
+            let (var, block) = ObjKey::parse_file_name(&name).unwrap();
+            assert_eq!(block, key.block);
+            if key.var.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                assert_eq!(var, key.var);
+            }
+        }
+        assert!(ObjKey::parse_file_name(".commit").is_none());
+        assert!(ObjKey::parse_file_name("data.0").is_none());
+    }
+}

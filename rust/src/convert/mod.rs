@@ -424,6 +424,67 @@ mod tests {
     }
 
     #[test]
+    fn object_target_converts_and_stamps_served_tier() {
+        let dir = tmp("obj2nc");
+        let d2 = dir.clone();
+        run_world(4, 2, move |mut comm| {
+            let cfg = Bp4Config {
+                name: "hist".into(),
+                pfs_dir: d2.join("pfs"),
+                bb_root: d2.join("bb"),
+                target: Target::Object,
+                operator: OperatorConfig::blosc(Codec::Zstd),
+                aggs_per_node: 1,
+                cost: CostModel::new(HardwareSpec::paper_testbed(2)),
+                pack_threads: 0,
+                async_io: true,
+                drain_throttle: None,
+                live_publish: false,
+            };
+            let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..2u64 {
+                eng.begin_step().unwrap();
+                eng.put_f32(
+                    Variable::global("T2", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                    (0..6).map(|i| (s * 100 + r * 6 + i) as f32).collect(),
+                )
+                .unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap();
+        });
+        // The plain directory converter follows the object-backed stream
+        // transparently (blocks come from hist.obj, not data.*).
+        let paths = bp_to_nc_all(&dir.join("pfs/hist.bp"), &dir.join("nc"), true).unwrap();
+        assert_eq!(paths.len(), 2);
+        let rd = CdfReader::open(&paths[1]).unwrap();
+        let t2 = rd.read_var_f32("T2").unwrap();
+        assert_eq!(t2.len(), 24);
+        assert_eq!(t2[13], 113.0);
+        // A tiered follow over the same stream labels its provenance.
+        let mut src = crate::adios::bp::follower::TieredFollower::open(
+            dir.join("pfs/hist.bp"),
+            dir.join("bb"),
+            Duration::from_millis(1),
+        )
+        .unwrap();
+        let paths =
+            stream_to_nc(&mut src, &dir.join("nc_t"), "hist", true, Duration::from_secs(10))
+                .unwrap();
+        assert_eq!(paths.len(), 2);
+        let rd = CdfReader::open(&paths[0]).unwrap();
+        assert!(
+            rd.attrs
+                .iter()
+                .any(|(k, v)| k == "SERVED_TIER" && v == "object"),
+            "converted file must carry SERVED_TIER=object: {:?}",
+            rd.attrs
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn stitch_split_reassembles() {
         let dir = tmp("stitch");
         let d2 = dir.clone();

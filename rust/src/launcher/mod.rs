@@ -23,8 +23,9 @@
 //!   adios2_xml             = 'adios2.xml',
 //!   adios2_num_aggregators = 1,        ! per node, or 'auto'
 //!   adios2_compression     = 'lz4',    ! none|blosclz|lz4|zlib|zstd|auto
-//!   adios2_target          = 'pfs',    ! pfs | bb | auto
+//!   adios2_target          = 'pfs',    ! pfs | bb | object | auto
 //!   adios2_drain           = .false.,
+//!   adios2_ensemble_writers = 1,       ! concurrent runs sharing the store
 //!   adios2_sst_data_plane  = 'lanes',  ! lanes | funnel | auto (SST)
 //!   adios2_sst_address     = 'h:p,h:p',! SST consumer list (fan-out)
 //!   adios2_live_publish    = .false.,  ! per-step md.idx for followers
@@ -710,6 +711,55 @@ mod tests {
         assert_eq!(plan2.aggs_per_node.value, 3);
         assert_eq!(plan2.aggs_per_node.source, DecisionSource::Namelist);
         assert_eq!(plan2.codec.source, DecisionSource::Auto);
+    }
+
+    #[test]
+    fn object_target_namelist_resolves_end_to_end() {
+        let nl = Namelist::parse(
+            r#"
+ &time_control
+   io_form_history = 22,
+   adios2_target = 'object',
+ /
+ &domains
+   e_we = 64, e_sn = 64, e_vert = 2,
+ /
+ &stormio
+   ranks = 8, ranks_per_node = 4, nodes = 2,
+ /
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/base")).unwrap();
+        let adios = cfg.adios(std::path::Path::new("/base")).unwrap();
+        let plan = cfg.resolve_plan(&adios).unwrap();
+        assert_eq!(plan.target.value, Target::Object);
+        assert_eq!(plan.target.source, DecisionSource::Namelist);
+        assert!(plan.render("wrf_history").contains("object"));
+        // An auto target under an 8-member ensemble resolves to the
+        // object space through the three-way sweep.
+        let nl = Namelist::parse(
+            r#"
+ &time_control
+   io_form_history = 22,
+   adios2_target = 'auto',
+   adios2_ensemble_writers = 8,
+ /
+ &domains
+   e_we = 64, e_sn = 64, e_vert = 2,
+ /
+ &stormio
+   ranks = 8, ranks_per_node = 4, nodes = 2, volume_scale = 160.0,
+ /
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/base")).unwrap();
+        assert_eq!(cfg.intent.ensemble_writers, Some(8));
+        let adios = cfg.adios(std::path::Path::new("/base")).unwrap();
+        let plan = cfg.resolve_plan(&adios).unwrap();
+        assert_eq!(plan.target.value, Target::Object);
+        assert_eq!(plan.target.source, DecisionSource::Auto);
     }
 
     #[test]

@@ -19,6 +19,9 @@ USAGE:
       'auto' sentinels, decided from the cost model) and print the
       decision table with provenance plus the predicted virtual costs
       (t_write, time_to_first_analysis) — without running the model.
+      The target sweep is three-way (pfs | bb | object); with
+      adios2_ensemble_writers > 1 it scores time-to-durable under
+      cross-run PFS contention.
 
   stormio convert <dir.bp> <out_dir> [--no-compress]
       Convert every step of a BP directory to NetCDF-style files
@@ -31,7 +34,9 @@ USAGE:
       published; exits when the producer completes.  With --bb, tail
       a draining burst-buffer run through both tiers: each step is
       read from the node-local replica until the drain watermark
-      says its PFS copy is complete ("follow the drain").
+      says its PFS copy is complete (\"follow the drain\").
+      Streams written with adios2_target = 'object' are followed
+      transparently: blocks come from the run's object space.
 
   stormio insitu <namelist.input> [--artifacts DIR]
       Run a forecast streaming over the SST fan-out data plane to
@@ -130,10 +135,14 @@ fn real_main() -> stormio::Result<i32> {
                 let mut src =
                     stormio::adios::bp::follower::TieredFollower::open(&bp, &bb_root, poll)?;
                 let paths = convert::stream_to_nc(&mut src, &out, &stem, compress, timeout)?;
-                let (bb, pfs) = src.tier_counts();
+                let (bb, fin) = src.tier_counts();
+                let fin_label = match src.final_tier_name() {
+                    "object" => "object space",
+                    _ => "PFS",
+                };
                 println!(
                     "followed {} live across tiers: converted {} step(s) in {:.2}s \
-                     ({bb} served from the burst buffer, {pfs} from the PFS)",
+                     ({bb} served from the burst buffer, {fin} from the {fin_label})",
                     bp.display(),
                     paths.len(),
                     sw.secs()

@@ -124,6 +124,11 @@ pub struct IoIntent {
     pub pack_threads: Option<usize>,
     /// `AsyncIO` (background append/drain pipeline).
     pub async_io: Option<bool>,
+    /// `adios2_ensemble_writers` / `EnsembleWriters`: concurrent
+    /// ensemble-member runs sharing the final store.  Feeds the planner's
+    /// three-way target sweep (cross-run PFS contention vs independent
+    /// object-space puts); absent means the workload shape's own count.
+    pub ensemble_writers: Option<usize>,
     /// Operator template from the XML `<operator>` element: preserves
     /// shuffle / lossy bit-rounding settings when only the codec is
     /// (re)decided.
@@ -143,6 +148,7 @@ fn parse_target(s: &str, drain: bool) -> Result<Target> {
     match s.to_ascii_lowercase().as_str() {
         "pfs" | "filesystem" => Ok(Target::Pfs),
         "bb" | "burstbuffer" | "nvme" => Ok(Target::BurstBuffer { drain }),
+        "object" | "objectstore" | "obj" => Ok(Target::Object),
         other => Err(Error::config(format!("unknown target `{other}`"))),
     }
 }
@@ -200,6 +206,14 @@ impl IoIntent {
         }
         if let Some(n) = tc.get_i64("frames_per_outfile") {
             intent.frames_per_outfile = Some(n.max(0) as usize);
+        }
+        if let Some(n) = tc.get_i64("adios2_ensemble_writers") {
+            if n < 1 {
+                return Err(Error::config(format!(
+                    "adios2_ensemble_writers = {n} must be >= 1"
+                )));
+            }
+            intent.ensemble_writers = Some(n as usize);
         }
         Ok(intent)
     }
@@ -262,6 +276,16 @@ impl IoIntent {
         if merged.async_io.is_none() {
             merged.async_io = Some(io.param_bool("AsyncIO", true)?);
         }
+        if merged.ensemble_writers.is_none() {
+            if let Some(s) = io.param("EnsembleWriters") {
+                let n = s.parse::<usize>().ok().filter(|n| *n >= 1).ok_or_else(|| {
+                    Error::config(format!(
+                        "EnsembleWriters={s} is not a positive integer"
+                    ))
+                })?;
+                merged.ensemble_writers = Some(n);
+            }
+        }
         Ok(merged)
     }
 }
@@ -305,6 +329,31 @@ mod tests {
         assert!(IoIntent::from_time_control(&tc("adios2_num_aggregators = 'many',")).is_err());
         assert!(IoIntent::from_time_control(&tc("adios2_compression = 'snappy',")).is_err());
         assert!(IoIntent::from_time_control(&tc("adios2_target = 'tape',")).is_err());
+    }
+
+    #[test]
+    fn object_target_and_ensemble_writers_parse() {
+        let g = tc("adios2_target = 'object',\n adios2_ensemble_writers = 8,");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.target.setting, Setting::Explicit(Target::Object));
+        assert_eq!(i.target.origin, Origin::Namelist);
+        assert_eq!(i.ensemble_writers, Some(8));
+        // The drain flag is meaningless for the object space and must not
+        // perturb the parse.
+        let g = tc("adios2_target = 'object',\n adios2_drain = .true.,");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.target.setting, Setting::Explicit(Target::Object));
+        assert!(
+            IoIntent::from_time_control(&tc("adios2_ensemble_writers = 0,")).is_err()
+        );
+        // XML spelling.
+        let mut io = IoConfig::new("hist", EngineKind::Bp4);
+        io.params.insert("Target".into(), "object".into());
+        io.params.insert("EnsembleWriters".into(), "4".into());
+        let m = IoIntent::default().merge_io_config(&io).unwrap();
+        assert_eq!(m.target.setting, Setting::Explicit(Target::Object));
+        assert_eq!(m.target.origin, Origin::Xml);
+        assert_eq!(m.ensemble_writers, Some(4));
     }
 
     #[test]

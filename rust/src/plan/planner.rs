@@ -87,18 +87,25 @@ fn decide<T>(knob: Knob<T>, auto: impl FnOnce() -> T, default: T) -> Decision<T>
 }
 
 /// The workload shape the planner scores against: the virtual
-/// (CONUS-scale) byte volume of one history step.
+/// (CONUS-scale) byte volume of one history step, and how many
+/// concurrent *runs* share the final store.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkloadShape {
     /// Uncompressed virtual bytes of one step (physical × volume_scale).
     pub step_bytes: f64,
+    /// Concurrent ensemble-member runs writing to the shared final store
+    /// (1 = a lone run, the paper's fig 4/7 regime).  Drives the
+    /// three-way target sweep: N runs contend on one PFS file tree but
+    /// put into the object space independently (DESIGN.md §13).
+    pub writers: usize,
 }
 
 impl WorkloadShape {
-    /// The paper's CONUS 2.5 km frame (~8 GB).
+    /// The paper's CONUS 2.5 km frame (~8 GB), one run.
     pub fn paper() -> WorkloadShape {
         WorkloadShape {
             step_bytes: crate::workload::PAPER_FRAME_BYTES,
+            writers: 1,
         }
     }
 
@@ -106,7 +113,14 @@ impl WorkloadShape {
     pub fn from_physical(frame_bytes: u64, volume_scale: f64) -> WorkloadShape {
         WorkloadShape {
             step_bytes: frame_bytes as f64 * volume_scale,
+            writers: 1,
         }
+    }
+
+    /// Set the concurrent-ensemble-writer count.
+    pub fn with_writers(mut self, writers: usize) -> WorkloadShape {
+        self.writers = writers.max(1);
+        self
     }
 }
 
@@ -247,6 +261,7 @@ impl IoPlan {
             Target::Pfs => "pfs",
             Target::BurstBuffer { drain: true } => "burstbuffer+drain",
             Target::BurstBuffer { drain: false } => "burstbuffer",
+            Target::Object => "object",
         }
     }
 
@@ -414,6 +429,40 @@ impl Planner {
         }
     }
 
+    /// Chain-gather + landing time of `stored` bytes through `naggs`
+    /// aggregators onto `target`.  The object space is charged its own
+    /// put path (per-writer pipeline capped by a fair share of the
+    /// aggregate ingest, [`CostModel::t_obj_put`] with the shape's
+    /// ensemble-writer count) instead of the file-store model.
+    fn t_landing(&self, stored: f64, naggs: usize, target: Target) -> f64 {
+        match target {
+            Target::Object => {
+                self.cost.t_chain_gather(stored, naggs)
+                    + self.cost.t_obj_put(stored, self.shape.writers)
+            }
+            _ => {
+                let bb = matches!(target, Target::BurstBuffer { .. });
+                self.cost.t_bp4_perceived(stored, naggs, bb)
+            }
+        }
+    }
+
+    /// Metadata charge of one step on `target`: sub-file + index creates
+    /// through the MDS storm formula for the file targets, one index
+    /// create plus flat per-key inserts (one object per producer block)
+    /// for the object space.
+    fn t_metadata(&self, naggs: usize, target: Target, frames_per_outfile: usize) -> f64 {
+        match target {
+            Target::Object => {
+                // ~2 history vars' worth of per-rank blocks: a flat,
+                // sub-percent correction, not a decision driver.
+                self.cost.t_obj_md(self.cost.hw.ranks().max(1) * 2)
+                    + self.cost.t_mds_creates(1) / self.frames_per_file(frames_per_outfile)
+            }
+            _ => self.cost.t_mds_creates(naggs + 1) / self.frames_per_file(frames_per_outfile),
+        }
+    }
+
     /// Per-step virtual cost of a BP4 write with `aggs_per_node`
     /// aggregators landing `stored` bytes on `target`.
     pub fn score_aggregators(
@@ -424,9 +473,7 @@ impl Planner {
         frames_per_outfile: usize,
     ) -> f64 {
         let naggs = aggs_per_node * self.cost.hw.nodes.max(1);
-        let bb = matches!(target, Target::BurstBuffer { .. });
-        self.cost.t_bp4_perceived(stored, naggs, bb)
-            + self.cost.t_mds_creates(naggs + 1) / self.frames_per_file(frames_per_outfile)
+        self.t_landing(stored, naggs, target) + self.t_metadata(naggs, target, frames_per_outfile)
     }
 
     /// Sweep the aggregator candidates; returns (argmin, its score).
@@ -446,15 +493,48 @@ impl Planner {
         best
     }
 
-    /// Auto target: burst buffer (with drain back to the PFS) when its
-    /// best sweep point beats the best pure-PFS sweep point.
+    /// Auto target at the shape's own ensemble-writer count.
     pub fn choose_target(&self, frames_per_outfile: usize) -> Target {
-        let (_, pfs) = self.choose_aggregators(Target::Pfs, frames_per_outfile);
-        let (_, bb) = self.choose_aggregators(
-            Target::BurstBuffer { drain: true },
-            frames_per_outfile,
-        );
-        if bb < pfs {
+        self.choose_target_for(frames_per_outfile, self.shape.writers)
+    }
+
+    /// The three-way target sweep (DESIGN.md §13).
+    ///
+    /// A lone run (`writers == 1`) is scored on the app-perceived basis —
+    /// the paper's fig 4/7 regime, where the NVMe burst buffer wins at
+    /// CONUS scale and the object space's cross-run isolation buys
+    /// nothing.  With `writers > 1` concurrent ensemble members sharing
+    /// the final store, the basis switches to time-to-durable: direct PFS
+    /// writes *and* the burst-buffer drain pay the cross-run seek
+    /// contention factor, while each member puts into the object space
+    /// independently (capped only by a fair share of its aggregate
+    /// ingest).
+    pub fn choose_target_for(&self, frames_per_outfile: usize, writers: usize) -> Target {
+        let p = if writers == self.shape.writers {
+            self.clone()
+        } else {
+            let mut p = self.clone();
+            p.shape.writers = writers.max(1);
+            p
+        };
+        let (_, pfs) = p.choose_aggregators(Target::Pfs, frames_per_outfile);
+        let (_, bb) =
+            p.choose_aggregators(Target::BurstBuffer { drain: true }, frames_per_outfile);
+        if p.shape.writers <= 1 {
+            return if bb < pfs {
+                Target::BurstBuffer { drain: true }
+            } else {
+                Target::Pfs
+            };
+        }
+        let c = p.cost.cross_run_contention(p.shape.writers);
+        let pfs_durable = pfs * c;
+        let bb_durable = bb
+            + p.cost.t_bb_drain(p.shape.step_bytes, p.cost.hw.nodes.max(1)) * c;
+        let (_, obj) = p.choose_aggregators(Target::Object, frames_per_outfile);
+        if obj <= pfs_durable && obj <= bb_durable {
+            Target::Object
+        } else if bb_durable < pfs_durable {
             Target::BurstBuffer { drain: true }
         } else {
             Target::Pfs
@@ -472,13 +552,11 @@ impl Planner {
     ) -> f64 {
         let v = self.shape.step_bytes;
         let naggs = aggs_per_node * self.cost.hw.nodes.max(1);
-        let bb = matches!(target, Target::BurstBuffer { .. });
         match prof {
-            None => self.cost.t_bp4_perceived(v, naggs, bb),
+            None => self.t_landing(v, naggs, target),
             Some(p) => {
                 let stored = v / p.ratio.max(1.0);
-                self.cost.t_compress(v, p.compress_bps)
-                    + self.cost.t_bp4_perceived(stored, naggs, bb)
+                self.cost.t_compress(v, p.compress_bps) + self.t_landing(stored, naggs, target)
             }
         }
     }
@@ -545,6 +623,15 @@ impl Planner {
 
     /// Resolve every knob of `intent` for `engine` into an [`IoPlan`].
     pub fn plan(&self, engine: EngineKind, intent: &IoIntent) -> Result<IoPlan> {
+        // An explicit `adios2_ensemble_writers` overrides the shape's
+        // writer count so every downstream score (target sweep, codec,
+        // prediction) sees the same contention regime.
+        let writers = intent.ensemble_writers.unwrap_or(self.shape.writers).max(1);
+        if writers != self.shape.writers {
+            let mut p = self.clone();
+            p.shape.writers = writers;
+            return p.plan(engine, intent);
+        }
         let frames_per_outfile = intent.frames_per_outfile.unwrap_or(1);
         let live_publish = intent.live_publish.unwrap_or(false);
 
@@ -687,10 +774,9 @@ impl Planner {
         };
         match engine {
             EngineKind::Bp4 => {
-                let bb = matches!(target, Target::BurstBuffer { .. });
                 let t_write = t_comp
-                    + cm.t_bp4_perceived(stored, naggs, bb)
-                    + cm.t_mds_creates(naggs + 1) / self.frames_per_file(frames_per_outfile);
+                    + self.t_landing(stored, naggs, target)
+                    + self.t_metadata(naggs, target, frames_per_outfile);
                 let t_drain = match target {
                     Target::BurstBuffer { drain: true } => {
                         cm.t_bb_drain(stored, cm.hw.nodes.max(1))
@@ -795,7 +881,10 @@ mod tests {
         // of the direct fan-out exceeds the relay's serial gather.
         let p = Planner::new(
             CostModel::new(HardwareSpec::paper_testbed(1)),
-            WorkloadShape { step_bytes: 1.0e4 },
+            WorkloadShape {
+                step_bytes: 1.0e4,
+                writers: 1,
+            },
         );
         let per_consumer = vec![1.0e4; 64];
         let adv = p.cost.fanout_advantage(1.0e4, &per_consumer, 1);
@@ -862,6 +951,57 @@ mod tests {
         ));
         // Predicted durable time includes the background drain.
         assert!(plan.predicted.t_durable > plan.predicted.t_write);
+    }
+
+    #[test]
+    fn three_way_sweep_prefers_object_for_ensembles() {
+        let p = planner(8);
+        // A lone run keeps the paper's answer: the burst buffer.
+        assert_eq!(
+            p.choose_target_for(1, 1),
+            Target::BurstBuffer { drain: true }
+        );
+        // N members sharing one PFS: the contention-free object space
+        // wins on time-to-durable, and keeps winning as N grows.
+        for writers in [2usize, 4, 8, 16] {
+            assert_eq!(
+                p.choose_target_for(1, writers),
+                Target::Object,
+                "{writers} writers must resolve to the object space"
+            );
+        }
+        // The resolved plan records the auto provenance and the object
+        // target's durable-on-return semantics (no drain tail).
+        let plan = p
+            .plan(
+                EngineKind::Bp4,
+                &intent("adios2_target = 'auto',\n adios2_ensemble_writers = 8,"),
+            )
+            .unwrap();
+        assert_eq!(plan.target.value, Target::Object);
+        assert_eq!(plan.target.source, DecisionSource::Auto);
+        assert_eq!(plan.target_name(), "object");
+        assert!(plan.render("ens").contains("object"));
+        assert!((plan.predicted.t_durable - plan.predicted.t_write).abs() < 1e-12);
+        assert!(plan.predicted.t_write > 0.0);
+    }
+
+    #[test]
+    fn explicit_object_target_passes_through() {
+        let p = planner(8);
+        let plan = p
+            .plan(EngineKind::Bp4, &intent("adios2_target = 'object',"))
+            .unwrap();
+        assert_eq!(plan.target.value, Target::Object);
+        assert_eq!(plan.target.source, DecisionSource::Namelist);
+        assert!(!plan.bb_live());
+        // Scoring an explicit object plan must use the object landing
+        // model, not the PFS stream model: at one writer the put pipeline
+        // (1.8 GB/s) beats the ~1 GB/s spinning PFS.
+        let v = p.shape.step_bytes;
+        let obj = p.score_aggregators(1, v, Target::Object, 1);
+        let pfs = p.score_aggregators(1, v, Target::Pfs, 1);
+        assert!(obj < pfs, "object landing {obj} must beat PFS {pfs}");
     }
 
     #[test]

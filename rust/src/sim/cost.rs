@@ -159,6 +159,41 @@ impl CostModel {
         read.max(write)
     }
 
+    /// Effective per-run put bandwidth into the shared object space when
+    /// `writers` concurrent runs (ensemble members) write to it: each run
+    /// is capped by its own client RPC/RDMA pipeline and by a fair share
+    /// of the aggregate ingest — no shared append offsets, no seek
+    /// thrash (DESIGN.md §13).
+    pub fn obj_bw(&self, writers: usize) -> f64 {
+        let w = writers.max(1) as f64;
+        self.hw.obj_put_bw.min(self.hw.obj_agg_bw / w)
+    }
+
+    /// Time for one run to put `bytes` into the object space while
+    /// `writers` runs write concurrently.
+    pub fn t_obj_put(&self, bytes: f64, writers: usize) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.obj_bw(writers)
+    }
+
+    /// Per-object metadata overhead: `objects` independent key inserts.
+    /// A flat per-key charge — the KV tier has no directory-lock convoy,
+    /// so this does *not* follow the MDS storm formula.
+    pub fn t_obj_md(&self, objects: usize) -> f64 {
+        objects as f64 * self.hw.obj_md_s
+    }
+
+    /// Cross-run contention factor on the PFS for `writers` concurrent
+    /// *runs* (ensemble members) sharing one file system: unrelated file
+    /// trees interleave seeks, degrading every run by `1 + c·(N−1)` on
+    /// top of the per-run stream model.  Multiplies a single-run PFS
+    /// write or drain time.
+    pub fn cross_run_contention(&self, writers: usize) -> f64 {
+        1.0 + self.hw.pfs_cross_run_c * writers.saturating_sub(1) as f64
+    }
+
     /// Read `bytes` from the PFS through `streams` concurrent reader
     /// streams (post-hoc analysis / PFS-side follow): the backend's
     /// bandwidth curve is symmetric with writes at this model's fidelity.
@@ -505,6 +540,44 @@ mod tests {
         let bb36 = m8.t_bp4_perceived(v, 288, true);
         assert!((bb1 - bb36).abs() < bb1 * 0.2, "NVMe path ~flat in aggs");
         assert!(bb1 < m8.t_bp4_perceived(v, 8, false), "BB beats PFS");
+    }
+
+    #[test]
+    fn object_store_charges() {
+        let m = cm(8);
+        // A single writer is capped by its own pipeline, not the aggregate.
+        assert_eq!(m.obj_bw(1), m.hw.obj_put_bw);
+        // Many writers share the aggregate fairly.
+        let w32 = m.obj_bw(32);
+        assert!((w32 - m.hw.obj_agg_bw / 32.0).abs() / w32 < 1e-9);
+        let v = 8e9;
+        assert!(m.t_obj_put(v, 32) > m.t_obj_put(v, 1));
+        assert_eq!(m.t_obj_put(0.0, 4), 0.0);
+        assert!((m.t_obj_md(1000) - 1000.0 * m.hw.obj_md_s).abs() < 1e-12);
+        assert_eq!(m.cross_run_contention(1), 1.0);
+        assert!(m.cross_run_contention(8) > 5.0);
+    }
+
+    #[test]
+    fn object_advantage_grows_with_writer_count() {
+        // The fig 11 story at model level: one run on the paper PFS vs the
+        // object space is a modest win, but at ensemble scale the shared
+        // PFS degrades with cross-run contention much faster than the
+        // object space's fair-share ingest divides.
+        let m = cm(8);
+        let v = 8e9;
+        let mut last = 0.0;
+        for writers in [1usize, 2, 4, 8, 16] {
+            let pfs = m.t_pfs_write(v, 8) * m.cross_run_contention(writers);
+            let obj = m.t_obj_put(v, writers) + m.t_obj_md(288 * 2);
+            let adv = pfs / obj;
+            assert!(
+                adv > last,
+                "advantage must grow with N: {adv:.2} at {writers} writers vs {last:.2}"
+            );
+            last = adv;
+        }
+        assert!(last > 8.0, "object advantage at 16 writers: {last:.1}");
     }
 
     #[test]

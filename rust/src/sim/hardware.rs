@@ -54,6 +54,22 @@ pub struct HardwareSpec {
     /// Sequential read bandwidth (drain path).
     pub nvme_read_bw: f64,
 
+    // ---- shared object store (DAOS-class landing tier) ---------------------
+    /// Per-writer put bandwidth ceiling into the object space (one
+    /// client's RPC/RDMA pipeline).
+    pub obj_put_bw: f64,
+    /// Aggregate object-space ingest across all concurrent writers —
+    /// NVMe-backed key-value servers, far above the spinning-disk PFS.
+    pub obj_agg_bw: f64,
+    /// Per-object metadata/key-insert cost (no directory-lock convoy:
+    /// flat per-key charge instead of the MDS storm formula).
+    pub obj_md_s: f64,
+    /// Cross-run PFS contention coefficient for N concurrent *runs*
+    /// (ensemble members) sharing one file system: effective slowdown
+    /// `1 + c·(runs − 1)` — seek interleaving between unrelated file
+    /// trees, on top of the per-run stream model.
+    pub pfs_cross_run_c: f64,
+
     // ---- workload scaling ---------------------------------------------------
     /// Multiplier mapping physically-moved bytes to CONUS-2.5km-scale bytes
     /// for *virtual time accounting only* (DESIGN.md §Substitutions: the
@@ -84,6 +100,10 @@ impl HardwareSpec {
             rmw_inflation: 1.15,
             nvme_write_bw: 1.1e9,  // Intel DC P4510 datasheet
             nvme_read_bw: 2.85e9,
+            obj_put_bw: 1.8e9,  // one client's RPC/RDMA pipeline
+            obj_agg_bw: 24.0e9, // NVMe-backed KV servers, 2 × 100 GbE ingress
+            obj_md_s: 2e-5,     // flat per-key insert, no create storm
+            pfs_cross_run_c: 0.7,
             volume_scale: 1.0,
         }
     }
