@@ -77,6 +77,7 @@ fn main() {
         // observably distinct regardless of disk speed.
         drain_throttle: Some(throttle),
         live_publish: true,
+        object_retain_steps: None,
     };
     let bp = dir.join("pfs/follow.bp");
     let bb_root = dir.join("bb");

@@ -113,6 +113,7 @@ fn main() {
                     async_io: pipelined,
                     drain_throttle: None,
                     live_publish: false,
+                    object_retain_steps: None,
                 };
                 let wlc = wl.clone();
                 let t0 = Instant::now();
@@ -170,6 +171,7 @@ fn main() {
             async_io: true,
             drain_throttle: None,
             live_publish: false,
+            object_retain_steps: None,
         };
         let wlc = wl.clone();
         let t0 = Instant::now();

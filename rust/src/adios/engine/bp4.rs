@@ -93,6 +93,14 @@ pub struct Bp4Config {
     /// it is still being written.  `close` additionally stamps
     /// [`crate::adios::bp::COMPLETE_ATTR`] so followers terminate.
     pub live_publish: bool,
+    /// Object-space retention window (`adios2_object_retain_steps`): after
+    /// each commit, delete the step objects that aged out of the newest-N
+    /// window.  Commit markers are never touched, so `visible_steps`
+    /// stays the monotonic committed prefix and live followers keep
+    /// terminating cleanly; a follower that races a reaped step gets a
+    /// descriptive missing-object error, not corrupt bytes.  `None`
+    /// retains every step; ignored unless `target` is [`Target::Object`].
+    pub object_retain_steps: Option<usize>,
 }
 
 // ---------------------------------------------------------------------------
@@ -965,6 +973,19 @@ impl Engine for Bp4Engine {
                 // shipped its index fragment, so the step is fully landed
                 // in the object space: make it visible.
                 store.commit_step(self.step as u64)?;
+                // Retention GC: the newest-N window slides one step per
+                // commit, so at most one step ages out here (earlier
+                // steps were reaped at earlier commits).  Only the step's
+                // data objects go — the commit marker stays, keeping
+                // `visible_steps` a monotonic committed prefix.
+                if let Some(retain) = self.cfg.object_retain_steps {
+                    let horizon = (self.step as u64 + 1).saturating_sub(retain as u64);
+                    if horizon > 0 {
+                        for key in store.list_step(horizon - 1)? {
+                            store.delete(&key)?;
+                        }
+                    }
+                }
             }
 
             let mut traw = 0u64;
@@ -992,9 +1013,11 @@ impl Engine for Bp4Engine {
                 step: self.step,
                 bytes_raw: traw,
                 bytes_stored: tstored,
-                egress_per_consumer: Vec::new(),
                 real_secs: 0.0, // patched after the closing barrier below
                 cost,
+                // No fan-out lanes in a file engine: egress vector and
+                // crop-cache counters stay at their zero defaults.
+                ..Default::default()
             });
         }
         if self.cfg.live_publish {
@@ -1175,6 +1198,7 @@ mod tests {
             async_io: true,
             drain_throttle: None,
             live_publish: false,
+            object_retain_steps: None,
         }
     }
 

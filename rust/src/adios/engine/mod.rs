@@ -39,6 +39,22 @@ pub struct StepStats {
     /// consumer order (`bytes_stored` is their sum).  Empty for file
     /// engines and single-consumer transports without a fan-out.
     pub egress_per_consumer: Vec<u64>,
+    /// Distinct `(block × box × operator)` crops compressed at the SST
+    /// fan-out lanes this step — the codec passes actually performed for
+    /// boxed subscribers (DESIGN.md §14).  Zero for file engines.
+    pub unique_crops: u64,
+    /// Crop requests served from the lanes' content-addressed frame
+    /// cache instead of running `extract_box` + `compress` again.
+    pub crop_cache_hits: u64,
+    /// Codec passes avoided by consumer grouping + the frame cache: what
+    /// the naive per-consumer path would have run, minus `unique_crops`.
+    pub codec_passes_saved: u64,
+    /// Payload bytes refcount-shared across same-subscription consumers
+    /// instead of being buffered once per lane.
+    pub deduped_egress_bytes: u64,
+    /// Raw bytes fed through the codec for unique crops (the
+    /// `t_fanout_codec` charge basis).
+    pub unique_crop_bytes: u64,
     pub real_secs: f64,
     pub cost: WriteCost,
 }

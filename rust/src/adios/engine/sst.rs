@@ -35,6 +35,19 @@
 //! the lane.  A consumer that dies mid-stream is dropped; survivors keep
 //! receiving every step.
 //!
+//! **Shared-frame egress (DESIGN.md §14).**  Per-step fan-out cost
+//! scales with the number of *unique* `(block × box × operator)` crops,
+//! not the consumer count: consumers are grouped by identical effective
+//! subscription before any codec work, every group shares one
+//! refcounted (`Arc<[u8]>`) serialized payload across its sender
+//! threads, a content-addressed crop cache (keyed on the `CropKey`
+//! content address) makes a
+//! thousand subscribers to the same storm cell cost one `extract_box` +
+//! one `compress` pass, and each source block is decompressed at most
+//! once per step.  `STORMIO_SST_NO_CACHE=1` (or
+//! [`SstEngine::set_frame_cache`]) disables the sharing for A/B runs —
+//! the wire bytes are identical either way.
+//!
 //! Wire protocol (little-endian, all lengths validated against
 //! [`MAX_FRAME_LEN`] before allocation; every block frame carries an
 //! XXH64 checksum the consumer verifies *before* decompressing):
@@ -49,9 +62,11 @@
 //!              | u64 xxh64(frame) | bytes frame } }
 //! ```
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -357,7 +372,10 @@ fn decode_subscription(payload: &[u8]) -> Result<Subscription> {
     Ok(Subscription { entries })
 }
 
-fn sender_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) -> Result<()> {
+/// Lane sender thread.  Payloads arrive refcounted (`Arc<[u8]>`) so the
+/// same serialized step can sit on many consumers' queues without being
+/// cloned per lane; an empty payload is the bye sentinel.
+fn sender_loop(mut stream: TcpStream, rx: Receiver<Arc<[u8]>>) -> Result<()> {
     for msg in rx {
         if msg.is_empty() {
             write_frame(&mut stream, TYPE_BYE, &[])?;
@@ -378,7 +396,7 @@ fn sender_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) -> Result<()> {
 
 /// One consumer lane's background sender (aggregator ranks only).
 struct LaneSender {
-    tx: SyncSender<Vec<u8>>,
+    tx: SyncSender<Arc<[u8]>>,
     handle: JoinHandle<Result<()>>,
 }
 
@@ -401,6 +419,11 @@ pub struct SstEngine {
     subs: Vec<Subscription>,
     /// Consumer count (every rank; sizes the per-step stats exchange).
     nconsumers: usize,
+    /// Per-step crop cache + refcounted payload sharing (DESIGN.md §14).
+    /// `false` (the `STORMIO_SST_NO_CACHE=1` escape hatch) rebuilds every
+    /// consumer's payload independently — byte-identical wire output,
+    /// codec cost linear in consumer count.
+    share_frames: bool,
     report: EngineReport,
     closed: bool,
 }
@@ -502,7 +525,7 @@ impl SstEngine {
                     )));
                 }
                 subs.push(decode_subscription(&payload)?);
-                let (tx, rx): (SyncSender<Vec<u8>>, Receiver<Vec<u8>>) =
+                let (tx, rx): (SyncSender<Arc<[u8]>>, Receiver<Arc<[u8]>>) =
                     sync_channel(QUEUE_STEPS);
                 let handle = std::thread::spawn(move || sender_loop(stream, rx));
                 lanes.push(Some(LaneSender { tx, handle }));
@@ -520,9 +543,22 @@ impl SstEngine {
             lanes,
             subs,
             nconsumers: addrs.len(),
+            share_frames: !matches!(
+                std::env::var("STORMIO_SST_NO_CACHE").as_deref(),
+                Ok("1")
+            ),
             report: EngineReport::default(),
             closed: false,
         })
+    }
+
+    /// Toggle the per-step crop cache + shared-frame egress (defaults to
+    /// on; `STORMIO_SST_NO_CACHE=1` turns it off process-wide).  The
+    /// programmatic switch exists for A/B byte-identity tests and the
+    /// fig12 bench, which must compare both modes in one process without
+    /// racing on the environment.
+    pub fn set_frame_cache(&mut self, on: bool) {
+        self.share_frames = on;
     }
 
     /// Serialize + compress this rank's queued blocks.  The per-block
@@ -593,7 +629,7 @@ fn collect_lane_vars(msgs: &[Vec<u8>]) -> Result<Vec<SstVar>> {
 /// One block as it goes out on one consumer's lane: the member's frame
 /// untouched (full subscription, with the step's precomputed checksum),
 /// or a sub-block cut to the consumer's box and re-compressed at the
-/// lane.
+/// lane (refcounted, so overlapping subscribers share one codec pass).
 enum OutBlock<'a> {
     Full(&'a SstBlock, u64),
     Crop {
@@ -602,137 +638,291 @@ enum OutBlock<'a> {
         count: Vec<u64>,
         raw: u64,
         xxh: u64,
-        frame: Vec<u8>,
+        frame: Arc<[u8]>,
     },
 }
 
-/// Apply one consumer's subscription to the lane's full block set and
-/// serialize its step payload (selection pushdown).  `full_xxh` holds
-/// the per-block checksums of the untouched member frames, computed once
-/// per step and shared by every full-subscription consumer (only crops
-/// hash fresh bytes).  Returns `(payload, frame_bytes)` where
-/// `frame_bytes` is the consumer's wire volume (sum of shipped
-/// compressed frames).
-fn build_consumer_payload(
-    step: u64,
-    vars: &[SstVar],
-    full_xxh: &[Vec<u64>],
-    sub: &Subscription,
+/// Content address of one cropped, re-compressed sub-block: the source
+/// block's identity within the step (variable × block index), the
+/// intersected box, and the operator that coded it.  The lane's block
+/// set is re-collected every step, so cached frames are immutable for
+/// exactly one step and the cache needs no invalidation — it is born
+/// empty in every `end_step` and dropped at its end.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CropKey {
+    var: usize,
+    block: usize,
+    lo: Vec<u64>,
+    cnt: Vec<u64>,
     operator: OperatorConfig,
-) -> Result<(Vec<u8>, u64)> {
-    let mut items: Vec<(&SstVar, Vec<OutBlock>)> = Vec::new();
-    for (vi, v) in vars.iter().enumerate() {
+}
+
+/// One cached crop: compressed frame + checksum, refcounted so every
+/// subscriber's payload references the same compression pass.
+struct CropFrame {
+    raw: u64,
+    xxh: u64,
+    frame: Arc<[u8]>,
+}
+
+/// Per-step fan-out work counters at one lane aggregator, funneled to
+/// rank 0 and folded into [`StepStats`].
+#[derive(Debug, Clone, Copy, Default)]
+struct FanoutStepStats {
+    /// Distinct `(block × box × operator)` crops actually compressed.
+    unique_crops: u64,
+    /// Crop requests served from the content-addressed cache.
+    cache_hits: u64,
+    /// Crop passes the naive per-consumer path would have run (every
+    /// group member counts the group's crops).
+    naive_crop_passes: u64,
+    /// Payload bytes refcount-shared across same-subscription consumers
+    /// instead of being buffered once per lane.
+    deduped_egress_bytes: u64,
+    /// Raw bytes fed through the codec for unique crops (what
+    /// [`CostModel::t_fanout_codec`] charges).
+    unique_crop_bytes: u64,
+}
+
+impl FanoutStepStats {
+    fn codec_passes_saved(&self) -> u64 {
+        self.naive_crop_passes.saturating_sub(self.unique_crops)
+    }
+}
+
+/// Canonical byte key of one consumer's *effective* subscription over
+/// this step's variable set.  Consumers whose subscriptions act
+/// identically on every present variable — whatever their textual form
+/// (`all()` vs. an explicit whole-var list, say) — produce the same key
+/// and share one serialized payload.  Box order is part of the key
+/// because it determines the payload's block order.
+fn effective_sub_key(vars: &[SstVar], sub: &Subscription) -> Vec<u8> {
+    let mut w = Writer::new();
+    for v in vars {
         match sub.wants(&v.name) {
-            VarInterest::Skip => {}
-            VarInterest::Full => {
-                items.push((
-                    v,
-                    v.blocks
-                        .iter()
-                        .zip(&full_xxh[vi])
-                        .map(|(b, x)| OutBlock::Full(b, *x))
-                        .collect(),
-                ));
-            }
+            VarInterest::Skip => w.u8(0),
+            VarInterest::Full => w.u8(1),
             VarInterest::Boxes(boxes) => {
-                let mut blocks = Vec::new();
-                for b in &v.blocks {
-                    // Decompress at most once per block, and only when a
-                    // box actually intersects it.
-                    let mut vals: Option<Vec<f32>> = None;
-                    for (s, c) in &boxes {
-                        // A box whose rank disagrees with the variable
-                        // cannot intersect anything; skip it rather than
-                        // failing every consumer's step.
-                        if s.len() != b.start.len() {
-                            continue;
-                        }
-                        let Some(ov) = block_intersection(&b.start, &b.count, s, c) else {
-                            continue;
-                        };
-                        if vals.is_none() {
-                            vals = Some(b.decode_f32(&v.name)?);
-                        }
-                        let lo: Vec<u64> = ov.iter().map(|(l, _)| *l).collect();
-                        let cnt: Vec<u64> = ov.iter().map(|(l, h)| h - l).collect();
-                        let local_start: Vec<u64> =
-                            lo.iter().zip(&b.start).map(|(l, s0)| l - s0).collect();
-                        let sub_vals = extract_box(
-                            &b.count,
-                            vals.as_ref().expect("decompressed above"),
-                            &local_start,
-                            &cnt,
-                        )?;
-                        let payload = crate::util::f32_slice_as_bytes(&sub_vals);
-                        let frame = operator::compress(payload, operator)?;
-                        blocks.push(OutBlock::Crop {
-                            producer_rank: b.producer_rank,
-                            start: lo,
-                            count: cnt,
-                            raw: payload.len() as u64,
-                            xxh: xxh64(&frame, 0),
-                            frame,
-                        });
-                    }
-                }
-                if !blocks.is_empty() {
-                    items.push((v, blocks));
+                w.u8(2);
+                w.u32(boxes.len() as u32);
+                for (s, c) in &boxes {
+                    w.dims(s);
+                    w.dims(c);
                 }
             }
         }
     }
-    let mut out = Writer::new();
-    out.u64(step);
-    out.u32(items.len() as u32);
-    let mut frame_bytes = 0u64;
-    for (v, blocks) in &items {
-        out.str(&v.name);
-        out.dims(&v.shape);
-        out.u32(blocks.len() as u32);
-        for blk in blocks {
-            let (producer_rank, start, count, raw, xxh, frame): (
-                u32,
-                &[u64],
-                &[u64],
-                u64,
-                u64,
-                &[u8],
-            ) = match blk {
-                OutBlock::Full(b, x) => {
-                    (b.producer_rank, &b.start, &b.count, b.raw, *x, &b.frame)
-                }
-                OutBlock::Crop {
-                    producer_rank,
-                    start,
-                    count,
+    w.into_vec()
+}
+
+/// One step's shared fan-out state at a lane aggregator (DESIGN.md §14):
+/// the lazily decoded source blocks — each decompressed at most once per
+/// step, no matter how many subscribers crop it — plus the
+/// content-addressed crop frame cache and its work counters.
+struct StepFanout<'a> {
+    vars: &'a [SstVar],
+    full_xxh: &'a [Vec<u64>],
+    operator: OperatorConfig,
+    /// Cache + sharing enabled ([`SstEngine::set_frame_cache`]).
+    share: bool,
+    decoded: Vec<Vec<Option<Vec<f32>>>>,
+    crops: HashMap<CropKey, CropFrame>,
+    stats: FanoutStepStats,
+}
+
+impl<'a> StepFanout<'a> {
+    fn new(
+        vars: &'a [SstVar],
+        full_xxh: &'a [Vec<u64>],
+        operator: OperatorConfig,
+        share: bool,
+    ) -> StepFanout<'a> {
+        let decoded = vars.iter().map(|v| vec![None; v.blocks.len()]).collect();
+        StepFanout {
+            vars,
+            full_xxh,
+            operator,
+            share,
+            decoded,
+            crops: HashMap::new(),
+            stats: FanoutStepStats::default(),
+        }
+    }
+
+    /// Decompress source block `(vi, bi)`, at most once per step.
+    fn decode(&mut self, vi: usize, bi: usize) -> Result<&[f32]> {
+        if self.decoded[vi][bi].is_none() {
+            let v = &self.vars[vi];
+            self.decoded[vi][bi] = Some(v.blocks[bi].decode_f32(&v.name)?);
+        }
+        Ok(self.decoded[vi][bi].as_deref().expect("decoded above"))
+    }
+
+    /// Cut the `lo`/`cnt` box out of block `(vi, bi)` and compress it —
+    /// or serve the frame straight from the cache when any earlier
+    /// subscriber (same group or not) already paid for the identical
+    /// crop.  Returns `(raw len, xxh64, frame)`.
+    fn crop(
+        &mut self,
+        vi: usize,
+        bi: usize,
+        lo: &[u64],
+        cnt: &[u64],
+    ) -> Result<(u64, u64, Arc<[u8]>)> {
+        self.stats.naive_crop_passes += 1;
+        let key = CropKey {
+            var: vi,
+            block: bi,
+            lo: lo.to_vec(),
+            cnt: cnt.to_vec(),
+            operator: self.operator,
+        };
+        if self.share {
+            if let Some(c) = self.crops.get(&key) {
+                self.stats.cache_hits += 1;
+                return Ok((c.raw, c.xxh, Arc::clone(&c.frame)));
+            }
+        }
+        let vars = self.vars;
+        let b = &vars[vi].blocks[bi];
+        let local_start: Vec<u64> = lo.iter().zip(&b.start).map(|(l, s0)| l - s0).collect();
+        let sub_vals = {
+            let vals = self.decode(vi, bi)?;
+            extract_box(&b.count, vals, &local_start, cnt)?
+        };
+        let payload = crate::util::f32_slice_as_bytes(&sub_vals);
+        let frame: Arc<[u8]> = operator::compress(payload, self.operator)?.into();
+        let raw = payload.len() as u64;
+        let xxh = xxh64(&frame, 0);
+        self.stats.unique_crops += 1;
+        self.stats.unique_crop_bytes += raw;
+        if self.share {
+            self.crops.insert(
+                key,
+                CropFrame {
                     raw,
                     xxh,
-                    frame,
-                } => (*producer_rank, start, count, *raw, *xxh, frame),
-            };
-            out.u32(producer_rank);
-            out.dims(start);
-            out.dims(count);
-            out.u64(raw);
-            // Wire-integrity checksum over the compressed frame; the
-            // consumer recomputes it before decompressing.
-            out.u64(xxh);
-            out.bytes(frame);
-            frame_bytes += frame.len() as u64;
+                    frame: Arc::clone(&frame),
+                },
+            );
         }
+        Ok((raw, xxh, frame))
     }
-    let payload = out.into_vec();
-    // Fail fast at end_step with an actionable error instead of letting
-    // the consumer reject the frame header mid-stream.
-    if payload.len() as u64 > MAX_FRAME_LEN {
-        return Err(Error::sst(format!(
-            "step {step}: merged lane payload is {} bytes, over the \
-             {MAX_FRAME_LEN}-byte frame cap — use more lanes \
-             (NumAggregatorsPerNode) or compression to shrink per-lane steps",
-            payload.len()
-        )));
+
+    /// Apply one subscription to the lane's full block set and serialize
+    /// its step payload (selection pushdown).  `full_xxh` holds the
+    /// per-block checksums of the untouched member frames, computed once
+    /// per step and shared by every full-subscription consumer (only
+    /// crops hash fresh bytes).  Returns `(payload, frame_bytes,
+    /// ncrops)`: the refcounted payload each group member's lane
+    /// enqueues, the consumer's wire volume (sum of shipped compressed
+    /// frames), and the crop count (each one a codec pass the naive
+    /// per-consumer path would repeat).
+    fn payload_for(&mut self, step: u64, sub: &Subscription) -> Result<(Arc<[u8]>, u64, u64)> {
+        let vars = self.vars;
+        let full_xxh = self.full_xxh;
+        let mut items: Vec<(&SstVar, Vec<OutBlock>)> = Vec::new();
+        let mut ncrops = 0u64;
+        for (vi, v) in vars.iter().enumerate() {
+            match sub.wants(&v.name) {
+                VarInterest::Skip => {}
+                VarInterest::Full => {
+                    items.push((
+                        v,
+                        v.blocks
+                            .iter()
+                            .zip(&full_xxh[vi])
+                            .map(|(b, x)| OutBlock::Full(b, *x))
+                            .collect(),
+                    ));
+                }
+                VarInterest::Boxes(boxes) => {
+                    let mut blocks = Vec::new();
+                    for (bi, b) in v.blocks.iter().enumerate() {
+                        for (s, c) in &boxes {
+                            // A box whose rank disagrees with the
+                            // variable cannot intersect anything; skip it
+                            // rather than failing every consumer's step.
+                            if s.len() != b.start.len() {
+                                continue;
+                            }
+                            let Some(ov) = block_intersection(&b.start, &b.count, s, c)
+                            else {
+                                continue;
+                            };
+                            let lo: Vec<u64> = ov.iter().map(|(l, _)| *l).collect();
+                            let cnt: Vec<u64> = ov.iter().map(|(l, h)| h - l).collect();
+                            let (raw, xxh, frame) = self.crop(vi, bi, &lo, &cnt)?;
+                            ncrops += 1;
+                            blocks.push(OutBlock::Crop {
+                                producer_rank: b.producer_rank,
+                                start: lo,
+                                count: cnt,
+                                raw,
+                                xxh,
+                                frame,
+                            });
+                        }
+                    }
+                    if !blocks.is_empty() {
+                        items.push((v, blocks));
+                    }
+                }
+            }
+        }
+        let mut out = Writer::new();
+        out.u64(step);
+        out.u32(items.len() as u32);
+        let mut frame_bytes = 0u64;
+        for (v, blocks) in &items {
+            out.str(&v.name);
+            out.dims(&v.shape);
+            out.u32(blocks.len() as u32);
+            for blk in blocks {
+                let (producer_rank, start, count, raw, xxh, frame): (
+                    u32,
+                    &[u64],
+                    &[u64],
+                    u64,
+                    u64,
+                    &[u8],
+                ) = match blk {
+                    OutBlock::Full(b, x) => {
+                        (b.producer_rank, &b.start, &b.count, b.raw, *x, &b.frame)
+                    }
+                    OutBlock::Crop {
+                        producer_rank,
+                        start,
+                        count,
+                        raw,
+                        xxh,
+                        frame,
+                    } => (*producer_rank, start, count, *raw, *xxh, frame.as_ref()),
+                };
+                out.u32(producer_rank);
+                out.dims(start);
+                out.dims(count);
+                out.u64(raw);
+                // Wire-integrity checksum over the compressed frame; the
+                // consumer recomputes it before decompressing.
+                out.u64(xxh);
+                out.bytes(frame);
+                frame_bytes += frame.len() as u64;
+            }
+        }
+        let payload = out.into_vec();
+        // Fail fast at end_step with an actionable error instead of
+        // letting the consumer reject the frame header mid-stream.
+        if payload.len() as u64 > MAX_FRAME_LEN {
+            return Err(Error::sst(format!(
+                "step {step}: merged lane payload is {} bytes, over the \
+                 {MAX_FRAME_LEN}-byte frame cap — use more lanes \
+                 (NumAggregatorsPerNode) or compression to shrink per-lane steps",
+                payload.len()
+            )));
+        }
+        Ok((payload.into(), frame_bytes, ncrops))
     }
-    Ok((payload, frame_bytes))
 }
 
 impl Engine for SstEngine {
@@ -772,6 +962,8 @@ impl Engine for SstEngine {
 
         // Per-consumer wire bytes this rank shipped (aggregators only).
         let mut egress = vec![0u64; self.nconsumers];
+        // Fan-out cache/sharing counters (zero on non-aggregators).
+        let mut fanout = FanoutStepStats::default();
         if self.plan.is_aggregator(self.rank) {
             let mut own = Some(msg);
             let members = self.plan.members(self.rank);
@@ -825,38 +1017,68 @@ impl Engine for SstEngine {
             };
             let operator = self.operator;
             let step = self.step as u64;
+            let mut shared = StepFanout::new(&vars, &full_xxh, operator, self.share_frames);
+            // Group live consumers by identical *effective* subscription
+            // BEFORE any codec work: one serialized payload per group,
+            // refcount-shared across every member's sender thread (the
+            // full-subscription fast path is simply the all-Full group).
+            // With the cache disabled every consumer is its own group
+            // and pays its own cut/compress/serialize passes.
+            let mut groups: Vec<(Vec<u8>, Vec<usize>)> = Vec::new();
             for c in 0..self.lanes.len() {
                 if self.lanes[c].is_none() {
                     continue; // consumer already dropped
                 }
-                let (payload, frame_bytes) =
-                    build_consumer_payload(step, &vars, &full_xxh, &self.subs[c], operator)?;
-                // Enqueue for this consumer's background sender (blocks
-                // only when that consumer is QUEUE_STEPS behind —
-                // back-pressure is per consumer × lane).
-                let alive = self.lanes[c]
-                    .as_ref()
-                    .expect("checked above")
-                    .tx
-                    .send(payload)
-                    .is_ok();
-                if alive {
-                    egress[c] = frame_bytes;
+                let key = if self.share_frames {
+                    effective_sub_key(&vars, &self.subs[c])
                 } else {
-                    // Sender thread exited: the consumer hung up.  Drop
-                    // its lane and keep serving the survivors.
-                    eprintln!(
-                        "sst: consumer {c} dropped at step {} (lane {}); \
-                         continuing with survivors",
-                        self.step,
-                        self.plan.subfile(self.rank).unwrap_or(0)
-                    );
-                    if let Some(LaneSender { tx, handle }) = self.lanes[c].take() {
-                        drop(tx);
-                        let _ = handle.join();
+                    (c as u64).to_le_bytes().to_vec()
+                };
+                match groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, members)) => members.push(c),
+                    None => groups.push((key, vec![c])),
+                }
+            }
+            for (_, members) in &groups {
+                let (payload, frame_bytes, ncrops) =
+                    shared.payload_for(step, &self.subs[members[0]])?;
+                for (i, &c) in members.iter().enumerate() {
+                    // Enqueue for this consumer's background sender
+                    // (blocks only when that consumer is QUEUE_STEPS
+                    // behind — back-pressure is per consumer × lane).
+                    let alive = self.lanes[c]
+                        .as_ref()
+                        .expect("grouped live above")
+                        .tx
+                        .send(Arc::clone(&payload))
+                        .is_ok();
+                    if alive {
+                        egress[c] = frame_bytes;
+                        if i > 0 {
+                            // Members beyond the first ride the same
+                            // refcounted payload: no second buffer, and
+                            // every crop pass the naive path would have
+                            // repeated for them is saved.
+                            shared.stats.deduped_egress_bytes += payload.len() as u64;
+                            shared.stats.naive_crop_passes += ncrops;
+                        }
+                    } else {
+                        // Sender thread exited: the consumer hung up.
+                        // Drop its lane and keep serving the survivors.
+                        eprintln!(
+                            "sst: consumer {c} dropped at step {} (lane {}); \
+                             continuing with survivors",
+                            self.step,
+                            self.plan.subfile(self.rank).unwrap_or(0)
+                        );
+                        if let Some(LaneSender { tx, handle }) = self.lanes[c].take() {
+                            drop(tx);
+                            let _ = handle.join();
+                        }
                     }
                 }
             }
+            fanout = shared.stats;
         } else {
             comm.isend(self.plan.agg_of_rank[self.rank], tag, msg)?;
         }
@@ -870,12 +1092,24 @@ impl Engine for SstEngine {
         for e in &egress {
             stats.u64(*e);
         }
+        // Fan-out frame-cache counters (every rank writes the same
+        // layout; non-aggregators contribute zeros).
+        stats.u64(fanout.unique_crops);
+        stats.u64(fanout.cache_hits);
+        stats.u64(fanout.codec_passes_saved());
+        stats.u64(fanout.deduped_egress_bytes);
+        stats.u64(fanout.unique_crop_bytes);
         let gathered = comm.gather(0, stats.into_vec(), TAG_SST_STATS + self.step as u64 * 4)?;
 
         if self.rank == 0 {
             let mut t_raw = 0u64;
             let mut t_chain = 0u64;
             let mut t_egress = vec![0u64; self.nconsumers];
+            let mut t_unique_crops = 0u64;
+            let mut t_cache_hits = 0u64;
+            let mut t_passes_saved = 0u64;
+            let mut t_deduped = 0u64;
+            let mut t_crop_bytes = 0u64;
             for g in &gathered {
                 let mut r = Reader::new(g);
                 t_raw += r.u64()?;
@@ -884,6 +1118,11 @@ impl Engine for SstEngine {
                 for e in t_egress.iter_mut().take(n) {
                     *e += r.u64()?;
                 }
+                t_unique_crops += r.u64()?;
+                t_cache_hits += r.u64()?;
+                t_passes_saved += r.u64()?;
+                t_deduped += r.u64()?;
+                t_crop_bytes += r.u64()?;
             }
             let t_wire: u64 = t_egress.iter().sum();
             let hw = &self.cost.hw;
@@ -914,11 +1153,32 @@ impl Engine for SstEngine {
                     );
                 }
             }
+            // Codec charged once per *unique* crop — the frame cache's
+            // contract: producer-side codec cost scales with distinct
+            // crops while `t_stream_egress` above keeps charging the
+            // wire once per consumer stream.
+            let codec_bw = crate::plan::CodecProfile::paper_defaults()
+                .entries()
+                .iter()
+                .find(|(c, _)| *c == self.operator.codec)
+                .map(|(_, t)| t.compress_bps)
+                .unwrap_or(0.0);
+            let t_crop = self
+                .cost
+                .t_fanout_codec(hw.scaled(t_crop_bytes), naggs, codec_bw);
+            if t_crop > 0.0 {
+                cost.push("crop-codec", t_crop);
+            }
             self.report.steps.push(StepStats {
                 step: self.step,
                 bytes_raw: t_raw,
                 bytes_stored: t_wire,
                 egress_per_consumer: t_egress,
+                unique_crops: t_unique_crops,
+                crop_cache_hits: t_cache_hits,
+                codec_passes_saved: t_passes_saved,
+                deduped_egress_bytes: t_deduped,
+                unique_crop_bytes: t_crop_bytes,
                 real_secs: sw.secs(),
                 cost,
             });
@@ -941,7 +1201,7 @@ impl Engine for SstEngine {
         let mut panicked = false;
         for (c, lane) in self.lanes.iter_mut().enumerate() {
             if let Some(LaneSender { tx, handle }) = lane.take() {
-                tx.send(Vec::new()).ok(); // bye sentinel
+                tx.send(Arc::from(Vec::<u8>::new())).ok(); // empty = bye sentinel
                 drop(tx);
                 match handle.join() {
                     Err(_) => {
@@ -2011,6 +2271,184 @@ mod tests {
                  ({} vs {})",
                 b.wire_bytes(),
                 f.wire_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn fanout_crop_cache_dedupes_codec_passes() {
+        // Two boxed subscribers whose boxes overlap on two producer rows:
+        // the shared crops must be compressed once and served from the
+        // content-addressed frame cache for the second group, while each
+        // consumer still receives exactly its own selection (DESIGN.md
+        // §14).
+        let l_a = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let l_b = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addrs = vec![l_a.local_addr().unwrap(), l_b.local_addr().unwrap()];
+        let a_t = std::thread::spawn(move || {
+            let mut c = l_a
+                .accept_with(
+                    &Subscription::var_box("THETA", &[1, 0], &[2, 8]),
+                    Some(Duration::from_secs(30)),
+                )
+                .unwrap();
+            let mut got = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                got.push(s);
+            }
+            got
+        });
+        let b_t = std::thread::spawn(move || {
+            let mut c = l_b
+                .accept_with(
+                    &Subscription::var_box("THETA", &[1, 0], &[3, 8]),
+                    Some(Duration::from_secs(30)),
+                )
+                .unwrap();
+            let mut got = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                got.push(s);
+            }
+            got
+        });
+        let reports = run_world(4, 2, move |mut comm| {
+            let mut eng = SstEngine::open_multi(
+                &addrs,
+                OperatorConfig::blosc(Codec::Lz4),
+                CostModel::new(HardwareSpec::paper_testbed(2)),
+                &comm,
+                Duration::from_secs(5),
+                DataPlane::Lanes,
+                1,
+            )
+            .unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..2u64 {
+                eng.begin_step().unwrap();
+                let data: Vec<f32> =
+                    (0..8).map(|i| (s * 100 + r * 8 + i) as f32).collect();
+                eng.put_f32(
+                    Variable::global("THETA", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                    data,
+                )
+                .unwrap();
+                eng.end_step(&mut comm).unwrap();
+            }
+            eng.close(&mut comm).unwrap()
+        });
+        let a = a_t.join().unwrap();
+        let b = b_t.join().unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 2);
+        for (s, (sa, sb)) in a.iter().zip(&b).enumerate() {
+            let va = sa.read_var_selection("THETA", &[1, 0], &[2, 8]).unwrap();
+            let vb = sb.read_var_selection("THETA", &[1, 0], &[3, 8]).unwrap();
+            assert_eq!(va[..], vb[..16], "step {s}: shared rows must agree");
+            assert_eq!(va[0], (s * 100 + 8) as f32);
+        }
+        let rep = reports.into_iter().next().unwrap();
+        assert_eq!(rep.steps.len(), 2);
+        for st in &rep.steps {
+            // A needs rows 1-2 (2 crops), B rows 1-3 (3 crops); rows 1-2
+            // are shared, so 3 unique compressions serve 5 crop requests.
+            assert_eq!(st.unique_crops, 3, "step {}: unique crops", st.step);
+            assert_eq!(st.crop_cache_hits, 2, "step {}: cache hits", st.step);
+            assert_eq!(st.codec_passes_saved, 2, "step {}: saved", st.step);
+            assert!(st.unique_crop_bytes > 0);
+            // Distinct subscriptions → no refcount-shared payloads here.
+            assert_eq!(st.deduped_egress_bytes, 0);
+            assert_eq!(st.egress_per_consumer.len(), 2);
+            assert!(
+                st.egress_per_consumer[0] < st.egress_per_consumer[1],
+                "B's wider box must ship more wire bytes"
+            );
+            assert_eq!(
+                st.egress_per_consumer.iter().sum::<u64>(),
+                st.bytes_stored,
+                "egress accounting invariant"
+            );
+        }
+    }
+
+    #[test]
+    fn fanout_identical_subs_share_one_payload() {
+        // Three consumers with the SAME boxed subscription: one codec
+        // pass per crop total, every member past the first rides the
+        // refcounted payload (deduped egress bytes > 0), and cache-off
+        // mode degrades to the naive per-consumer accounting.
+        for share in [true, false] {
+            let listeners: Vec<_> = (0..3)
+                .map(|_| SstConsumer::listen("127.0.0.1:0").unwrap())
+                .collect();
+            let addrs: Vec<_> = listeners.iter().map(|l| l.local_addr().unwrap()).collect();
+            let threads: Vec<_> = listeners
+                .into_iter()
+                .map(|l| {
+                    std::thread::spawn(move || {
+                        let mut c = l
+                            .accept_with(
+                                &Subscription::var_box("THETA", &[1, 2], &[2, 3]),
+                                Some(Duration::from_secs(30)),
+                            )
+                            .unwrap();
+                        let mut got = Vec::new();
+                        while let Some(s) = c.next_step().unwrap() {
+                            got.push(s.wire_bytes());
+                        }
+                        got
+                    })
+                })
+                .collect();
+            let reports = run_world(4, 2, move |mut comm| {
+                let mut eng = SstEngine::open_multi(
+                    &addrs,
+                    OperatorConfig::blosc(Codec::Lz4),
+                    CostModel::new(HardwareSpec::paper_testbed(2)),
+                    &comm,
+                    Duration::from_secs(5),
+                    DataPlane::Lanes,
+                    1,
+                )
+                .unwrap();
+                eng.set_frame_cache(share);
+                let r = comm.rank() as u64;
+                eng.begin_step().unwrap();
+                let data: Vec<f32> = (0..8).map(|i| (r * 8 + i) as f32).collect();
+                eng.put_f32(
+                    Variable::global("THETA", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                    data,
+                )
+                .unwrap();
+                eng.end_step(&mut comm).unwrap();
+                eng.close(&mut comm).unwrap()
+            });
+            let wires: Vec<Vec<u64>> =
+                threads.into_iter().map(|t| t.join().unwrap()).collect();
+            // Byte-identity across consumers AND across cache modes: the
+            // wire bytes of a boxed step don't depend on sharing.
+            assert_eq!(wires[0], wires[1]);
+            assert_eq!(wires[0], wires[2]);
+            let st = &reports.into_iter().next().unwrap().steps[0];
+            // Box [1,2]x[2,3] crosses producer rows 1 and 2 → 2 crops
+            // per consumer payload.
+            if share {
+                // One group of three: 2 crops compressed once, the 4
+                // passes the naive path would repeat are saved, and two
+                // members ride the shared payload.
+                assert_eq!(st.unique_crops, 2, "share={share}");
+                assert_eq!(st.codec_passes_saved, 4, "share={share}");
+                assert!(st.deduped_egress_bytes > 0, "share={share}");
+            } else {
+                // Every consumer its own group and no cache: the naive
+                // path compresses each crop once per consumer.
+                assert_eq!(st.unique_crops, 6, "share={share}");
+                assert_eq!(st.codec_passes_saved, 0, "share={share}");
+                assert_eq!(st.crop_cache_hits, 0, "share={share}");
+                assert_eq!(st.deduped_egress_bytes, 0, "share={share}");
+            }
+            assert_eq!(
+                st.egress_per_consumer.iter().sum::<u64>(),
+                st.bytes_stored
             );
         }
     }

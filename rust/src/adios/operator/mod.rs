@@ -86,7 +86,11 @@ impl Codec {
 }
 
 /// Operator configuration applied to variable payloads.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Hash` because the config is part of the SST fan-out crop-cache key
+/// (`block id × intersected box × operator`, DESIGN.md §14): two crops
+/// are only interchangeable when the whole codec stack matches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct OperatorConfig {
     pub codec: Codec,
     /// Byte-shuffle before compression (Blosc default: on).

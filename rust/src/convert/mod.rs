@@ -401,6 +401,7 @@ mod tests {
                 async_io: true,
                 drain_throttle: None,
                 live_publish: false,
+                object_retain_steps: None,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;
@@ -440,6 +441,7 @@ mod tests {
                 async_io: true,
                 drain_throttle: None,
                 live_publish: false,
+                object_retain_steps: None,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;
@@ -535,6 +537,7 @@ mod tests {
                 async_io: true,
                 drain_throttle: None,
                 live_publish: false,
+                object_retain_steps: None,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;

@@ -107,6 +107,10 @@ impl Adios2Backend {
                 bytes_raw: s.bytes_raw,
                 bytes_stored: s.bytes_stored,
                 egress_per_consumer: s.egress_per_consumer,
+                unique_crops: s.unique_crops,
+                crop_cache_hits: s.crop_cache_hits,
+                codec_passes_saved: s.codec_passes_saved,
+                deduped_egress_bytes: s.deduped_egress_bytes,
                 files_created: rep.files_created,
                 drain: rep.drain,
             });

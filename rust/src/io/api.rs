@@ -36,6 +36,16 @@ pub struct FrameReport {
     /// Lets the launcher print a per-consumer egress table after
     /// `stormio insitu`.
     pub egress_per_consumer: Vec<u64>,
+    /// Distinct crops compressed at the SST fan-out lanes (DESIGN.md
+    /// §14); zero for file backends.
+    pub unique_crops: u64,
+    /// Crop requests served from the lanes' content-addressed cache.
+    pub crop_cache_hits: u64,
+    /// Codec passes the naive per-consumer fan-out would have repeated.
+    pub codec_passes_saved: u64,
+    /// Payload bytes refcount-shared across consumers instead of being
+    /// buffered once per lane.
+    pub deduped_egress_bytes: u64,
     pub files_created: usize,
     /// Measured background-drain pipeline statistics (engines with async
     /// data movement; zero for synchronous backends).

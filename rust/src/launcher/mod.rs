@@ -233,14 +233,50 @@ pub fn run_from_namelist(path: &std::path::Path, artifacts: &std::path::Path) ->
 /// Resolve and print the run's I/O plan without running it (the
 /// `stormio plan` dry-run): decision table, provenance, and predicted
 /// virtual costs.  Needs no AOT artifacts.
-pub fn plan_from_namelist(path: &std::path::Path) -> Result<IoPlan> {
+///
+/// With `measure` (the `--measure` flag), the planner's codec knobs are
+/// resolved against [`crate::plan::CodecProfile::measured`] — per-codec
+/// compress throughput and ratio microbenchmarked **on this host** with a
+/// WRF-like smooth field — instead of the paper-testbed defaults, and the
+/// measured table is printed above the decision table.  Without the flag
+/// the output is byte-identical to previous releases (CI golden-diffs
+/// it).
+pub fn plan_from_namelist(path: &std::path::Path, measure: bool) -> Result<IoPlan> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| Error::config(format!("cannot read {}: {e}", path.display())))?;
     let nl = Namelist::parse(&text)?;
     let base = path.parent().unwrap_or(std::path::Path::new("."));
     let cfg = RunConfig::from_namelist(&nl, base)?;
     let adios = cfg.adios(base)?;
-    let plan = cfg.resolve_plan(&adios)?;
+    let io = adios
+        .config
+        .io("wrf_history")
+        .ok_or_else(|| Error::config("io `wrf_history` not declared"))?;
+    let intent = cfg.intent.merge_io_config(io)?;
+    let mut planner = cfg.planner();
+    if measure {
+        // A smooth θ-like surface, the compressibility regime WRF
+        // history frames live in (§V-D): 1 MiB is enough for stable
+        // per-codec throughput without a noticeable pause.
+        let sample: Vec<f32> =
+            (0..(1 << 18)).map(|i| 280.0 + (i as f32 * 0.01).sin()).collect();
+        let profile =
+            crate::plan::CodecProfile::measured(crate::util::f32_slice_as_bytes(&sample))?;
+        let mut t = Table::new(
+            "measured codec throughput (this host, 1 MiB smooth field)",
+            &["codec", "compress", "ratio"],
+        );
+        for (codec, thr) in profile.entries() {
+            t.row(&[
+                format!("{codec:?}").to_lowercase(),
+                format!("{:.2} GB/s", thr.compress_bps / 1e9),
+                format!("{:.2}x", thr.ratio),
+            ]);
+        }
+        println!("{}", t.render());
+        planner = planner.with_codec_profile(profile);
+    }
+    let plan = planner.plan(io.engine.clone(), &intent)?;
     println!(
         "stormio plan — {} nodes x {} ranks/node, io_form {}",
         cfg.nodes, cfg.forecast.ranks_per_node, cfg.io_form
@@ -401,11 +437,84 @@ pub fn run_insitu_from_namelist(
     Ok(summary)
 }
 
+/// Cadence/quota policy for the burst-buffer replica reaper: *when* to
+/// sweep lives here in the launcher; *what is safe to remove* stays
+/// entirely inside [`crate::adios::bp::follower::reap_bb_replicas`]'s
+/// conservative drain-watermark check (a sweep during the run is a
+/// no-op until the producer marks the stream complete).
+#[derive(Debug, Clone, Copy)]
+pub struct ReaperPolicy {
+    /// Seconds between background sweeps.
+    pub cadence: std::time::Duration,
+    /// Maximum background sweeps per run (bounds reaper metadata I/O on
+    /// the shared burst buffer); the shutdown sweep always runs.
+    pub sweep_quota: u32,
+}
+
+impl Default for ReaperPolicy {
+    fn default() -> Self {
+        ReaperPolicy { cadence: std::time::Duration::from_millis(500), sweep_quota: 600 }
+    }
+}
+
+/// Background burst-buffer replica reaper driven by a [`ReaperPolicy`]:
+/// sweeps `reap_bb_replicas` on the policy cadence while the in-situ
+/// pipeline runs, then once more at shutdown so replicas the drain
+/// finished last are still trimmed.
+struct BbReaper {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: std::thread::JoinHandle<(u64, u32)>,
+}
+
+impl BbReaper {
+    fn start(pfs_bp_dir: PathBuf, bb_root: PathBuf, policy: ReaperPolicy) -> BbReaper {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let mut freed = 0u64;
+            let mut sweeps = 0u32;
+            let slice = policy.cadence / 10 + std::time::Duration::from_millis(1);
+            while !flag.load(Ordering::Relaxed) && sweeps < policy.sweep_quota {
+                match crate::adios::bp::follower::reap_bb_replicas(&pfs_bp_dir, &bb_root) {
+                    Ok(n) => {
+                        freed += n;
+                        sweeps += 1;
+                    }
+                    Err(e) => eprintln!("bb reaper: sweep failed: {e}"),
+                }
+                // Sleep in slices so shutdown isn't delayed by a full
+                // cadence period.
+                let slept = std::time::Instant::now();
+                while slept.elapsed() < policy.cadence && !flag.load(Ordering::Relaxed) {
+                    std::thread::sleep(slice);
+                }
+            }
+            // Shutdown sweep: the drain typically completes only after
+            // the producer closes, which is exactly when we get here.
+            if let Ok(n) = crate::adios::bp::follower::reap_bb_replicas(&pfs_bp_dir, &bb_root) {
+                freed += n;
+                sweeps += 1;
+            }
+            (freed, sweeps)
+        });
+        BbReaper { stop, handle }
+    }
+
+    /// Signal the policy loop, run the shutdown sweep, and return
+    /// `(bytes freed, sweeps run)`.
+    fn finish(self) -> (u64, u32) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        self.handle.join().unwrap_or((0, 0))
+    }
+}
+
 /// The BB-local in-situ pipeline (`stormio insitu` over a draining burst
 /// buffer): one BP4 single-file producer publishing at burst-buffer
 /// durability, three concurrent
 /// [`crate::adios::bp::follower::TieredFollower`] consumers reading each
-/// step from the fastest tier that holds it.
+/// step from the fastest tier that holds it.  A background [`BbReaper`]
+/// trims node-local replicas the PFS drain has fully superseded.
 fn run_insitu_bb_local(
     cfg: RunConfig,
     adios: &Adios,
@@ -469,7 +578,7 @@ fn run_insitu_bb_local(
         },
     );
     let arc_dir = cfg.out_dir.join("archive");
-    let (bp_r, bb_r, arc_dir_t) = (bp_dir, bb_root, arc_dir.clone());
+    let (bp_r, bb_r, arc_dir_t) = (bp_dir.clone(), bb_root.clone(), arc_dir.clone());
     let archive_t = std::thread::spawn(
         move || -> Result<(Vec<PathBuf>, (usize, usize))> {
             let mut src = TieredFollower::open(&bp_r, &bb_r, poll)?;
@@ -478,6 +587,9 @@ fn run_insitu_bb_local(
             Ok((paths, src.tier_counts()))
         },
     );
+    // Replica reaper on the default cadence/quota policy: a no-op sweep
+    // until the drain watermark proves replicas superseded.
+    let reaper = BbReaper::start(bp_dir, bb_root, ReaperPolicy::default());
 
     let summary = driver.run(step, |_rank| {
         cfg.make_backend(&plan).expect("backend construction failed")
@@ -514,6 +626,11 @@ fn run_insitu_bb_local(
         t.row(&[label.to_string(), bb.to_string(), pfs.to_string()]);
     }
     println!("{}", t.render());
+    let (freed, sweeps) = reaper.finish();
+    println!(
+        "bb replica reaper: {sweeps} sweep(s), {} of superseded replicas freed",
+        crate::util::human_bytes(freed)
+    );
     Ok(summary)
 }
 
@@ -549,6 +666,20 @@ pub fn print_consumer_egress(frames: &[crate::io::api::FrameReport], labels: &[&
         ]);
     }
     println!("{}", t.render());
+    // Shared-frame egress summary (DESIGN.md §14): how much codec work
+    // the content-addressed frame cache collapsed across consumers.
+    let unique: u64 = frames.iter().map(|f| f.unique_crops).sum();
+    let hits: u64 = frames.iter().map(|f| f.crop_cache_hits).sum();
+    let saved: u64 = frames.iter().map(|f| f.codec_passes_saved).sum();
+    let deduped: u64 = frames.iter().map(|f| f.deduped_egress_bytes).sum();
+    if unique + hits + saved + deduped > 0 {
+        println!(
+            "fan-out frame cache: {unique} unique crop(s) compressed, \
+             {hits} cache hit(s), {saved} codec pass(es) saved, \
+             {} of egress refcount-shared",
+            crate::util::human_bytes(deduped)
+        );
+    }
 }
 
 /// WRF `rsl.out`-style end-of-run report.

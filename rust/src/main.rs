@@ -14,14 +14,16 @@ USAGE:
   stormio run <namelist.input> [--artifacts DIR]
       Run a forecast configured by a WRF-style namelist.
 
-  stormio plan <namelist.input>
+  stormio plan <namelist.input> [--measure]
       Dry-run the I/O planner: resolve every adios2_* knob (including
       'auto' sentinels, decided from the cost model) and print the
       decision table with provenance plus the predicted virtual costs
       (t_write, time_to_first_analysis) — without running the model.
       The target sweep is three-way (pfs | bb | object); with
       adios2_ensemble_writers > 1 it scores time-to-durable under
-      cross-run PFS contention.
+      cross-run PFS contention.  With --measure, codec knobs are
+      resolved from per-codec throughput/ratio microbenchmarked on
+      this host instead of the paper-testbed defaults.
 
   stormio convert <dir.bp> <out_dir> [--no-compress]
       Convert every step of a BP directory to NetCDF-style files
@@ -74,7 +76,8 @@ fn real_main() -> stormio::Result<i32> {
             let nl = args.get(1).ok_or_else(|| {
                 stormio::Error::config("plan: missing namelist path".to_string())
             })?;
-            launcher::plan_from_namelist(Path::new(nl))?;
+            let measure = args.iter().any(|a| a == "--measure");
+            launcher::plan_from_namelist(Path::new(nl), measure)?;
             Ok(0)
         }
         Some("insitu") => {

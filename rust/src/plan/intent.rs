@@ -129,6 +129,12 @@ pub struct IoIntent {
     /// three-way target sweep (cross-run PFS contention vs independent
     /// object-space puts); absent means the workload shape's own count.
     pub ensemble_writers: Option<usize>,
+    /// `adios2_object_retain_steps` / `ObjectRetainSteps`: keep only the
+    /// newest N committed steps in the object space, garbage-collecting
+    /// older step objects after each commit (followers see a clean
+    /// `visible_steps` watermark throughout).  Absent = retain forever;
+    /// ignored by the file targets.
+    pub object_retain_steps: Option<usize>,
     /// Operator template from the XML `<operator>` element: preserves
     /// shuffle / lossy bit-rounding settings when only the codec is
     /// (re)decided.
@@ -215,6 +221,15 @@ impl IoIntent {
             }
             intent.ensemble_writers = Some(n as usize);
         }
+        if let Some(n) = tc.get_i64("adios2_object_retain_steps") {
+            if n < 1 {
+                return Err(Error::config(format!(
+                    "adios2_object_retain_steps = {n} must be >= 1 \
+                     (omit the key to retain every step)"
+                )));
+            }
+            intent.object_retain_steps = Some(n as usize);
+        }
         Ok(intent)
     }
 
@@ -286,6 +301,16 @@ impl IoIntent {
                 merged.ensemble_writers = Some(n);
             }
         }
+        if merged.object_retain_steps.is_none() {
+            if let Some(s) = io.param("ObjectRetainSteps") {
+                let n = s.parse::<usize>().ok().filter(|n| *n >= 1).ok_or_else(|| {
+                    Error::config(format!(
+                        "ObjectRetainSteps={s} is not a positive integer"
+                    ))
+                })?;
+                merged.object_retain_steps = Some(n);
+            }
+        }
         Ok(merged)
     }
 }
@@ -354,6 +379,25 @@ mod tests {
         assert_eq!(m.target.setting, Setting::Explicit(Target::Object));
         assert_eq!(m.target.origin, Origin::Xml);
         assert_eq!(m.ensemble_writers, Some(4));
+    }
+
+    #[test]
+    fn object_retain_steps_parses_both_spellings() {
+        let g = tc("adios2_object_retain_steps = 3,");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.object_retain_steps, Some(3));
+        assert!(
+            IoIntent::from_time_control(&tc("adios2_object_retain_steps = 0,")).is_err()
+        );
+        // XML spelling fills only when the namelist is silent.
+        let mut io = IoConfig::new("hist", EngineKind::Bp4);
+        io.params.insert("ObjectRetainSteps".into(), "2".into());
+        let m = IoIntent::default().merge_io_config(&io).unwrap();
+        assert_eq!(m.object_retain_steps, Some(2));
+        let m = i.merge_io_config(&io).unwrap();
+        assert_eq!(m.object_retain_steps, Some(3));
+        io.params.insert("ObjectRetainSteps".into(), "zero".into());
+        assert!(IoIntent::default().merge_io_config(&io).is_err());
     }
 
     #[test]

@@ -72,6 +72,7 @@ pub fn open_engine(
                 async_io: plan.async_io,
                 drain_throttle: None,
                 live_publish: plan.live_publish,
+                object_retain_steps: plan.object_retain_steps,
             };
             Ok(Box::new(bp4::Bp4Engine::open(cfg, comm)?))
         }

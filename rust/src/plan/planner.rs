@@ -242,6 +242,12 @@ pub struct IoPlan {
     pub frames_per_outfile: usize,
     pub pack_threads: usize,
     pub async_io: bool,
+    /// Object-space retention (`adios2_object_retain_steps`): keep only
+    /// the newest N committed steps, GCing older step objects after each
+    /// commit.  `None` retains everything; file targets ignore it.  A GC
+    /// policy rather than a planner decision, so it is deliberately not
+    /// part of the rendered decision table.
+    pub object_retain_steps: Option<usize>,
     pub predicted: PlanCosts,
 }
 
@@ -747,6 +753,7 @@ impl Planner {
             frames_per_outfile,
             pack_threads: intent.pack_threads.unwrap_or(0),
             async_io: intent.async_io.unwrap_or(true),
+            object_retain_steps: intent.object_retain_steps,
             predicted,
         })
     }

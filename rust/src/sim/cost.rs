@@ -372,6 +372,22 @@ impl CostModel {
         }
         bytes / self.hw.ranks().max(1) as f64 / codec_bw
     }
+
+    /// Producer-side codec work of a fan-out step with the
+    /// content-addressed crop cache (DESIGN.md §14): the lanes compress
+    /// each *unique* `(block × box × operator)` crop exactly once, so
+    /// the charge takes the deduplicated raw crop volume
+    /// (`unique_crop_bytes`) — **independent of consumer count** — split
+    /// across the `lanes` aggregators compressing concurrently.  The
+    /// naive per-consumer path is this with `unique_crop_bytes`
+    /// multiplied by the subscriber count.  The wire itself still pays
+    /// per consumer stream ([`Self::t_stream_egress`]).
+    pub fn t_fanout_codec(&self, unique_crop_bytes: f64, lanes: usize, codec_bw: f64) -> f64 {
+        if codec_bw <= 0.0 || unique_crop_bytes <= 0.0 {
+            return 0.0;
+        }
+        unique_crop_bytes / lanes.clamp(1, self.hw.ranks().max(1)) as f64 / codec_bw
+    }
 }
 
 #[cfg(test)]
@@ -496,6 +512,26 @@ mod tests {
         assert!(boxed > 0.0 && boxed.is_finite());
         assert_eq!(m.fanout_advantage(v, &[], 8), 1.0);
         assert_eq!(m.fanout_advantage(0.0, &[v], 8), 1.0);
+    }
+
+    #[test]
+    fn fanout_codec_charges_unique_crops_not_consumers() {
+        let m = cm(8);
+        let crop = 1e8; // raw bytes of one step's unique crops
+        let bw = 0.9e9;
+        let one = m.t_fanout_codec(crop, 8, bw);
+        assert!(one > 0.0);
+        // The frame-cache contract: a thousand subscribers to the same
+        // crop set cost exactly what one does — the charge takes unique
+        // bytes, so it cannot grow with consumer count at all.  The
+        // naive per-consumer path is the same formula over N× the bytes.
+        let naive_1000 = m.t_fanout_codec(crop * 1000.0, 8, bw);
+        assert!((naive_1000 / one - 1000.0).abs() < 1e-6);
+        // More lanes compress unique crops concurrently (up to ranks).
+        assert!(m.t_fanout_codec(crop, 16, bw) < one);
+        // Zero guards match the t_compress conventions.
+        assert_eq!(m.t_fanout_codec(crop, 8, 0.0), 0.0);
+        assert_eq!(m.t_fanout_codec(0.0, 8, bw), 0.0);
     }
 
     #[test]

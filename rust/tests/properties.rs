@@ -124,6 +124,7 @@ fn prop_bp_roundtrip_random_worlds() {
                 async_io: true,
                 drain_throttle: None,
                 live_publish: false,
+                object_retain_steps: None,
             };
             let mut eng = Bp4Engine::open(cfg, &comm).unwrap();
             let r = comm.rank() as u64;

@@ -9,14 +9,19 @@
 use std::io::Write as _;
 use std::net::TcpStream;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use stormio::adios::bp::follower::{BpFollower, TieredFollower};
+use stormio::adios::bp::reader::BpReader;
 use stormio::adios::bp::{drained_steps, read_metadata, write_metadata};
 use stormio::adios::engine::bp4::{Bp4Config, Bp4Engine};
 use stormio::adios::engine::sst::{
-    DataPlane, SstConsumer, SstEngine, SstSource, MAGIC, MAX_FRAME_LEN, TYPE_HELLO, TYPE_STEP,
+    DataPlane, SstConsumer, SstEngine, SstListener, SstSource, MAGIC, MAX_FRAME_LEN, TYPE_HELLO,
+    TYPE_STEP,
 };
+use stormio::adios::store::{DirStore, LandingStore};
 use stormio::adios::engine::{Engine, Target};
 use stormio::adios::operator::{Codec, OperatorConfig};
 use stormio::adios::source::{extract_box, ServedTier, StepSource, StepStatus, Subscription};
@@ -423,6 +428,7 @@ fn bp4_live_cfg(dir: &std::path::Path) -> Bp4Config {
         async_io: true,
         drain_throttle: None,
         live_publish: true,
+        object_retain_steps: None,
     }
 }
 
@@ -720,6 +726,165 @@ fn producer_keeps_serving_survivors_after_consumer_drop() {
     }
 }
 
+#[test]
+fn fanout_egress_accounting_matches_consumer_wire_bytes() {
+    // The producer's per-consumer egress ledger must agree, byte for byte
+    // and step for step, with what each consumer actually received — and
+    // the vector must sum to the step's stored-byte total (the lane wire
+    // total the cost model charges), across multiple lanes.
+    let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let l_var = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let l_box = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addrs = vec![
+        l_full.local_addr().unwrap(),
+        l_var.local_addr().unwrap(),
+        l_box.local_addr().unwrap(),
+    ];
+    fn per_step_wire(l: SstListener, sub: Subscription) -> std::thread::JoinHandle<Vec<u64>> {
+        std::thread::spawn(move || {
+            let mut c = l.accept_with(&sub, Some(Duration::from_secs(30))).unwrap();
+            let mut wires = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                wires.push(s.wire_bytes());
+            }
+            wires
+        })
+    }
+    let threads = [
+        per_step_wire(l_full, Subscription::all()),
+        per_step_wire(l_var, Subscription::var("PSFC")),
+        per_step_wire(l_box, Subscription::var_box("T", &[0, 1, 2], &[2, 2, 3])),
+    ];
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_multi(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            2, // four lanes: the ledger must sum across lanes too
+        )
+        .unwrap();
+        produce(&mut eng, &mut comm, STEPS);
+        eng.close(&mut comm).unwrap()
+    });
+    let wires: Vec<Vec<u64>> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    let rep = reports.into_iter().next().unwrap();
+    assert_eq!(rep.steps.len(), STEPS);
+    for (s, st) in rep.steps.iter().enumerate() {
+        assert_eq!(st.egress_per_consumer.len(), 3, "step {s}");
+        for (c, w) in wires.iter().enumerate() {
+            assert_eq!(
+                st.egress_per_consumer[c], w[s],
+                "step {s}: producer ledger vs consumer {c} wire bytes"
+            );
+        }
+        assert_eq!(
+            st.egress_per_consumer.iter().sum::<u64>(),
+            st.bytes_stored,
+            "step {s}: egress vector must sum to the lane wire total"
+        );
+        // Selection pushdown shows up in the ledger, not just on the
+        // consumer side of the wire.
+        assert!(st.egress_per_consumer[1] < st.egress_per_consumer[0], "step {s}");
+        assert!(st.egress_per_consumer[2] < st.egress_per_consumer[0], "step {s}");
+    }
+}
+
+#[test]
+fn fanout_frame_cache_ab_runs_are_byte_identical() {
+    // A/B the frame cache end-to-end: a full subscriber plus two
+    // identical boxed subscribers receive bit-identical content whether
+    // the content-addressed cache is on (shared payloads, saved codec
+    // passes) or forced off (naive per-consumer codec work).
+    let run = |share: bool| {
+        let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let l_a = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let l_b = SstConsumer::listen("127.0.0.1:0").unwrap();
+        let addrs = vec![
+            l_full.local_addr().unwrap(),
+            l_a.local_addr().unwrap(),
+            l_b.local_addr().unwrap(),
+        ];
+        let full_t = std::thread::spawn(move || {
+            let mut src = SstSource::new(
+                l_full
+                    .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                    .unwrap(),
+            );
+            let mut canons = Vec::new();
+            loop {
+                match src.begin_step(Duration::from_secs(30)).unwrap() {
+                    StepStatus::Ready => {}
+                    StepStatus::EndOfStream => break,
+                    StepStatus::Timeout => panic!("full consumer timed out"),
+                }
+                canons.push(canon_step(&mut src));
+                src.end_step().unwrap();
+            }
+            canons
+        });
+        let boxed = |l: SstListener| {
+            std::thread::spawn(move || {
+                let mut c = l
+                    .accept_with(
+                        &Subscription::var_box("T", &[0, 1, 2], &[2, 2, 3]),
+                        Some(Duration::from_secs(30)),
+                    )
+                    .unwrap();
+                let mut sels = Vec::new();
+                while let Some(s) = c.next_step().unwrap() {
+                    sels.push(s.read_var_selection("T", &[0, 1, 2], &[2, 2, 3]).unwrap());
+                }
+                sels
+            })
+        };
+        let (a_t, b_t) = (boxed(l_a), boxed(l_b));
+        let reports = run_world(4, 2, move |mut comm| {
+            let mut eng = SstEngine::open_multi(
+                &addrs,
+                OperatorConfig::blosc(Codec::Lz4),
+                CostModel::new(HardwareSpec::paper_testbed(2)),
+                &comm,
+                Duration::from_secs(5),
+                DataPlane::Lanes,
+                1,
+            )
+            .unwrap();
+            eng.set_frame_cache(share);
+            produce(&mut eng, &mut comm, STEPS);
+            eng.close(&mut comm).unwrap()
+        });
+        let canons = full_t.join().unwrap();
+        let (sa, sb) = (a_t.join().unwrap(), b_t.join().unwrap());
+        assert_eq!(sa, sb, "share={share}: identical boxed subs must agree");
+        let rep = reports.into_iter().next().unwrap();
+        let saved: u64 = rep.steps.iter().map(|s| s.codec_passes_saved).sum();
+        let deduped: u64 = rep.steps.iter().map(|s| s.deduped_egress_bytes).sum();
+        (canons, sa, saved, deduped)
+    };
+    let (on_canons, on_sels, on_saved, on_deduped) = run(true);
+    let (off_canons, off_sels, off_saved, off_deduped) = run(false);
+    assert_eq!(on_canons.len(), STEPS);
+    assert_eq!(on_canons, off_canons, "cache-on vs cache-off full payloads differ");
+    assert_eq!(on_sels, off_sels, "cache-on vs cache-off boxed selections differ");
+    // Ground truth: the boxed selections are slices of the full global.
+    for (s, sel) in on_sels.iter().enumerate() {
+        let (_, shape, bytes) = on_canons[s].iter().find(|(n, _, _)| n == "T").unwrap();
+        let global: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let want = extract_box(shape, &global, &[0, 1, 2], &[2, 2, 3]).unwrap();
+        assert_eq!(sel, &want, "step {s}: boxed selection differs from global slice");
+    }
+    assert!(on_saved > 0, "identical boxed subs must save codec passes");
+    assert!(on_deduped > 0, "members past the first must ride shared payloads");
+    assert_eq!(off_saved, 0, "cache off must degrade to naive per-consumer codec work");
+    assert_eq!(off_deduped, 0, "cache off must not refcount-share payloads");
+}
+
 // ---------------------------------------------------------------------------
 // Follower timeout / completion protocol
 // ---------------------------------------------------------------------------
@@ -744,6 +909,7 @@ fn bb_live_cfg(dir: &std::path::Path, name: &str, throttle_ms: u64) -> Bp4Config
         async_io: true,
         drain_throttle: Some(Duration::from_millis(throttle_ms)),
         live_publish: true,
+        object_retain_steps: None,
     }
 }
 
@@ -1139,4 +1305,128 @@ fn analyzer_surfaces_stalled_source_as_error() {
         .expect("stalled source must error");
     let msg = format!("{err}");
     assert!(msg.contains("stalled"), "want stall error, got: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Object-store retention (newest-N GC) under a live follow
+// ---------------------------------------------------------------------------
+
+#[test]
+fn object_retention_gc_reaps_aged_steps_behind_a_live_follower() {
+    // `adios2_object_retain_steps = 2` over 5 steps: a live follower
+    // tailing the object-backed stream sees every step exactly once (the
+    // producer holds each commit until the follower has read past the
+    // step about to age out — GC only ever trails the analysis), while
+    // the store ends up holding only the newest two steps' data objects.
+    // Commit markers are never reaped, so `visible_steps` stays the
+    // monotonic committed prefix across the GC.
+    let dir = tmp("obj_gc");
+    let steps = 5usize;
+    let retain = 2usize;
+    let cfg = Bp4Config {
+        name: "ret".into(),
+        pfs_dir: dir.join("pfs"),
+        bb_root: dir.join("bb"),
+        target: Target::Object,
+        operator: OperatorConfig::blosc(Codec::Lz4),
+        aggs_per_node: 1,
+        cost: CostModel::new(HardwareSpec::paper_testbed(2)),
+        pack_threads: 0,
+        async_io: true,
+        drain_throttle: None,
+        live_publish: true,
+        object_retain_steps: Some(retain),
+    };
+    let bp = dir.join("pfs/ret.bp");
+
+    let consumed = Arc::new(AtomicUsize::new(0));
+    let (bp_f, seen) = (bp.clone(), Arc::clone(&consumed));
+    let follower = std::thread::spawn(move || {
+        let mut f = BpFollower::open(&bp_f, Duration::from_millis(2)).unwrap();
+        let mut canons = Vec::new();
+        loop {
+            match f.begin_step(Duration::from_secs(30)).unwrap() {
+                StepStatus::Ready => {}
+                StepStatus::EndOfStream => break,
+                StepStatus::Timeout => panic!("follower stalled on the object stream"),
+            }
+            canons.push(canon_step(&mut f));
+            f.end_step().unwrap();
+            seen.fetch_add(1, Ordering::SeqCst);
+        }
+        canons
+    });
+
+    run_world(4, 2, move |mut comm| {
+        let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..steps {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            // Committing step s reaps step s-retain; hold the commit
+            // until the follower has finished that step so the GC never
+            // deletes objects out from under a pending read.
+            while s >= retain && consumed.load(Ordering::SeqCst) < s - retain + 1 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            eng.end_step(&mut comm).unwrap();
+        }
+        eng.close(&mut comm).unwrap();
+    });
+
+    // The follower saw all 5 steps with canonical content, including the
+    // three whose objects were reaped after it moved past them.
+    let canons = follower.join().unwrap();
+    assert_eq!(canons.len(), steps);
+    for (s, canon) in canons.iter().enumerate() {
+        let names: Vec<&str> = canon.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["PSFC", "T"], "step {s}");
+        let (_, _, psfc) = &canon[0];
+        let want = field(s, 10, 6); // rank 0's row
+        for (i, w) in want.iter().enumerate() {
+            let got = f32::from_le_bytes(psfc[i * 4..i * 4 + 4].try_into().unwrap());
+            assert_eq!(got, *w, "step {s} psfc[{i}]");
+        }
+    }
+
+    // Only the newest `retain` steps keep data objects; aged steps keep
+    // their commit markers (the visible prefix never regresses).
+    let store = DirStore::open(dir.join("pfs/ret.obj")).unwrap();
+    assert_eq!(store.visible_steps().unwrap(), steps as u64);
+    for s in 0..steps as u64 {
+        let n = store.list_step(s).unwrap().len();
+        if (s as usize) + retain < steps {
+            assert_eq!(n, 0, "step {s} aged out but still holds objects");
+        } else {
+            assert_eq!(n, 8, "step {s}: 4 ranks x 2 vars inside the window");
+        }
+    }
+
+    // A cold reader still serves every in-window step…
+    let rd = BpReader::open(&bp).unwrap();
+    assert!(rd.is_object_backed());
+    assert_eq!(rd.num_steps(), steps);
+    for s in steps - retain..steps {
+        let (shape, g) = rd.read_var_global(s, "PSFC").unwrap();
+        assert_eq!(shape, vec![4, 6], "step {s}");
+        assert_eq!(g[..6], field(s, 10, 6)[..], "step {s}");
+    }
+    // …and a reaped step fails with a descriptive missing-object error,
+    // never silently wrong bytes.
+    let err = rd
+        .read_var_global(0, "PSFC")
+        .err()
+        .expect("reaped step must not read");
+    let msg = format!("{err}");
+    assert!(msg.contains("missing"), "want missing-object error, got: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
