@@ -1,0 +1,380 @@
+//! Fig 13 (repro extension) — late join, replay, and mid-run rescope on
+//! the SST consumer service tier (wire v4, DESIGN.md §15).
+//!
+//! Two halves:
+//!
+//! * **measured** — one producer runs N steps behind the rank-0 broker
+//!   while consumers attach at staggered boundaries: a from-the-start
+//!   consumer, a joiner admitted at step 1, and a joiner admitted at
+//!   step 2 that rescopes to a single variable mid-run.  The acceptance
+//!   criterion is byte identity: every joiner's stream (replayed first
+//!   step included) must match the from-the-start consumer bit for bit
+//!   over the shared suffix, and the membership ledger must bill each
+//!   admission's replay as exactly that consumer's wire bytes.
+//! * **virtual** — the same churn restated at CONUS scale through
+//!   `CostModel::t_admission_replay` / `t_rescope_recrop`: replay rides
+//!   the background egress (one extra stream, linear in joiner count),
+//!   a rescope costs one codec pass over the re-cropped egress, and a
+//!   joined consumer's steady-state per-step charge is bit-identical to
+//!   a from-the-start consumer's.
+//!
+//! Emits `BENCH_fig13_late_join.json` for the CI bench-smoke artifact
+//! trail.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stormio::adios::engine::sst::{
+    contact_path, read_contact, DataPlane, SstConsumer, SstEngine, SstServiceOpts, SstStep,
+};
+use stormio::adios::operator::{Codec, OperatorConfig};
+use stormio::adios::source::Subscription;
+use stormio::adios::Variable;
+use stormio::cluster::run_world;
+use stormio::metrics::{BenchReport, Table};
+use stormio::plan::CodecProfile;
+use stormio::sim::{CostModel, HardwareSpec};
+use stormio::workload::{bench_smoke, PAPER_FRAME_BYTES};
+
+const NSTEPS: usize = 6;
+
+/// Deterministic field payload (same generator on every rank/step).
+fn field(step: usize, salt: u64, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (step * 1000) as f32 + salt as f32 * 37.5 + (i as f32 * 0.1).sin())
+        .collect()
+}
+
+/// Canonical step payload: variables sorted by name, global f32 data as
+/// little-endian bytes — the representation the byte-identity criterion
+/// compares across from-the-start and late-joined consumers.
+type Canon = Vec<(String, Vec<u64>, Vec<u8>)>;
+
+fn canon(step: &SstStep) -> Canon {
+    let mut names: Vec<String> = step.var_names().iter().map(|n| n.to_string()).collect();
+    names.sort();
+    names
+        .iter()
+        .map(|n| {
+            let (shape, data) = step.read_var_global(n).unwrap();
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in &data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            (n.clone(), shape, bytes)
+        })
+        .collect()
+}
+
+fn le_bytes(data: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+struct MeasuredOut {
+    /// From-the-start consumer: canonical payload per step.
+    baseline: Vec<Canon>,
+    /// Joiner admitted at step 1: (first step index, canons).
+    j1: (usize, Vec<Canon>),
+    /// Joiner admitted at step 2: full-phase (index, canon) pairs, then
+    /// post-rescope PSFC-only (index, bytes) pairs.
+    j2_full: Vec<(usize, Canon)>,
+    j2_psfc: Vec<(usize, Vec<u8>)>,
+    /// Rank-0 engine report (membership ledger, egress vectors).
+    report: stormio::adios::engine::EngineReport,
+    wall: f64,
+}
+
+fn measure() -> MeasuredOut {
+    let dir = std::env::temp_dir().join(format!("stormio_fig13_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let contact = contact_path(&dir);
+
+    // From-the-start consumer, wired at the collective open.
+    let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addrs = vec![l_full.local_addr().unwrap()];
+    let base_t = std::thread::spawn(move || {
+        let mut c = l_full
+            .accept_with(&Subscription::all(), Some(Duration::from_secs(60)))
+            .unwrap();
+        let mut canons = Vec::new();
+        while let Some(s) = c.next_step().unwrap() {
+            canons.push(canon(&s));
+        }
+        canons
+    });
+
+    let steps_done = Arc::new(AtomicUsize::new(0));
+
+    // Joiner 1: attaches after step 0 ships, admitted at the step-1
+    // boundary, stays full-subscription to the end.
+    let sd = steps_done.clone();
+    let c2 = contact.clone();
+    let j1_t = std::thread::spawn(move || {
+        while sd.load(Ordering::SeqCst) < 1 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let addr = read_contact(&c2, Duration::from_secs(60)).unwrap();
+        let mut c =
+            SstConsumer::attach(&addr, &Subscription::all(), Some(Duration::from_secs(60)))
+                .unwrap();
+        let mut first = None;
+        let mut canons = Vec::new();
+        while let Some(s) = c.next_step().unwrap() {
+            first.get_or_insert(s.index);
+            canons.push(canon(&s));
+        }
+        (first.expect("joiner 1 saw no steps"), canons)
+    });
+
+    // Joiner 2: attaches after step 1 ships, reads two full steps, then
+    // rescopes to PSFC-only for the rest of the run.
+    let sd = steps_done.clone();
+    let c2 = contact.clone();
+    let j2_t = std::thread::spawn(move || {
+        while sd.load(Ordering::SeqCst) < 2 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let addr = read_contact(&c2, Duration::from_secs(60)).unwrap();
+        let mut c =
+            SstConsumer::attach(&addr, &Subscription::all(), Some(Duration::from_secs(60)))
+                .unwrap();
+        let mut full_phase = Vec::new();
+        for _ in 0..2 {
+            let s = c.next_step().unwrap().expect("joiner 2 full-phase step");
+            full_phase.push((s.index, canon(&s)));
+        }
+        c.rescope(&Subscription::var("PSFC")).unwrap();
+        let mut psfc_phase = Vec::new();
+        while let Some(s) = c.next_step().unwrap() {
+            let (_, data) = s.read_var_global("PSFC").unwrap();
+            psfc_phase.push((s.index, le_bytes(&data)));
+        }
+        (full_phase, psfc_phase)
+    });
+
+    let sd = steps_done.clone();
+    let t0 = Instant::now();
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_service(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(10),
+            DataPlane::Lanes,
+            1,
+            SstServiceOpts {
+                broker: true,
+                contact_file: Some(contact.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..NSTEPS {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            // Hold each churn boundary until the control frame is
+            // parked, so admissions and the rescope land at
+            // deterministic steps (1, 2, and 4 respectively).
+            if comm.rank() == 0 {
+                let t0 = Instant::now();
+                if s == 1 || s == 2 {
+                    while eng.pending_admissions() < 1 {
+                        assert!(t0.elapsed() < Duration::from_secs(60), "attach never parked");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+                if s == 4 {
+                    while eng.pending_rescopes() < 1 {
+                        assert!(t0.elapsed() < Duration::from_secs(60), "rescope never parked");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            }
+            eng.end_step(&mut comm).unwrap();
+            if comm.rank() == 0 {
+                sd.store(s + 1, Ordering::SeqCst);
+            }
+        }
+        eng.close(&mut comm).unwrap()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let baseline = base_t.join().unwrap();
+    let j1 = j1_t.join().unwrap();
+    let (j2_full, j2_psfc) = j2_t.join().unwrap();
+    MeasuredOut {
+        baseline,
+        j1,
+        j2_full,
+        j2_psfc,
+        report: reports.into_iter().next().unwrap(),
+        wall,
+    }
+}
+
+fn main() {
+    let smoke = bench_smoke();
+    let mut json = BenchReport::new("fig13_late_join");
+    json.flag("smoke", smoke);
+
+    // ---- measured: staggered joins + mid-run rescope ---------------------
+    let out = measure();
+    assert_eq!(out.baseline.len(), NSTEPS);
+
+    // Joiner 1: admitted at step 1, byte-identical to the from-the-start
+    // consumer over the whole shared suffix (replayed step included).
+    let (first, j1_canons) = &out.j1;
+    assert_eq!(*first, 1, "joiner 1 must start at its admitting boundary");
+    assert_eq!(
+        j1_canons.as_slice(),
+        &out.baseline[1..],
+        "joiner 1 stream differs from the from-the-start consumer"
+    );
+
+    // Joiner 2: full-subscription phase identical to the baseline, then
+    // the rescoped PSFC-only phase identical to the baseline's PSFC.
+    assert_eq!(
+        out.j2_full.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        vec![2, 3],
+        "joiner 2 full-phase step indices"
+    );
+    for (i, c) in &out.j2_full {
+        assert_eq!(c, &out.baseline[*i], "joiner 2 step {i} differs from baseline");
+    }
+    assert_eq!(
+        out.j2_psfc.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        vec![4, 5],
+        "joiner 2 rescope must take effect at the next step boundary"
+    );
+    for (i, bytes) in &out.j2_psfc {
+        let (_, _, want) = out.baseline[*i]
+            .iter()
+            .find(|(n, _, _)| n == "PSFC")
+            .expect("baseline has PSFC");
+        assert_eq!(bytes, want, "joiner 2 rescoped step {i} differs from baseline");
+    }
+
+    // Membership ledger: each admission billed as that joiner's wire
+    // bytes for its first step; the egress vector keeps summing to the
+    // stored total through every join and the rescope.
+    let steps = &out.report.steps;
+    assert_eq!(steps.len(), NSTEPS);
+    let mut table = Table::new(
+        "Fig 13: late join + rescope membership ledger (measured)",
+        &["step", "stored [B]", "consumers", "admitted", "rescoped", "replay [B]"],
+    );
+    for (s, st) in steps.iter().enumerate() {
+        assert_eq!(
+            st.egress_per_consumer.iter().sum::<u64>(),
+            st.bytes_stored,
+            "step {s}: egress vector must sum to the wire total"
+        );
+        table.row(&[
+            s.to_string(),
+            st.bytes_stored.to_string(),
+            st.egress_per_consumer.len().to_string(),
+            st.consumers_admitted.to_string(),
+            st.consumers_rescoped.to_string(),
+            st.replay_bytes.to_string(),
+        ]);
+        json.int(&format!("admitted_s{s}"), st.consumers_admitted as u64)
+            .int(&format!("rescoped_s{s}"), st.consumers_rescoped as u64)
+            .int(&format!("replay_bytes_s{s}"), st.replay_bytes);
+    }
+    assert_eq!(steps[1].consumers_admitted, 1);
+    assert_eq!(steps[2].consumers_admitted, 1);
+    assert_eq!(steps[4].consumers_rescoped, 1);
+    assert!(steps[1].replay_bytes > 0);
+    assert_eq!(steps[1].replay_bytes, steps[1].egress_per_consumer[1]);
+    assert!(steps[2].replay_bytes > 0);
+    assert_eq!(steps[2].replay_bytes, steps[2].egress_per_consumer[2]);
+    // After the rescope, joiner 2's egress is the PSFC crop — strictly
+    // below the full-subscription consumers on the same steps.
+    for (s, st) in steps.iter().enumerate().skip(4) {
+        assert!(
+            st.egress_per_consumer[2] < st.egress_per_consumer[0],
+            "step {s}: rescoped egress must shrink below the full stream"
+        );
+    }
+    json.num("measured_wall_s", out.wall);
+
+    // ---- virtual: the same churn at CONUS scale --------------------------
+    let cm = CostModel::new(HardwareSpec::paper_testbed(8));
+    let lanes = 8usize;
+    let bw = CodecProfile::paper_defaults()
+        .entries()
+        .iter()
+        .find(|(c, _)| *c == Codec::Lz4)
+        .map(|(_, p)| p.compress_bps)
+        .expect("paper profile has lz4");
+    let frame = PAPER_FRAME_BYTES;
+
+    // A joined consumer's steady-state per-step charge is bit-identical
+    // to a from-the-start consumer's: the egress inputs are the same
+    // bytes, so the virtual clock cannot tell them apart either.
+    let from_start = cm.t_stream_egress(&[frame, frame], lanes);
+    let post_join = cm.t_stream_egress(&[frame, frame], lanes);
+    assert_eq!(
+        from_start.to_bits(),
+        post_join.to_bits(),
+        "steady-state virtual charge must not depend on join history"
+    );
+
+    let mut vtable = Table::new(
+        "Fig 13: admission replay + rescope charges (virtual, CONUS scale)",
+        &["joiners", "replay [s]", "rescope recrop [s]"],
+    );
+    let mut prev_replay = 0.0f64;
+    for &k in &[1usize, 2, 4] {
+        // k joiners admitted at one boundary: replay is one extra
+        // background stream per joiner, linear in k.
+        let replay = cm.t_admission_replay(frame * k as f64, lanes);
+        assert_eq!(
+            replay.to_bits(),
+            cm.t_stream_egress(&[frame * k as f64], lanes).to_bits(),
+            "replay must be charged as plain background egress"
+        );
+        assert!(replay > prev_replay, "{k} joiners: replay charge must grow");
+        prev_replay = replay;
+        // A rescope re-crops a quarter-frame subscription: one codec
+        // pass over the re-cropped egress, nothing else.
+        let recrop = cm.t_rescope_recrop(frame / 4.0 * k as f64, lanes, bw);
+        assert_eq!(
+            recrop.to_bits(),
+            cm.t_fanout_codec(frame / 4.0 * k as f64, lanes, bw).to_bits(),
+            "rescope must be charged as one fan-out codec pass"
+        );
+        vtable.row(&[k.to_string(), format!("{replay:.3}"), format!("{recrop:.3}")]);
+        json.num(&format!("virtual_replay_s_k{k}"), replay)
+            .num(&format!("virtual_recrop_s_k{k}"), recrop);
+    }
+    assert_eq!(cm.t_admission_replay(0.0, lanes), 0.0, "no joiners, no replay charge");
+    assert_eq!(cm.t_rescope_recrop(0.0, lanes, bw), 0.0, "no rescope, no recrop charge");
+
+    table.emit(Some(std::path::Path::new("bench_results/fig13_late_join.csv")));
+    vtable.emit(None);
+    json.write();
+    println!(
+        "late join: every joiner's stream is byte-identical to a \
+         from-the-start consumer over the shared suffix, the ledger bills \
+         each admission's replay as exactly that consumer's wire bytes, \
+         and a mid-run rescope takes effect at the next step boundary."
+    );
+}

@@ -55,6 +55,18 @@ pub struct StepStats {
     /// Raw bytes fed through the codec for unique crops (the
     /// `t_fanout_codec` charge basis).
     pub unique_crop_bytes: u64,
+    /// Consumers admitted mid-stream at this step's boundary by the SST
+    /// broker (wire v4, DESIGN.md §15); zero without a service tier.
+    pub consumers_admitted: u32,
+    /// Consumers reaped this step (disconnected mid-stream or failed
+    /// their admission lane handshake), unioned across lanes.
+    pub consumers_reaped: u32,
+    /// Consumers whose subscription rescope took effect at this step's
+    /// boundary.
+    pub consumers_rescoped: u32,
+    /// Wire bytes replayed to just-admitted consumers this step (their
+    /// first payload, served from the step's shared crop cache).
+    pub replay_bytes: u64,
     pub real_secs: f64,
     pub cost: WriteCost,
 }

@@ -48,6 +48,18 @@
 //! [`SstEngine::set_frame_cache`]) disables the sharing for A/B runs —
 //! the wire bytes are identical either way.
 //!
+//! **Consumer service tier (wire v4, DESIGN.md §15).**  Data lanes keep
+//! the v3 framing above; what v4 adds is a *control plane*: a persistent
+//! broker thread on rank 0 ([`SstBroker`]) that admits consumers
+//! mid-stream at the next step boundary (their first payload is built
+//! from the same per-step crop cache every other consumer shares — the
+//! "replay from the current step"), reaps them on disconnect via the v3
+//! lane reaper, and accepts a `rescope` frame that swaps a consumer's
+//! boxed [`Subscription`] between steps, re-keying the effective-
+//! subscription groups and frame cache on the fly.  Membership changes
+//! are broadcast to every rank at the top of `end_step`, so all lanes
+//! agree on the consumer set for each step.
+//!
 //! Wire protocol (little-endian, all lengths validated against
 //! [`MAX_FRAME_LEN`] before allocation; every block frame carries an
 //! XXH64 checksum the consumer verifies *before* decompressing):
@@ -60,13 +72,23 @@
 //! step    := u64 step | u32 nvars { str name | dims shape | u32 nblocks
 //!            { u32 producer | dims start | dims count | u64 raw
 //!              | u64 xxh64(frame) | bytes frame } }
+//!
+//! control := u32 magic "SST4" | u8 type | u64 len | payload
+//! type    := 5 attach | 6 admit | 7 rescope | 8 refuse
+//! attach  := str lane_listen_addr | bytes sub           (consumer -> broker)
+//! admit   := u64 first_step | u32 consumer_id | u32 nlanes (broker -> consumer)
+//! rescope := u32 consumer_id | bytes sub                (consumer -> broker;
+//!            acked with an empty rescope frame)
+//! refuse  := utf8 reason                                (broker -> consumer)
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -88,23 +110,42 @@ use super::{Engine, EngineReport, StepStats};
 
 /// Wire magic, version 3 (subscription handshake + per-frame checksums).
 pub const MAGIC: u32 = 0x53535433; // "SST3"
+/// Wire magic, version 4 — the broker control plane (DESIGN.md §15).
+/// Data lanes stay on the v3 magic; only broker control frames carry it.
+pub const MAGIC_V4: u32 = 0x53535434; // "SST4"
 pub const TYPE_STEP: u8 = 1;
 pub const TYPE_BYE: u8 = 2;
 pub const TYPE_HELLO: u8 = 3;
 /// Consumer → producer subscription reply, sent once per lane right
 /// after the hello is accepted.
 pub const TYPE_SUB: u8 = 4;
+/// Consumer → broker (v4): request mid-stream admission; payload carries
+/// the consumer's lane-listener address and its subscription.
+pub const TYPE_ATTACH: u8 = 5;
+/// Broker → consumer (v4): admission granted at a step boundary; payload
+/// carries the first step the consumer will receive, its consumer id,
+/// and the lane count about to connect.
+pub const TYPE_ADMIT: u8 = 6;
+/// Consumer → broker (v4): replace this consumer's subscription at the
+/// next step boundary; acked with an empty frame of the same type.
+pub const TYPE_RESCOPE: u8 = 7;
+/// Broker → consumer (v4): request refused; payload is a reason string.
+pub const TYPE_REFUSE: u8 = 8;
 /// Hard cap on a declared frame (and per-block raw) length: a corrupt or
 /// adversarial peer must not be able to make the reader allocate from an
 /// untrusted u64 (OOM bomb).
 pub const MAX_FRAME_LEN: u64 = 1 << 30;
-/// Sanity cap on the lane count a hello may announce.
-const MAX_LANES: u32 = 1 << 16;
+/// Default sanity cap on the lane count a hello may announce
+/// (configurable: `adios2_sst_max_lanes` / the `MaxLanes` IO parameter).
+pub const DEFAULT_MAX_LANES: u32 = 1 << 16;
 /// Sanity cap on the entry count a subscription may declare.
 const MAX_SUB_ENTRIES: u32 = 1 << 12;
 
 const TAG_SST_BLOCKS: u64 = 0x5353_0001;
 const TAG_SST_STATS: u64 = 0x5353_0002;
+/// Membership-delta broadcast at the top of every `end_step` when the
+/// broker is enabled (wire v4); per-step like the other SST tags.
+const TAG_SST_MEMBER: u64 = 0x5353_0003;
 
 /// Per-lane producer queue depth before `end_step` blocks (back-pressure).
 const QUEUE_STEPS: usize = 4;
@@ -113,10 +154,11 @@ const QUEUE_STEPS: usize = 4;
 /// has arrived, even past the poll deadline (see [`SstConsumer::poll_step`]).
 const FRAME_GRACE: Duration = Duration::from_secs(5);
 
-/// Bound on the lane handshake: once one lane of a collective open has
-/// connected, the remaining lanes (and every hello frame) must arrive
-/// within this window.
-const HELLO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default bound on the lane handshake: once one lane of a collective
+/// open has connected, the remaining lanes (and every hello frame) must
+/// arrive within this window (configurable: `adios2_sst_hello_timeout` /
+/// the `HelloTimeout` IO parameter, in seconds).
+pub const DEFAULT_HELLO_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Producer→consumer topology of the SST data plane.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -142,14 +184,24 @@ impl DataPlane {
 // Framing
 // ---------------------------------------------------------------------------
 
-fn write_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> Result<()> {
+fn write_frame_magic(stream: &mut TcpStream, magic: u32, ty: u8, payload: &[u8]) -> Result<()> {
     let mut hdr = [0u8; 13];
-    hdr[..4].copy_from_slice(&MAGIC.to_le_bytes());
+    hdr[..4].copy_from_slice(&magic.to_le_bytes());
     hdr[4] = ty;
     hdr[5..13].copy_from_slice(&(payload.len() as u64).to_le_bytes());
     stream.write_all(&hdr)?;
     stream.write_all(payload)?;
     Ok(())
+}
+
+/// Write one v3 (data-plane) frame.
+fn write_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> Result<()> {
+    write_frame_magic(stream, MAGIC, ty, payload)
+}
+
+/// Write one v4 (broker control-plane) frame.
+fn write_frame_v4(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> Result<()> {
+    write_frame_magic(stream, MAGIC_V4, ty, payload)
 }
 
 /// Read exactly `buf.len()` bytes with one wall-clock deadline over the
@@ -194,9 +246,14 @@ fn read_exact_deadline(
     Ok(())
 }
 
-/// Read one frame; with a deadline the whole frame (header + payload)
-/// must arrive before it, else the read errors out — never hangs.
-fn read_frame(stream: &mut TcpStream, deadline: Option<Instant>) -> Result<(u8, Vec<u8>)> {
+/// Read one frame with the given expected magic; with a deadline the
+/// whole frame (header + payload) must arrive before it, else the read
+/// errors out — never hangs.
+fn read_frame_magic(
+    stream: &mut TcpStream,
+    deadline: Option<Instant>,
+    want: u32,
+) -> Result<(u8, Vec<u8>)> {
     fn read_all(
         stream: &mut TcpStream,
         buf: &mut [u8],
@@ -211,9 +268,9 @@ fn read_frame(stream: &mut TcpStream, deadline: Option<Instant>) -> Result<(u8, 
     read_all(stream, &mut hdr, deadline)
         .map_err(|e| Error::sst(format!("peer closed mid-frame: {e}")))?;
     let magic = u32::from_le_bytes(hdr[..4].try_into().unwrap());
-    if magic != MAGIC {
+    if magic != want {
         return Err(Error::sst(format!(
-            "bad frame magic {magic:#010x} (want {MAGIC:#010x})"
+            "bad frame magic {magic:#010x} (want {want:#010x})"
         )));
     }
     let ty = hdr[4];
@@ -236,6 +293,16 @@ fn read_frame(stream: &mut TcpStream, deadline: Option<Instant>) -> Result<(u8, 
             .map_err(|e| Error::sst(format!("clear read_timeout: {e}")))?;
     }
     Ok((ty, payload))
+}
+
+/// Read one v3 (data-plane) frame.
+fn read_frame(stream: &mut TcpStream, deadline: Option<Instant>) -> Result<(u8, Vec<u8>)> {
+    read_frame_magic(stream, deadline, MAGIC)
+}
+
+/// Read one v4 (broker control-plane) frame.
+fn read_frame_v4(stream: &mut TcpStream, deadline: Option<Instant>) -> Result<(u8, Vec<u8>)> {
+    read_frame_magic(stream, deadline, MAGIC_V4)
 }
 
 /// Wait up to `timeout` for the stream to become readable without
@@ -391,6 +458,278 @@ fn sender_loop(mut stream: TcpStream, rx: Receiver<Arc<[u8]>>) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Broker (wire v4 control plane, DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// One admission parked at the broker until the next step boundary: the
+/// control stream (kept open so the admit/refuse reply can be sent), the
+/// consumer's lane-listener address, and its initial subscription.
+struct PendingAttach {
+    stream: TcpStream,
+    addr: String,
+    sub: Subscription,
+}
+
+/// Control requests parked between step boundaries.
+#[derive(Default)]
+struct PendingMembership {
+    attaches: Vec<PendingAttach>,
+    rescopes: Vec<(u32, Subscription)>,
+}
+
+/// The membership change applied at one step boundary, encoded by rank 0
+/// and broadcast to every rank so all lanes agree on the consumer set.
+#[derive(Default)]
+struct MembershipDelta {
+    /// Newly admitted consumers: lane-listener address + subscription.
+    admits: Vec<(String, Subscription)>,
+    /// Subscription replacements keyed by consumer id.
+    rescopes: Vec<(u32, Subscription)>,
+}
+
+impl MembershipDelta {
+    fn is_empty(&self) -> bool {
+        self.admits.is_empty() && self.rescopes.is_empty()
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(self.admits.len() as u32);
+        for (addr, sub) in &self.admits {
+            w.str(addr);
+            w.bytes(&encode_subscription(sub));
+        }
+        w.u32(self.rescopes.len() as u32);
+        for (c, sub) in &self.rescopes {
+            w.u32(*c);
+            w.bytes(&encode_subscription(sub));
+        }
+        w.into_vec()
+    }
+
+    fn decode(payload: &[u8]) -> Result<MembershipDelta> {
+        let mut r = Reader::new(payload);
+        let na = r.u32()? as usize;
+        let mut admits = Vec::with_capacity(na.min(256));
+        for _ in 0..na {
+            let addr = r.str()?;
+            let sub = decode_subscription(&r.bytes()?)?;
+            admits.push((addr, sub));
+        }
+        let nr = r.u32()? as usize;
+        let mut rescopes = Vec::with_capacity(nr.min(256));
+        for _ in 0..nr {
+            let c = r.u32()?;
+            let sub = decode_subscription(&r.bytes()?)?;
+            rescopes.push((c, sub));
+        }
+        Ok(MembershipDelta { admits, rescopes })
+    }
+}
+
+/// Handle one broker control connection: read exactly one frame, park
+/// the request (attach keeps its stream for the admit reply; rescope is
+/// acked immediately), refuse everything else — including a v3 hello,
+/// which gets a descriptive redirect instead of a silent hangup.
+fn broker_serve(
+    mut stream: TcpStream,
+    shared: &Mutex<PendingMembership>,
+    hello_timeout: Duration,
+) -> Result<()> {
+    let deadline = Instant::now() + hello_timeout;
+    let mut hdr = [0u8; 13];
+    read_exact_deadline(&mut stream, &mut hdr, deadline)
+        .map_err(|e| Error::sst(format!("control peer closed mid-frame: {e}")))?;
+    let magic = u32::from_le_bytes(hdr[..4].try_into().unwrap());
+    let ty = hdr[4];
+    let len = u64::from_le_bytes(hdr[5..13].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        let msg = format!("control frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap");
+        let _ = write_frame_v4(&mut stream, TYPE_REFUSE, msg.as_bytes());
+        return Err(Error::sst(msg));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_deadline(&mut stream, &mut payload, deadline)
+        .map_err(|e| Error::sst(format!("truncated control frame of type {ty}: {e}")))?;
+    if magic == MAGIC {
+        // A v3 consumer dialed the broker port: its lanes connect the
+        // other way around (producer → consumer at the collective open),
+        // so redirect it loudly instead of hanging its handshake.
+        let msg = format!(
+            "this is the SST wire v4 broker (magic {MAGIC_V4:#010x}); got a wire v3 \
+             frame (magic {MAGIC:#010x}, type {ty}) — v3 consumers are wired up at \
+             the collective open, mid-stream admission needs a v4 attach \
+             (SstConsumer::attach)"
+        );
+        let _ = write_frame_v4(&mut stream, TYPE_REFUSE, msg.as_bytes());
+        return Err(Error::sst(msg));
+    }
+    if magic != MAGIC_V4 {
+        let msg = format!("bad control frame magic {magic:#010x} (want {MAGIC_V4:#010x})");
+        let _ = write_frame_v4(&mut stream, TYPE_REFUSE, msg.as_bytes());
+        return Err(Error::sst(msg));
+    }
+    match ty {
+        TYPE_ATTACH => {
+            let mut r = Reader::new(&payload);
+            let addr = r.str()?;
+            let sub = decode_subscription(&r.bytes()?)?;
+            let mut p = shared.lock().unwrap_or_else(|e| e.into_inner());
+            p.attaches.push(PendingAttach { stream, addr, sub });
+            Ok(())
+        }
+        TYPE_RESCOPE => {
+            let mut r = Reader::new(&payload);
+            let c = r.u32()?;
+            let sub = decode_subscription(&r.bytes()?)?;
+            {
+                let mut p = shared.lock().unwrap_or_else(|e| e.into_inner());
+                p.rescopes.push((c, sub));
+            }
+            // Ack after parking: once the caller sees it, the rescope is
+            // guaranteed to be in the very next step boundary's delta.
+            write_frame_v4(&mut stream, TYPE_RESCOPE, &[])
+        }
+        other => {
+            let msg = format!("unexpected control frame type {other}");
+            let _ = write_frame_v4(&mut stream, TYPE_REFUSE, msg.as_bytes());
+            Err(Error::sst(msg))
+        }
+    }
+}
+
+/// Rank-0 admission broker: a background accept loop parking v4 control
+/// requests ([`TYPE_ATTACH`]/[`TYPE_RESCOPE`]) until the producer's next
+/// `end_step` drains them into a [`MembershipDelta`].  Dropped with the
+/// engine: the loop stops, and anyone still parked is refused.
+struct SstBroker {
+    addr: String,
+    shared: Arc<Mutex<PendingMembership>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    contact_file: Option<PathBuf>,
+}
+
+impl SstBroker {
+    fn spawn(
+        bind: &str,
+        hello_timeout: Duration,
+        contact_file: Option<PathBuf>,
+    ) -> Result<SstBroker> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::sst(format!("broker cannot bind {bind}: {e}")))?;
+        let addr = listener.local_addr()?.to_string();
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::sst(format!("broker set_nonblocking: {e}")))?;
+        if let Some(p) = &contact_file {
+            if let Some(parent) = p.parent() {
+                std::fs::create_dir_all(parent).ok();
+            }
+            std::fs::write(p, &addr).map_err(|e| {
+                Error::sst(format!("cannot write contact file {}: {e}", p.display()))
+            })?;
+        }
+        let shared = Arc::new(Mutex::new(PendingMembership::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (shared2, stop2) = (Arc::clone(&shared), Arc::clone(&stop));
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        stream.set_nodelay(true).ok();
+                        if let Err(e) = broker_serve(stream, &shared2, hello_timeout) {
+                            eprintln!("sst: broker rejected a control connection: {e}");
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        eprintln!("sst: broker accept failed: {e}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        });
+        Ok(SstBroker {
+            addr,
+            shared,
+            stop,
+            handle: Some(handle),
+            contact_file,
+        })
+    }
+
+    /// Drain everything parked since the last boundary.  Returns the
+    /// delta plus the attach control streams, aligned with
+    /// `delta.admits`, for the admit replies.
+    fn drain(&self) -> (MembershipDelta, Vec<TcpStream>) {
+        let mut p = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+        let mut delta = MembershipDelta::default();
+        let mut streams = Vec::new();
+        for a in p.attaches.drain(..) {
+            delta.admits.push((a.addr, a.sub));
+            streams.push(a.stream);
+        }
+        delta.rescopes = std::mem::take(&mut p.rescopes);
+        (delta, streams)
+    }
+}
+
+impl Drop for SstBroker {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        // No more step boundaries are coming: refuse anyone still parked
+        // so their attach errors descriptively instead of timing out.
+        let mut p = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+        for mut a in p.attaches.drain(..) {
+            let _ = write_frame_v4(
+                &mut a.stream,
+                TYPE_REFUSE,
+                b"producer closed before the next step boundary",
+            );
+        }
+        p.rescopes.clear();
+        if let Some(f) = &self.contact_file {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+}
+
+/// Canonical contact-file path for a broker-enabled run: rank 0 writes
+/// the broker's address here at open (the analog of ADIOS2 SST's `.sst`
+/// contact file), and late consumers ([`read_contact`]) poll it to find
+/// the producer.
+pub fn contact_path(dir: &Path) -> PathBuf {
+    dir.join("sst_broker.contact")
+}
+
+/// Poll a producer's contact file until it appears (bounded by
+/// `timeout`), returning the broker address written by rank 0.
+pub fn read_contact(path: &Path, timeout: Duration) -> Result<String> {
+    let t0 = Instant::now();
+    loop {
+        match std::fs::read_to_string(path) {
+            Ok(s) if !s.trim().is_empty() => return Ok(s.trim().to_string()),
+            _ if t0.elapsed() >= timeout => {
+                return Err(Error::sst(format!(
+                    "no SST contact file at {} after {:.1}s (is a broker-enabled \
+                     producer running?)",
+                    path.display(),
+                    timeout.as_secs_f64()
+                )))
+            }
+            _ => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Producer engine
 // ---------------------------------------------------------------------------
 
@@ -424,8 +763,47 @@ pub struct SstEngine {
     /// consumer's payload independently — byte-identical wire output,
     /// codec cost linear in consumer count.
     share_frames: bool,
+    /// Bound on every lane handshake this engine performs (collective
+    /// open and mid-stream admission alike).
+    hello_timeout: Duration,
+    /// Dynamic membership on (all ranks agree, from the plan): the
+    /// membership delta is broadcast at every step boundary.
+    service: bool,
+    /// Rank 0 of a service-tier engine: the admission broker.
+    broker: Option<SstBroker>,
     report: EngineReport,
     closed: bool,
+}
+
+/// Service-tier options for [`SstEngine::open_service`] (wire v4,
+/// DESIGN.md §15).  The defaults reproduce the v3 collective-open
+/// behavior exactly: no broker, membership frozen at open.
+#[derive(Debug, Clone)]
+pub struct SstServiceOpts {
+    /// Run the rank-0 admission broker: consumers may attach mid-stream
+    /// and re-scope their subscriptions between steps.
+    pub broker: bool,
+    /// Broker bind address (rank 0; port 0 picks an ephemeral port).
+    pub broker_bind: String,
+    /// Lane handshake bound (`adios2_sst_hello_timeout`, seconds).
+    pub hello_timeout: Duration,
+    /// Lane-count sanity cap (`adios2_sst_max_lanes`).
+    pub max_lanes: u32,
+    /// Where rank 0 publishes the broker address ([`contact_path`]);
+    /// `None` keeps it discoverable only via [`SstEngine::broker_addr`].
+    pub contact_file: Option<PathBuf>,
+}
+
+impl Default for SstServiceOpts {
+    fn default() -> Self {
+        SstServiceOpts {
+            broker: false,
+            broker_bind: "127.0.0.1:0".into(),
+            hello_timeout: DEFAULT_HELLO_TIMEOUT,
+            max_lanes: DEFAULT_MAX_LANES,
+            contact_file: None,
+        }
+    }
 }
 
 impl SstEngine {
@@ -455,7 +833,9 @@ impl SstEngine {
     /// connects one lane to *each* consumer address (retrying with
     /// backoff up to `timeout`), announces itself with a hello frame, and
     /// reads back that consumer's [`Subscription`] — the selection the
-    /// lane then pushes down on every step it ships.
+    /// lane then pushes down on every step it ships.  Membership is
+    /// frozen at open (the v3 surface); see [`SstEngine::open_service`]
+    /// for dynamic membership.
     pub fn open_multi(
         addrs: &[String],
         operator: OperatorConfig,
@@ -465,7 +845,36 @@ impl SstEngine {
         data_plane: DataPlane,
         aggs_per_node: usize,
     ) -> Result<SstEngine> {
-        if addrs.is_empty() {
+        Self::open_service(
+            addrs,
+            operator,
+            cost,
+            comm,
+            timeout,
+            data_plane,
+            aggs_per_node,
+            SstServiceOpts::default(),
+        )
+    }
+
+    /// Collective open with service-tier options (wire v4, DESIGN.md
+    /// §15): like [`SstEngine::open_multi`], plus — when `opts.broker` is
+    /// on — a persistent rank-0 broker that admits consumers mid-stream
+    /// at step boundaries and accepts between-step subscription rescopes.
+    /// A broker-enabled open may start with *zero* consumer addresses:
+    /// the engine streams to nobody until the first admission.
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_service(
+        addrs: &[String],
+        operator: OperatorConfig,
+        cost: CostModel,
+        comm: &Comm,
+        timeout: Duration,
+        data_plane: DataPlane,
+        aggs_per_node: usize,
+        opts: SstServiceOpts,
+    ) -> Result<SstEngine> {
+        if addrs.is_empty() && !opts.broker {
             return Err(Error::config(
                 "SST open: need at least one consumer address",
             ));
@@ -497,6 +906,13 @@ impl SstEngine {
                 }
             }
         };
+        if plan.num_aggregators() as u32 > opts.max_lanes {
+            return Err(Error::config(format!(
+                "SST open: {} lanes exceed the configured MaxLanes cap {}",
+                plan.num_aggregators(),
+                opts.max_lanes
+            )));
+        }
         let rank = comm.rank();
         let mut lanes = Vec::new();
         let mut subs = Vec::new();
@@ -512,13 +928,12 @@ impl SstEngine {
                 // consumer that accepts and then sends nothing cannot
                 // hang the collective open.
                 let (ty, payload) =
-                    read_frame(&mut stream, Some(Instant::now() + HELLO_TIMEOUT)).map_err(
-                        |e| {
+                    read_frame(&mut stream, Some(Instant::now() + opts.hello_timeout))
+                        .map_err(|e| {
                             Error::sst(format!(
                                 "consumer {c} ({addr}): no subscription reply: {e}"
                             ))
-                        },
-                    )?;
+                        })?;
                 if ty != TYPE_SUB {
                     return Err(Error::sst(format!(
                         "consumer {c} ({addr}): expected subscription frame, got type {ty}"
@@ -531,6 +946,15 @@ impl SstEngine {
                 lanes.push(Some(LaneSender { tx, handle }));
             }
         }
+        let broker = if opts.broker && rank == 0 {
+            Some(SstBroker::spawn(
+                &opts.broker_bind,
+                opts.hello_timeout,
+                opts.contact_file.clone(),
+            )?)
+        } else {
+            None
+        };
         Ok(SstEngine {
             rank,
             operator,
@@ -547,9 +971,150 @@ impl SstEngine {
                 std::env::var("STORMIO_SST_NO_CACHE").as_deref(),
                 Ok("1")
             ),
+            hello_timeout: opts.hello_timeout,
+            service: opts.broker,
+            broker,
             report: EngineReport::default(),
             closed: false,
         })
+    }
+
+    /// The rank-0 broker's listen address (`None` off rank 0 or when the
+    /// service tier is disabled).  Late consumers hand this to
+    /// [`SstConsumer::attach`]; broker-enabled plans also publish it via
+    /// the contact file ([`contact_path`]).
+    pub fn broker_addr(&self) -> Option<String> {
+        self.broker.as_ref().map(|b| b.addr.clone())
+    }
+
+    /// Attach requests currently parked at the rank-0 broker (0 off rank
+    /// 0).  Tests and benches use this to sequence an attach strictly
+    /// before a chosen step boundary.
+    pub fn pending_admissions(&self) -> usize {
+        self.broker
+            .as_ref()
+            .map(|b| {
+                b.shared
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .attaches
+                    .len()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Rescope requests currently parked at the rank-0 broker.
+    pub fn pending_rescopes(&self) -> usize {
+        self.broker
+            .as_ref()
+            .map(|b| {
+                b.shared
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .rescopes
+                    .len()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Apply one step boundary's membership delta on every rank:
+    /// rescopes swap the consumer's subscription in place (re-keying the
+    /// effective-subscription groups and crop cache from this step on),
+    /// admits append a consumer slot everywhere and connect its lanes on
+    /// the aggregators.  Rank 0 additionally sends each admitted
+    /// consumer its admit reply.  Returns `(admitted ids, ids reaped at
+    /// admission)` — the latter for consumers whose lane handshake never
+    /// completed.
+    fn apply_membership(
+        &mut self,
+        delta: &MembershipDelta,
+        mut attach_streams: Vec<TcpStream>,
+    ) -> (Vec<usize>, Vec<u32>) {
+        let aggregator = self.plan.is_aggregator(self.rank);
+        for (c, sub) in &delta.rescopes {
+            let c = *c as usize;
+            if aggregator {
+                if c < self.subs.len() && self.lanes[c].is_some() {
+                    self.subs[c] = sub.clone();
+                } else if self.rank == 0 {
+                    // Rescope raced a disconnect (or the id is bogus):
+                    // membership already moved on, so drop it loudly.
+                    eprintln!(
+                        "sst: rescope for unknown or dropped consumer {c} at step {}; \
+                         ignored",
+                        self.step
+                    );
+                }
+            }
+        }
+        let naggs = self.plan.num_aggregators() as u32;
+        let mut admitted = Vec::with_capacity(delta.admits.len());
+        let mut reaped_at_admission = Vec::new();
+        for (i, (addr, sub)) in delta.admits.iter().enumerate() {
+            let c = self.nconsumers;
+            self.nconsumers += 1;
+            admitted.push(c);
+            if self.rank == 0 {
+                if let Some(stream) = attach_streams.get_mut(i) {
+                    let mut w = Writer::new();
+                    w.u64(self.step as u64);
+                    w.u32(c as u32);
+                    w.u32(naggs);
+                    if let Err(e) = write_frame_v4(stream, TYPE_ADMIT, &w.into_vec()) {
+                        eprintln!("sst: consumer {c}: admit reply failed: {e}");
+                    }
+                }
+            }
+            if aggregator {
+                let lane_id = self.plan.subfile(self.rank).expect("aggregator has a lane");
+                match self.admit_lane(addr, lane_id, naggs) {
+                    Ok((lane, sub)) => {
+                        self.lanes.push(Some(lane));
+                        self.subs.push(sub);
+                    }
+                    Err(e) => {
+                        // An admitted consumer that never completed its
+                        // lane handshake is reaped immediately; the
+                        // survivors (and the producer) keep streaming.
+                        eprintln!(
+                            "sst: admitted consumer {c} ({addr}) failed its lane \
+                             handshake: {e}; dropping",
+                        );
+                        self.lanes.push(None);
+                        self.subs.push(sub.clone());
+                        reaped_at_admission.push(c as u32);
+                    }
+                }
+            }
+        }
+        (admitted, reaped_at_admission)
+    }
+
+    /// Connect one data lane to a newly admitted consumer: the same v3
+    /// hello → subscription-reply handshake as the collective open, run
+    /// mid-stream by each aggregator.
+    fn admit_lane(
+        &self,
+        addr: &str,
+        lane_id: u32,
+        naggs: u32,
+    ) -> Result<(LaneSender, Subscription)> {
+        let mut stream = connect_retry(addr, self.hello_timeout)?;
+        let mut w = Writer::new();
+        w.u32(lane_id);
+        w.u32(naggs);
+        write_frame(&mut stream, TYPE_HELLO, &w.into_vec())?;
+        let (ty, payload) = read_frame(&mut stream, Some(Instant::now() + self.hello_timeout))
+            .map_err(|e| Error::sst(format!("no subscription reply: {e}")))?;
+        if ty != TYPE_SUB {
+            return Err(Error::sst(format!(
+                "expected subscription frame, got type {ty}"
+            )));
+        }
+        let sub = decode_subscription(&payload)?;
+        let (tx, rx): (SyncSender<Arc<[u8]>>, Receiver<Arc<[u8]>>) = sync_channel(QUEUE_STEPS);
+        let handle = std::thread::spawn(move || sender_loop(stream, rx));
+        Ok((LaneSender { tx, handle }, sub))
     }
 
     /// Toggle the per-step crop cache + shared-frame egress (defaults to
@@ -957,6 +1522,29 @@ impl Engine for SstEngine {
         }
         comm.barrier();
         let sw = Stopwatch::start();
+        // Membership boundary (wire v4): rank 0 drains whatever the
+        // broker parked since the last step, broadcasts the delta, and
+        // every rank applies it *before* any payload exists — so an
+        // attach that arrives while this end_step is in flight lands at
+        // the NEXT boundary and a joiner's first step is never torn.
+        let mut delta = MembershipDelta::default();
+        let mut admitted_ids: Vec<usize> = Vec::new();
+        // Consumers whose lane this rank reaped during the step.
+        let mut reaped: Vec<u32> = Vec::new();
+        if self.service {
+            let (d, streams) = match &self.broker {
+                Some(b) => b.drain(),
+                None => (MembershipDelta::default(), Vec::new()),
+            };
+            let enc = if self.rank == 0 { d.encode() } else { Vec::new() };
+            let bytes = comm.bcast(0, enc, TAG_SST_MEMBER + self.step as u64 * 4)?;
+            delta = MembershipDelta::decode(&bytes)?;
+            if !delta.is_empty() {
+                let (admitted, failed) = self.apply_membership(&delta, streams);
+                admitted_ids = admitted;
+                reaped.extend(failed);
+            }
+        }
         let (msg, raw, stored) = self.pack_blocks()?;
         let tag = TAG_SST_BLOCKS + self.step as u64 * 4;
 
@@ -1075,6 +1663,7 @@ impl Engine for SstEngine {
                             drop(tx);
                             let _ = handle.join();
                         }
+                        reaped.push(c as u32);
                     }
                 }
             }
@@ -1099,6 +1688,12 @@ impl Engine for SstEngine {
         stats.u64(fanout.codec_passes_saved());
         stats.u64(fanout.deduped_egress_bytes);
         stats.u64(fanout.unique_crop_bytes);
+        // Membership ledger: consumer ids this rank's lanes reaped (rank
+        // 0 unions them — every aggregator reaps the same dead consumer).
+        stats.u32(reaped.len() as u32);
+        for c in &reaped {
+            stats.u32(*c);
+        }
         let gathered = comm.gather(0, stats.into_vec(), TAG_SST_STATS + self.step as u64 * 4)?;
 
         if self.rank == 0 {
@@ -1110,6 +1705,7 @@ impl Engine for SstEngine {
             let mut t_passes_saved = 0u64;
             let mut t_deduped = 0u64;
             let mut t_crop_bytes = 0u64;
+            let mut reaped_set: HashSet<u32> = HashSet::new();
             for g in &gathered {
                 let mut r = Reader::new(g);
                 t_raw += r.u64()?;
@@ -1123,6 +1719,10 @@ impl Engine for SstEngine {
                 t_passes_saved += r.u64()?;
                 t_deduped += r.u64()?;
                 t_crop_bytes += r.u64()?;
+                let nreaped = r.u32()? as usize;
+                for _ in 0..nreaped {
+                    reaped_set.insert(r.u32()?);
+                }
             }
             let t_wire: u64 = t_egress.iter().sum();
             let hw = &self.cost.hw;
@@ -1169,6 +1769,31 @@ impl Engine for SstEngine {
             if t_crop > 0.0 {
                 cost.push("crop-codec", t_crop);
             }
+            // Membership ledger + its virtual charges (DESIGN.md §15).
+            // A joiner's first payload is its replay: the bytes it was
+            // served from this step's cached frames, charged as one
+            // extra stream riding the background senders.  A rescope
+            // re-keys the consumer's crops, charged as one codec pass
+            // over its re-cropped egress.
+            let replay_bytes: u64 = admitted_ids
+                .iter()
+                .map(|&c| t_egress.get(c).copied().unwrap_or(0))
+                .sum();
+            let rescope_bytes: u64 = delta
+                .rescopes
+                .iter()
+                .map(|(c, _)| t_egress.get(*c as usize).copied().unwrap_or(0))
+                .sum();
+            let t_replay = self.cost.t_admission_replay(hw.scaled(replay_bytes), naggs);
+            if t_replay > 0.0 {
+                cost.push_background("replay", t_replay);
+            }
+            let t_rescope =
+                self.cost
+                    .t_rescope_recrop(hw.scaled(rescope_bytes), naggs, codec_bw);
+            if t_rescope > 0.0 {
+                cost.push("rescope-recrop", t_rescope);
+            }
             self.report.steps.push(StepStats {
                 step: self.step,
                 bytes_raw: t_raw,
@@ -1179,6 +1804,10 @@ impl Engine for SstEngine {
                 codec_passes_saved: t_passes_saved,
                 deduped_egress_bytes: t_deduped,
                 unique_crop_bytes: t_crop_bytes,
+                consumers_admitted: delta.admits.len() as u32,
+                consumers_reaped: reaped_set.len() as u32,
+                consumers_rescoped: delta.rescopes.len() as u32,
+                replay_bytes,
                 real_secs: sw.secs(),
                 cost,
             });
@@ -1194,6 +1823,9 @@ impl Engine for SstEngine {
             return Err(Error::sst("double close"));
         }
         self.closed = true;
+        // Stop admitting before the lanes close: dropping the broker
+        // joins its accept loop and refuses anyone still parked.
+        self.broker = None;
         comm.barrier();
         // Finish EVERY lane before reporting any failure: returning on
         // the first bad lane would strand healthy consumers without
@@ -1488,6 +2120,14 @@ pub enum StepPoll {
     Timeout,
 }
 
+/// A broker-attached consumer's control identity (wire v4): enough to
+/// open a fresh control connection for a rescope.
+struct ControlLink {
+    broker_addr: String,
+    consumer_id: u32,
+    timeout: Duration,
+}
+
 /// Consumer: reassembles steps across all accepted lanes.
 pub struct SstConsumer {
     lanes: Vec<SstLane>,
@@ -1496,6 +2136,9 @@ pub struct SstConsumer {
     pending: Vec<Option<(u8, Vec<u8>)>>,
     next_index: usize,
     done: bool,
+    /// `Some` for consumers admitted through the broker (wire v4); only
+    /// those can rescope.
+    control: Option<ControlLink>,
 }
 
 impl SstConsumer {
@@ -1503,7 +2146,118 @@ impl SstConsumer {
     pub fn listen(addr: &str) -> Result<SstListener> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::sst(format!("cannot bind {addr}: {e}")))?;
-        Ok(SstListener { listener })
+        Ok(SstListener {
+            listener,
+            hello_timeout: DEFAULT_HELLO_TIMEOUT,
+            max_lanes: DEFAULT_MAX_LANES,
+        })
+    }
+
+    /// Mid-stream admission (wire v4, DESIGN.md §15): dial the rank-0
+    /// broker, request admission with `sub`, wait for the admit reply
+    /// (which lands at the producer's next step boundary, so `timeout`
+    /// must cover at least one compute step — `None` waits forever),
+    /// then accept the producer lanes exactly like a collective-open
+    /// consumer.  The returned consumer's first step is whatever step
+    /// the producer was about to ship — replayed from the same per-step
+    /// crop cache every from-the-start consumer is served from, so its
+    /// stream is byte-identical to theirs from that step on.
+    pub fn attach(
+        broker_addr: &str,
+        sub: &Subscription,
+        timeout: Option<Duration>,
+    ) -> Result<SstConsumer> {
+        Self::attach_on(SstConsumer::listen("127.0.0.1:0")?, broker_addr, sub, timeout)
+    }
+
+    /// [`SstConsumer::attach`] with a caller-prepared lane listener (for
+    /// configured hello timeouts / lane caps: see
+    /// [`SstListener::set_hello_timeout`] and
+    /// [`SstListener::set_max_lanes`]).
+    pub fn attach_on(
+        listener: SstListener,
+        broker_addr: &str,
+        sub: &Subscription,
+        timeout: Option<Duration>,
+    ) -> Result<SstConsumer> {
+        let my_addr = listener.local_addr()?;
+        let connect_timeout = timeout.unwrap_or(DEFAULT_HELLO_TIMEOUT);
+        let mut control = connect_retry(broker_addr, connect_timeout)
+            .map_err(|e| Error::sst(format!("attach: cannot reach broker {broker_addr}: {e}")))?;
+        let mut w = Writer::new();
+        w.str(&my_addr);
+        w.bytes(&encode_subscription(sub));
+        write_frame_v4(&mut control, TYPE_ATTACH, &w.into_vec())?;
+        let overall = timeout.map(|t| Instant::now() + t);
+        let (ty, payload) = read_frame_v4(&mut control, overall).map_err(|e| {
+            Error::sst(format!(
+                "attach: no admission from broker {broker_addr} (admission lands at \
+                 the producer's next step boundary): {e}"
+            ))
+        })?;
+        match ty {
+            TYPE_REFUSE => Err(Error::sst(format!(
+                "attach refused by broker {broker_addr}: {}",
+                String::from_utf8_lossy(&payload)
+            ))),
+            TYPE_ADMIT => {
+                let mut r = Reader::new(&payload);
+                let first_step = r.u64()? as usize;
+                let consumer_id = r.u32()?;
+                let nlanes = r.u32()?;
+                if nlanes == 0 || nlanes > listener.max_lanes {
+                    return Err(Error::sst(format!(
+                        "attach: broker announced {nlanes} lanes (cap {})",
+                        listener.max_lanes
+                    )));
+                }
+                drop(control);
+                // The aggregators are already dialing the lane listener;
+                // accept them with the usual dense-id handshake, but
+                // start the step sequence at the admitted step.
+                let mut c = listener.accept_all(sub, timeout, first_step)?;
+                c.control = Some(ControlLink {
+                    broker_addr: broker_addr.to_string(),
+                    consumer_id,
+                    timeout: connect_timeout,
+                });
+                Ok(c)
+            }
+            other => Err(Error::sst(format!(
+                "attach: unexpected control frame type {other}"
+            ))),
+        }
+    }
+
+    /// Replace this consumer's subscription at the producer's next step
+    /// boundary (wire v4): opens a fresh control connection, parks the
+    /// rescope at the broker, and returns once the broker acks — from
+    /// then on, the next boundary's membership delta re-keys this
+    /// consumer's effective-subscription group and crop-cache entries.
+    /// Only broker-attached consumers carry the control identity this
+    /// needs; collective-open (v3) consumers get a descriptive error.
+    pub fn rescope(&mut self, sub: &Subscription) -> Result<()> {
+        let Some(ctl) = &self.control else {
+            return Err(Error::sst(
+                "rescope: this consumer was wired up at the collective open (wire v3) \
+                 and its subscription is frozen — only broker-attached (v4) consumers \
+                 can rescope",
+            ));
+        };
+        let mut s = connect_retry(&ctl.broker_addr, ctl.timeout)
+            .map_err(|e| Error::sst(format!("rescope: cannot reach broker: {e}")))?;
+        let mut w = Writer::new();
+        w.u32(ctl.consumer_id);
+        w.bytes(&encode_subscription(sub));
+        write_frame_v4(&mut s, TYPE_RESCOPE, &w.into_vec())?;
+        let (ty, _ack) = read_frame_v4(&mut s, Some(Instant::now() + ctl.timeout))
+            .map_err(|e| Error::sst(format!("rescope: no ack from broker: {e}")))?;
+        if ty != TYPE_RESCOPE {
+            return Err(Error::sst(format!(
+                "rescope: unexpected ack frame type {ty}"
+            )));
+        }
+        Ok(())
     }
 
     /// Lane frames staged for the in-progress step (progress indicator:
@@ -1646,11 +2400,26 @@ impl SstConsumer {
 /// Bound listener; `accept` blocks until every producer lane connects.
 pub struct SstListener {
     listener: TcpListener,
+    /// Bound on every hello handshake ([`DEFAULT_HELLO_TIMEOUT`]).
+    hello_timeout: Duration,
+    /// Sanity cap on the lane count a hello may announce
+    /// ([`DEFAULT_MAX_LANES`]).
+    max_lanes: u32,
 }
 
 impl SstListener {
     pub fn local_addr(&self) -> Result<String> {
         Ok(self.listener.local_addr()?.to_string())
+    }
+
+    /// Override the hello handshake bound (`adios2_sst_hello_timeout`).
+    pub fn set_hello_timeout(&mut self, t: Duration) {
+        self.hello_timeout = t;
+    }
+
+    /// Override the lane-count sanity cap (`adios2_sst_max_lanes`).
+    pub fn set_max_lanes(&mut self, n: u32) {
+        self.max_lanes = n;
     }
 
     /// Accept one lane connection, read its hello, and reply with this
@@ -1703,7 +2472,7 @@ impl SstListener {
             }
         };
         stream.set_nodelay(true).ok();
-        let hello_deadline = deadline.unwrap_or_else(|| Instant::now() + HELLO_TIMEOUT);
+        let hello_deadline = deadline.unwrap_or_else(|| Instant::now() + self.hello_timeout);
         let (ty, payload) = read_frame(&mut stream, Some(hello_deadline))?;
         if ty != TYPE_HELLO {
             return Err(Error::sst(format!(
@@ -1713,9 +2482,10 @@ impl SstListener {
         let mut r = Reader::new(&payload);
         let lane = r.u32()?;
         let nlanes = r.u32()?;
-        if nlanes == 0 || nlanes > MAX_LANES || lane >= nlanes {
+        if nlanes == 0 || nlanes > self.max_lanes || lane >= nlanes {
             return Err(Error::sst(format!(
-                "invalid hello: lane {lane} of {nlanes}"
+                "invalid hello: lane {lane} of {nlanes} (cap {})",
+                self.max_lanes
             )));
         }
         // Handshake reply: this consumer's subscription, so the producer
@@ -1741,11 +2511,26 @@ impl SstListener {
     /// On failure the error reports the partial-lane state (how many
     /// lanes of how many expected had connected).  `timeout: None` keeps
     /// the v2 semantics: wait indefinitely for the first connection, then
-    /// bound the remaining lanes by `HELLO_TIMEOUT`.
+    /// bound the remaining lanes by the hello timeout
+    /// ([`DEFAULT_HELLO_TIMEOUT`] unless overridden with
+    /// [`SstListener::set_hello_timeout`]).
     pub fn accept_with(
         self,
         sub: &Subscription,
         timeout: Option<Duration>,
+    ) -> Result<SstConsumer> {
+        self.accept_all(sub, timeout, 0)
+    }
+
+    /// Shared accept loop: `start_index` is the first step this consumer
+    /// expects (0 at the collective open; the admitted step for a
+    /// mid-stream attach).  On a partial handshake the error carries the
+    /// lane ids already connected and the lane slot that failed.
+    fn accept_all(
+        self,
+        sub: &Subscription,
+        timeout: Option<Duration>,
+        start_index: usize,
     ) -> Result<SstConsumer> {
         let sub_frame = encode_subscription(sub);
         let overall = timeout.map(|t| Instant::now() + t);
@@ -1753,16 +2538,18 @@ impl SstListener {
             Error::sst(format!("accept: 0 lanes connected (of unknown count): {e}"))
         })?;
         let mut lanes = vec![SstLane { stream, id: lane }];
-        let hello_deadline = Instant::now() + HELLO_TIMEOUT;
+        let hello_deadline = Instant::now() + self.hello_timeout;
         let deadline = match overall {
             Some(o) => o.min(hello_deadline),
             None => hello_deadline,
         };
-        for _ in 1..nlanes {
+        for slot in 1..nlanes {
             let (stream, lane, n2) =
                 self.accept_one(Some(deadline), &sub_frame).map_err(|e| {
+                    let have: Vec<u32> = lanes.iter().map(|l| l.id).collect();
                     Error::sst(format!(
-                        "accept: {} of {nlanes} lanes connected before failure: {e}",
+                        "accept: {} of {nlanes} lanes connected before failure at \
+                         lane slot {slot} (have lane ids {have:?}): {e}",
                         lanes.len()
                     ))
                 })?;
@@ -1786,8 +2573,9 @@ impl SstListener {
         Ok(SstConsumer {
             lanes,
             pending: (0..n).map(|_| None).collect(),
-            next_index: 0,
+            next_index: start_index,
             done: false,
+            control: None,
         })
     }
 }
@@ -1809,6 +2597,32 @@ impl SstSource {
             consumer,
             current: None,
         }
+    }
+
+    /// Late open (wire v4): attach to a running producer's broker
+    /// mid-stream and wrap the admitted consumer as a [`StepSource`].
+    /// The source's first step is the one the producer was about to
+    /// ship; see [`SstConsumer::attach`].
+    pub fn attach(
+        broker_addr: &str,
+        sub: &Subscription,
+        timeout: Option<Duration>,
+    ) -> Result<SstSource> {
+        Ok(SstSource::new(SstConsumer::attach(broker_addr, sub, timeout)?))
+    }
+
+    /// Replace this consumer's subscription at the next step boundary
+    /// (broker-attached consumers only); must be called between steps —
+    /// with a step open, the swap would make the open step's data
+    /// inconsistent with the registered scope.
+    pub fn rescope(&mut self, sub: &Subscription) -> Result<()> {
+        if self.current.is_some() {
+            return Err(Error::sst(
+                "rescope with a step open: end_step first, the new scope takes \
+                 effect at the next step boundary",
+            ));
+        }
+        self.consumer.rescope(sub)
     }
 
     fn current(&self) -> Result<&SstStep> {

@@ -126,6 +126,14 @@ pub struct Subscription {
 }
 
 /// One subscribed variable: whole extent, or a `[start, start+count)` box.
+///
+/// A subscription is fixed for the life of a v3 (collectively opened)
+/// consumer, but broker-attached (wire v4) consumers may *rescope* — hand
+/// the producer a replacement `Subscription` that takes effect at the
+/// next step boundary ([`crate::adios::engine::sst::SstSource::rescope`],
+/// DESIGN.md §15).  The effective-subscription groups and the
+/// content-addressed frame cache are re-keyed on the fly; steps already
+/// in flight keep the old scope.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SubEntry {
     pub var: String,
@@ -179,6 +187,69 @@ impl Subscription {
     /// True if this subscription means "ship everything".
     pub fn is_all(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    /// Parse a command-line subscription spec (`stormio attach --sub`):
+    /// `;`-separated entries, each a bare variable name (`T`) or a boxed
+    /// one (`T[1:2,0:6]` — per-dimension `start:count` pairs).  An empty
+    /// or whitespace-only spec subscribes to everything.
+    pub fn parse(spec: &str) -> Result<Subscription> {
+        let mut sub = Subscription::default();
+        for raw in spec.split(';') {
+            let ent = raw.trim();
+            if ent.is_empty() {
+                continue;
+            }
+            let (name, sel) = match ent.find('[') {
+                None => (ent, None),
+                Some(open) => {
+                    let name = ent[..open].trim_end();
+                    let rest = &ent[open + 1..];
+                    let close = rest.find(']').ok_or_else(|| {
+                        Error::config(format!("subscription entry `{ent}`: unclosed `[`"))
+                    })?;
+                    if !rest[close + 1..].trim().is_empty() {
+                        return Err(Error::config(format!(
+                            "subscription entry `{ent}`: trailing junk after `]`"
+                        )));
+                    }
+                    let mut start = Vec::new();
+                    let mut count = Vec::new();
+                    for dim in rest[..close].split(',') {
+                        let (s, c) = dim.trim().split_once(':').ok_or_else(|| {
+                            Error::config(format!(
+                                "subscription entry `{ent}`: dimension `{dim}` is not `start:count`"
+                            ))
+                        })?;
+                        let parse_u64 = |v: &str| {
+                            v.trim().parse::<u64>().map_err(|_| {
+                                Error::config(format!(
+                                    "subscription entry `{ent}`: `{v}` is not an unsigned integer"
+                                ))
+                            })
+                        };
+                        start.push(parse_u64(s)?);
+                        count.push(parse_u64(c)?);
+                    }
+                    if start.is_empty() {
+                        return Err(Error::config(format!(
+                            "subscription entry `{ent}`: empty box selection"
+                        )));
+                    }
+                    (name, Some((start, count)))
+                }
+            };
+            if name.is_empty() {
+                return Err(Error::config(format!(
+                    "subscription entry `{ent}`: missing variable name"
+                )));
+            }
+            sub.entries.push(SubEntry {
+                var: name.to_string(),
+                sel,
+            });
+        }
+        Ok(sub)
     }
 
     /// What this subscription wants of variable `name`.  A whole-variable
@@ -325,5 +396,29 @@ mod tests {
         // A whole-variable entry dominates box entries for the same name.
         let both = Subscription::var_box("T", &[0], &[1]).and_var("T");
         assert_eq!(both.wants("T"), VarInterest::Full);
+    }
+
+    #[test]
+    fn subscription_parse_specs() {
+        // Empty / whitespace = everything.
+        assert!(Subscription::parse("").unwrap().is_all());
+        assert!(Subscription::parse("  ; ").unwrap().is_all());
+        // Bare names and boxed entries, mixed, with sloppy spacing.
+        let sub = Subscription::parse("PSFC; T[1:2, 0:6]").unwrap();
+        assert_eq!(sub, Subscription::var("PSFC").and_box("T", &[1, 0], &[2, 6]));
+        assert_eq!(
+            Subscription::parse("T[0:4]").unwrap(),
+            Subscription::var_box("T", &[0], &[4])
+        );
+        // Malformed specs fail with a message naming the entry.
+        for bad in ["T[1:2", "T[1:2]x", "T[]", "T[1]", "T[a:2]", "[0:1]"] {
+            let err = Subscription::parse(bad).err().unwrap_or_else(|| {
+                panic!("spec `{bad}` parsed but should not have")
+            });
+            assert!(
+                format!("{err}").contains("subscription entry"),
+                "spec `{bad}`: unhelpful error {err}"
+            );
+        }
     }
 }

@@ -111,6 +111,10 @@ impl Adios2Backend {
                 crop_cache_hits: s.crop_cache_hits,
                 codec_passes_saved: s.codec_passes_saved,
                 deduped_egress_bytes: s.deduped_egress_bytes,
+                consumers_admitted: s.consumers_admitted,
+                consumers_reaped: s.consumers_reaped,
+                consumers_rescoped: s.consumers_rescoped,
+                replay_bytes: s.replay_bytes,
                 files_created: rep.files_created,
                 drain: rep.drain,
             });

@@ -46,6 +46,15 @@ pub struct FrameReport {
     /// Payload bytes refcount-shared across consumers instead of being
     /// buffered once per lane.
     pub deduped_egress_bytes: u64,
+    /// Consumers admitted mid-stream at this frame's step boundary (SST
+    /// service tier, wire v4); zero elsewhere.
+    pub consumers_admitted: u32,
+    /// Consumers reaped at this frame (disconnect or failed admission).
+    pub consumers_reaped: u32,
+    /// Consumers whose rescoped subscription took effect at this frame.
+    pub consumers_rescoped: u32,
+    /// Wire bytes replayed to just-admitted consumers at this frame.
+    pub replay_bytes: u64,
     pub files_created: usize,
     /// Measured background-drain pipeline statistics (engines with async
     /// data movement; zero for synchronous backends).

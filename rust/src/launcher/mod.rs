@@ -28,6 +28,9 @@
 //!   adios2_ensemble_writers = 1,       ! concurrent runs sharing the store
 //!   adios2_sst_data_plane  = 'lanes',  ! lanes | funnel | auto (SST)
 //!   adios2_sst_address     = 'h:p,h:p',! SST consumer list (fan-out)
+//!   adios2_sst_broker      = .false.,  ! rank-0 mid-stream admission broker
+//!   adios2_sst_hello_timeout = 30,     ! lane handshake bound [s]
+//!   adios2_sst_max_lanes   = 65536,    ! lane-count sanity cap
 //!   adios2_live_publish    = .false.,  ! per-step md.idx for followers
 //!   frames_per_outfile     = 1,        ! 0 = all frames in one BP file
 //!   nio_tasks              = 2,        ! quilt servers (io_form=901)
@@ -403,11 +406,41 @@ pub fn run_insitu_from_namelist(
 
     // Producer: the forecast with an SST fan-out plan addressing all
     // three consumers (namelist engine choice is overridden — this
-    // command *is* the streaming pipeline).
+    // command *is* the streaming pipeline), plus the wire v4 service
+    // broker so consumers can attach mid-stream (DESIGN.md §15).
     let mut intent = merged;
     intent.addresses = addrs.iter().map(|a| a.to_string()).collect();
+    intent.sst_broker = Some(true);
     let plan = cfg.planner().plan(EngineKind::Sst, &intent)?;
     println!("{}", plan.summary_line());
+
+    // Fourth consumer, attached *late* through the broker: it discovers
+    // the producer via the contact file rank 0 publishes at open, is
+    // admitted at a step boundary, and receives the current step's
+    // frames as replay from the shared crop cache.
+    let contact = crate::adios::engine::sst::contact_path(&cfg.out_dir.join("pfs"));
+    let late_t = std::thread::spawn(move || -> Result<(usize, usize, u64)> {
+        use crate::adios::source::{StepSource, StepStatus};
+        let addr = crate::adios::engine::sst::read_contact(&contact, Duration::from_secs(60))?;
+        let consumer =
+            SstConsumer::attach(&addr, &Subscription::all(), Some(Duration::from_secs(300)))?;
+        let mut src = SstSource::new(consumer);
+        let mut first = None;
+        let (mut steps, mut bytes) = (0usize, 0u64);
+        loop {
+            match src.begin_step(step_timeout)? {
+                StepStatus::Ready => {
+                    first.get_or_insert(src.step_index());
+                    bytes += src.step_stored_bytes();
+                    steps += 1;
+                    src.end_step()?;
+                }
+                StepStatus::EndOfStream | StepStatus::Timeout => break,
+            }
+        }
+        Ok((first.unwrap_or(0), steps, bytes))
+    });
+
     let summary = driver.run(step, |_rank| {
         cfg.make_backend(&plan).expect("backend construction failed")
     })?;
@@ -433,7 +466,18 @@ pub fn run_insitu_from_namelist(
         archived.len(),
         arc_dir.display(),
     );
-    print_consumer_egress(&summary.frames, &["analysis", "convert", "archive"]);
+    // The late joiner is best-effort: a very short run may close before
+    // its admission boundary (the broker then refuses the parked attach).
+    match late_t.join() {
+        Ok(Ok((first, steps, bytes))) if steps > 0 => println!(
+            "late-attach consumer: admitted at step {first}, streamed {steps} step(s) ({})",
+            crate::util::human_bytes(bytes)
+        ),
+        Ok(Ok(_)) => println!("late-attach consumer: admitted after the final step (0 steps)"),
+        Ok(Err(e)) => println!("late-attach consumer: not admitted ({e})"),
+        Err(_) => println!("late-attach consumer: panicked"),
+    }
+    print_consumer_egress(&summary.frames, &["analysis", "convert", "archive", "late"]);
     Ok(summary)
 }
 
@@ -634,6 +678,76 @@ fn run_insitu_bb_local(
     Ok(summary)
 }
 
+/// The `stormio attach` command: join a *running* broker-enabled SST
+/// producer mid-stream (wire v4, DESIGN.md §15) and tail its steps.
+///
+/// `target` is either a broker address (`host:port`) or a path — the
+/// producer's output directory (or the `sst_broker.contact` file itself),
+/// from which the broker address rank 0 published is read.  `sub_spec`
+/// is an optional [`Subscription::parse`] spec (`'T[1:2,0:6];PSFC'`);
+/// absent means subscribe to everything.  Admission lands at the
+/// producer's next step boundary; the first step received is replayed
+/// from the producer's shared crop cache.
+pub fn run_attach(target: &str, sub_spec: Option<&str>, timeout_secs: u64) -> Result<()> {
+    use crate::adios::engine::sst::{self, SstConsumer, SstSource};
+    use crate::adios::source::{StepSource, StepStatus};
+    use crate::adios::Subscription;
+    use std::time::Duration;
+
+    let timeout = Duration::from_secs(timeout_secs.max(1));
+    let sub = match sub_spec {
+        Some(s) => Subscription::parse(s)?,
+        None => Subscription::all(),
+    };
+    let path = std::path::Path::new(target);
+    let addr = if target.contains(':') && !path.exists() {
+        target.to_string()
+    } else {
+        let contact = if path.is_dir() {
+            // Accept the run directory or its pfs/ subdirectory.
+            let pfs = path.join("pfs");
+            if sst::contact_path(path).exists() || !pfs.is_dir() {
+                sst::contact_path(path)
+            } else {
+                sst::contact_path(&pfs)
+            }
+        } else {
+            path.to_path_buf()
+        };
+        sst::read_contact(&contact, timeout)?
+    };
+    println!("attaching to SST broker {addr} ...");
+    let consumer = SstConsumer::attach(&addr, &sub, Some(timeout))?;
+    let mut src = SstSource::new(consumer);
+    let (mut steps, mut bytes) = (0usize, 0u64);
+    loop {
+        match src.begin_step(timeout)? {
+            StepStatus::Ready => {
+                let b = src.step_stored_bytes();
+                println!(
+                    "step {}: {} var(s), {}",
+                    src.step_index(),
+                    src.var_names().len(),
+                    crate::util::human_bytes(b)
+                );
+                steps += 1;
+                bytes += b;
+                src.end_step()?;
+            }
+            StepStatus::EndOfStream => break,
+            StepStatus::Timeout => {
+                println!("no step within {}s; detaching", timeout.as_secs());
+                break;
+            }
+        }
+    }
+    println!(
+        "attached consumer received {steps} step(s), {} total",
+        crate::util::human_bytes(bytes)
+    );
+    Ok(())
+}
+
 /// Print the per-consumer wire-egress table of a fan-out run (empty
 /// egress vectors — file engines, single-consumer streams — print
 /// nothing).  `labels` name the consumers in address order.
@@ -678,6 +792,19 @@ pub fn print_consumer_egress(frames: &[crate::io::api::FrameReport], labels: &[&
              {hits} cache hit(s), {saved} codec pass(es) saved, \
              {} of egress refcount-shared",
             crate::util::human_bytes(deduped)
+        );
+    }
+    // Membership ledger (wire v4 service tier, DESIGN.md §15): silent for
+    // v3 runs where membership is frozen at open.
+    let admitted: u32 = frames.iter().map(|f| f.consumers_admitted).sum();
+    let reaped: u32 = frames.iter().map(|f| f.consumers_reaped).sum();
+    let rescoped: u32 = frames.iter().map(|f| f.consumers_rescoped).sum();
+    let replayed: u64 = frames.iter().map(|f| f.replay_bytes).sum();
+    if admitted as u64 + reaped as u64 + rescoped as u64 + replayed > 0 {
+        println!(
+            "membership: {admitted} admitted mid-stream, {reaped} reaped, \
+             {rescoped} rescoped, {} replayed to joiners",
+            crate::util::human_bytes(replayed)
         );
     }
 }

@@ -45,6 +45,19 @@ USAGE:
       three concurrent consumers: in-situ analysis (subscribed to
       its variable only — selection pushdown), live NetCDF
       conversion, and a raw step archiver (paper §V-F, Fig 8).
+      The producer runs the wire v4 service broker, and a fourth
+      consumer attaches mid-stream through it (late join + replay).
+
+  stormio attach <addr | dir | contact_file> [--sub SPEC]
+                 [--timeout SECS]
+      Join a *running* broker-enabled SST producer mid-stream
+      (wire v4): admitted at the next step boundary, first step
+      replayed from the producer's crop cache, then tail steps
+      until end-of-stream.  <addr> is the broker host:port, or a
+      path to the producer's output directory / sst_broker.contact
+      file.  --sub crops the subscription: ';'-separated entries,
+      each NAME or NAME[start:count,...] per dimension
+      (e.g. --sub 'T[1:2,0:6];PSFC').
 
   stormio stitch <out.nc> <part.nc> [part.nc ...]
       Stitch split-NetCDF (io_form=102) per-rank files into one file.
@@ -85,6 +98,24 @@ fn real_main() -> stormio::Result<i32> {
                 stormio::Error::config("insitu: missing namelist path".to_string())
             })?;
             launcher::run_insitu_from_namelist(Path::new(nl), &artifacts_flag(&args))?;
+            Ok(0)
+        }
+        Some("attach") => {
+            let target = args.get(1).ok_or_else(|| {
+                stormio::Error::config(
+                    "attach: missing broker address or producer directory".to_string(),
+                )
+            })?;
+            let sub = args
+                .windows(2)
+                .find(|w| w[0] == "--sub")
+                .map(|w| w[1].as_str());
+            let secs: u64 = args
+                .windows(2)
+                .find(|w| w[0] == "--timeout")
+                .and_then(|w| w[1].parse().ok())
+                .unwrap_or(300);
+            launcher::run_attach(target, sub, secs)?;
             Ok(0)
         }
         Some("convert") => {

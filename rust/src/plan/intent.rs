@@ -135,6 +135,19 @@ pub struct IoIntent {
     /// `visible_steps` watermark throughout).  Absent = retain forever;
     /// ignored by the file targets.
     pub object_retain_steps: Option<usize>,
+    /// `adios2_sst_broker` / `Broker`: run the wire v4 consumer service
+    /// broker on rank 0 so consumers can attach mid-stream (DESIGN.md
+    /// §15).  Absent = no broker (v3-compatible frozen membership).
+    pub sst_broker: Option<bool>,
+    /// `adios2_sst_hello_timeout` / `HelloTimeout`: seconds to wait for a
+    /// consumer's lane hello/subscription handshake.  Absent = the
+    /// engine's built-in default
+    /// ([`crate::adios::engine::sst::DEFAULT_HELLO_TIMEOUT`]).
+    pub sst_hello_timeout: Option<u64>,
+    /// `adios2_sst_max_lanes` / `MaxLanes`: sanity cap on the advertised
+    /// lane count a consumer will fan-in (and the producer may open).
+    /// Absent = [`crate::adios::engine::sst::DEFAULT_MAX_LANES`].
+    pub sst_max_lanes: Option<u32>,
     /// Operator template from the XML `<operator>` element: preserves
     /// shuffle / lossy bit-rounding settings when only the codec is
     /// (re)decided.
@@ -230,6 +243,25 @@ impl IoIntent {
             }
             intent.object_retain_steps = Some(n as usize);
         }
+        if let Some(b) = tc.get_bool("adios2_sst_broker") {
+            intent.sst_broker = Some(b);
+        }
+        if let Some(n) = tc.get_i64("adios2_sst_hello_timeout") {
+            if n < 1 {
+                return Err(Error::config(format!(
+                    "adios2_sst_hello_timeout = {n} must be >= 1 second"
+                )));
+            }
+            intent.sst_hello_timeout = Some(n as u64);
+        }
+        if let Some(n) = tc.get_i64("adios2_sst_max_lanes") {
+            if n < 1 {
+                return Err(Error::config(format!(
+                    "adios2_sst_max_lanes = {n} must be >= 1"
+                )));
+            }
+            intent.sst_max_lanes = Some(n as u32);
+        }
         Ok(intent)
     }
 
@@ -309,6 +341,27 @@ impl IoIntent {
                     ))
                 })?;
                 merged.object_retain_steps = Some(n);
+            }
+        }
+        if merged.sst_broker.is_none() && io.param("Broker").is_some() {
+            merged.sst_broker = Some(io.param_bool("Broker", false)?);
+        }
+        if merged.sst_hello_timeout.is_none() {
+            if let Some(s) = io.param("HelloTimeout") {
+                let n = s.parse::<u64>().ok().filter(|n| *n >= 1).ok_or_else(|| {
+                    Error::config(format!(
+                        "HelloTimeout={s} is not a positive integer (seconds)"
+                    ))
+                })?;
+                merged.sst_hello_timeout = Some(n);
+            }
+        }
+        if merged.sst_max_lanes.is_none() {
+            if let Some(s) = io.param("MaxLanes") {
+                let n = s.parse::<u32>().ok().filter(|n| *n >= 1).ok_or_else(|| {
+                    Error::config(format!("MaxLanes={s} is not a positive integer"))
+                })?;
+                merged.sst_max_lanes = Some(n);
             }
         }
         Ok(merged)
@@ -397,6 +450,36 @@ mod tests {
         let m = i.merge_io_config(&io).unwrap();
         assert_eq!(m.object_retain_steps, Some(3));
         io.params.insert("ObjectRetainSteps".into(), "zero".into());
+        assert!(IoIntent::default().merge_io_config(&io).is_err());
+    }
+
+    #[test]
+    fn sst_service_knobs_parse_both_spellings() {
+        let g = tc(
+            "adios2_sst_broker = .true.,\n adios2_sst_hello_timeout = 5,\n \
+             adios2_sst_max_lanes = 64,",
+        );
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.sst_broker, Some(true));
+        assert_eq!(i.sst_hello_timeout, Some(5));
+        assert_eq!(i.sst_max_lanes, Some(64));
+        assert!(
+            IoIntent::from_time_control(&tc("adios2_sst_hello_timeout = 0,")).is_err()
+        );
+        assert!(IoIntent::from_time_control(&tc("adios2_sst_max_lanes = 0,")).is_err());
+        // XML spellings fill only when the namelist is silent.
+        let mut io = IoConfig::new("hist", EngineKind::Sst);
+        io.params.insert("Broker".into(), "true".into());
+        io.params.insert("HelloTimeout".into(), "9".into());
+        io.params.insert("MaxLanes".into(), "8".into());
+        let m = IoIntent::default().merge_io_config(&io).unwrap();
+        assert_eq!(m.sst_broker, Some(true));
+        assert_eq!(m.sst_hello_timeout, Some(9));
+        assert_eq!(m.sst_max_lanes, Some(8));
+        let m = i.merge_io_config(&io).unwrap();
+        assert_eq!(m.sst_hello_timeout, Some(5));
+        assert_eq!(m.sst_max_lanes, Some(64));
+        io.params.insert("HelloTimeout".into(), "soon".into());
         assert!(IoIntent::default().merge_io_config(&io).is_err());
     }
 

@@ -76,15 +76,32 @@ pub fn open_engine(
             };
             Ok(Box::new(bp4::Bp4Engine::open(cfg, comm)?))
         }
-        EngineKind::Sst => Ok(Box::new(sst::SstEngine::open_multi(
-            &plan.addresses(),
-            plan.operator,
-            cost,
-            comm,
-            Duration::from_secs(30),
-            plan.data_plane.value,
-            plan.aggs_per_node.value,
-        )?)),
+        EngineKind::Sst => {
+            // The service tier (DESIGN.md §15): a broker-enabled plan
+            // runs the wire v4 admission broker on rank 0 and publishes
+            // its address through a contact file in the output directory
+            // for late `SstConsumer::attach` joiners.
+            let opts = sst::SstServiceOpts {
+                broker: plan.broker,
+                broker_bind: "127.0.0.1:0".into(),
+                hello_timeout: plan
+                    .sst_hello_timeout
+                    .map(Duration::from_secs)
+                    .unwrap_or(sst::DEFAULT_HELLO_TIMEOUT),
+                max_lanes: plan.sst_max_lanes.unwrap_or(sst::DEFAULT_MAX_LANES),
+                contact_file: plan.broker.then(|| sst::contact_path(pfs_dir)),
+            };
+            Ok(Box::new(sst::SstEngine::open_service(
+                &plan.addresses(),
+                plan.operator,
+                cost,
+                comm,
+                Duration::from_secs(30),
+                plan.data_plane.value,
+                plan.aggs_per_node.value,
+                opts,
+            )?))
+        }
         EngineKind::Null => Ok(Box::new(NullEngine::default())),
     }
 }

@@ -248,6 +248,19 @@ pub struct IoPlan {
     /// policy rather than a planner decision, so it is deliberately not
     /// part of the rendered decision table.
     pub object_retain_steps: Option<usize>,
+    /// Run the wire v4 consumer service broker on rank 0 so consumers
+    /// can attach mid-stream (`adios2_sst_broker` / `Broker`, DESIGN.md
+    /// §15).  With a broker the consumer set is dynamic, so an SST plan
+    /// may open with zero pre-wired addresses.  A service toggle rather
+    /// than a planner decision — deliberately not in the rendered table.
+    pub broker: bool,
+    /// Lane hello/subscription handshake timeout override in seconds
+    /// (`adios2_sst_hello_timeout` / `HelloTimeout`); `None` = engine
+    /// default.  Not rendered.
+    pub sst_hello_timeout: Option<u64>,
+    /// Lane-count sanity cap override (`adios2_sst_max_lanes` /
+    /// `MaxLanes`); `None` = engine default.  Not rendered.
+    pub sst_max_lanes: Option<u32>,
     pub predicted: PlanCosts,
 }
 
@@ -703,7 +716,8 @@ impl Planner {
                 est_bytes: stored,
             })
             .collect();
-        if engine == EngineKind::Sst && consumers.is_empty() {
+        let broker = intent.sst_broker.unwrap_or(false);
+        if engine == EngineKind::Sst && consumers.is_empty() && !broker {
             return Err(Error::config("SST io needs an Address parameter"));
         }
         let per_consumer: Vec<f64> = consumers.iter().map(|c| c.est_bytes).collect();
@@ -754,6 +768,9 @@ impl Planner {
             pack_threads: intent.pack_threads.unwrap_or(0),
             async_io: intent.async_io.unwrap_or(true),
             object_retain_steps: intent.object_retain_steps,
+            broker,
+            sst_hello_timeout: intent.sst_hello_timeout,
+            sst_max_lanes: intent.sst_max_lanes,
             predicted,
         })
     }
@@ -1049,6 +1066,37 @@ mod tests {
         assert_eq!(plan.consumers.len(), 2);
         assert!(plan.predicted.fanout_advantage > 0.0);
         assert_eq!(plan.addresses(), vec!["127.0.0.1:1", "127.0.0.1:2"]);
+    }
+
+    #[test]
+    fn broker_plan_allows_zero_prewired_consumers() {
+        let p = planner(2);
+        // With the service broker on, SST membership is dynamic: a plan
+        // with no Address parameter is valid (consumers attach later).
+        let plan = p
+            .plan(EngineKind::Sst, &intent("adios2_sst_broker = .true.,"))
+            .unwrap();
+        assert!(plan.broker);
+        assert!(plan.consumers.is_empty());
+        // The service knobs ride through to the plan untouched.
+        let plan = p
+            .plan(
+                EngineKind::Sst,
+                &intent(
+                    "adios2_sst_broker = .true.,\n \
+                     adios2_sst_hello_timeout = 7,\n \
+                     adios2_sst_max_lanes = 32,\n \
+                     adios2_sst_address = '127.0.0.1:1',",
+                ),
+            )
+            .unwrap();
+        assert_eq!(plan.sst_hello_timeout, Some(7));
+        assert_eq!(plan.sst_max_lanes, Some(32));
+        // Broker off + no addresses is still the v3 config error.
+        assert!(p.plan(EngineKind::Sst, &IoIntent::default()).is_err());
+        // File plans default the service tier off.
+        let bp = p.plan(EngineKind::Bp4, &IoIntent::default()).unwrap();
+        assert!(!bp.broker && bp.sst_hello_timeout.is_none() && bp.sst_max_lanes.is_none());
     }
 
     #[test]

@@ -388,6 +388,30 @@ impl CostModel {
         }
         unique_crop_bytes / lanes.clamp(1, self.hw.ranks().max(1)) as f64 / codec_bw
     }
+
+    /// Replay egress for consumers admitted mid-stream by the service
+    /// broker (wire v4, DESIGN.md §15): the joiner's first payload is
+    /// served from the step's already-compressed crop cache, so no codec
+    /// work is re-charged — only the extra wire bytes, shipped through
+    /// the same `lanes` producer NICs as the regular fan-out.  Charged as
+    /// a background phase: the sender threads ship it while the
+    /// application runs ahead.
+    pub fn t_admission_replay(&self, replay_bytes: f64, lanes: usize) -> f64 {
+        if replay_bytes <= 0.0 {
+            return 0.0;
+        }
+        self.t_stream_egress(&[replay_bytes], lanes)
+    }
+
+    /// Re-crop charge when a consumer rescopes its boxed subscription
+    /// between steps (DESIGN.md §15): the next boundary's effective
+    /// subscription groups are re-keyed, so the rescoped consumers' crops
+    /// miss the content-addressed cache once and pay a fresh
+    /// `extract_box` + compress pass at the lanes.  Same shape as
+    /// [`Self::t_fanout_codec`] over just the rescoped egress volume.
+    pub fn t_rescope_recrop(&self, recrop_bytes: f64, lanes: usize, codec_bw: f64) -> f64 {
+        self.t_fanout_codec(recrop_bytes, lanes, codec_bw)
+    }
 }
 
 #[cfg(test)]
@@ -532,6 +556,24 @@ mod tests {
         // Zero guards match the t_compress conventions.
         assert_eq!(m.t_fanout_codec(crop, 8, 0.0), 0.0);
         assert_eq!(m.t_fanout_codec(0.0, 8, bw), 0.0);
+    }
+
+    #[test]
+    fn admission_replay_and_rescope_recrop_shapes() {
+        let m = cm(8);
+        let v = 1e9;
+        let bw = 0.9e9;
+        // Replay is one extra consumer stream over the same lanes.
+        assert!((m.t_admission_replay(v, 8) - m.t_stream_egress(&[v], 8)).abs() < 1e-12);
+        // No joiners, no charge — keeps v3 runs byte-for-byte unchanged.
+        assert_eq!(m.t_admission_replay(0.0, 8), 0.0);
+        // More lanes ship the replay faster (up to node count).
+        assert!(m.t_admission_replay(v, 8) < m.t_admission_replay(v, 1));
+        // A rescope pays one fresh codec pass over the rescoped egress,
+        // exactly the fan-out codec shape; zero guards match.
+        assert!((m.t_rescope_recrop(v, 8, bw) - m.t_fanout_codec(v, 8, bw)).abs() < 1e-12);
+        assert_eq!(m.t_rescope_recrop(0.0, 8, bw), 0.0);
+        assert_eq!(m.t_rescope_recrop(v, 8, 0.0), 0.0);
     }
 
     #[test]

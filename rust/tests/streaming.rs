@@ -6,7 +6,7 @@
 //! survival, bounded accept, live NetCDF conversion off a tailed BP4
 //! run, and follower timeout semantics.
 
-use std::io::Write as _;
+use std::io::{Read as _, Write as _};
 use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -18,8 +18,8 @@ use stormio::adios::bp::reader::BpReader;
 use stormio::adios::bp::{drained_steps, read_metadata, write_metadata};
 use stormio::adios::engine::bp4::{Bp4Config, Bp4Engine};
 use stormio::adios::engine::sst::{
-    DataPlane, SstConsumer, SstEngine, SstListener, SstSource, MAGIC, MAX_FRAME_LEN, TYPE_HELLO,
-    TYPE_STEP,
+    contact_path, read_contact, DataPlane, SstConsumer, SstEngine, SstListener, SstServiceOpts,
+    SstSource, MAGIC, MAGIC_V4, MAX_FRAME_LEN, TYPE_HELLO, TYPE_REFUSE, TYPE_STEP,
 };
 use stormio::adios::store::{DirStore, LandingStore};
 use stormio::adios::engine::{Engine, Target};
@@ -883,6 +883,462 @@ fn fanout_frame_cache_ab_runs_are_byte_identical() {
     assert!(on_deduped > 0, "members past the first must ride shared payloads");
     assert_eq!(off_saved, 0, "cache off must degrade to naive per-consumer codec work");
     assert_eq!(off_deduped, 0, "cache off must not refcount-share payloads");
+}
+
+// ---------------------------------------------------------------------------
+// Consumer service tier: mid-stream admission, rescope, reap (wire v4)
+// ---------------------------------------------------------------------------
+
+/// The canonical payload `produce` writes at `step` for a 4-rank world —
+/// ground truth the membership tests compare received steps against.
+fn expected_canon(step: usize) -> Canon {
+    let mut t = Vec::new();
+    for z in 0..2 {
+        for y in 0..4u64 {
+            let f = field(step, y, 12);
+            for x in 0..6 {
+                t.extend_from_slice(&f[z * 6 + x].to_le_bytes());
+            }
+        }
+    }
+    let mut p = Vec::new();
+    for y in 0..4u64 {
+        let f = field(step, y + 10, 6);
+        for x in 0..6 {
+            p.extend_from_slice(&f[x].to_le_bytes());
+        }
+    }
+    vec![("PSFC".into(), vec![4, 6], p), ("T".into(), vec![2, 4, 6], t)]
+}
+
+#[test]
+fn late_join_admission_sees_next_step_and_matches_from_start() {
+    // Acceptance criterion: a consumer admitted at step k receives, for
+    // every step >= k, bytes identical to a consumer wired up at the
+    // collective open — and its first step is a whole one, never a step
+    // torn from an in-flight end_step.
+    let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addrs = vec![l_full.local_addr().unwrap()];
+    let dir = tmp("late_join");
+    let contact = contact_path(&dir);
+
+    let full_t = std::thread::spawn(move || {
+        let mut src = SstSource::new(
+            l_full
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        drain_source(&mut src).0
+    });
+
+    // The joiner waits until step 0 has shipped, then attaches through
+    // the broker contact file the producer published.
+    let steps_done = Arc::new(AtomicUsize::new(0));
+    let sd = steps_done.clone();
+    let c2 = contact.clone();
+    let late_t = std::thread::spawn(move || {
+        while sd.load(Ordering::SeqCst) < 1 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let addr = read_contact(&c2, Duration::from_secs(30)).unwrap();
+        let mut src = SstSource::new(
+            SstConsumer::attach(&addr, &Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        let mut first = None;
+        let mut canons = Vec::new();
+        loop {
+            match src.begin_step(Duration::from_secs(30)).unwrap() {
+                StepStatus::Ready => {}
+                StepStatus::EndOfStream => break,
+                StepStatus::Timeout => panic!("late joiner timed out"),
+            }
+            first.get_or_insert(src.step_index());
+            canons.push(canon_step(&mut src));
+            src.end_step().unwrap();
+        }
+        (first.expect("late joiner saw no steps"), canons)
+    });
+
+    let sd = steps_done.clone();
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_service(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+            SstServiceOpts {
+                broker: true,
+                contact_file: Some(contact.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..STEPS {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            if s == 1 && comm.rank() == 0 {
+                // Hold the boundary until the attach is parked, so the
+                // admission deterministically lands at step 1.
+                let t0 = Instant::now();
+                while eng.pending_admissions() < 1 {
+                    assert!(t0.elapsed() < Duration::from_secs(30), "attach never parked");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            eng.end_step(&mut comm).unwrap();
+            if comm.rank() == 0 {
+                sd.store(s + 1, Ordering::SeqCst);
+            }
+        }
+        eng.close(&mut comm).unwrap()
+    });
+
+    let full = full_t.join().unwrap();
+    let (first, late) = late_t.join().unwrap();
+    assert_eq!(full.len(), STEPS);
+    for (s, c) in full.iter().enumerate() {
+        assert_eq!(c, &expected_canon(s), "from-start step {s} payload");
+    }
+    assert_eq!(first, 1, "joiner must first see the admitting boundary's step");
+    assert_eq!(late.as_slice(), &full[1..], "late vs from-start suffix differs");
+
+    let rep = reports.into_iter().next().unwrap();
+    assert_eq!(rep.steps.len(), STEPS);
+    assert_eq!(rep.steps[0].egress_per_consumer.len(), 1);
+    assert_eq!(rep.steps[1].consumers_admitted, 1);
+    assert_eq!(rep.steps.iter().map(|s| s.consumers_admitted).sum::<u32>(), 1);
+    // Replay: the joiner's first payload is billed to the ledger, and it
+    // is exactly that consumer's egress for the admitting step.
+    assert_eq!(rep.steps[0].replay_bytes, 0);
+    assert!(rep.steps[1].replay_bytes > 0);
+    assert_eq!(rep.steps[1].egress_per_consumer.len(), 2);
+    assert_eq!(rep.steps[1].replay_bytes, rep.steps[1].egress_per_consumer[1]);
+    for (s, st) in rep.steps.iter().enumerate() {
+        assert_eq!(
+            st.egress_per_consumer.iter().sum::<u64>(),
+            st.bytes_stored,
+            "step {s}: egress vector must sum to the wire total"
+        );
+    }
+}
+
+#[test]
+fn rescope_then_drop_in_same_step_keeps_survivors_whole() {
+    // A joiner that rescopes and then hangs up inside the same step: the
+    // rescope is counted at the next boundary, the dead lane is reaped,
+    // and the from-the-start survivor keeps receiving whole, correct
+    // steps throughout.
+    let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addrs = vec![l_full.local_addr().unwrap()];
+    let dir = tmp("rescope_drop");
+    let contact = contact_path(&dir);
+    let nsteps = 6usize;
+
+    let full_t = std::thread::spawn(move || {
+        let mut src = SstSource::new(
+            l_full
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        drain_source(&mut src).0
+    });
+
+    let steps_done = Arc::new(AtomicUsize::new(0));
+    let sd = steps_done.clone();
+    let c2 = contact.clone();
+    let late_t = std::thread::spawn(move || {
+        while sd.load(Ordering::SeqCst) < 1 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let addr = read_contact(&c2, Duration::from_secs(30)).unwrap();
+        let mut c =
+            SstConsumer::attach(&addr, &Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap();
+        let s = c.next_step().unwrap().expect("admitted step");
+        assert_eq!(s.index, 1, "joiner must start at the admitting boundary");
+        // Rescope, then hang up without ever reading under the new
+        // subscription — same-step rescope-then-drop.
+        c.rescope(&Subscription::var("PSFC")).unwrap();
+        drop(c);
+    });
+
+    let sd = steps_done.clone();
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_service(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+            SstServiceOpts {
+                broker: true,
+                contact_file: Some(contact.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..nsteps {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            if comm.rank() == 0 {
+                let t0 = Instant::now();
+                if s == 1 {
+                    while eng.pending_admissions() < 1 {
+                        assert!(t0.elapsed() < Duration::from_secs(30), "attach never parked");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+                if s == 2 {
+                    while eng.pending_rescopes() < 1 {
+                        assert!(t0.elapsed() < Duration::from_secs(30), "rescope never parked");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            }
+            eng.end_step(&mut comm).unwrap();
+            if comm.rank() == 0 {
+                sd.store(s + 1, Ordering::SeqCst);
+            }
+        }
+        eng.close(&mut comm).unwrap()
+    });
+
+    let full = full_t.join().unwrap();
+    late_t.join().unwrap();
+    assert_eq!(full.len(), nsteps);
+    for (s, c) in full.iter().enumerate() {
+        assert_eq!(c, &expected_canon(s), "survivor step {s} payload");
+    }
+    let rep = reports.into_iter().next().unwrap();
+    assert_eq!(rep.steps.len(), nsteps);
+    assert_eq!(rep.steps[1].consumers_admitted, 1);
+    assert_eq!(rep.steps[2].consumers_rescoped, 1, "rescope lands at the next boundary");
+    // The dead lane surfaces within a bounded number of boundaries
+    // (send-failure detection is asynchronous).
+    assert!(
+        rep.steps.iter().map(|s| s.consumers_reaped as u64).sum::<u64>() >= 1,
+        "dropped joiner was never reaped"
+    );
+}
+
+#[test]
+fn broker_refuses_v3_hello_with_descriptive_error() {
+    // A v3 consumer that dials the broker port must get a typed REFUSE
+    // naming the actual protocol mismatch — not a hang or a silent drop —
+    // and the producer keeps running: a refused dial is not its failure.
+    let dir = tmp("refuse_v3");
+    let contact = contact_path(&dir);
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let d2 = done.clone();
+    let c2 = contact.clone();
+    let probe = std::thread::spawn(move || {
+        let addr = read_contact(&c2, Duration::from_secs(30)).unwrap();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&hello_frame(0, 1)).unwrap();
+        let mut hdr = [0u8; 13];
+        s.read_exact(&mut hdr).unwrap();
+        assert_eq!(
+            u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]),
+            MAGIC_V4,
+            "refusal must be framed in the broker's own wire version"
+        );
+        assert_eq!(hdr[4], TYPE_REFUSE);
+        let len = u64::from_le_bytes(hdr[5..13].try_into().unwrap()) as usize;
+        assert!(len < 4096, "refusal reason suspiciously long ({len} bytes)");
+        let mut reason = vec![0u8; len];
+        s.read_exact(&mut reason).unwrap();
+        let reason = String::from_utf8(reason).unwrap();
+        assert!(
+            reason.contains("collective open") && reason.contains("attach"),
+            "refusal must say what to do instead, got: {reason}"
+        );
+        d2.store(1, Ordering::SeqCst);
+    });
+
+    // A broker-enabled producer may open with zero pre-wired consumers.
+    let no_addrs: Vec<String> = Vec::new();
+    let reports = run_world(2, 2, move |mut comm| {
+        let mut eng = SstEngine::open_service(
+            &no_addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(1)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+            SstServiceOpts {
+                broker: true,
+                contact_file: Some(contact.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        produce(&mut eng, &mut comm, STEPS);
+        if comm.rank() == 0 {
+            // Keep the broker alive until the probe has its refusal.
+            let t0 = Instant::now();
+            while done.load(Ordering::SeqCst) == 0 {
+                assert!(t0.elapsed() < Duration::from_secs(30), "probe never finished");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        eng.close(&mut comm).unwrap()
+    });
+    probe.join().unwrap();
+    let rep = reports.into_iter().next().unwrap();
+    // A refused dial never shows up in the membership ledger.
+    assert_eq!(rep.steps.iter().map(|s| s.consumers_admitted).sum::<u32>(), 0);
+}
+
+#[test]
+fn egress_ledger_sums_to_stored_bytes_across_joins_and_leaves() {
+    // Σ egress_per_consumer == bytes_stored must hold at every step even
+    // as membership churns: one consumer wired at the open dropping after
+    // its first step, one admitted mid-stream with a boxed subscription.
+    let l_full = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let l_quit = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let addrs = vec![l_full.local_addr().unwrap(), l_quit.local_addr().unwrap()];
+    let dir = tmp("member_ledger");
+    let contact = contact_path(&dir);
+    let nsteps = 6usize;
+
+    let full_t = std::thread::spawn(move || {
+        let mut c = l_full
+            .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+            .unwrap();
+        let mut n = 0usize;
+        while c.next_step().unwrap().is_some() {
+            n += 1;
+        }
+        n
+    });
+    let quit_t = std::thread::spawn(move || {
+        let mut c = l_quit
+            .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+            .unwrap();
+        c.next_step().unwrap().expect("first step");
+        // Hang up with the stream still live.
+    });
+    let steps_done = Arc::new(AtomicUsize::new(0));
+    let sd = steps_done.clone();
+    let c2 = contact.clone();
+    let late_t = std::thread::spawn(move || {
+        while sd.load(Ordering::SeqCst) < 1 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let addr = read_contact(&c2, Duration::from_secs(30)).unwrap();
+        let mut c = SstConsumer::attach(
+            &addr,
+            &Subscription::var_box("T", &[0, 1, 2], &[2, 2, 3]),
+            Some(Duration::from_secs(30)),
+        )
+        .unwrap();
+        let mut wires = Vec::new();
+        while let Some(s) = c.next_step().unwrap() {
+            wires.push((s.index, s.wire_bytes()));
+        }
+        wires
+    });
+
+    let sd = steps_done.clone();
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_service(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+            SstServiceOpts {
+                broker: true,
+                contact_file: Some(contact.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..nsteps {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            if s == 1 && comm.rank() == 0 {
+                let t0 = Instant::now();
+                while eng.pending_admissions() < 1 {
+                    assert!(t0.elapsed() < Duration::from_secs(30), "attach never parked");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            eng.end_step(&mut comm).unwrap();
+            if comm.rank() == 0 {
+                sd.store(s + 1, Ordering::SeqCst);
+            }
+        }
+        eng.close(&mut comm).unwrap()
+    });
+
+    assert_eq!(full_t.join().unwrap(), nsteps);
+    quit_t.join().unwrap();
+    let wires = late_t.join().unwrap();
+    assert_eq!(
+        wires.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        (1..nsteps).collect::<Vec<_>>(),
+        "boxed joiner must see every step from its admission on"
+    );
+    let rep = reports.into_iter().next().unwrap();
+    assert_eq!(rep.steps.len(), nsteps);
+    for (s, st) in rep.steps.iter().enumerate() {
+        assert_eq!(
+            st.egress_per_consumer.iter().sum::<u64>(),
+            st.bytes_stored,
+            "step {s}: egress vector must sum to the wire total across churn"
+        );
+    }
+    assert_eq!(rep.steps[1].consumers_admitted, 1);
+    // Replay equals the joiner's own wire bytes for its admission step —
+    // cropped by its boxed subscription, not the full stream.
+    assert!(rep.steps[1].replay_bytes > 0);
+    assert_eq!(rep.steps[1].replay_bytes, wires[0].1);
+    assert!(rep.steps[1].replay_bytes < rep.steps[1].bytes_stored);
+    assert!(
+        rep.steps.iter().map(|s| s.consumers_reaped as u64).sum::<u64>() >= 1,
+        "quitter was never reaped"
+    );
 }
 
 // ---------------------------------------------------------------------------
