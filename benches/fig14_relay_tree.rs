@@ -1,0 +1,351 @@
+//! Fig 14 (repro extension) — relay/distribution tree for wide-area SST
+//! fan-out (DESIGN.md §16).
+//!
+//! Two halves:
+//!
+//! * **measured** — the same deterministic forecast is streamed twice:
+//!   once direct (producer → 4 consumers, egress linear in the consumer
+//!   count) and once through a 2-level tree (producer → 2 relays → 4
+//!   leaves).  The acceptance criteria are (a) byte identity: every
+//!   leaf's stream behind the tree must match the corresponding direct
+//!   consumer bit for bit on every step, and (b) flat producer egress:
+//!   under the tree the producer serves exactly one stream per relay,
+//!   independent of the leaf count, while each relay's ledger bills the
+//!   hop as one upstream stream re-served to its own leaves.
+//! * **virtual** — the same topology restated at CONUS scale through
+//!   `CostModel::t_relay_hop` / `fanout_advantage_tree`: direct egress
+//!   grows linearly with the consumer count, tree egress stays pinned at
+//!   the relay count, and the tree advantage (which charges the
+//!   store-and-forward hop latency against the egress relief) grows
+//!   monotonically with the fan-out.
+//!
+//! Emits `BENCH_fig14_relay_tree.json` for the CI bench-smoke artifact
+//! trail.
+
+use std::time::{Duration, Instant};
+
+use stormio::adios::engine::sst::{
+    DataPlane, RelayOpts, RelayUpstream, SstConsumer, SstEngine, SstStep,
+};
+use stormio::adios::engine::EngineReport;
+use stormio::adios::operator::{Codec, OperatorConfig};
+use stormio::adios::source::Subscription;
+use stormio::adios::Variable;
+use stormio::cluster::run_world;
+use stormio::metrics::{BenchReport, Table};
+use stormio::sim::{CostModel, HardwareSpec};
+use stormio::workload::{bench_smoke, PAPER_FRAME_BYTES};
+
+const NSTEPS: usize = 6;
+
+/// Deterministic field payload (same generator on every rank/step).
+fn field(step: usize, salt: u64, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (step * 1000) as f32 + salt as f32 * 37.5 + (i as f32 * 0.1).sin())
+        .collect()
+}
+
+/// Canonical step payload: variables sorted by name, global f32 data as
+/// little-endian bytes — the representation the byte-identity criterion
+/// compares between direct consumers and leaves behind relays.
+type Canon = Vec<(String, Vec<u64>, Vec<u8>)>;
+
+fn canon(step: &SstStep) -> Canon {
+    let mut names: Vec<String> = step.var_names().iter().map(|n| n.to_string()).collect();
+    names.sort();
+    names
+        .iter()
+        .map(|n| {
+            let (shape, data) = step.read_var_global(n).unwrap();
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in &data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            (n.clone(), shape, bytes)
+        })
+        .collect()
+}
+
+/// Run the producer world against the given consumer (or relay upstream)
+/// addresses and return rank 0's engine report.  Both topologies in the
+/// measured half stream exactly this forecast, so their consumer-side
+/// canons are directly comparable.
+fn drive(addrs: Vec<String>) -> EngineReport {
+    run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_multi(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(10),
+            DataPlane::Lanes,
+            1,
+        )
+        .unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..NSTEPS {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            eng.end_step(&mut comm).unwrap();
+        }
+        eng.close(&mut comm).unwrap()
+    })
+    .into_iter()
+    .next()
+    .unwrap()
+}
+
+/// Spawn `n` full-subscription consumer listeners; returns their
+/// addresses and the join handles that yield each consumer's canons.
+fn spawn_leaves(n: usize) -> (Vec<String>, Vec<std::thread::JoinHandle<Vec<Canon>>>) {
+    let mut addrs = Vec::with_capacity(n);
+    let mut threads = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = SstConsumer::listen("127.0.0.1:0").unwrap();
+        addrs.push(l.local_addr().unwrap());
+        threads.push(std::thread::spawn(move || {
+            let mut c = l
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(60)))
+                .unwrap();
+            let mut canons = Vec::new();
+            while let Some(s) = c.next_step().unwrap() {
+                canons.push(canon(&s));
+            }
+            canons
+        }));
+    }
+    (addrs, threads)
+}
+
+struct RunOut {
+    consumers: Vec<Vec<Canon>>,
+    producer: EngineReport,
+    relays: Vec<EngineReport>,
+    wall: f64,
+}
+
+/// Direct topology: producer → `n` consumers, no relays.
+fn run_direct(n: usize) -> RunOut {
+    let (addrs, threads) = spawn_leaves(n);
+    let t0 = Instant::now();
+    let producer = drive(addrs);
+    let wall = t0.elapsed().as_secs_f64();
+    RunOut {
+        consumers: threads.into_iter().map(|t| t.join().unwrap()).collect(),
+        producer,
+        relays: Vec::new(),
+        wall,
+    }
+}
+
+/// Tree topology: producer → `relays` relays → `leaves_per_relay` leaves
+/// each.  The producer sees only the relays; every leaf hangs off its
+/// relay's downstream lanes.
+fn run_tree(relays: usize, leaves_per_relay: usize) -> RunOut {
+    let mut leaf_threads = Vec::new();
+    let mut relay_threads = Vec::with_capacity(relays);
+    let mut up_addrs = Vec::with_capacity(relays);
+    for _ in 0..relays {
+        let (downs, mut threads) = spawn_leaves(leaves_per_relay);
+        leaf_threads.append(&mut threads);
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        up_addrs.push(listener.local_addr().unwrap());
+        relay_threads.push(std::thread::spawn(move || {
+            stormio::adios::engine::sst::SstRelay::open(
+                RelayUpstream::Listen {
+                    listener,
+                    timeout: Some(Duration::from_secs(60)),
+                },
+                &downs,
+                RelayOpts::default(),
+            )
+            .unwrap()
+            .run()
+            .unwrap()
+        }));
+    }
+    let t0 = Instant::now();
+    let producer = drive(up_addrs);
+    let wall = t0.elapsed().as_secs_f64();
+    RunOut {
+        consumers: leaf_threads.into_iter().map(|t| t.join().unwrap()).collect(),
+        producer,
+        relays: relay_threads.into_iter().map(|t| t.join().unwrap()).collect(),
+        wall,
+    }
+}
+
+fn main() {
+    let smoke = bench_smoke();
+    let mut json = BenchReport::new("fig14_relay_tree");
+    json.flag("smoke", smoke);
+
+    // ---- measured: direct vs 2-level tree, same forecast -----------------
+    const RELAYS: usize = 2;
+    const LEAVES: usize = 4;
+    let direct = run_direct(LEAVES);
+    let tree = run_tree(RELAYS, LEAVES / RELAYS);
+
+    // (a) Byte identity: every leaf behind the tree sees exactly the
+    // direct consumer's stream — every consumer, every step.
+    assert_eq!(direct.consumers.len(), LEAVES);
+    assert_eq!(tree.consumers.len(), LEAVES);
+    for (c, canons) in direct.consumers.iter().enumerate() {
+        assert_eq!(canons.len(), NSTEPS, "direct consumer {c} step count");
+        assert_eq!(
+            canons, &direct.consumers[0],
+            "direct consumers must agree with each other"
+        );
+    }
+    for (c, canons) in tree.consumers.iter().enumerate() {
+        assert_eq!(canons.len(), NSTEPS, "leaf {c} step count");
+        assert_eq!(
+            canons, &direct.consumers[0],
+            "leaf {c} stream differs from the direct consumer's"
+        );
+    }
+
+    // (b) Flat producer egress: the producer serves one stream per relay
+    // (not per leaf) — half the direct egress with twice that many
+    // consumers hanging off the tree.
+    let mut table = Table::new(
+        "Fig 14: producer egress per step, direct vs 2-level tree (measured)",
+        &["step", "direct streams", "direct [B]", "tree streams", "tree [B]"],
+    );
+    assert_eq!(direct.producer.steps.len(), NSTEPS);
+    assert_eq!(tree.producer.steps.len(), NSTEPS);
+    for s in 0..NSTEPS {
+        let d = &direct.producer.steps[s];
+        let t = &tree.producer.steps[s];
+        assert_eq!(d.egress_per_consumer.len(), LEAVES);
+        assert_eq!(t.egress_per_consumer.len(), RELAYS);
+        // Full subscriptions everywhere: every stream carries the same
+        // frame bytes, so the totals scale exactly with the stream count.
+        assert_eq!(
+            t.egress_per_consumer[0], d.egress_per_consumer[0],
+            "step {s}: per-stream bytes must not depend on the topology"
+        );
+        assert_eq!(
+            t.bytes_stored * (LEAVES / RELAYS) as u64,
+            d.bytes_stored,
+            "step {s}: tree producer egress must be one stream per relay"
+        );
+        table.row(&[
+            s.to_string(),
+            d.egress_per_consumer.len().to_string(),
+            d.bytes_stored.to_string(),
+            t.egress_per_consumer.len().to_string(),
+            t.bytes_stored.to_string(),
+        ]);
+        json.int(&format!("direct_egress_s{s}"), d.bytes_stored)
+            .int(&format!("tree_egress_s{s}"), t.bytes_stored);
+    }
+
+    // Per-hop ledger: each relay bills one upstream stream re-served to
+    // its own leaves, nothing admitted or replayed in a fixed tree.
+    assert_eq!(tree.relays.len(), RELAYS);
+    for (g, rep) in tree.relays.iter().enumerate() {
+        assert_eq!(rep.steps.len(), NSTEPS, "relay {g} ledger length");
+        for (s, st) in rep.steps.iter().enumerate() {
+            assert_eq!(st.step, s, "relay {g} renumbers steps from 0");
+            assert_eq!(
+                st.relay_upstream_bytes,
+                tree.producer.steps[s].egress_per_consumer[g],
+                "relay {g} step {s}: upstream bytes must match the producer's stream"
+            );
+            assert_eq!(st.egress_per_consumer.len(), LEAVES / RELAYS);
+            for &e in &st.egress_per_consumer {
+                assert_eq!(
+                    e, st.relay_upstream_bytes,
+                    "relay {g} step {s}: full leaves get the upstream frames untouched"
+                );
+            }
+            assert_eq!(
+                st.relay_downstream_bytes,
+                st.relay_upstream_bytes * (LEAVES / RELAYS) as u64,
+                "relay {g} step {s}: downstream total is one copy per leaf"
+            );
+            assert_eq!(st.consumers_admitted, 0);
+            assert_eq!(st.replay_bytes, 0);
+        }
+        let up: u64 = rep.steps.iter().map(|s| s.relay_upstream_bytes).sum();
+        let down: u64 = rep.steps.iter().map(|s| s.relay_downstream_bytes).sum();
+        json.int(&format!("relay{g}_upstream_bytes"), up)
+            .int(&format!("relay{g}_downstream_bytes"), down);
+    }
+    json.num("measured_direct_wall_s", direct.wall)
+        .num("measured_tree_wall_s", tree.wall);
+
+    // ---- virtual: the same tree at CONUS scale ---------------------------
+    let cm = CostModel::new(HardwareSpec::paper_testbed(8));
+    let lanes = 8usize;
+    let frame = PAPER_FRAME_BYTES;
+
+    // The hop charge is exactly its two primitives: the upstream stream
+    // landing plus the relay's own single-NIC egress to its leaves.
+    let hop = cm.t_relay_hop(frame, &[frame, frame]);
+    assert_eq!(
+        hop.to_bits(),
+        (cm.t_stream_transfer(frame) + cm.t_stream_egress(&[frame, frame], 1)).to_bits(),
+        "t_relay_hop must decompose into transfer + single-lane egress"
+    );
+    assert_eq!(cm.t_relay_hop(0.0, &[]), 0.0, "idle relay charges nothing");
+    assert!(
+        cm.t_relay_hop(frame, &[frame; 16]) > cm.t_relay_hop(frame, &[frame; 2]),
+        "a wider subtree costs its relay more"
+    );
+
+    let mut vtable = Table::new(
+        "Fig 14: direct vs 2-relay tree egress + advantage (virtual, CONUS scale)",
+        &["consumers", "direct egress [s]", "tree egress [s]", "tree advantage"],
+    );
+    let tree_egress = cm.t_stream_egress(&vec![frame; RELAYS], lanes);
+    let mut prev_direct = 0.0f64;
+    let mut prev_adv = 0.0f64;
+    for &n in &[4usize, 8, 16, 32, 64] {
+        let direct_egress = cm.t_stream_egress(&vec![frame; n], lanes);
+        assert!(
+            direct_egress > prev_direct,
+            "{n} consumers: direct egress must keep growing"
+        );
+        prev_direct = direct_egress;
+        let adv = cm.fanout_advantage_tree(frame, &vec![frame; n], lanes, RELAYS);
+        assert!(adv > 1.0, "{n} consumers behind 2 relays must beat direct");
+        assert!(adv > prev_adv, "{n} consumers: tree advantage must keep growing");
+        prev_adv = adv;
+        vtable.row(&[
+            n.to_string(),
+            format!("{direct_egress:.3}"),
+            format!("{tree_egress:.3}"),
+            format!("{adv:.2}"),
+        ]);
+        json.num(&format!("virtual_direct_egress_s_n{n}"), direct_egress)
+            .num(&format!("virtual_tree_advantage_n{n}"), adv);
+    }
+    json.num("virtual_tree_egress_s", tree_egress);
+    // Too few consumers to amortise the hop: a 1-consumer "tree" loses.
+    assert!(
+        cm.fanout_advantage_tree(frame, &[frame], lanes, 1) < 1.0,
+        "a relay serving one leaf is pure overhead"
+    );
+
+    table.emit(Some(std::path::Path::new("bench_results/fig14_relay_tree.csv")));
+    vtable.emit(None);
+    json.write();
+    println!(
+        "relay tree: every leaf behind the 2-level tree is byte-identical \
+         to a direct consumer on every step, the producer's egress stays \
+         pinned at one stream per relay while direct egress grows linearly \
+         with the consumer count, and each relay's ledger bills the hop as \
+         one upstream stream re-served to its own leaves."
+    );
+}

@@ -67,6 +67,20 @@ pub struct StepStats {
     /// Wire bytes replayed to just-admitted consumers this step (their
     /// first payload, served from the step's shared crop cache).
     pub replay_bytes: u64,
+    /// Relay tier (DESIGN.md §16), per-hop ledger: wall-clock seconds
+    /// this relay spent receiving the upstream step and re-serving it
+    /// downstream (hop latency).  Zero on a producer engine.
+    pub relay_hop_secs: f64,
+    /// Wire bytes this relay *received* from upstream this step — the
+    /// single stream that replaces one producer lane per leaf.
+    pub relay_upstream_bytes: u64,
+    /// Wire bytes this relay shipped downstream this step (sum over its
+    /// consumers; the producer-egress relief is `relay_downstream_bytes
+    /// − relay_upstream_bytes`).
+    pub relay_downstream_bytes: u64,
+    /// Crops re-cut at this relay (codec passes the producer no longer
+    /// pays — boxed leaves are cropped from the relay's copy).
+    pub relay_crops_recut: u64,
     pub real_secs: f64,
     pub cost: WriteCost,
 }

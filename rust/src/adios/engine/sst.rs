@@ -60,6 +60,19 @@
 //! are broadcast to every rank at the top of `end_step`, so all lanes
 //! agree on the consumer set for each step.
 //!
+//! **Relay tier (DESIGN.md §16).**  [`SstRelay`] subscribes upstream as
+//! an ordinary consumer (v3 collective open or v4 broker attach) and
+//! re-serves the stream downstream as a single-lane producer, reusing
+//! the v3 lane machinery (bounded-queue back-pressure per leaf), the
+//! §14 crop cache (re-crops are cut from the relay's copy, never the
+//! producer's), and the §15 broker (late joins *through* the relay,
+//! admitted at the relay's next forwarded step).  Relays compose into an
+//! N-level distribution tree: each level has its own `QUEUE_STEPS`-deep
+//! queues, so a slow leaf back-pressures only its own subtree.  The
+//! subscription a relay forwards upstream is the *union* of its
+//! downstream consumers' subscriptions ([`Subscription::union_all`]) —
+//! selection pushdown composes up the tree.
+//!
 //! Wire protocol (little-endian, all lengths validated against
 //! [`MAX_FRAME_LEN`] before allocation; every block frame carries an
 //! XXH64 checksum the consumer verifies *before* decompressing):
@@ -1808,6 +1821,12 @@ impl Engine for SstEngine {
                 consumers_reaped: reaped_set.len() as u32,
                 consumers_rescoped: delta.rescopes.len() as u32,
                 replay_bytes,
+                // Relay ledger fields stay zero on a producer engine;
+                // only [`SstRelay`] hops stamp them (DESIGN.md §16).
+                relay_hop_secs: 0.0,
+                relay_upstream_bytes: 0,
+                relay_downstream_bytes: 0,
+                relay_crops_recut: 0,
                 real_secs: sw.secs(),
                 cost,
             });
@@ -2708,6 +2727,477 @@ impl StepSource for SstSource {
             .take()
             .map(|_| ())
             .ok_or_else(|| Error::sst("end_step without begin_step"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Relay tier (DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+/// How a relay reaches its upstream producer (or upper relay).
+pub enum RelayUpstream {
+    /// Wired up at the upstream's collective open (wire v3): the relay's
+    /// lane-listener address is one of the upstream producer's consumer
+    /// addresses, and the producer dials it like any other consumer.
+    Listen {
+        listener: SstListener,
+        /// Bounds the whole upstream lane handshake; `None` waits
+        /// indefinitely for the first lane (the producer may start late).
+        timeout: Option<Duration>,
+    },
+    /// Mid-stream admission through the upstream broker (wire v4,
+    /// [`SstConsumer::attach`]) — the `stormio relay` CLI path.
+    Attach {
+        broker_addr: String,
+        /// Must cover at least one upstream compute step (admission
+        /// lands at the upstream's next step boundary).
+        timeout: Option<Duration>,
+    },
+}
+
+/// Options for [`SstRelay::open`].
+pub struct RelayOpts {
+    /// Codec for crops re-cut at this relay (boxed leaves only —
+    /// full-subscription leaves always receive the upstream frames
+    /// untouched, whatever this is set to).
+    pub operator: OperatorConfig,
+    /// Charges the virtual per-hop ledger ([`CostModel::t_relay_hop`]).
+    pub cost: CostModel,
+    /// Run a relay-local broker (wire v4): late consumers attach
+    /// *through* this relay and are admitted at its next forwarded step,
+    /// served from the relay's step cache.  A broker-enabled relay
+    /// subscribes upstream to *everything* — it must hold full scope for
+    /// whoever joins later — so pushdown union composition applies only
+    /// to fixed-membership relays.
+    pub broker: bool,
+    /// Relay broker bind address (port 0 picks an ephemeral port).
+    pub broker_bind: String,
+    /// Where the relay publishes its broker address ([`contact_path`]).
+    pub contact_file: Option<PathBuf>,
+    /// Bounds every downstream lane handshake this relay performs.
+    pub hello_timeout: Duration,
+    /// Levels below the producer (1 = directly attached); informational,
+    /// surfaced in the ledger summary and the `stormio relay` CLI.
+    pub depth_hint: u32,
+}
+
+impl Default for RelayOpts {
+    fn default() -> Self {
+        RelayOpts {
+            operator: OperatorConfig::none(),
+            cost: CostModel::new(crate::sim::HardwareSpec::paper_testbed(1)),
+            broker: false,
+            broker_bind: "127.0.0.1:0".into(),
+            contact_file: None,
+            hello_timeout: DEFAULT_HELLO_TIMEOUT,
+            depth_hint: 1,
+        }
+    }
+}
+
+/// Cheap admission probe detached from a running relay (the relay itself
+/// is consumed by [`SstRelay::run`]); tests and benches use it to
+/// sequence an attach-through-the-relay strictly before a chosen step.
+pub struct RelayProbe {
+    shared: Option<Arc<Mutex<PendingMembership>>>,
+}
+
+impl RelayProbe {
+    /// Attach requests currently parked at the relay's broker.
+    pub fn pending_admissions(&self) -> usize {
+        self.shared
+            .as_ref()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).attaches.len())
+            .unwrap_or(0)
+    }
+}
+
+/// Dial one downstream consumer's lane listener exactly as a
+/// single-lane producer would: hello `(0, 1)` (the relay is its leaves'
+/// only lane), read back the leaf's [`Subscription`], spawn the
+/// bounded-queue sender ([`QUEUE_STEPS`] deep — the per-level
+/// back-pressure isolation of the tree).
+fn dial_downstream(addr: &str, hello_timeout: Duration) -> Result<(LaneSender, Subscription)> {
+    let mut stream = connect_retry(addr, hello_timeout)?;
+    let mut w = Writer::new();
+    w.u32(0);
+    w.u32(1);
+    write_frame(&mut stream, TYPE_HELLO, &w.into_vec())?;
+    let (ty, payload) = read_frame(&mut stream, Some(Instant::now() + hello_timeout))
+        .map_err(|e| Error::sst(format!("relay: no subscription reply from {addr}: {e}")))?;
+    if ty != TYPE_SUB {
+        return Err(Error::sst(format!(
+            "relay: expected subscription frame from {addr}, got type {ty}"
+        )));
+    }
+    let sub = decode_subscription(&payload)?;
+    let (tx, rx): (SyncSender<Arc<[u8]>>, Receiver<Arc<[u8]>>) = sync_channel(QUEUE_STEPS);
+    let handle = std::thread::spawn(move || sender_loop(stream, rx));
+    Ok((LaneSender { tx, handle }, sub))
+}
+
+/// A relay node (DESIGN.md §16): one upstream consumer leg, N downstream
+/// single-lane producer legs, composing into a distribution tree.
+///
+/// Wire composition: upstream the relay is an ordinary wire-v3/v4
+/// consumer ([`SstConsumer`]); downstream it re-serves every received
+/// step through the same [`StepFanout`] the producer lanes use — full
+/// leaves get the upstream frames untouched (byte-identical to a direct
+/// connection), boxed leaves get crops cut from the relay's copy and
+/// deduped through the §14 content-addressed cache.  Each downstream
+/// lane has its own [`QUEUE_STEPS`]-deep queue: a slow leaf
+/// back-pressures this relay (and transitively its subtree) only after
+/// falling `QUEUE_STEPS` steps behind; siblings drain their own queues
+/// unaffected, and the producer is insulated by the upstream lane's own
+/// queue on top.
+///
+/// Steps are renumbered from 0 downstream: a relay admitted upstream
+/// mid-stream (v4) starts a fresh step sequence for its leaves, exactly
+/// like a producer would.
+pub struct SstRelay {
+    upstream: SstConsumer,
+    operator: OperatorConfig,
+    cost: CostModel,
+    share_frames: bool,
+    hello_timeout: Duration,
+    /// One slot per downstream consumer; `None` once reaped.
+    lanes: Vec<Option<LaneSender>>,
+    subs: Vec<Subscription>,
+    broker: Option<SstBroker>,
+    depth_hint: u32,
+    /// Downstream step counter (the index the leaves see).
+    out_step: usize,
+    report: EngineReport,
+}
+
+impl SstRelay {
+    /// Open a relay: dial every downstream consumer first (their
+    /// subscriptions decide the upstream scope), then subscribe upstream
+    /// with their union — or with everything, when the relay broker is
+    /// on.  `downstream` may be empty only with `opts.broker`: the relay
+    /// then streams to nobody until the first attach.
+    pub fn open(
+        upstream: RelayUpstream,
+        downstream: &[String],
+        opts: RelayOpts,
+    ) -> Result<SstRelay> {
+        if downstream.is_empty() && !opts.broker {
+            return Err(Error::config(
+                "relay open: need at least one downstream consumer address \
+                 (or the relay broker for late joins)",
+            ));
+        }
+        let mut lanes = Vec::with_capacity(downstream.len());
+        let mut subs = Vec::with_capacity(downstream.len());
+        for addr in downstream {
+            let (lane, sub) = dial_downstream(addr, opts.hello_timeout)?;
+            lanes.push(Some(lane));
+            subs.push(sub);
+        }
+        // Pushdown composition up the tree: the single upstream
+        // subscription covers exactly what the leaves asked for.  A
+        // broker-enabled relay cannot know its future leaves, so it
+        // holds full scope instead.
+        let up_sub = if opts.broker {
+            Subscription::all()
+        } else {
+            Subscription::union_all(&subs)
+        };
+        let upstream = match upstream {
+            RelayUpstream::Listen { listener, timeout } => {
+                listener.accept_with(&up_sub, timeout)?
+            }
+            RelayUpstream::Attach {
+                broker_addr,
+                timeout,
+            } => SstConsumer::attach(&broker_addr, &up_sub, timeout)?,
+        };
+        let broker = if opts.broker {
+            Some(SstBroker::spawn(
+                &opts.broker_bind,
+                opts.hello_timeout,
+                opts.contact_file.clone(),
+            )?)
+        } else {
+            None
+        };
+        Ok(SstRelay {
+            upstream,
+            operator: opts.operator,
+            cost: opts.cost,
+            share_frames: !matches!(
+                std::env::var("STORMIO_SST_NO_CACHE").as_deref(),
+                Ok("1")
+            ),
+            hello_timeout: opts.hello_timeout,
+            lanes,
+            subs,
+            broker,
+            depth_hint: opts.depth_hint,
+            out_step: 0,
+            report: EngineReport::default(),
+        })
+    }
+
+    /// The relay broker's listen address (`None` without a broker).
+    /// Late consumers — or deeper relays — hand this to
+    /// [`SstConsumer::attach`] / [`RelayUpstream::Attach`].
+    pub fn broker_addr(&self) -> Option<String> {
+        self.broker.as_ref().map(|b| b.addr.clone())
+    }
+
+    /// Downstream consumers currently connected (reaped slots excluded).
+    pub fn live_consumers(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Levels below the producer this relay believes it sits at.
+    pub fn depth_hint(&self) -> u32 {
+        self.depth_hint
+    }
+
+    /// Detached admission probe (see [`RelayProbe`]).
+    pub fn probe(&self) -> RelayProbe {
+        RelayProbe {
+            shared: self.broker.as_ref().map(|b| Arc::clone(&b.shared)),
+        }
+    }
+
+    /// Pump upstream steps downstream until the upstream stream ends,
+    /// then close every downstream lane (bye frames) and return the
+    /// per-hop ledger: one [`StepStats`] per forwarded step with the
+    /// relay fields stamped and the virtual hop charge applied.
+    pub fn run(mut self) -> Result<EngineReport> {
+        loop {
+            let sw = Stopwatch::start();
+            let Some(step) = self.upstream.next_step()? else {
+                break;
+            };
+            // Late joins parked at the relay broker land at this
+            // boundary: their first step is the one about to be
+            // forwarded, served from the relay's copy of it (the relay's
+            // cache replay — the §15 semantics, one level down).
+            let (admitted, rescoped, pre_reaped) = self.admit_pending()?;
+            self.forward(&step, &sw, admitted, rescoped, pre_reaped)?;
+        }
+        self.close()
+    }
+
+    /// Drain the relay broker: rescopes swap leaf subscriptions in
+    /// place; attaches get their admit reply (`first_step` = the step
+    /// about to be forwarded, one lane) and their lane dialed.  Returns
+    /// `(admitted, rescoped, reaped-at-admission)` counts for the
+    /// boundary's ledger entry.
+    fn admit_pending(&mut self) -> Result<(u32, u32, u32)> {
+        let Some(b) = &self.broker else {
+            return Ok((0, 0, 0));
+        };
+        let (delta, mut streams) = b.drain();
+        let mut rescoped = 0u32;
+        for (c, sub) in &delta.rescopes {
+            let c = *c as usize;
+            if c < self.subs.len() && self.lanes[c].is_some() {
+                self.subs[c] = sub.clone();
+                rescoped += 1;
+            } else {
+                eprintln!(
+                    "sst relay: rescope for unknown or dropped consumer {c} at step {}; \
+                     ignored",
+                    self.out_step
+                );
+            }
+        }
+        let mut reaped = 0u32;
+        for (i, (addr, sub)) in delta.admits.iter().enumerate() {
+            let c = self.lanes.len();
+            if let Some(stream) = streams.get_mut(i) {
+                let mut w = Writer::new();
+                w.u64(self.out_step as u64);
+                w.u32(c as u32);
+                w.u32(1); // the relay is its leaves' single lane
+                if let Err(e) = write_frame_v4(stream, TYPE_ADMIT, &w.into_vec()) {
+                    eprintln!("sst relay: consumer {c}: admit reply failed: {e}");
+                }
+            }
+            match dial_downstream(addr, self.hello_timeout) {
+                Ok((lane, sub)) => {
+                    self.lanes.push(Some(lane));
+                    self.subs.push(sub);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "sst relay: admitted consumer {c} ({addr}) failed its lane \
+                         handshake: {e}; dropping"
+                    );
+                    self.lanes.push(None);
+                    self.subs.push(sub.clone());
+                    reaped += 1;
+                }
+            }
+        }
+        Ok((delta.admits.len() as u32, rescoped, reaped))
+    }
+
+    /// Re-serve one upstream step downstream: the same group-by-
+    /// effective-subscription → [`StepFanout::payload_for`] → refcounted
+    /// enqueue pipeline the producer lanes run, fed from the relay's
+    /// received copy of the step.  Dead leaves are reaped in place;
+    /// survivors keep streaming.
+    fn forward(
+        &mut self,
+        step: &SstStep,
+        sw: &Stopwatch,
+        admitted: u32,
+        rescoped: u32,
+        pre_reaped: u32,
+    ) -> Result<()> {
+        let vars = &step.vars;
+        let upstream_bytes = step.wire_bytes();
+        let any_full = self.subs.iter().enumerate().any(|(c, s)| {
+            self.lanes[c].is_some()
+                && vars.iter().any(|v| s.wants(&v.name) == VarInterest::Full)
+        });
+        let full_xxh: Vec<Vec<u64>> = if any_full {
+            vars.iter()
+                .map(|v| v.blocks.iter().map(|b| xxh64(&b.frame, 0)).collect())
+                .collect()
+        } else {
+            vec![Vec::new(); vars.len()]
+        };
+        let mut shared = StepFanout::new(vars, &full_xxh, self.operator, self.share_frames);
+        let mut egress = vec![0u64; self.lanes.len()];
+        let mut reaped = pre_reaped;
+        let mut groups: Vec<(Vec<u8>, Vec<usize>)> = Vec::new();
+        for c in 0..self.lanes.len() {
+            if self.lanes[c].is_none() {
+                continue;
+            }
+            let key = if self.share_frames {
+                effective_sub_key(vars, &self.subs[c])
+            } else {
+                (c as u64).to_le_bytes().to_vec()
+            };
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, members)) => members.push(c),
+                None => groups.push((key, vec![c])),
+            }
+        }
+        for (_, members) in &groups {
+            let (payload, frame_bytes, ncrops) =
+                shared.payload_for(self.out_step as u64, &self.subs[members[0]])?;
+            for (i, &c) in members.iter().enumerate() {
+                let alive = self.lanes[c]
+                    .as_ref()
+                    .expect("grouped live above")
+                    .tx
+                    .send(Arc::clone(&payload))
+                    .is_ok();
+                if alive {
+                    egress[c] = frame_bytes;
+                    if i > 0 {
+                        shared.stats.deduped_egress_bytes += payload.len() as u64;
+                        shared.stats.naive_crop_passes += ncrops;
+                    }
+                } else {
+                    eprintln!(
+                        "sst relay: consumer {c} dropped at step {}; continuing \
+                         with survivors",
+                        self.out_step
+                    );
+                    if let Some(LaneSender { tx, handle }) = self.lanes[c].take() {
+                        drop(tx);
+                        let _ = handle.join();
+                    }
+                    reaped += 1;
+                }
+            }
+        }
+        let fanout = shared.stats;
+        let downstream: u64 = egress.iter().sum();
+        // A joiner's first payload is its replay from the relay's copy:
+        // admitted slots are the trailing ones appended this boundary.
+        let replay_bytes: u64 = egress[egress.len() - admitted as usize..].iter().sum();
+        // Virtual hop charge (DESIGN.md §16): the upstream stream lands,
+        // then the relay's NIC fans the leaves back out — all in the
+        // background (the model never blocks on a relay) — plus a
+        // blocking codec charge for the crops re-cut here.
+        let hw = &self.cost.hw;
+        let v_up = hw.scaled(upstream_bytes);
+        let v_egress: Vec<f64> = egress.iter().map(|e| hw.scaled(*e)).collect();
+        let mut cost = crate::sim::WriteCost::default();
+        let t_hop = self.cost.t_relay_hop(v_up, &v_egress);
+        if t_hop > 0.0 {
+            cost.push_background("relay-hop", t_hop);
+        }
+        let codec_bw = crate::plan::CodecProfile::paper_defaults()
+            .entries()
+            .iter()
+            .find(|(c, _)| *c == self.operator.codec)
+            .map(|(_, t)| t.compress_bps)
+            .unwrap_or(0.0);
+        let t_crop = self
+            .cost
+            .t_fanout_codec(hw.scaled(fanout.unique_crop_bytes), 1, codec_bw);
+        if t_crop > 0.0 {
+            cost.push("recrop-codec", t_crop);
+        }
+        self.report.steps.push(StepStats {
+            step: self.out_step,
+            bytes_raw: vars
+                .iter()
+                .flat_map(|v| v.blocks.iter())
+                .map(|b| b.raw)
+                .sum(),
+            bytes_stored: downstream,
+            egress_per_consumer: egress,
+            unique_crops: fanout.unique_crops,
+            crop_cache_hits: fanout.cache_hits,
+            codec_passes_saved: fanout.codec_passes_saved(),
+            deduped_egress_bytes: fanout.deduped_egress_bytes,
+            unique_crop_bytes: fanout.unique_crop_bytes,
+            consumers_admitted: admitted,
+            consumers_reaped: reaped,
+            consumers_rescoped: rescoped,
+            replay_bytes,
+            relay_hop_secs: sw.secs(),
+            relay_upstream_bytes: upstream_bytes,
+            relay_downstream_bytes: downstream,
+            relay_crops_recut: fanout.unique_crops,
+            real_secs: sw.secs(),
+            cost,
+        });
+        self.out_step += 1;
+        Ok(())
+    }
+
+    /// Close every downstream lane with its bye frame and return the
+    /// ledger.  Mirrors the engine close: every lane is finished before
+    /// any failure is reported, so no leaf is stranded without its bye.
+    fn close(mut self) -> Result<EngineReport> {
+        // Stop admitting first: dropping the broker refuses anyone still
+        // parked with a descriptive error instead of a timeout.
+        self.broker = None;
+        let mut panicked = false;
+        for (c, lane) in self.lanes.iter_mut().enumerate() {
+            if let Some(LaneSender { tx, handle }) = lane.take() {
+                tx.send(Arc::from(Vec::<u8>::new())).ok(); // empty = bye sentinel
+                drop(tx);
+                match handle.join() {
+                    Err(_) => {
+                        eprintln!("sst relay: consumer {c} lane sender panicked");
+                        panicked = true;
+                    }
+                    Ok(Err(e)) => {
+                        eprintln!("sst relay: consumer {c} lane closed with error: {e}")
+                    }
+                    Ok(Ok(())) => {}
+                }
+            }
+        }
+        if panicked {
+            return Err(Error::sst("relay lane sender thread panicked"));
+        }
+        Ok(std::mem::take(&mut self.report))
     }
 }
 

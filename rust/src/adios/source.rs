@@ -271,6 +271,47 @@ impl Subscription {
             VarInterest::Boxes(boxes)
         }
     }
+
+    /// The smallest subscription covering everything `self` or `other`
+    /// wants — how a relay composes its downstream consumers' scopes into
+    /// the single subscription it forwards upstream (DESIGN.md §16).
+    /// Either side subscribing to everything dominates; a whole-variable
+    /// entry absorbs every box entry for the same variable; duplicate
+    /// entries collapse.  Entry order is first-seen, so the result is
+    /// deterministic for a given downstream ordering.
+    pub fn union(&self, other: &Subscription) -> Subscription {
+        if self.is_all() || other.is_all() {
+            return Subscription::all();
+        }
+        let mut out = Subscription::default();
+        for e in self.entries.iter().chain(&other.entries) {
+            if e.sel.is_none() {
+                // Whole-variable absorbs any boxes already collected.
+                out.entries.retain(|o| o.var != e.var || o.sel.is_none());
+            } else if out
+                .entries
+                .iter()
+                .any(|o| o.var == e.var && o.sel.is_none())
+            {
+                continue; // already covered whole
+            }
+            if !out.entries.contains(e) {
+                out.entries.push(e.clone());
+            }
+        }
+        out
+    }
+
+    /// Union over a whole downstream set.  An *empty* set unions to
+    /// everything: a relay with no subscribers yet (broker-only open)
+    /// must hold full scope for whoever joins later.
+    pub fn union_all(subs: &[Subscription]) -> Subscription {
+        let mut subs = subs.iter();
+        let Some(first) = subs.next() else {
+            return Subscription::all();
+        };
+        subs.fold(first.clone(), |acc, s| acc.union(s))
+    }
 }
 
 /// Copy the box `[start, start+count)` out of a row-major global array
@@ -396,6 +437,48 @@ mod tests {
         // A whole-variable entry dominates box entries for the same name.
         let both = Subscription::var_box("T", &[0], &[1]).and_var("T");
         assert_eq!(both.wants("T"), VarInterest::Full);
+    }
+
+    #[test]
+    fn subscription_union_composes_scopes() {
+        // Either side "all" dominates.
+        assert!(Subscription::all().union(&Subscription::var("T")).is_all());
+        assert!(Subscription::var("T").union(&Subscription::all()).is_all());
+        // Disjoint variables concatenate, first-seen order.
+        let u = Subscription::var("T").union(&Subscription::var("PSFC"));
+        assert_eq!(u, Subscription::var("T").and_var("PSFC"));
+        // A whole-variable entry absorbs box entries for the same name,
+        // in both directions.
+        let boxed = Subscription::var_box("T", &[0, 0], &[2, 4]);
+        assert_eq!(boxed.union(&Subscription::var("T")), Subscription::var("T"));
+        assert_eq!(Subscription::var("T").union(&boxed), Subscription::var("T"));
+        // Distinct boxes of one variable are both kept (the producer
+        // ships each intersecting crop); duplicates collapse.
+        let b2 = Subscription::var_box("T", &[2, 0], &[1, 4]);
+        let u = boxed.union(&b2);
+        assert_eq!(u.entries.len(), 2);
+        assert_eq!(boxed.union(&boxed), boxed);
+        // The effective interest of a union covers both sides.
+        match u.wants("T") {
+            VarInterest::Boxes(b) => assert_eq!(b.len(), 2),
+            other => panic!("want boxes, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn subscription_union_all_over_a_set() {
+        // Empty downstream set → full scope (a broker-only relay must be
+        // able to serve whoever joins later).
+        assert!(Subscription::union_all(&[]).is_all());
+        let set = [
+            Subscription::var_box("T", &[0, 0], &[2, 4]),
+            Subscription::var("PSFC"),
+            Subscription::var("T"),
+        ];
+        let u = Subscription::union_all(&set);
+        assert_eq!(u.wants("T"), VarInterest::Full);
+        assert_eq!(u.wants("PSFC"), VarInterest::Full);
+        assert_eq!(u.wants("U"), VarInterest::Skip);
     }
 
     #[test]

@@ -115,6 +115,10 @@ impl Adios2Backend {
                 consumers_reaped: s.consumers_reaped,
                 consumers_rescoped: s.consumers_rescoped,
                 replay_bytes: s.replay_bytes,
+                relay_hop_secs: s.relay_hop_secs,
+                relay_upstream_bytes: s.relay_upstream_bytes,
+                relay_downstream_bytes: s.relay_downstream_bytes,
+                relay_crops_recut: s.relay_crops_recut,
                 files_created: rep.files_created,
                 drain: rep.drain,
             });

@@ -55,6 +55,17 @@ pub struct FrameReport {
     pub consumers_rescoped: u32,
     /// Wire bytes replayed to just-admitted consumers at this frame.
     pub replay_bytes: u64,
+    /// Relay tier (DESIGN.md §16): seconds the relay spent receiving and
+    /// re-serving this frame's step (hop latency); zero off the relay
+    /// path.
+    pub relay_hop_secs: f64,
+    /// Wire bytes the relay received from upstream for this frame.
+    pub relay_upstream_bytes: u64,
+    /// Wire bytes the relay shipped downstream for this frame (producer
+    /// egress relief = downstream − upstream).
+    pub relay_downstream_bytes: u64,
+    /// Crops re-cut at the relay instead of at the producer.
+    pub relay_crops_recut: u64,
     pub files_created: usize,
     /// Measured background-drain pipeline statistics (engines with async
     /// data movement; zero for synchronous backends).

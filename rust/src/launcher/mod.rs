@@ -31,6 +31,7 @@
 //!   adios2_sst_broker      = .false.,  ! rank-0 mid-stream admission broker
 //!   adios2_sst_hello_timeout = 30,     ! lane handshake bound [s]
 //!   adios2_sst_max_lanes   = 65536,    ! lane-count sanity cap
+//!   adios2_relay_fanout    = 'auto',   ! relay-tree branching; 0 = direct
 //!   adios2_live_publish    = .false.,  ! per-step md.idx for followers
 //!   frames_per_outfile     = 1,        ! 0 = all frames in one BP file
 //!   nio_tasks              = 2,        ! quilt servers (io_form=901)
@@ -744,6 +745,79 @@ pub fn run_attach(target: &str, sub_spec: Option<&str>, timeout_secs: u64) -> Re
     println!(
         "attached consumer received {steps} step(s), {} total",
         crate::util::human_bytes(bytes)
+    );
+    Ok(())
+}
+
+/// The `stormio relay` command: one node of the SST distribution tree
+/// (DESIGN.md §16).  Subscribes to a running broker-enabled producer (or
+/// an upper relay) mid-stream as an ordinary wire v4 consumer, and
+/// re-serves every received step downstream through its own broker —
+/// leaves (or deeper relays) join with `stormio attach <relay contact>`
+/// and are admitted at this relay's next forwarded step.
+///
+/// `target` resolves exactly like `stormio attach`'s: a broker
+/// `host:port`, the producer's output directory, or a
+/// `sst_broker.contact` file.  `listen` binds the relay's own broker
+/// (port 0 picks an ephemeral port, printed on start); `depth_hint`
+/// labels the ledger with the relay's tree level.  Runs until the
+/// upstream stream ends, then closes every downstream lane and prints
+/// the per-hop ledger.
+pub fn run_relay(target: &str, listen: &str, depth_hint: u32, timeout_secs: u64) -> Result<()> {
+    use crate::adios::engine::sst::{self, RelayOpts, RelayUpstream, SstRelay};
+    use std::time::Duration;
+
+    let timeout = Duration::from_secs(timeout_secs.max(1));
+    let path = std::path::Path::new(target);
+    let addr = if target.contains(':') && !path.exists() {
+        target.to_string()
+    } else {
+        let contact = if path.is_dir() {
+            // Accept the run directory or its pfs/ subdirectory.
+            let pfs = path.join("pfs");
+            if sst::contact_path(path).exists() || !pfs.is_dir() {
+                sst::contact_path(path)
+            } else {
+                sst::contact_path(&pfs)
+            }
+        } else {
+            path.to_path_buf()
+        };
+        sst::read_contact(&contact, timeout)?
+    };
+    println!("relay (depth {depth_hint}): subscribing upstream at {addr} ...");
+    let relay = SstRelay::open(
+        RelayUpstream::Attach {
+            broker_addr: addr,
+            timeout: Some(timeout),
+        },
+        &[],
+        RelayOpts {
+            broker: true,
+            broker_bind: listen.to_string(),
+            depth_hint,
+            ..RelayOpts::default()
+        },
+    )?;
+    println!(
+        "relay broker listening on {} — attach leaves with `stormio attach {}`",
+        relay.broker_addr().as_deref().unwrap_or("?"),
+        relay.broker_addr().as_deref().unwrap_or("?"),
+    );
+    let report = relay.run()?;
+    let up: u64 = report.steps.iter().map(|s| s.relay_upstream_bytes).sum();
+    let down: u64 = report.steps.iter().map(|s| s.relay_downstream_bytes).sum();
+    let recut: u64 = report.steps.iter().map(|s| s.relay_crops_recut).sum();
+    let admitted: u32 = report.steps.iter().map(|s| s.consumers_admitted).sum();
+    let hop: f64 = report.steps.iter().map(|s| s.relay_hop_secs).sum();
+    println!(
+        "relay done: {} step(s) forwarded, {} received upstream, {} served \
+         downstream ({} of producer egress relieved), {recut} crop(s) re-cut \
+         here, {admitted} leaf join(s), {hop:.3}s total hop time",
+        report.steps.len(),
+        crate::util::human_bytes(up),
+        crate::util::human_bytes(down),
+        crate::util::human_bytes(down.saturating_sub(up)),
     );
     Ok(())
 }

@@ -59,6 +59,20 @@ USAGE:
       each NAME or NAME[start:count,...] per dimension
       (e.g. --sub 'T[1:2,0:6];PSFC').
 
+  stormio relay <addr | dir | contact_file> [--listen ADDR]
+                [--depth-hint N] [--timeout SECS]
+      Run a relay node of the SST distribution tree (DESIGN.md
+      §16): subscribe to a running broker-enabled producer (or an
+      upper relay) as an ordinary wire v4 consumer and re-serve the
+      stream downstream as a single-lane producer with its own
+      broker, so leaves (or deeper relays) attach *through* this
+      node with `stormio attach <relay contact>`.  Producer egress
+      stays flat as leaves join; each level's bounded queues confine
+      a slow leaf's back-pressure to its own subtree.  --listen
+      binds the relay's broker (default 127.0.0.1:0); --depth-hint
+      labels the ledger with the relay's tree level.  Exits when the
+      upstream stream ends, after closing every downstream lane.
+
   stormio stitch <out.nc> <part.nc> [part.nc ...]
       Stitch split-NetCDF (io_form=102) per-rank files into one file.
 
@@ -116,6 +130,31 @@ fn real_main() -> stormio::Result<i32> {
                 .and_then(|w| w[1].parse().ok())
                 .unwrap_or(300);
             launcher::run_attach(target, sub, secs)?;
+            Ok(0)
+        }
+        Some("relay") => {
+            let target = args.get(1).ok_or_else(|| {
+                stormio::Error::config(
+                    "relay: missing upstream broker address or producer directory"
+                        .to_string(),
+                )
+            })?;
+            let listen = args
+                .windows(2)
+                .find(|w| w[0] == "--listen")
+                .map(|w| w[1].as_str())
+                .unwrap_or("127.0.0.1:0");
+            let depth: u32 = args
+                .windows(2)
+                .find(|w| w[0] == "--depth-hint")
+                .and_then(|w| w[1].parse().ok())
+                .unwrap_or(1);
+            let secs: u64 = args
+                .windows(2)
+                .find(|w| w[0] == "--timeout")
+                .and_then(|w| w[1].parse().ok())
+                .unwrap_or(300);
+            launcher::run_relay(target, listen, depth, secs)?;
             Ok(0)
         }
         Some("convert") => {

@@ -148,6 +148,11 @@ pub struct IoIntent {
     /// lane count a consumer will fan-in (and the producer may open).
     /// Absent = [`crate::adios::engine::sst::DEFAULT_MAX_LANES`].
     pub sst_max_lanes: Option<u32>,
+    /// `adios2_relay_fanout` / `RelayFanout`: branching factor of the SST
+    /// relay distribution tree (DESIGN.md §16) — leaves per relay node.
+    /// `0` pins direct lanes (no tree); `'auto'` lets the planner pick a
+    /// branching from the consumer count; unset behaves like `0`.
+    pub relay_fanout: Knob<usize>,
     /// Operator template from the XML `<operator>` element: preserves
     /// shuffle / lossy bit-rounding settings when only the codec is
     /// (re)decided.
@@ -262,6 +267,30 @@ impl IoIntent {
             }
             intent.sst_max_lanes = Some(n as u32);
         }
+        if let Some(v) = tc.get("adios2_relay_fanout") {
+            let setting = match v {
+                Value::Int(i) if *i >= 0 => Setting::Explicit(*i as usize),
+                Value::Int(i) => {
+                    return Err(Error::config(format!(
+                        "adios2_relay_fanout = {i} must be >= 0 (0 = direct lanes, \
+                         or 'auto')"
+                    )))
+                }
+                Value::Str(s) => auto_or(s, |s| {
+                    s.parse::<usize>().map_err(|_| {
+                        Error::config(format!(
+                            "adios2_relay_fanout = '{s}' is neither an integer nor 'auto'"
+                        ))
+                    })
+                })?,
+                other => {
+                    return Err(Error::config(format!(
+                        "adios2_relay_fanout = {other} is neither an integer nor 'auto'"
+                    )))
+                }
+            };
+            intent.relay_fanout = Knob::namelist(setting);
+        }
         Ok(intent)
     }
 
@@ -363,6 +392,16 @@ impl IoIntent {
                 })?;
                 merged.sst_max_lanes = Some(n);
             }
+        }
+        if let Some(s) = io.param("RelayFanout") {
+            let setting = auto_or(s, |s| {
+                s.parse::<usize>().map_err(|_| {
+                    Error::config(format!(
+                        "RelayFanout={s} is neither a non-negative integer nor 'auto'"
+                    ))
+                })
+            })?;
+            merged.relay_fanout = merged.relay_fanout.or(Knob::xml(setting));
         }
         Ok(merged)
     }
@@ -480,6 +519,38 @@ mod tests {
         assert_eq!(m.sst_hello_timeout, Some(5));
         assert_eq!(m.sst_max_lanes, Some(64));
         io.params.insert("HelloTimeout".into(), "soon".into());
+        assert!(IoIntent::default().merge_io_config(&io).is_err());
+    }
+
+    #[test]
+    fn relay_fanout_parses_both_spellings() {
+        let g = tc("adios2_relay_fanout = 'auto',");
+        let i = IoIntent::from_time_control(&g).unwrap();
+        assert_eq!(i.relay_fanout.setting, Setting::Auto);
+        assert_eq!(i.relay_fanout.origin, Origin::Namelist);
+        // 0 is a legal pin: direct lanes, no tree.
+        let i = IoIntent::from_time_control(&tc("adios2_relay_fanout = 0,")).unwrap();
+        assert_eq!(i.relay_fanout.setting, Setting::Explicit(0));
+        let i = IoIntent::from_time_control(&tc("adios2_relay_fanout = 4,")).unwrap();
+        assert_eq!(i.relay_fanout.setting, Setting::Explicit(4));
+        assert!(IoIntent::from_time_control(&tc("adios2_relay_fanout = -1,")).is_err());
+        assert!(
+            IoIntent::from_time_control(&tc("adios2_relay_fanout = 'wide',")).is_err()
+        );
+        // Unset stays unset (the planner then renders no relay row).
+        let i = IoIntent::from_time_control(&tc("adios2_sst_broker = .true.,")).unwrap();
+        assert!(i.relay_fanout.setting.is_unset());
+        // XML spelling fills only when the namelist is silent.
+        let mut io = IoConfig::new("hist", EngineKind::Sst);
+        io.params.insert("RelayFanout".into(), "3".into());
+        let m = IoIntent::default().merge_io_config(&io).unwrap();
+        assert_eq!(m.relay_fanout.setting, Setting::Explicit(3));
+        assert_eq!(m.relay_fanout.origin, Origin::Xml);
+        let nl = IoIntent::from_time_control(&tc("adios2_relay_fanout = 2,")).unwrap();
+        let m = nl.merge_io_config(&io).unwrap();
+        assert_eq!(m.relay_fanout.setting, Setting::Explicit(2));
+        assert_eq!(m.relay_fanout.origin, Origin::Namelist);
+        io.params.insert("RelayFanout".into(), "tree".into());
         assert!(IoIntent::default().merge_io_config(&io).is_err());
     }
 

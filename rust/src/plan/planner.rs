@@ -261,6 +261,11 @@ pub struct IoPlan {
     /// Lane-count sanity cap override (`adios2_sst_max_lanes` /
     /// `MaxLanes`); `None` = engine default.  Not rendered.
     pub sst_max_lanes: Option<u32>,
+    /// Relay-tree branching (`adios2_relay_fanout` / `RelayFanout`,
+    /// DESIGN.md §16): leaves per relay node; `0` = direct lanes.
+    /// `None` when the knob is unset everywhere — the decision table
+    /// then renders no relay row, keeping pre-relay plans byte-stable.
+    pub relay_fanout: Option<Decision<usize>>,
     pub predicted: PlanCosts,
 }
 
@@ -273,6 +278,18 @@ impl IoPlan {
     /// "follow the drain" mode, DESIGN.md §11).
     pub fn bb_live(&self) -> bool {
         self.live_publish && matches!(self.target.value, Target::BurstBuffer { drain: true })
+    }
+
+    /// Relay nodes implied by the resolved branching: `ceil(consumers /
+    /// fanout)`; zero with direct lanes (fanout 0 or knob unset).
+    pub fn relay_nodes(&self) -> usize {
+        match self.relay_fanout {
+            Some(d) if d.value > 0 => {
+                let n = self.consumers.len();
+                (n + d.value - 1) / d.value
+            }
+            _ => 0,
+        }
     }
 
     fn target_name(&self) -> &'static str {
@@ -359,6 +376,19 @@ impl IoPlan {
             "consumers",
             self.consumers.len()
         ));
+        // Relay rows appear only when the knob was set somewhere: plans
+        // from pre-relay configs render byte-identically.
+        if let Some(rf) = &self.relay_fanout {
+            out.push_str(&format!(
+                "  {:<22}= {:<18} [{}]\n",
+                "relay_fanout", rf.value, rf.source
+            ));
+            out.push_str(&format!(
+                "  {:<22}= {}\n",
+                "relay_nodes",
+                self.relay_nodes()
+            ));
+        }
         out.push_str("predicted (virtual, CONUS-scale):\n");
         out.push_str(&format!(
             "  {:<22}= {:.3}\n",
@@ -404,6 +434,11 @@ impl IoPlan {
             self.predicted.time_to_first_analysis,
         );
         r.num("plan_fanout_advantage", self.predicted.fanout_advantage);
+        if let Some(rf) = &self.relay_fanout {
+            r.int("plan_relay_fanout", rf.value as u64);
+            r.text("plan_relay_fanout_source", &rf.source.to_string());
+            r.int("plan_relay_nodes", self.relay_nodes() as u64);
+        }
     }
 }
 
@@ -640,6 +675,36 @@ impl Planner {
         }
     }
 
+    /// Auto relay branching (DESIGN.md §16): a 2-level tree needs enough
+    /// leaves to amortize its extra hop — below 8 consumers direct lanes
+    /// always win, above that `ceil(sqrt(n))` balances producer streams
+    /// against per-relay load, but only if the tree actually scores
+    /// better than direct on this shape
+    /// ([`CostModel::fanout_advantage_tree`]).  Returns the branching
+    /// factor, 0 for direct lanes.
+    pub fn choose_relay_fanout(
+        &self,
+        stored: f64,
+        per_consumer: &[f64],
+        lanes: usize,
+    ) -> usize {
+        let n = per_consumer.len();
+        if n < 8 {
+            return 0;
+        }
+        let b = (n as f64).sqrt().ceil() as usize;
+        let relays = (n + b - 1) / b;
+        if self
+            .cost
+            .fanout_advantage_tree(stored, per_consumer, lanes, relays)
+            > 1.0
+        {
+            b
+        } else {
+            0
+        }
+    }
+
     /// Resolve every knob of `intent` for `engine` into an [`IoPlan`].
     pub fn plan(&self, engine: EngineKind, intent: &IoIntent) -> Result<IoPlan> {
         // An explicit `adios2_ensemble_writers` overrides the shape's
@@ -736,6 +801,24 @@ impl Planner {
             DataPlane::Lanes,
         );
 
+        // Relay tree (DESIGN.md §16): resolved only when the knob was
+        // actually set — pre-relay configs keep their exact plan output.
+        let relay_fanout = if intent.relay_fanout.setting.is_unset() {
+            None
+        } else {
+            Some(decide(
+                intent.relay_fanout,
+                || self.choose_relay_fanout(stored, &per_consumer, lanes),
+                0,
+            ))
+        };
+        let relay_nodes = match relay_fanout {
+            Some(d) if d.value > 0 => {
+                (consumers.len() + d.value - 1) / d.value
+            }
+            _ => 0,
+        };
+
         // Operator: keep the XML shuffle/lossy template when it already
         // carries the chosen codec; otherwise the blosc default stack.
         let operator = match intent.operator_base {
@@ -751,6 +834,7 @@ impl Planner {
             stored,
             fan_consumers,
             lanes,
+            relay_nodes,
             frames_per_outfile,
             live_publish,
         );
@@ -771,6 +855,7 @@ impl Planner {
             broker,
             sst_hello_timeout: intent.sst_hello_timeout,
             sst_max_lanes: intent.sst_max_lanes,
+            relay_fanout,
             predicted,
         })
     }
@@ -786,6 +871,7 @@ impl Planner {
         stored: f64,
         per_consumer: &[f64],
         lanes: usize,
+        relay_nodes: usize,
         frames_per_outfile: usize,
         live_publish: bool,
     ) -> PlanCosts {
@@ -818,14 +904,54 @@ impl Planner {
             }
             EngineKind::Sst => {
                 let chain = cm.t_chain_gather(stored, lanes);
-                let egress = cm.t_stream_egress(per_consumer, lanes);
-                let t_write = t_comp + chain + egress;
-                PlanCosts {
-                    t_write,
-                    t_durable: t_write,
-                    time_to_first_analysis: t_write,
-                    fanout_advantage: cm.fanout_advantage(stored, per_consumer, lanes),
-                    stored_bytes: stored,
+                if relay_nodes > 0 {
+                    // Under a relay tree the producer ships one stream
+                    // per relay (each the size of its widest round-robin
+                    // leaf) instead of one per consumer — the egress
+                    // relief the tree buys.  Leaves see their data one
+                    // hop later: the slowest relay's receive + re-serve
+                    // lands on time_to_first_analysis, not on the
+                    // producer's t_write.
+                    let mut relay_streams = vec![0.0f64; relay_nodes];
+                    for (i, b) in per_consumer.iter().enumerate() {
+                        let g = i % relay_nodes;
+                        relay_streams[g] = relay_streams[g].max(*b);
+                    }
+                    let t_write =
+                        t_comp + chain + cm.t_stream_egress(&relay_streams, lanes);
+                    let slowest_hop = (0..relay_nodes)
+                        .map(|g| {
+                            let leaves: Vec<f64> = per_consumer
+                                .iter()
+                                .enumerate()
+                                .filter(|(i, _)| i % relay_nodes == g)
+                                .map(|(_, b)| *b)
+                                .collect();
+                            cm.t_relay_hop(relay_streams[g], &leaves)
+                        })
+                        .fold(0.0f64, f64::max);
+                    PlanCosts {
+                        t_write,
+                        t_durable: t_write,
+                        time_to_first_analysis: t_write + slowest_hop,
+                        fanout_advantage: cm.fanout_advantage_tree(
+                            stored,
+                            per_consumer,
+                            lanes,
+                            relay_nodes,
+                        ),
+                        stored_bytes: stored,
+                    }
+                } else {
+                    let egress = cm.t_stream_egress(per_consumer, lanes);
+                    let t_write = t_comp + chain + egress;
+                    PlanCosts {
+                        t_write,
+                        t_durable: t_write,
+                        time_to_first_analysis: t_write,
+                        fanout_advantage: cm.fanout_advantage(stored, per_consumer, lanes),
+                        stored_bytes: stored,
+                    }
                 }
             }
             EngineKind::Null => PlanCosts {
@@ -1142,6 +1268,86 @@ mod tests {
             .unwrap();
         assert_eq!(plan.codec.value, Codec::None);
         assert_eq!(plan.codec.source, DecisionSource::Auto);
+    }
+
+    #[test]
+    fn relay_fanout_resolves_and_renders_conditionally() {
+        let p = planner(8);
+        // Knob unset: no relay decision, no relay rows — pre-relay plan
+        // output stays byte-identical (the golden-compat contract).
+        let addrs: Vec<String> = (0..9).map(|i| format!("127.0.0.1:{}", 5000 + i)).collect();
+        let direct = p
+            .plan(
+                EngineKind::Sst,
+                &intent(&format!("adios2_sst_address = '{}',", addrs.join(", "))),
+            )
+            .unwrap();
+        assert!(direct.relay_fanout.is_none());
+        assert_eq!(direct.relay_nodes(), 0);
+        assert!(!direct.render("hist").contains("relay"));
+        // 'auto' at 9 full consumers: ceil(sqrt(9)) = 3 leaves per relay,
+        // 3 relay nodes, and the tree must score above direct.
+        let tree = p
+            .plan(
+                EngineKind::Sst,
+                &intent(&format!(
+                    "adios2_sst_address = '{}',\n adios2_relay_fanout = 'auto',",
+                    addrs.join(", ")
+                )),
+            )
+            .unwrap();
+        let rf = tree.relay_fanout.expect("auto knob must resolve");
+        assert_eq!(rf.value, 3);
+        assert_eq!(rf.source, DecisionSource::Auto);
+        assert_eq!(tree.relay_nodes(), 3);
+        assert!(
+            tree.predicted.fanout_advantage > 1.0,
+            "2-level tree over 9 full consumers must beat direct: {:.2}",
+            tree.predicted.fanout_advantage
+        );
+        // The producer-egress relief shows up in the predicted write
+        // time: 3 relay streams beat 9 direct consumer streams.
+        assert!(tree.predicted.t_write < direct.predicted.t_write);
+        let table = tree.render("hist");
+        assert!(table.contains("relay_fanout"));
+        assert!(table.contains("relay_nodes"));
+        // A pinned 0 renders the row (the user asked for direct) but
+        // derives no relay nodes and keeps the direct advantage score.
+        let pinned = p
+            .plan(
+                EngineKind::Sst,
+                &intent(&format!(
+                    "adios2_sst_address = '{}',\n adios2_relay_fanout = 0,",
+                    addrs.join(", ")
+                )),
+            )
+            .unwrap();
+        let rf = pinned.relay_fanout.expect("pinned knob must resolve");
+        assert_eq!(rf.value, 0);
+        assert_eq!(rf.source, DecisionSource::Namelist);
+        assert_eq!(pinned.relay_nodes(), 0);
+        assert!(pinned.render("hist").contains("relay_fanout"));
+        assert!(
+            (pinned.predicted.t_write - direct.predicted.t_write).abs() < 1e-12,
+            "fanout 0 must predict exactly the direct plan"
+        );
+        // Below 8 consumers 'auto' stays direct.
+        let few = p
+            .plan(
+                EngineKind::Sst,
+                &intent(
+                    "adios2_sst_address = '127.0.0.1:1, 127.0.0.1:2',\n \
+                     adios2_relay_fanout = 'auto',",
+                ),
+            )
+            .unwrap();
+        assert_eq!(few.relay_fanout.unwrap().value, 0);
+        // Stamped provenance carries the relay decision.
+        let mut r = BenchReport::new("relay_plan");
+        tree.stamp(&mut r);
+        let j = r.to_json();
+        assert!(j.contains("\"plan_relay_fanout\": 3"));
+        assert!(j.contains("\"plan_relay_nodes\": 3"));
     }
 
     #[test]

@@ -412,6 +412,66 @@ impl CostModel {
     pub fn t_rescope_recrop(&self, recrop_bytes: f64, lanes: usize, codec_bw: f64) -> f64 {
         self.t_fanout_codec(recrop_bytes, lanes, codec_bw)
     }
+
+    /// One relay hop of the distribution tree (DESIGN.md §16): the relay
+    /// receives the producer's single upstream stream, then re-ships each
+    /// leaf's copy through its own single NIC.  Both halves are
+    /// background work — the model never blocks on a relay — and the
+    /// producer's own charge shrinks to *one* lane stream per relay
+    /// instead of one per leaf (the egress relief the planner trades this
+    /// hop against).
+    pub fn t_relay_hop(&self, upstream_bytes: f64, per_consumer_bytes: &[f64]) -> f64 {
+        if upstream_bytes <= 0.0 && per_consumer_bytes.is_empty() {
+            return 0.0;
+        }
+        self.t_stream_transfer(upstream_bytes) + self.t_stream_egress(per_consumer_bytes, 1)
+    }
+
+    /// Score direct fan-out (one producer lane per consumer) against a
+    /// 2-level relay tree with `relays` relay nodes: the producer ships
+    /// one stream per *relay* — each carrying the union of that relay's
+    /// leaves, modeled as the widest leaf subscription in the group
+    /// (leaves assigned round-robin) — and the relays re-serve the
+    /// leaves a hop later.  Both designs pay the same node-local chain.
+    ///
+    /// The basis is the **producer's** step time (the model's blocking
+    /// path): the relay's own byte movement runs pipelined one step
+    /// behind on the relay's NIC — each tree level's bounded queues
+    /// decouple it, and a saturated relay back-pressures only its
+    /// subtree, never the producer — so the tree's scored path pays the
+    /// producer→relay egress plus one extra store-and-forward link
+    /// latency, not the hop's bandwidth (which [`Self::t_relay_hop`]
+    /// charges to the relay's own background ledger).  Returns
+    /// `direct_time / tree_time`: > 1 means the tree's producer-egress
+    /// relief beats its extra hop latency, and the advantage grows with
+    /// consumer count because direct egress is linear in consumers while
+    /// the tree's producer egress is linear in relays.  `relays == 0`
+    /// (or an empty/zero load) scores 1.0 — no tree, no advantage.
+    pub fn fanout_advantage_tree(
+        &self,
+        step_bytes: f64,
+        per_consumer_bytes: &[f64],
+        lanes: usize,
+        relays: usize,
+    ) -> f64 {
+        let total: f64 = per_consumer_bytes.iter().sum();
+        if total <= 0.0 || step_bytes <= 0.0 || relays == 0 {
+            return 1.0;
+        }
+        let chain = self.t_chain_gather(step_bytes, lanes.max(1));
+        let direct = chain + self.t_stream_egress(per_consumer_bytes, lanes);
+        // Producer → relays: stream g carries the union of the leaves
+        // assigned to relay g (round-robin), modeled as the group's
+        // widest leaf.
+        let mut relay_streams = vec![0.0f64; relays];
+        for (i, b) in per_consumer_bytes.iter().enumerate() {
+            let g = i % relays;
+            relay_streams[g] = relay_streams[g].max(*b);
+        }
+        let tree =
+            chain + self.t_stream_egress(&relay_streams, lanes) + self.hw.link_lat_s;
+        direct / tree
+    }
 }
 
 #[cfg(test)]
@@ -574,6 +634,42 @@ mod tests {
         assert!((m.t_rescope_recrop(v, 8, bw) - m.t_fanout_codec(v, 8, bw)).abs() < 1e-12);
         assert_eq!(m.t_rescope_recrop(0.0, 8, bw), 0.0);
         assert_eq!(m.t_rescope_recrop(v, 8, 0.0), 0.0);
+    }
+
+    #[test]
+    fn relay_hop_and_tree_advantage_shapes() {
+        let m = cm(8);
+        let v = 8e9;
+        // One hop = receive the upstream stream + re-serve the leaves on
+        // one NIC — bit-equal to its two primitives.
+        let leaves = [v, v, v / 16.0];
+        assert!(
+            (m.t_relay_hop(v, &leaves)
+                - (m.t_stream_transfer(v) + m.t_stream_egress(&leaves, 1)))
+            .abs()
+                < 1e-12
+        );
+        // No upstream, no leaves, no charge.
+        assert_eq!(m.t_relay_hop(0.0, &[]), 0.0);
+        // No relays (or no load) scores neutral — direct runs unchanged.
+        assert_eq!(m.fanout_advantage_tree(v, &[v, v], 8, 0), 1.0);
+        assert_eq!(m.fanout_advantage_tree(0.0, &[v], 8, 2), 1.0);
+        assert_eq!(m.fanout_advantage_tree(v, &[], 8, 2), 1.0);
+        // The tree's case: direct egress is linear in consumers, the
+        // tree's producer egress is linear in relays — so the advantage
+        // must grow with consumer count at fixed relay count...
+        let full8: Vec<f64> = vec![v; 8];
+        let full32: Vec<f64> = vec![v; 32];
+        let a8 = m.fanout_advantage_tree(v, &full8, 8, 2);
+        let a32 = m.fanout_advantage_tree(v, &full32, 8, 2);
+        assert!(
+            a32 > a8,
+            "tree advantage must grow with consumers: {a32:.2} vs {a8:.2}"
+        );
+        // ...and clearly beat direct in the tens (ROADMAP direction 2).
+        assert!(a32 > 1.0, "32 full consumers behind 2 relays: {a32:.2}");
+        // A single consumer never justifies the extra hop.
+        assert!(m.fanout_advantage_tree(v, &[v], 8, 1) < 1.0);
     }
 
     #[test]

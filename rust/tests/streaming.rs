@@ -18,8 +18,9 @@ use stormio::adios::bp::reader::BpReader;
 use stormio::adios::bp::{drained_steps, read_metadata, write_metadata};
 use stormio::adios::engine::bp4::{Bp4Config, Bp4Engine};
 use stormio::adios::engine::sst::{
-    contact_path, read_contact, DataPlane, SstConsumer, SstEngine, SstListener, SstServiceOpts,
-    SstSource, MAGIC, MAGIC_V4, MAX_FRAME_LEN, TYPE_HELLO, TYPE_REFUSE, TYPE_STEP,
+    contact_path, read_contact, DataPlane, RelayOpts, RelayProbe, RelayUpstream, SstConsumer,
+    SstEngine, SstListener, SstRelay, SstServiceOpts, SstSource, MAGIC, MAGIC_V4, MAX_FRAME_LEN,
+    TYPE_HELLO, TYPE_REFUSE, TYPE_STEP,
 };
 use stormio::adios::store::{DirStore, LandingStore};
 use stormio::adios::engine::{Engine, Target};
@@ -1339,6 +1340,474 @@ fn egress_ledger_sums_to_stored_bytes_across_joins_and_leaves() {
         rep.steps.iter().map(|s| s.consumers_reaped as u64).sum::<u64>() >= 1,
         "quitter was never reaped"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Relay/distribution tree (DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn relay_tree_serves_leaves_byte_identical_to_direct() {
+    // 2-level tree: producer → 2 relays → 2 leaves each.  Every leaf must
+    // receive, on every step, bytes identical to a directly-wired
+    // consumer (`expected_canon` is that ground truth), the producer's
+    // ledger must bill one stream per relay — not per leaf — and each
+    // relay's ledger must balance its upstream stream against one copy
+    // per leaf.
+    let mut leaf_threads = Vec::new();
+    let mut relay_threads = Vec::new();
+    let mut up_addrs = Vec::new();
+    for _ in 0..2 {
+        let mut downs = Vec::new();
+        for _ in 0..2 {
+            let l = SstConsumer::listen("127.0.0.1:0").unwrap();
+            downs.push(l.local_addr().unwrap());
+            leaf_threads.push(std::thread::spawn(move || {
+                let mut src = SstSource::new(
+                    l.accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                        .unwrap(),
+                );
+                drain_source(&mut src).0
+            }));
+        }
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        up_addrs.push(listener.local_addr().unwrap());
+        relay_threads.push(std::thread::spawn(move || {
+            SstRelay::open(
+                RelayUpstream::Listen {
+                    listener,
+                    timeout: Some(Duration::from_secs(30)),
+                },
+                &downs,
+                RelayOpts::default(),
+            )
+            .unwrap()
+            .run()
+            .unwrap()
+        }));
+    }
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_multi(
+            &up_addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+        )
+        .unwrap();
+        produce(&mut eng, &mut comm, STEPS);
+        eng.close(&mut comm).unwrap()
+    });
+    for (c, t) in leaf_threads.into_iter().enumerate() {
+        let canons = t.join().unwrap();
+        assert_eq!(canons.len(), STEPS, "leaf {c} step count");
+        for (s, got) in canons.iter().enumerate() {
+            assert_eq!(got, &expected_canon(s), "leaf {c} step {s} differs from direct");
+        }
+    }
+    let prod = reports.into_iter().next().unwrap();
+    assert_eq!(prod.steps.len(), STEPS);
+    for (s, st) in prod.steps.iter().enumerate() {
+        assert_eq!(
+            st.egress_per_consumer.len(),
+            2,
+            "step {s}: the producer must serve one stream per relay, not per leaf"
+        );
+    }
+    for (g, t) in relay_threads.into_iter().enumerate() {
+        let rep = t.join().unwrap();
+        assert_eq!(rep.steps.len(), STEPS, "relay {g} ledger length");
+        for (s, st) in rep.steps.iter().enumerate() {
+            assert_eq!(st.step, s, "relay {g} renumbers steps from 0");
+            assert_eq!(
+                st.relay_upstream_bytes, prod.steps[s].egress_per_consumer[g],
+                "relay {g} step {s}: upstream bytes must match the producer's stream"
+            );
+            assert_eq!(
+                st.relay_downstream_bytes,
+                2 * st.relay_upstream_bytes,
+                "relay {g} step {s}: full leaves get the upstream frames untouched"
+            );
+            assert_eq!(
+                st.egress_per_consumer.iter().sum::<u64>(),
+                st.relay_downstream_bytes,
+                "relay {g} step {s}: egress vector must sum to the downstream total"
+            );
+        }
+    }
+}
+
+#[test]
+fn slow_leaf_backpressures_only_its_own_subtree() {
+    // Producer → 2 relays, one leaf each.  Relay A's leaf completes its
+    // handshake, then refuses to read a single step until the producer
+    // has finished the *entire run* around it.  With STEPS no deeper
+    // than the per-lane bounded queue, the stall is absorbed inside
+    // relay A's own queue: the producer and the sibling subtree finish
+    // without ever blocking on the slow leaf — the bounded wait below is
+    // the isolation assertion.
+    let producer_done = Arc::new(AtomicUsize::new(0));
+
+    let slow_l = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let slow_addr = slow_l.local_addr().unwrap();
+    let pd = producer_done.clone();
+    let slow_t = std::thread::spawn(move || {
+        let c = slow_l
+            .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+            .unwrap();
+        let t0 = Instant::now();
+        while pd.load(Ordering::SeqCst) == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "producer never finished: the slow leaf's stall escaped its subtree"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // The whole run is over; every step is still waiting for us.
+        let mut src = SstSource::new(c);
+        drain_source(&mut src).0
+    });
+
+    let fast_l = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let fast_addr = fast_l.local_addr().unwrap();
+    let fast_t = std::thread::spawn(move || {
+        let mut src = SstSource::new(
+            fast_l
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        drain_source(&mut src).0
+    });
+
+    let mut relay_threads = Vec::new();
+    let mut up_addrs = Vec::new();
+    for leaf in [slow_addr, fast_addr] {
+        let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+        up_addrs.push(listener.local_addr().unwrap());
+        relay_threads.push(std::thread::spawn(move || {
+            SstRelay::open(
+                RelayUpstream::Listen {
+                    listener,
+                    timeout: Some(Duration::from_secs(30)),
+                },
+                &[leaf],
+                RelayOpts::default(),
+            )
+            .unwrap()
+            .run()
+            .unwrap()
+        }));
+    }
+    run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_multi(
+            &up_addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+        )
+        .unwrap();
+        produce(&mut eng, &mut comm, STEPS);
+        eng.close(&mut comm).unwrap()
+    });
+    producer_done.store(1, Ordering::SeqCst);
+
+    for t in relay_threads {
+        t.join().unwrap();
+    }
+    let fast = fast_t.join().unwrap();
+    let slow = slow_t.join().unwrap();
+    assert_eq!(fast.len(), STEPS);
+    assert_eq!(slow.len(), STEPS, "the stalled leaf must still get every step");
+    for s in 0..STEPS {
+        assert_eq!(fast[s], expected_canon(s), "fast leaf step {s} payload");
+        assert_eq!(slow[s], expected_canon(s), "slow leaf step {s} payload");
+    }
+}
+
+#[test]
+fn relay_crash_is_reaped_upstream_and_ends_its_leaf() {
+    // Producer → [relay → leaf, direct survivor].  The relay dies after
+    // the first step ships — its sockets drop with no byes.  The
+    // producer must reap the dead lane and keep serving the survivor
+    // every remaining step; the relay's leaf must observe its stream
+    // ending promptly instead of hanging.
+    let nsteps = 6usize;
+    let l_srv = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let srv_addr = l_srv.local_addr().unwrap();
+    let srv_t = std::thread::spawn(move || {
+        let mut src = SstSource::new(
+            l_srv
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        drain_source(&mut src).0
+    });
+
+    let l_leaf = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let leaf_addr = l_leaf.local_addr().unwrap();
+    let leaf_t = std::thread::spawn(move || {
+        let mut c = l_leaf
+            .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+            .unwrap();
+        // The relay never forwards a step before dying: the leaf sees
+        // its stream end (error or bare EOF), never a payload.
+        match c.next_step() {
+            Ok(Some(_)) => panic!("leaf received a step from a crashed relay"),
+            Ok(None) | Err(_) => {}
+        }
+    });
+
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let up_addr = listener.local_addr().unwrap();
+    let steps_done = Arc::new(AtomicUsize::new(0));
+    let sd = steps_done.clone();
+    let relay_t = std::thread::spawn(move || {
+        let relay = SstRelay::open(
+            RelayUpstream::Listen {
+                listener,
+                timeout: Some(Duration::from_secs(30)),
+            },
+            &[leaf_addr],
+            RelayOpts::default(),
+        )
+        .unwrap();
+        // "Crash": once the first step has shipped, die with every lane
+        // open — upstream and downstream sockets just drop.
+        let t0 = Instant::now();
+        while sd.load(Ordering::SeqCst) < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "step 0 never shipped");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        drop(relay);
+    });
+
+    let sd = steps_done.clone();
+    let addrs = vec![up_addr, srv_addr];
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open_multi(
+            &addrs,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+        )
+        .unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..nsteps {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            eng.end_step(&mut comm).unwrap();
+            if comm.rank() == 0 {
+                sd.store(s + 1, Ordering::SeqCst);
+            }
+        }
+        eng.close(&mut comm).unwrap()
+    });
+
+    relay_t.join().unwrap();
+    leaf_t.join().unwrap();
+    let srv = srv_t.join().unwrap();
+    assert_eq!(srv.len(), nsteps, "survivor must get every step past the crash");
+    for (s, c) in srv.iter().enumerate() {
+        assert_eq!(c, &expected_canon(s), "survivor step {s} payload");
+    }
+    let rep = reports.into_iter().next().unwrap();
+    assert_eq!(rep.steps.len(), nsteps);
+    assert!(
+        rep.steps.iter().map(|s| s.consumers_reaped as u64).sum::<u64>() >= 1,
+        "the crashed relay's lane was never reaped"
+    );
+}
+
+#[test]
+fn late_attach_through_relay_replays_from_relay_cache() {
+    // Producer → relay (broker on) → one fixed leaf.  A late consumer
+    // attaches *through the relay* after the leaf has its first step,
+    // is admitted at the relay's next forwarded boundary, and its first
+    // step is served from the relay's own copy — the §15 replay, one
+    // level down.  The upstream producer never learns about the join.
+    let l_leaf = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let leaf_addr = l_leaf.local_addr().unwrap();
+    let leaf_steps = Arc::new(AtomicUsize::new(0));
+    let ls = leaf_steps.clone();
+    let leaf_t = std::thread::spawn(move || {
+        let mut src = SstSource::new(
+            l_leaf
+                .accept_with(&Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        let mut canons = Vec::new();
+        loop {
+            match src.begin_step(Duration::from_secs(30)).unwrap() {
+                StepStatus::Ready => {}
+                StepStatus::EndOfStream => break,
+                StepStatus::Timeout => panic!("fixed leaf timed out"),
+            }
+            canons.push(canon_step(&mut src));
+            src.end_step().unwrap();
+            ls.fetch_add(1, Ordering::SeqCst);
+        }
+        canons
+    });
+
+    // The relay's broker address and admission probe become visible once
+    // its upstream handshake completes (i.e. once the producer is up).
+    let info: Arc<std::sync::Mutex<Option<(String, RelayProbe)>>> =
+        Arc::new(std::sync::Mutex::new(None));
+    let listener = SstConsumer::listen("127.0.0.1:0").unwrap();
+    let up_addr = listener.local_addr().unwrap();
+    let info2 = info.clone();
+    let relay_t = std::thread::spawn(move || {
+        let relay = SstRelay::open(
+            RelayUpstream::Listen {
+                listener,
+                timeout: Some(Duration::from_secs(30)),
+            },
+            &[leaf_addr],
+            RelayOpts {
+                broker: true,
+                ..RelayOpts::default()
+            },
+        )
+        .unwrap();
+        *info2.lock().unwrap() = Some((
+            relay.broker_addr().expect("broker-enabled relay has an address"),
+            relay.probe(),
+        ));
+        relay.run().unwrap()
+    });
+
+    // The joiner waits until the leaf has step 0 (so the relay is past
+    // its first boundary), then attaches through the relay's broker.
+    let ls = leaf_steps.clone();
+    let info3 = info.clone();
+    let join_t = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let addr = loop {
+            if ls.load(Ordering::SeqCst) >= 1 {
+                if let Some((addr, _)) = info3.lock().unwrap().as_ref() {
+                    break addr.clone();
+                }
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "relay broker never came up");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        let mut src = SstSource::new(
+            SstConsumer::attach(&addr, &Subscription::all(), Some(Duration::from_secs(30)))
+                .unwrap(),
+        );
+        let mut first = None;
+        let mut canons = Vec::new();
+        loop {
+            match src.begin_step(Duration::from_secs(30)).unwrap() {
+                StepStatus::Ready => {}
+                StepStatus::EndOfStream => break,
+                StepStatus::Timeout => panic!("relay joiner timed out"),
+            }
+            first.get_or_insert(src.step_index());
+            canons.push(canon_step(&mut src));
+            src.end_step().unwrap();
+        }
+        (first.expect("relay joiner saw no steps"), canons)
+    });
+
+    let addr = up_addr;
+    let info4 = info.clone();
+    let reports = run_world(4, 2, move |mut comm| {
+        let mut eng = SstEngine::open(
+            &addr,
+            OperatorConfig::blosc(Codec::Lz4),
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            &comm,
+            Duration::from_secs(5),
+            DataPlane::Lanes,
+            1,
+        )
+        .unwrap();
+        let r = comm.rank() as u64;
+        for s in 0..STEPS {
+            eng.begin_step().unwrap();
+            eng.put_f32(
+                Variable::global("T", &[2, 4, 6], &[0, r, 0], &[2, 1, 6]).unwrap(),
+                field(s, r, 12),
+            )
+            .unwrap();
+            eng.put_f32(
+                Variable::global("PSFC", &[4, 6], &[r, 0], &[1, 6]).unwrap(),
+                field(s, r + 10, 6),
+            )
+            .unwrap();
+            if s == 1 && comm.rank() == 0 {
+                // Hold the boundary until the attach is parked at the
+                // *relay's* broker, so the admission deterministically
+                // lands at the relay's step-1 boundary.
+                let t0 = Instant::now();
+                loop {
+                    let parked = info4
+                        .lock()
+                        .unwrap()
+                        .as_ref()
+                        .map(|(_, p)| p.pending_admissions())
+                        .unwrap_or(0);
+                    if parked >= 1 {
+                        break;
+                    }
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(30),
+                        "attach never parked at the relay"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            eng.end_step(&mut comm).unwrap();
+        }
+        eng.close(&mut comm).unwrap()
+    });
+
+    let leaf = leaf_t.join().unwrap();
+    let (first, late) = join_t.join().unwrap();
+    let relay_rep = relay_t.join().unwrap();
+
+    assert_eq!(leaf.len(), STEPS);
+    for (s, c) in leaf.iter().enumerate() {
+        assert_eq!(c, &expected_canon(s), "fixed leaf step {s} payload");
+    }
+    assert_eq!(first, 1, "joiner must first see the relay's admitting boundary");
+    assert_eq!(late.as_slice(), &leaf[1..], "joiner vs fixed-leaf suffix differs");
+
+    assert_eq!(relay_rep.steps.len(), STEPS);
+    assert_eq!(relay_rep.steps[1].consumers_admitted, 1);
+    assert_eq!(relay_rep.steps[0].replay_bytes, 0);
+    assert!(relay_rep.steps[1].replay_bytes > 0, "replay must be billed at the relay");
+    assert_eq!(relay_rep.steps[1].egress_per_consumer.len(), 2);
+    assert_eq!(
+        relay_rep.steps[1].replay_bytes,
+        relay_rep.steps[1].egress_per_consumer[1],
+        "replay is exactly the joiner's first-step egress from the relay's cache"
+    );
+    // The join was absorbed entirely at the relay: the upstream
+    // producer's membership ledger never saw it.
+    let prod = reports.into_iter().next().unwrap();
+    assert_eq!(prod.steps.iter().map(|s| s.consumers_admitted).sum::<u32>(), 0);
+    for (s, st) in prod.steps.iter().enumerate() {
+        assert_eq!(st.egress_per_consumer.len(), 1, "step {s}: producer serves the relay only");
+    }
 }
 
 // ---------------------------------------------------------------------------
