@@ -1,0 +1,319 @@
+//! Fig 15 (repro extension) — closed-loop adaptive re-planning under a
+//! mid-run bandwidth collapse (DESIGN.md §17).
+//!
+//! A CONUS-sized history stream on the 2-node paper testbed is replayed
+//! through a virtual write/drain pipeline: each step costs one compute
+//! interval plus the planner's application-perceived `t_write`, while
+//! the hidden drain tail (`t_durable − t_write`) runs on a background
+//! server that can fall behind the step cadence.  At one third of the
+//! run the PFS collapses (cross-run contention: 25 % of nominal
+//! bandwidth, the burst-buffer drain down to 40 %) and stays collapsed.
+//!
+//! Four plans ride the same schedule:
+//!
+//! * **fixed** — the open-loop auto plan (drained burst buffer) and the
+//!   three pinned targets (`pfs`, `bb`, `object`), each re-costed per
+//!   step under the phase's measured profile but never re-resolved;
+//! * **adaptive** — the open-loop plan plus a [`FeedbackController`]
+//!   fed one `EngineFeedback` sample per step.  The collapse trips the
+//!   bandwidth trigger, the controller re-resolves to the object space,
+//!   and the sim charges the full `t_replan` collective on the app path
+//!   of the following step.
+//!
+//! Acceptance: the adaptive run strictly beats *every* fixed plan in
+//! total virtual time (fixed-BB/PFS drown in the collapsed drain;
+//! fixed-object pays the pricier object put through the healthy phase),
+//! and a fully healthy replay performs **zero** replans with a BENCH
+//! plan stamp byte-identical to the open-loop planner's.
+//!
+//! Emits `BENCH_fig15_adaptive_replan.json` whose `plan_changes` array
+//! carries the replan provenance (step, trigger, knob old→new,
+//! predicted gain) for the CI schema check.
+
+use stormio::adios::{EngineFeedback, EngineKind, Target};
+use stormio::metrics::{BenchReport, Table};
+use stormio::namelist::Namelist;
+use stormio::plan::{
+    stamp_changes, FeedbackController, IoIntent, IoPlan, Knob, Planner, Setting, WorkloadShape,
+};
+use stormio::sim::{CostModel, HardwareSpec, MeasuredProfile};
+use stormio::workload::bench_smoke;
+
+/// History steps in the virtual run; the PFS collapses for good after
+/// the first third.
+const NSTEPS: usize = 12;
+const COLLAPSE_AT: usize = NSTEPS / 3;
+/// Model compute between history writes (virtual seconds) — wide enough
+/// that a healthy drain hides entirely between steps.
+const COMPUTE_S: f64 = 25.0;
+
+fn planner() -> Planner {
+    Planner::new(
+        CostModel::new(HardwareSpec::paper_testbed(2)),
+        WorkloadShape::paper(),
+    )
+}
+
+fn intent(body: &str) -> IoIntent {
+    let nl = Namelist::parse(&format!("&time_control\n{body}\n/\n")).unwrap();
+    IoIntent::from_time_control(nl.group("time_control").unwrap()).unwrap()
+}
+
+fn auto_intent() -> IoIntent {
+    intent(
+        "adios2_num_aggregators = 'auto',\n adios2_compression = 'auto',\n \
+         adios2_target = 'auto',",
+    )
+}
+
+/// Pin every knob to a resolved plan's values, so re-costing under a
+/// measured profile prices exactly this plan instead of re-resolving.
+fn pin(plan: &IoPlan) -> IoIntent {
+    IoIntent {
+        aggregators: Knob::namelist(Setting::Explicit(plan.aggs_per_node.value)),
+        codec: Knob::namelist(Setting::Explicit(plan.codec.value)),
+        target: Knob::namelist(Setting::Explicit(plan.target.value)),
+        ..IoIntent::default()
+    }
+}
+
+/// The measured world at `step`: nominal until the collapse, then 25 %
+/// PFS bandwidth with the drain at 40 %.
+fn world(step: usize, collapse: bool) -> MeasuredProfile {
+    if collapse && step >= COLLAPSE_AT {
+        MeasuredProfile {
+            drain_bw_frac: 0.4,
+            pfs_bw_frac: 0.25,
+            compress_frac: 1.0,
+        }
+    } else {
+        MeasuredProfile::default()
+    }
+}
+
+/// The engine-side sample the controller sees for `step` (same shapes
+/// as the unit fixtures: a healthy drain keeps up frame for frame; the
+/// collapsed one carries a growing backlog and the external PFS hint).
+fn sample(step: usize, collapse: bool) -> EngineFeedback {
+    if collapse && step >= COLLAPSE_AT {
+        EngineFeedback {
+            step,
+            stored_bytes: 1 << 30,
+            frames_enqueued: step + 1,
+            frames_durable: step.saturating_sub(2),
+            pfs_bw_frac: 0.25,
+            ..EngineFeedback::default()
+        }
+    } else {
+        EngineFeedback {
+            step,
+            stored_bytes: 1 << 30,
+            frames_enqueued: step + 1,
+            frames_durable: step + 1,
+            ..EngineFeedback::default()
+        }
+    }
+}
+
+/// Price one step of `plan` under the measured profile: the
+/// app-perceived write plus the hidden background drain tail.
+fn step_costs(planner: &Planner, m: &MeasuredProfile, plan: &IoPlan) -> (f64, f64) {
+    let p = planner
+        .with_measured(m)
+        .plan(EngineKind::Bp4, &pin(plan))
+        .unwrap();
+    let tail = (p.predicted.t_durable - p.predicted.t_write).max(0.0);
+    (p.predicted.t_write, tail)
+}
+
+/// Virtual pipeline: the app advances by compute + perceived write (+
+/// any replan charge pending from the previous boundary); the drain
+/// server picks each tail up no earlier than its enqueue.  The run is
+/// over when both the app and the last drain finish.
+#[derive(Default)]
+struct Pipeline {
+    t_app: f64,
+    drain_free: f64,
+    pending: f64,
+}
+
+impl Pipeline {
+    fn step(&mut self, t_write: f64, tail: f64) {
+        self.t_app += COMPUTE_S + self.pending + t_write;
+        self.pending = 0.0;
+        self.drain_free = self.drain_free.max(self.t_app) + tail;
+    }
+
+    fn total(&self) -> f64 {
+        self.t_app.max(self.drain_free)
+    }
+}
+
+/// Replay a fixed plan (never re-resolved) through the schedule.
+fn run_fixed(planner: &Planner, plan: &IoPlan, collapse: bool) -> f64 {
+    let mut pipe = Pipeline::default();
+    for step in 0..NSTEPS {
+        let (w, t) = step_costs(planner, &world(step, collapse), plan);
+        pipe.step(w, t);
+    }
+    pipe.total()
+}
+
+/// Replay the closed loop: one feedback sample per step boundary; a
+/// fired replan bills the full collective re-plan cost against the next
+/// step's app path.
+fn run_adaptive(
+    planner: &Planner,
+    intent: &IoIntent,
+    open_loop: &IoPlan,
+    collapse: bool,
+) -> (f64, FeedbackController) {
+    let mut ctl = FeedbackController::new(planner.clone(), intent.clone(), open_loop.clone());
+    let mut pipe = Pipeline::default();
+    for step in 0..NSTEPS {
+        let (w, t) = step_costs(planner, &world(step, collapse), ctl.plan());
+        pipe.step(w, t);
+        if let Some(update) = ctl.observe(&sample(step, collapse)).unwrap() {
+            let layout = update.aggs_per_node.is_some() || update.target.is_some();
+            let naggs = ctl.plan().aggs_per_node.value * planner.cost.hw.nodes.max(1);
+            pipe.pending += planner.cost.t_replan(layout, naggs);
+        }
+    }
+    (pipe.total(), ctl)
+}
+
+fn main() {
+    let smoke = bench_smoke();
+    let mut json = BenchReport::new("fig15_adaptive_replan");
+    json.flag("smoke", smoke);
+    json.int("steps", NSTEPS as u64);
+    json.int("collapse_at", COLLAPSE_AT as u64);
+    json.num("compute_s", COMPUTE_S);
+
+    let planner = planner();
+    let auto = auto_intent();
+    let open_loop = planner.plan(EngineKind::Bp4, &auto).unwrap();
+    // The healthy lone-run CONUS plan lands on the drained burst buffer
+    // (perceived-cost sweep) — the collapse is what makes that choice
+    // wrong, and only the closed loop can revisit it mid-run.
+    assert_eq!(open_loop.target.value, Target::BurstBuffer { drain: true });
+
+    let fixed_pfs = planner
+        .plan(
+            EngineKind::Bp4,
+            &intent(
+                "adios2_num_aggregators = 'auto',\n adios2_compression = 'auto',\n \
+                 adios2_target = 'pfs',",
+            ),
+        )
+        .unwrap();
+    let fixed_obj = planner
+        .plan(
+            EngineKind::Bp4,
+            &intent(
+                "adios2_num_aggregators = 'auto',\n adios2_compression = 'auto',\n \
+                 adios2_target = 'object',",
+            ),
+        )
+        .unwrap();
+
+    // Fixed-object must cost more than the burst buffer per healthy
+    // step — that premium through the healthy phase is why pinning the
+    // collapse-proof target from step 0 still loses to the closed loop.
+    let nominal = MeasuredProfile::default();
+    let (w_bb, _) = step_costs(&planner, &nominal, &open_loop);
+    let (w_obj, _) = step_costs(&planner, &nominal, &fixed_obj);
+    assert!(
+        w_bb < w_obj,
+        "healthy BB perceived write {w_bb:.3}s must undercut object {w_obj:.3}s"
+    );
+
+    // ---- collapsed run: adaptive vs every fixed plan --------------------
+    let t_bb = run_fixed(&planner, &open_loop, true);
+    let t_pfs = run_fixed(&planner, &fixed_pfs, true);
+    let t_obj = run_fixed(&planner, &fixed_obj, true);
+    let (t_adaptive, ctl) = run_adaptive(&planner, &auto, &open_loop, true);
+
+    assert!(
+        !ctl.changes().is_empty(),
+        "the collapse must trip at least one replan"
+    );
+    let retarget = ctl
+        .changes()
+        .iter()
+        .find(|c| c.knob == "target")
+        .expect("the replan must move the landing target");
+    assert_eq!(retarget.new, "object");
+    assert_eq!(ctl.plan().target.value, Target::Object);
+    for (name, fixed) in [("bb+drain", t_bb), ("pfs", t_pfs), ("object", t_obj)] {
+        assert!(
+            t_adaptive < fixed,
+            "adaptive {t_adaptive:.1}s must strictly beat fixed {name} {fixed:.1}s"
+        );
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "fig15 — adaptive re-planning, {NSTEPS}-step virtual run, \
+             PFS collapse at step {COLLAPSE_AT}"
+        ),
+        &["plan", "total_virtual_s", "vs_adaptive"],
+    );
+    let rows = [
+        ("adaptive (closed loop)", t_adaptive),
+        ("fixed bb+drain (open-loop auto)", t_bb),
+        ("fixed object", t_obj),
+        ("fixed pfs", t_pfs),
+    ];
+    for (name, total) in rows {
+        table.row(&[
+            name.to_string(),
+            format!("{total:.1}"),
+            format!("{:+.1}", total - t_adaptive),
+        ]);
+    }
+    table.emit(Some(std::path::Path::new(
+        "bench_results/fig15_adaptive_replan.csv",
+    )));
+    for c in ctl.changes() {
+        println!("  {}", c.summary());
+    }
+
+    json.num("adaptive_total_s", t_adaptive);
+    json.num("fixed_bb_total_s", t_bb);
+    json.num("fixed_pfs_total_s", t_pfs);
+    json.num("fixed_object_total_s", t_obj);
+    json.int("replans", ctl.changes().len() as u64);
+    ctl.plan().stamp(&mut json);
+    stamp_changes(&mut json, ctl.changes());
+
+    // ---- healthy run: zero churn, byte-identical provenance -------------
+    let (t_healthy, hctl) = run_adaptive(&planner, &auto, &open_loop, false);
+    assert!(
+        hctl.changes().is_empty(),
+        "a healthy run must replan zero times"
+    );
+    let t_healthy_fixed = run_fixed(&planner, &open_loop, false);
+    assert_eq!(
+        t_healthy, t_healthy_fixed,
+        "zero replans must leave the trajectory exactly the open-loop one"
+    );
+    let mut adaptive_stamp = BenchReport::new("stamp");
+    hctl.plan().stamp(&mut adaptive_stamp);
+    stamp_changes(&mut adaptive_stamp, hctl.changes());
+    let mut open_stamp = BenchReport::new("stamp");
+    open_loop.stamp(&mut open_stamp);
+    assert_eq!(
+        adaptive_stamp.to_json(),
+        open_stamp.to_json(),
+        "healthy closed-loop stamp must be byte-identical to open-loop"
+    );
+    json.num("healthy_total_s", t_healthy);
+    json.flag("healthy_zero_replans", true);
+
+    println!(
+        "fig15: adaptive {t_adaptive:.1}s vs fixed bb {t_bb:.1}s / object {t_obj:.1}s / \
+         pfs {t_pfs:.1}s; healthy run {t_healthy:.1}s with 0 replans"
+    );
+    json.write();
+}

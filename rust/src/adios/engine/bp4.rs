@@ -49,7 +49,7 @@ use crate::sim::{CostModel, WriteCost};
 use crate::util::byteio::{Reader, Writer};
 use crate::{Error, Result};
 
-use super::{DrainStats, Engine, EngineReport, StepStats, Target};
+use super::{DrainStats, Engine, EngineFeedback, EngineReport, KnobUpdate, StepStats, Target};
 
 const TAG_BLOCKS: u64 = 0x4250_0001;
 const TAG_INDEX: u64 = 0x4250_0002;
@@ -397,6 +397,9 @@ pub struct Bp4Engine {
     /// the first publish are appended so both tiers stay in agreement.
     bb_attrs_published: usize,
     report: EngineReport,
+    /// Rank 0 only: measured signals of the last ended step, served to
+    /// the closed-loop planner via [`Engine::feedback`] (DESIGN.md §17).
+    last_feedback: Option<EngineFeedback>,
     closed: bool,
 }
 
@@ -422,6 +425,7 @@ impl Bp4Engine {
             bb_base_written: false,
             bb_attrs_published: 0,
             report: EngineReport::default(),
+            last_feedback: None,
             closed: false,
         };
         if matches!(eng.cfg.target, Target::Object) {
@@ -1019,6 +1023,30 @@ impl Engine for Bp4Engine {
                 // crop-cache counters stay at their zero defaults.
                 ..Default::default()
             });
+            // Closed-loop feedback sample (DESIGN.md §17): the slowest
+            // rank's measured codec throughput plus this rank's live
+            // drain watermark (rank 0 is a node-group aggregator in
+            // every per-node layout, so its pipeline backlog is
+            // representative of the drain lag).
+            let (enq, dur) = match &self.pipeline {
+                Some(p) => (
+                    p.stats.enqueued.load(Ordering::Relaxed),
+                    p.stats.durable.load(Ordering::Relaxed),
+                ),
+                None => (0, 0),
+            };
+            self.last_feedback = Some(EngineFeedback {
+                step: self.step,
+                stored_bytes: tstored,
+                frames_enqueued: enq,
+                frames_durable: dur,
+                compress_bps: if max_comp > 0.0 {
+                    max_rank_raw as f64 / max_comp
+                } else {
+                    0.0
+                },
+                ..EngineFeedback::default()
+            });
         }
         if self.cfg.live_publish {
             if self.bb_live() {
@@ -1175,6 +1203,30 @@ impl Engine for Bp4Engine {
             Ok(EngineReport::default())
         }
     }
+
+    fn feedback(&self) -> Option<EngineFeedback> {
+        self.last_feedback.clone()
+    }
+
+    /// Between steps the codec/operator is hot-swappable — each frame is
+    /// compressed independently and every block header names its own
+    /// codec, so readers handle mixed-codec sub-files already.  Layout
+    /// knobs (aggregators, target) of an open outfile are not: they take
+    /// effect at the next engine open (per-outfile mode reopens every
+    /// frame, so that is at most one frame away).
+    fn apply_knobs(&mut self, knobs: &KnobUpdate) -> Result<bool> {
+        if self.in_step {
+            return Err(Error::adios("apply_knobs inside an open step"));
+        }
+        let mut swapped = false;
+        if let Some(op) = knobs.operator {
+            if op != self.cfg.operator {
+                self.cfg.operator = op;
+                swapped = true;
+            }
+        }
+        Ok(swapped)
+    }
 }
 
 #[cfg(test)]
@@ -1277,6 +1329,54 @@ mod tests {
             }
             let _ = std::fs::remove_dir_all(&dir);
         }
+    }
+
+    #[test]
+    fn feedback_and_codec_hot_swap_between_steps() {
+        let dir = tmpdir("feedback_swap");
+        let cfg = test_cfg(&dir, Target::Pfs, Codec::None, 1);
+        let reports = run_world(8, 4, move |mut comm| {
+            let mut eng = Bp4Engine::open(cfg.clone(), &comm).unwrap();
+            let r = comm.rank() as u64;
+            for s in 0..2 {
+                eng.begin_step().unwrap();
+                let data: Vec<f32> = (0..16)
+                    .map(|i| (s * 1000) as f32 + r as f32 * 16.0 + i as f32)
+                    .collect();
+                let var = Variable::global("T2", &[8, 16], &[r, 0], &[1, 16]).unwrap();
+                eng.put_f32(var, data).unwrap();
+                eng.end_step(&mut comm).unwrap();
+                if comm.rank() == 0 {
+                    let fb = eng.feedback().expect("rank 0 exports a sample");
+                    assert_eq!(fb.step, s);
+                    assert!(fb.stored_bytes > 0);
+                    assert!(fb.frames_durable <= fb.frames_enqueued);
+                } else {
+                    assert!(eng.feedback().is_none());
+                }
+                // Mid-run hot-swap after step 0, applied on every rank —
+                // exactly what the launcher's collective replan
+                // broadcast does.
+                if s == 0 {
+                    let up = KnobUpdate {
+                        operator: Some(OperatorConfig::blosc(Codec::Zstd)),
+                        ..KnobUpdate::default()
+                    };
+                    assert!(eng.apply_knobs(&up).unwrap());
+                }
+            }
+            eng.close(&mut comm).unwrap()
+        });
+        let report = reports.into_iter().next().unwrap();
+        assert_eq!(report.steps.len(), 2);
+        // Step 0 landed raw, step 1 zstd: block headers name their own
+        // codec, so the mixed sub-file reads back clean.
+        let rd = BpReader::open(dir.join("pfs/wrfout_test.bp")).unwrap();
+        for s in 0..2 {
+            let (_, g) = rd.read_var_global(s, "T2").unwrap();
+            assert_eq!(g[17], (s * 1000) as f32 + 17.0, "step {s}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -8,10 +8,11 @@
 pub mod bp4;
 pub mod sst;
 
+use crate::adios::operator::{Codec, OperatorConfig};
 use crate::adios::variable::Variable;
 use crate::cluster::Comm;
 use crate::sim::WriteCost;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Where a file engine physically lands its output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -172,6 +173,174 @@ impl EngineReport {
     }
 }
 
+/// One step's measured feedback signals, exported by an engine at a step
+/// boundary for the closed-loop planner (DESIGN.md §17).  Rank-0 view;
+/// other ranks (and engines without measurements) return `None` from
+/// [`Engine::feedback`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineFeedback {
+    /// The step this sample describes (already ended).
+    pub step: usize,
+    /// Stored (post-codec) bytes of the step, summed over ranks.
+    pub stored_bytes: u64,
+    /// Frames handed to this rank's background drain pipeline so far.
+    pub frames_enqueued: usize,
+    /// Frames already durable on the final target — `enqueued − durable`
+    /// is the live drain backlog the watermark trigger watches.
+    pub frames_durable: usize,
+    /// Measured codec throughput on the slowest rank's share this step
+    /// (bytes/s); `0.0` = unmeasured (no codec, or no funnel yet).
+    pub compress_bps: f64,
+    /// Estimated fraction of nominal PFS bandwidth actually available
+    /// (`1.0` = nominal).  Engines report `1.0`; launchers and benches
+    /// may degrade it from external signals (cross-run contention,
+    /// injected collapse).
+    pub pfs_bw_frac: f64,
+    /// Wire bytes shipped to each fan-out consumer this step (the §14
+    /// egress ledger); empty for file engines.
+    pub egress_per_consumer: Vec<u64>,
+}
+
+impl Default for EngineFeedback {
+    fn default() -> Self {
+        EngineFeedback {
+            step: 0,
+            stored_bytes: 0,
+            frames_enqueued: 0,
+            frames_durable: 0,
+            compress_bps: 0.0,
+            pfs_bw_frac: 1.0,
+            egress_per_consumer: Vec::new(),
+        }
+    }
+}
+
+impl EngineFeedback {
+    /// Frames enqueued to the drain pipeline but not yet durable.
+    pub fn drain_backlog(&self) -> usize {
+        self.frames_enqueued.saturating_sub(self.frames_durable)
+    }
+}
+
+/// A between-steps knob delta produced by a replan (DESIGN.md §17): only
+/// the knobs that actually moved are `Some`.  Engines apply what they can
+/// hot-swap at a step boundary via [`Engine::apply_knobs`]; per-outfile
+/// engines pick the rest up at their next open.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KnobUpdate {
+    pub aggs_per_node: Option<usize>,
+    pub operator: Option<OperatorConfig>,
+    pub target: Option<Target>,
+}
+
+impl KnobUpdate {
+    pub fn is_empty(&self) -> bool {
+        self.aggs_per_node.is_none() && self.operator.is_none() && self.target.is_none()
+    }
+
+    /// Wire encoding for the collective replan broadcast (rank 0 decides,
+    /// every rank applies the same delta before its next open).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        match self.aggs_per_node {
+            Some(a) => {
+                out.push(1);
+                out.extend_from_slice(&(a as u64).to_le_bytes());
+            }
+            None => out.push(0),
+        }
+        match &self.operator {
+            Some(op) => {
+                out.push(1);
+                out.push(codec_code(op.codec));
+                out.push(op.shuffle as u8);
+                out.push(op.elem_size as u8);
+                out.push(op.keep_bits.map(|k| k + 1).unwrap_or(0));
+            }
+            None => out.push(0),
+        }
+        match self.target {
+            Some(t) => {
+                out.push(1);
+                out.push(match t {
+                    Target::Pfs => 0,
+                    Target::BurstBuffer { drain: false } => 1,
+                    Target::BurstBuffer { drain: true } => 2,
+                    Target::Object => 3,
+                });
+            }
+            None => out.push(0),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<KnobUpdate> {
+        let mut u = KnobUpdate::default();
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<usize> {
+            let at = *i;
+            *i += n;
+            if *i > buf.len() {
+                return Err(Error::adios("truncated knob-update frame"));
+            }
+            Ok(at)
+        };
+        let at = take(&mut i, 1)?;
+        if buf[at] == 1 {
+            let at = take(&mut i, 8)?;
+            u.aggs_per_node = Some(u64::from_le_bytes(buf[at..at + 8].try_into().unwrap()) as usize);
+        }
+        let at = take(&mut i, 1)?;
+        if buf[at] == 1 {
+            let at = take(&mut i, 4)?;
+            u.operator = Some(OperatorConfig {
+                codec: codec_from_code(buf[at])?,
+                shuffle: buf[at + 1] != 0,
+                elem_size: buf[at + 2] as usize,
+                keep_bits: match buf[at + 3] {
+                    0 => None,
+                    k => Some(k - 1),
+                },
+            });
+        }
+        let at = take(&mut i, 1)?;
+        if buf[at] == 1 {
+            let at = take(&mut i, 1)?;
+            u.target = Some(match buf[at] {
+                0 => Target::Pfs,
+                1 => Target::BurstBuffer { drain: false },
+                2 => Target::BurstBuffer { drain: true },
+                3 => Target::Object,
+                other => {
+                    return Err(Error::adios(format!("unknown target code {other}")))
+                }
+            });
+        }
+        Ok(u)
+    }
+}
+
+fn codec_code(c: Codec) -> u8 {
+    match c {
+        Codec::None => 0,
+        Codec::BloscLz => 1,
+        Codec::Lz4 => 2,
+        Codec::Zlib => 3,
+        Codec::Zstd => 4,
+    }
+}
+
+fn codec_from_code(c: u8) -> Result<Codec> {
+    Ok(match c {
+        0 => Codec::None,
+        1 => Codec::BloscLz,
+        2 => Codec::Lz4,
+        3 => Codec::Zlib,
+        4 => Codec::Zstd,
+        other => return Err(Error::adios(format!("unknown codec code {other}"))),
+    })
+}
+
 /// Step-based writer engine (per-rank handle; collective calls take the
 /// rank's communicator).
 pub trait Engine: Send {
@@ -202,4 +371,17 @@ pub trait Engine: Send {
     /// outstanding background work (drain pipeline join), then verifies
     /// durability before publishing metadata.
     fn close(&mut self, comm: &mut Comm) -> Result<EngineReport>;
+    /// Measured feedback for the step that just ended (rank-0 view after
+    /// the stats funnel).  `None` when the engine has nothing measured
+    /// (non-root rank, or no step completed yet).
+    fn feedback(&self) -> Option<EngineFeedback> {
+        None
+    }
+    /// Apply a replan delta at a step boundary.  Returns `true` for each
+    /// knob family the engine could hot-swap in place; knobs it cannot
+    /// (e.g. landing target of an already-open file) take effect at the
+    /// next open instead.  Default: nothing hot-swappable.
+    fn apply_knobs(&mut self, _knobs: &KnobUpdate) -> Result<bool> {
+        Ok(false)
+    }
 }

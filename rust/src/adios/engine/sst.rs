@@ -119,7 +119,7 @@ use crate::util::byteio::{Reader, Writer};
 use crate::util::hash::xxh64;
 use crate::{Error, Result};
 
-use super::{Engine, EngineReport, StepStats};
+use super::{Engine, EngineFeedback, EngineReport, KnobUpdate, StepStats};
 
 /// Wire magic, version 3 (subscription handshake + per-frame checksums).
 pub const MAGIC: u32 = 0x53535433; // "SST3"
@@ -1878,6 +1878,39 @@ impl Engine for SstEngine {
         } else {
             Ok(EngineReport::default())
         }
+    }
+
+    /// The fan-out egress ledger of the last shipped step (rank-0 view):
+    /// per-consumer wire bytes feed the plan-aware `fanout_advantage`
+    /// scoring of the closed-loop planner (DESIGN.md §17).  SST has no
+    /// drain pipeline, so the drain watermark fields stay zero.
+    fn feedback(&self) -> Option<EngineFeedback> {
+        let s = self.report.steps.last()?;
+        Some(EngineFeedback {
+            step: s.step,
+            stored_bytes: s.bytes_stored,
+            egress_per_consumer: s.egress_per_consumer.clone(),
+            ..EngineFeedback::default()
+        })
+    }
+
+    /// Between steps the operator template is hot-swappable: every wire
+    /// frame is self-describing (codec in the frame header), so consumers
+    /// decode a mixed-codec stream without renegotiation; the lane crop
+    /// cache simply keys new crops under the new operator.  Lane layout
+    /// knobs are membership-protocol state and are not swapped here.
+    fn apply_knobs(&mut self, knobs: &KnobUpdate) -> Result<bool> {
+        if self.in_step {
+            return Err(Error::sst("apply_knobs inside an open step"));
+        }
+        let mut swapped = false;
+        if let Some(op) = knobs.operator {
+            if op != self.operator {
+                self.operator = op;
+                swapped = true;
+            }
+        }
+        Ok(swapped)
     }
 }
 

@@ -35,7 +35,7 @@ use crate::sim::CostModel;
 use crate::{Error, Result};
 
 pub use config::{AdiosConfig, EngineKind, IoConfig};
-pub use engine::{DrainStats, Engine, EngineReport, Target};
+pub use engine::{DrainStats, Engine, EngineFeedback, EngineReport, KnobUpdate, Target};
 pub use operator::{Codec, OperatorConfig};
 pub use source::{ServedTier, StepSource, StepStatus, Subscription};
 pub use store::{DirStore, LandingStore, MemStore, ObjKey, SubfileStore};

@@ -19,13 +19,17 @@
 //!   what live file-followers tail (DESIGN.md §9).
 
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
-use crate::adios::{Adios, Engine, EngineKind};
+use crate::adios::{Adios, Engine, EngineFeedback, EngineKind, KnobUpdate};
 use crate::cluster::Comm;
 use crate::io::api::{FrameFields, FrameReport, HistoryBackend};
-use crate::plan::{self, IoPlan};
+use crate::plan::{self, Decision, DecisionSource, FeedbackController, IoPlan, PlanChange};
 use crate::sim::CostModel;
 use crate::{Error, Result};
+
+/// Tag space of the per-frame replan broadcast (DESIGN.md §17).
+const TAG_REPLAN: u64 = 0x5250_0001;
 
 /// ADIOS2-backed history writer.
 pub struct Adios2Backend {
@@ -33,10 +37,23 @@ pub struct Adios2Backend {
     pub pfs_dir: PathBuf,
     pub bb_root: PathBuf,
     pub cost: CostModel,
+    /// External PFS bandwidth degradation signal folded into every
+    /// feedback sample (a launcher contention hint or a bench's injected
+    /// collapse); the engines themselves always report `1.0` because
+    /// they cannot tell contention from their own queueing.
+    pub pfs_bw_frac: f64,
     /// Stream mode keeps one engine across frames.
     stream_engine: Option<Box<dyn Engine>>,
     is_stream: bool,
     is_sst: bool,
+    /// Closed-loop replan controller (DESIGN.md §17).  Installed on
+    /// every rank so the per-frame knob broadcast stays collectively
+    /// consistent; rank 0's controller is the decision maker.
+    feedback: Option<FeedbackController>,
+    /// Where rank 0's accepted [`PlanChange`]s land at finish — the
+    /// driver owns each backend inside its rank thread, so replan
+    /// provenance leaves through this side channel to the launcher.
+    changes_sink: Option<Arc<Mutex<Vec<PlanChange>>>>,
     reports: Vec<FrameReport>,
 }
 
@@ -76,11 +93,35 @@ impl Adios2Backend {
             pfs_dir,
             bb_root,
             cost,
+            pfs_bw_frac: 1.0,
             stream_engine: None,
             is_stream,
             is_sst,
+            feedback: None,
+            changes_sink: None,
             reports: Vec::new(),
         })
+    }
+
+    /// Enable closed-loop adaptive re-planning (`adios2_adaptive_replan`,
+    /// DESIGN.md §17).  Every rank must install a controller built from
+    /// the same planner/intent/plan — enabling it on a subset would
+    /// deadlock the per-frame knob broadcast.
+    pub fn with_feedback(mut self, ctl: FeedbackController) -> Self {
+        self.feedback = Some(ctl);
+        self
+    }
+
+    /// Accepted replan provenance so far (rank 0's controller; empty on
+    /// a healthy run or with the loop open).
+    pub fn plan_changes(&self) -> &[PlanChange] {
+        self.feedback.as_ref().map(|c| c.changes()).unwrap_or(&[])
+    }
+
+    /// Route rank 0's accepted changes into `sink` at finish.
+    pub fn with_changes_sink(mut self, sink: Arc<Mutex<Vec<PlanChange>>>) -> Self {
+        self.changes_sink = Some(sink);
+        self
     }
 
     fn open_engine(&self, output_name: &str, comm: &Comm) -> Result<Box<dyn Engine>> {
@@ -124,6 +165,79 @@ impl Adios2Backend {
             });
         }
     }
+
+    /// One collective replan round at a frame boundary (DESIGN.md §17).
+    /// Runs on every rank whenever the loop is closed: rank 0 digests
+    /// the engine's feedback sample and broadcasts the knob delta —
+    /// an empty payload on the (overwhelmingly common) no-change path —
+    /// so the broadcast stays collectively consistent on healthy steps.
+    fn replan_round(
+        &mut self,
+        comm: &mut Comm,
+        fb: Option<EngineFeedback>,
+        frame: usize,
+    ) -> Result<()> {
+        if self.feedback.is_none() {
+            return Ok(());
+        }
+        let payload = if comm.rank() == 0 {
+            match (self.feedback.as_mut(), fb) {
+                (Some(ctl), Some(mut sample)) => {
+                    // The cooldown window counts history frames: a
+                    // per-frame engine restarts its internal step
+                    // counter at every open, so its own step is no
+                    // cadence clock.
+                    sample.step = frame;
+                    // The engine cannot see filesystem contention; fold
+                    // in the backend's external bandwidth signal.
+                    sample.pfs_bw_frac = self.pfs_bw_frac;
+                    match ctl.observe(&sample)? {
+                        Some(update) => update.encode(),
+                        None => Vec::new(),
+                    }
+                }
+                _ => Vec::new(),
+            }
+        } else {
+            Vec::new()
+        };
+        let data = comm.bcast(0, payload, TAG_REPLAN + frame as u64 * 16)?;
+        if data.is_empty() {
+            return Ok(());
+        }
+        let update = KnobUpdate::decode(&data)?;
+        self.apply_update(&update);
+        if let Some(eng) = self.stream_engine.as_mut() {
+            eng.apply_knobs(&update)?;
+        }
+        Ok(())
+    }
+
+    /// Patch the live plan with an accepted knob delta so the next
+    /// per-frame engine open resolves under the replanned values.  The
+    /// provenance is `Auto` — the cost model chose them, just later
+    /// than usual.
+    fn apply_update(&mut self, u: &KnobUpdate) {
+        if let Some(aggs) = u.aggs_per_node {
+            self.plan.aggs_per_node = Decision {
+                value: aggs,
+                source: DecisionSource::Auto,
+            };
+        }
+        if let Some(op) = u.operator {
+            self.plan.operator = op;
+            self.plan.codec = Decision {
+                value: op.codec,
+                source: DecisionSource::Auto,
+            };
+        }
+        if let Some(t) = u.target {
+            self.plan.target = Decision {
+                value: t,
+                source: DecisionSource::Auto,
+            };
+        }
+    }
 }
 
 
@@ -163,7 +277,8 @@ impl HistoryBackend for Adios2Backend {
                 eng.put_f32(var, data)?;
             }
             eng.end_step(comm)?;
-            let _ = frame;
+            let fb = self.stream_engine.as_deref().and_then(|e| e.feedback());
+            self.replan_round(comm, fb, frame)?;
             Ok(())
         } else {
             let mut eng = self.open_engine(frame_name, comm)?;
@@ -181,6 +296,8 @@ impl HistoryBackend for Adios2Backend {
             if comm.rank() == 0 {
                 self.push_reports(rep, frame, &[frame_name.to_string()]);
             }
+            let fb = eng.feedback();
+            self.replan_round(comm, fb, frame)?;
             Ok(())
         }
     }
@@ -194,6 +311,11 @@ impl HistoryBackend for Adios2Backend {
         }
         comm.barrier();
         if comm.rank() == 0 {
+            if let (Some(sink), Some(ctl)) = (&self.changes_sink, &self.feedback) {
+                sink.lock()
+                    .expect("plan-changes sink poisoned")
+                    .extend_from_slice(ctl.changes());
+            }
             Ok(std::mem::take(&mut self.reports))
         } else {
             Ok(Vec::new())
@@ -247,6 +369,62 @@ mod tests {
             let (_, g) = rd.read_var_global(0, "T2").unwrap();
             assert_eq!(g[9], (f * 100 + 9) as f32);
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn closed_loop_retargets_all_ranks_after_injected_collapse() {
+        use crate::adios::Target;
+        use crate::namelist::Namelist;
+        use crate::plan::{FeedbackController, IoIntent, Planner, WorkloadShape};
+
+        let dir = std::env::temp_dir().join(format!("stormio_replan_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d2 = dir.clone();
+        let reports = run_world(4, 2, move |mut comm| {
+            let cost = CostModel::new(HardwareSpec::paper_testbed(2));
+            // Codec pinned to 'none': the real measured throughput on
+            // these 32-byte test frames sits far below the paper-testbed
+            // profile and would trip the codec-lag trigger on its own —
+            // this test isolates the injected bandwidth collapse.
+            let nl = Namelist::parse(
+                "&time_control\n adios2_num_aggregators = 'auto',\n \
+                 adios2_compression = 'none',\n adios2_target = 'auto',\n/\n",
+            )
+            .unwrap();
+            let intent = IoIntent::from_time_control(nl.group("time_control").unwrap()).unwrap();
+            let planner = Planner::new(cost.clone(), WorkloadShape::paper());
+            let open_loop = planner
+                .plan(EngineKind::Bp4, &intent)
+                .unwrap();
+            assert_eq!(open_loop.target.value, Target::BurstBuffer { drain: true });
+            let ctl = FeedbackController::new(planner, intent, open_loop.clone());
+            let mut b =
+                Adios2Backend::from_plan(open_loop, d2.join("pfs"), d2.join("bb"), cost)
+                    .unwrap()
+                    .with_feedback(ctl);
+            let r = comm.rank() as u64;
+            for f in 0..3usize {
+                if f == 1 {
+                    // PFS bandwidth collapses before frame 1's boundary.
+                    b.pfs_bw_frac = 0.25;
+                }
+                let fields: FrameFields = vec![(
+                    Variable::global("T2", &[4, 8], &[r, 0], &[1, 8]).unwrap(),
+                    (0..8).map(|i| (r * 8 + i) as f32).collect(),
+                )];
+                b.write_frame(&mut comm, f, &format!("wrfout_{f}"), fields)
+                    .unwrap();
+            }
+            // The knob broadcast converged every rank's live plan on the
+            // replanned target; frame 2 already wrote under it.
+            assert_eq!(b.plan.target.value, Target::Object);
+            let changed = !b.plan_changes().is_empty();
+            assert_eq!(changed, comm.rank() == 0, "provenance lives on rank 0");
+            b.finish(&mut comm).unwrap()
+        });
+        assert_eq!(reports[0].len(), 3);
+        assert!(reports[0].iter().all(|r| r.bytes_stored > 0));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

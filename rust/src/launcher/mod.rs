@@ -49,7 +49,7 @@
 //! ```
 
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::adios::{Adios, EngineKind};
 use crate::io::adios2::Adios2Backend;
@@ -61,7 +61,7 @@ use crate::io::split_nc::SplitNcBackend;
 use crate::metrics::Table;
 use crate::model::{ForecastConfig, ForecastDriver, RunSummary};
 use crate::namelist::Namelist;
-use crate::plan::{IoIntent, IoPlan, Planner, WorkloadShape};
+use crate::plan::{FeedbackController, IoIntent, IoPlan, PlanChange, Planner, WorkloadShape};
 use crate::runtime::{Manifest, ModelStep, XlaRuntime};
 use crate::sim::{CostModel, HardwareSpec};
 use crate::{Error, Result};
@@ -171,6 +171,17 @@ impl RunConfig {
         Planner::new(CostModel::new(self.hardware()), self.shape())
     }
 
+    /// The merged (namelist-over-XML) knob intent of the run's ADIOS2 io
+    /// — the `'auto'` sentinels survive the merge, which is what the
+    /// closed replan loop re-resolves against.
+    pub fn merged_intent(&self, adios: &Adios) -> Result<IoIntent> {
+        let io = adios
+            .config
+            .io("wrf_history")
+            .ok_or_else(|| Error::config("io `wrf_history` not declared"))?;
+        self.intent.merge_io_config(io)
+    }
+
     /// Resolve the run's [`IoPlan`]: namelist intent over XML parameters,
     /// `'auto'` knobs decided by the cost model (the paper's §IV
     /// precedence, now through one typed path).
@@ -201,6 +212,31 @@ impl RunConfig {
             }
         })
     }
+
+    /// Construct one rank's ADIOS2 backend with the replan loop closed
+    /// (`adios2_adaptive_replan`, DESIGN.md §17): every rank carries its
+    /// own controller built from the same planner/intent/plan — the
+    /// per-frame knob broadcast requires all ranks to participate — and
+    /// rank 0's accepted changes land in `sink` at finish.
+    pub fn make_adaptive_backend(
+        &self,
+        plan: &IoPlan,
+        intent: &IoIntent,
+        sink: Arc<Mutex<Vec<PlanChange>>>,
+    ) -> Result<Box<dyn HistoryBackend>> {
+        let cost = CostModel::new(self.hardware());
+        let ctl = FeedbackController::new(self.planner(), intent.clone(), plan.clone());
+        Ok(Box::new(
+            Adios2Backend::from_plan(
+                plan.clone(),
+                self.out_dir.join("pfs"),
+                self.out_dir.join("bb"),
+                cost,
+            )?
+            .with_feedback(ctl)
+            .with_changes_sink(sink),
+        ))
+    }
 }
 
 /// Run a forecast from a namelist file; prints the WRF-style report.
@@ -227,10 +263,27 @@ pub fn run_from_namelist(path: &std::path::Path, artifacts: &std::path::Path) ->
         cfg.planner().plan(EngineKind::Null, &IoIntent::default())?
     };
 
+    // Closed-loop adaptive re-planning (`adios2_adaptive_replan`,
+    // DESIGN.md §17): only meaningful for the ADIOS2 backend.
+    let adaptive_intent = if cfg.io_form == 22 {
+        let merged = cfg.merged_intent(&adios)?;
+        merged.adaptive.unwrap_or(false).then_some(merged)
+    } else {
+        None
+    };
+    let replans: Arc<Mutex<Vec<PlanChange>>> = Arc::new(Mutex::new(Vec::new()));
+
     let summary = driver.run(step, |_rank| {
-        cfg.make_backend(&plan).expect("backend construction failed")
+        match &adaptive_intent {
+            Some(intent) => cfg.make_adaptive_backend(&plan, intent, replans.clone()),
+            None => cfg.make_backend(&plan),
+        }
+        .expect("backend construction failed")
     })?;
     print_summary(&cfg, &summary);
+    for c in replans.lock().expect("plan-changes sink poisoned").iter() {
+        println!("{}", c.summary());
+    }
     Ok(summary)
 }
 
@@ -245,7 +298,17 @@ pub fn run_from_namelist(path: &std::path::Path, artifacts: &std::path::Path) ->
 /// measured table is printed above the decision table.  Without the flag
 /// the output is byte-identical to previous releases (CI golden-diffs
 /// it).
-pub fn plan_from_namelist(path: &std::path::Path, measure: bool) -> Result<IoPlan> {
+///
+/// `--measure-out FILE` additionally caches the measured profile as JSON
+/// (implies `--measure`); `--measure-in FILE` reuses a cached profile
+/// instead of re-running the microbenchmark, so a fleet of plan
+/// invocations on one host pays for the measurement once.
+pub fn plan_from_namelist(
+    path: &std::path::Path,
+    measure: bool,
+    measure_out: Option<&std::path::Path>,
+    measure_in: Option<&std::path::Path>,
+) -> Result<IoPlan> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| Error::config(format!("cannot read {}: {e}", path.display())))?;
     let nl = Namelist::parse(&text)?;
@@ -258,7 +321,14 @@ pub fn plan_from_namelist(path: &std::path::Path, measure: bool) -> Result<IoPla
         .ok_or_else(|| Error::config("io `wrf_history` not declared"))?;
     let intent = cfg.intent.merge_io_config(io)?;
     let mut planner = cfg.planner();
-    if measure {
+    let profile = if let Some(p) = measure_in {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error::config(format!("cannot read {}: {e}", p.display())))?;
+        Some((
+            crate::plan::CodecProfile::from_json(&text)?,
+            format!("cached codec profile ({})", p.display()),
+        ))
+    } else if measure || measure_out.is_some() {
         // A smooth θ-like surface, the compressibility regime WRF
         // history frames live in (§V-D): 1 MiB is enough for stable
         // per-codec throughput without a noticeable pause.
@@ -266,10 +336,20 @@ pub fn plan_from_namelist(path: &std::path::Path, measure: bool) -> Result<IoPla
             (0..(1 << 18)).map(|i| 280.0 + (i as f32 * 0.01).sin()).collect();
         let profile =
             crate::plan::CodecProfile::measured(crate::util::f32_slice_as_bytes(&sample))?;
-        let mut t = Table::new(
-            "measured codec throughput (this host, 1 MiB smooth field)",
-            &["codec", "compress", "ratio"],
-        );
+        Some((
+            profile,
+            "measured codec throughput (this host, 1 MiB smooth field)".to_string(),
+        ))
+    } else {
+        None
+    };
+    if let Some((profile, title)) = profile {
+        if let Some(p) = measure_out {
+            std::fs::write(p, profile.to_json())
+                .map_err(|e| Error::config(format!("cannot write {}: {e}", p.display())))?;
+            println!("codec profile cached to {}", p.display());
+        }
+        let mut t = Table::new(&title, &["codec", "compress", "ratio"]);
         for (codec, thr) in profile.entries() {
             t.row(&[
                 format!("{codec:?}").to_lowercase(),
@@ -414,6 +494,8 @@ pub fn run_insitu_from_namelist(
     intent.sst_broker = Some(true);
     let plan = cfg.planner().plan(EngineKind::Sst, &intent)?;
     println!("{}", plan.summary_line());
+    let adaptive = intent.adaptive.unwrap_or(false);
+    let replans: Arc<Mutex<Vec<PlanChange>>> = Arc::new(Mutex::new(Vec::new()));
 
     // Fourth consumer, attached *late* through the broker: it discovers
     // the producer via the contact file rank 0 publishes at open, is
@@ -443,7 +525,12 @@ pub fn run_insitu_from_namelist(
     });
 
     let summary = driver.run(step, |_rank| {
-        cfg.make_backend(&plan).expect("backend construction failed")
+        if adaptive {
+            cfg.make_adaptive_backend(&plan, &intent, replans.clone())
+        } else {
+            cfg.make_backend(&plan)
+        }
+        .expect("backend construction failed")
     })?;
 
     let records = analysis_t
@@ -457,6 +544,9 @@ pub fn run_insitu_from_namelist(
         .map_err(|_| Error::model("archive consumer panicked"))??;
 
     print_summary(&cfg, &summary);
+    for c in replans.lock().expect("plan-changes sink poisoned").iter() {
+        println!("{}", c.summary());
+    }
     println!(
         "in-situ fan-out: {} frames analyzed (θ surface mean of last: {:.2}), \
          {} NetCDF files in {}, {} archived steps in {}",
@@ -593,6 +683,8 @@ fn run_insitu_bb_local(
     intent.frames_per_outfile = Some(0);
     let plan = cfg.planner().plan(EngineKind::Bp4, &intent)?;
     println!("{}", plan.summary_line());
+    let adaptive = intent.adaptive.unwrap_or(false);
+    let replans: Arc<Mutex<Vec<PlanChange>>> = Arc::new(Mutex::new(Vec::new()));
 
     let first_frame = usize::from(!cfg.forecast.write_t0);
     let bp_dir = cfg
@@ -637,7 +729,12 @@ fn run_insitu_bb_local(
     let reaper = BbReaper::start(bp_dir, bb_root, ReaperPolicy::default());
 
     let summary = driver.run(step, |_rank| {
-        cfg.make_backend(&plan).expect("backend construction failed")
+        if adaptive {
+            cfg.make_adaptive_backend(&plan, &intent, replans.clone())
+        } else {
+            cfg.make_backend(&plan)
+        }
+        .expect("backend construction failed")
     })?;
 
     let (records, tiers_a) = analysis_t
@@ -651,6 +748,9 @@ fn run_insitu_bb_local(
         .map_err(|_| Error::model("archive consumer panicked"))??;
 
     print_summary(&cfg, &summary);
+    for c in replans.lock().expect("plan-changes sink poisoned").iter() {
+        println!("{}", c.summary());
+    }
     println!(
         "in-situ over the burst buffer: {} frames analyzed (θ surface mean of \
          last: {:.2}), {} NetCDF files in {}, {} archived steps in {}",
@@ -973,6 +1073,36 @@ mod tests {
         assert_eq!(cfg.hardware().volume_scale, 16.0);
         assert_eq!(cfg.hardware().nodes, 2);
         assert!(cfg.shape().step_bytes > 0.0);
+    }
+
+    #[test]
+    fn adaptive_replan_namelist_builds_the_closed_loop_backend() {
+        let nl = Namelist::parse(
+            r#"
+ &time_control
+   io_form_history = 22,
+   adios2_num_aggregators = 'auto',
+   adios2_compression = 'auto',
+   adios2_target = 'auto',
+   adios2_adaptive_replan = .true.,
+ /
+ &domains
+   e_we = 64, e_sn = 64, e_vert = 2,
+ /
+ &stormio
+   ranks = 4, ranks_per_node = 2, nodes = 2, out_dir = 'out',
+ /
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_namelist(&nl, std::path::Path::new("/base")).unwrap();
+        let adios = cfg.adios(std::path::Path::new("/base")).unwrap();
+        let merged = cfg.merged_intent(&adios).unwrap();
+        assert_eq!(merged.adaptive, Some(true));
+        let plan = cfg.resolve_plan(&adios).unwrap();
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let b = cfg.make_adaptive_backend(&plan, &merged, sink).unwrap();
+        assert!(b.name().starts_with("adios2-"));
     }
 
     #[test]

@@ -14,7 +14,8 @@ USAGE:
   stormio run <namelist.input> [--artifacts DIR]
       Run a forecast configured by a WRF-style namelist.
 
-  stormio plan <namelist.input> [--measure]
+  stormio plan <namelist.input> [--measure] [--measure-out FILE]
+                [--measure-in FILE]
       Dry-run the I/O planner: resolve every adios2_* knob (including
       'auto' sentinels, decided from the cost model) and print the
       decision table with provenance plus the predicted virtual costs
@@ -24,6 +25,9 @@ USAGE:
       cross-run PFS contention.  With --measure, codec knobs are
       resolved from per-codec throughput/ratio microbenchmarked on
       this host instead of the paper-testbed defaults.
+      --measure-out FILE caches the measured profile as JSON (implies
+      --measure); --measure-in FILE reuses a cached profile instead
+      of re-measuring.
 
   stormio convert <dir.bp> <out_dir> [--no-compress]
       Convert every step of a BP directory to NetCDF-style files
@@ -104,7 +108,20 @@ fn real_main() -> stormio::Result<i32> {
                 stormio::Error::config("plan: missing namelist path".to_string())
             })?;
             let measure = args.iter().any(|a| a == "--measure");
-            launcher::plan_from_namelist(Path::new(nl), measure)?;
+            let measure_out = args
+                .windows(2)
+                .find(|w| w[0] == "--measure-out")
+                .map(|w| PathBuf::from(&w[1]));
+            let measure_in = args
+                .windows(2)
+                .find(|w| w[0] == "--measure-in")
+                .map(|w| PathBuf::from(&w[1]));
+            launcher::plan_from_namelist(
+                Path::new(nl),
+                measure,
+                measure_out.as_deref(),
+                measure_in.as_deref(),
+            )?;
             Ok(0)
         }
         Some("insitu") => {

@@ -267,11 +267,25 @@ impl BenchReport {
         self
     }
 
+    /// Attach a pre-rendered JSON value (array/object) under `key`.  The
+    /// caller guarantees `json` is valid JSON; used for structured
+    /// provenance like the `plan_changes` array (DESIGN.md §17).
+    pub fn raw(&mut self, key: &str, json: &str) -> &mut Self {
+        self.fields.push((key.to_string(), json.to_string()));
+        self
+    }
+
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"bench\": \"{}\"", json_escape(&self.name)));
         for (k, v) in &self.fields {
             out.push_str(&format!(",\n  \"{}\": {v}", json_escape(k)));
+        }
+        // Every artifact carries the replan provenance array (DESIGN.md
+        // §17) so downstream tooling can rely on the key: fixed-plan
+        // benches that never stamp a change report it empty.
+        if !self.fields.iter().any(|(k, _)| k == "plan_changes") {
+            out.push_str(",\n  \"plan_changes\": []");
         }
         out.push_str("\n}\n");
         out
@@ -370,10 +384,17 @@ mod tests {
         assert!(j.contains("\"steps\": 4"));
         assert!(j.contains("\"smoke\": true"));
         assert!(j.contains("\\\"quoted\\\""));
+        // Fixed-plan reports still carry the provenance key, empty.
+        assert!(j.contains("\"plan_changes\": []"));
         assert!(j.ends_with("}\n"));
         // Balanced braces / no raw control characters.
         assert_eq!(j.matches('{').count(), 1);
         assert!(!j.contains('\u{9}'));
+        // A stamped array is kept verbatim, not duplicated.
+        r.raw("plan_changes", "[{\"step\": 2}]");
+        let j = r.to_json();
+        assert!(j.contains("\"plan_changes\": [{\"step\": 2}]"));
+        assert_eq!(j.matches("plan_changes").count(), 1);
     }
 
     #[test]

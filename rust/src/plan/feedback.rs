@@ -1,0 +1,584 @@
+//! Closed-loop adaptive re-planning (DESIGN.md §17).
+//!
+//! The PR-5 planner resolves every `'auto'` knob once from static
+//! [`CodecProfile`](super::CodecProfile) defaults and never looks back —
+//! even though [`Bp4Engine`](crate::adios::engine::bp4::Bp4Engine) already
+//! measures its per-step drain watermark and the SST lanes ledger real
+//! per-consumer egress.  This module closes the loop: the engine's
+//! measured [`EngineFeedback`] flows into a [`FeedbackController`], which
+//! distills it to a [`MeasuredProfile`], checks the replan [`Trigger`]s,
+//! and — past the hysteresis gates — re-resolves the intent's `'auto'`
+//! knobs under the *measured* testbed between steps.
+//!
+//! Hysteresis is load-bearing: a replan only fires when (a) a trigger
+//! metric is out of band, (b) the cooldown window since the last replan
+//! has passed, and (c) the predicted relative gain — net of the replan's
+//! own charge ([`CostModel::t_replan`](crate::sim::CostModel::t_replan))
+//! — clears the improvement threshold.  A healthy run therefore replans
+//! **zero** times and its plan provenance stays byte-identical to the
+//! open-loop path.
+//!
+//! Every accepted change is recorded as a [`PlanChange`] (step, trigger
+//! metric, old→new knob, predicted gain) and stamped into the
+//! `BENCH_*.json` `plan_changes` array by [`stamp_changes`].
+
+use crate::adios::engine::{EngineFeedback, KnobUpdate, Target};
+use crate::adios::EngineKind;
+use crate::metrics::BenchReport;
+use crate::sim::MeasuredProfile;
+use crate::Result;
+
+use super::intent::{IoIntent, Knob, Setting};
+use super::planner::{IoPlan, Planner};
+
+/// Hysteresis constants of the replan loop (DESIGN.md §17).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplanPolicy {
+    /// Minimum steps between accepted replans (and the horizon the replan
+    /// charge is amortized over).
+    pub cooldown_steps: usize,
+    /// Minimum predicted relative gain `(t_stay − t_cand − charge) /
+    /// t_stay` an accepted replan must clear.
+    pub min_gain: f64,
+    /// Drain-watermark trigger: frames enqueued-but-not-durable at a step
+    /// boundary before the drain counts as lagging the step cadence.
+    pub backlog_frames: usize,
+    /// Bandwidth-collapse trigger: measured PFS / drain bandwidth
+    /// fraction below this is out of band.
+    pub bw_collapse_frac: f64,
+    /// Codec-lag trigger: measured compress throughput below this
+    /// fraction of the profile's assumption is out of band.
+    pub codec_lag_frac: f64,
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> Self {
+        ReplanPolicy {
+            cooldown_steps: 3,
+            min_gain: 0.15,
+            backlog_frames: 2,
+            bw_collapse_frac: 0.6,
+            codec_lag_frac: 0.5,
+        }
+    }
+}
+
+/// Which measured signal tripped a replan evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// The drain watermark lags the step cadence (backlog at a boundary).
+    DrainLag,
+    /// Measured compress throughput can't keep pace with the profile's
+    /// assumption for the planned codec.
+    CodecLag,
+    /// Sustained drain/PFS bandwidth fell below the cost model's
+    /// assumption.
+    BandwidthCollapse,
+}
+
+impl Trigger {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Trigger::DrainLag => "drain_lag",
+            Trigger::CodecLag => "codec_lag",
+            Trigger::BandwidthCollapse => "bandwidth_collapse",
+        }
+    }
+}
+
+/// Provenance record of one accepted knob change (the `plan_changes`
+/// array entry of `BENCH_*.json`).
+#[derive(Debug, Clone)]
+pub struct PlanChange {
+    /// Step whose feedback drove the replan.
+    pub step: usize,
+    pub trigger: Trigger,
+    /// The trigger metric, rendered (`"pfs_bw_frac=0.25"`).
+    pub metric: String,
+    /// Which knob moved: `"target"`, `"codec"`, `"aggregators_per_node"`.
+    pub knob: &'static str,
+    pub old: String,
+    pub new: String,
+    /// Predicted relative gain of the whole replan, net of its charge.
+    pub predicted_gain: f64,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl PlanChange {
+    /// One JSON object for the `plan_changes` provenance array.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"step\": {}, \"trigger\": \"{}\", \"metric\": \"{}\", \
+             \"knob\": \"{}\", \"old\": \"{}\", \"new\": \"{}\", \
+             \"predicted_gain\": {:.4}}}",
+            self.step,
+            self.trigger.name(),
+            esc(&self.metric),
+            esc(self.knob),
+            esc(&self.old),
+            esc(&self.new),
+            self.predicted_gain,
+        )
+    }
+
+    /// One report line for `stormio run` output.
+    pub fn summary(&self) -> String {
+        format!(
+            "replan @step {}: {} {} -> {} [{} {}] predicted gain {:.0}%",
+            self.step,
+            self.knob,
+            self.old,
+            self.new,
+            self.trigger.name(),
+            self.metric,
+            self.predicted_gain * 100.0,
+        )
+    }
+}
+
+/// Stamp the replan provenance into a bench report.  With no changes the
+/// report's built-in `"plan_changes": []` default already says so — the
+/// artifact stays byte-identical to an open-loop run's.
+pub fn stamp_changes(r: &mut BenchReport, changes: &[PlanChange]) {
+    if changes.is_empty() {
+        return;
+    }
+    let body: Vec<String> = changes.iter().map(|c| c.to_json()).collect();
+    r.raw("plan_changes", &format!("[{}]", body.join(", ")));
+}
+
+fn target_label(t: Target) -> &'static str {
+    match t {
+        Target::Pfs => "pfs",
+        Target::BurstBuffer { drain: true } => "burstbuffer+drain",
+        Target::BurstBuffer { drain: false } => "burstbuffer",
+        Target::Object => "object",
+    }
+}
+
+/// Re-pin an intent to the *current* plan's resolved knob values, so the
+/// stay-put baseline can be scored under the measured testbed with the
+/// same machinery as the candidate.
+fn pin_intent(base: &IoIntent, plan: &IoPlan) -> IoIntent {
+    let mut i = base.clone();
+    i.aggregators = Knob::namelist(Setting::Explicit(plan.aggs_per_node.value));
+    i.codec = Knob::namelist(Setting::Explicit(plan.codec.value));
+    i.target = Knob::namelist(Setting::Explicit(plan.target.value));
+    i
+}
+
+/// The closed-loop controller: owns the open-loop planner + intent + the
+/// currently-live plan, digests per-step [`EngineFeedback`], and emits a
+/// [`KnobUpdate`] whenever a replan clears every hysteresis gate.
+#[derive(Debug, Clone)]
+pub struct FeedbackController {
+    policy: ReplanPolicy,
+    planner: Planner,
+    engine: EngineKind,
+    intent: IoIntent,
+    plan: IoPlan,
+    last_replan: Option<usize>,
+    changes: Vec<PlanChange>,
+}
+
+impl FeedbackController {
+    /// Wrap an already-resolved plan (the launcher's normal path: the
+    /// open-loop plan was built and reported before the run started).
+    pub fn new(planner: Planner, intent: IoIntent, plan: IoPlan) -> FeedbackController {
+        FeedbackController {
+            policy: ReplanPolicy::default(),
+            engine: plan.engine.clone(),
+            planner,
+            intent,
+            plan,
+            last_replan: None,
+            changes: Vec::new(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: ReplanPolicy) -> FeedbackController {
+        self.policy = policy;
+        self
+    }
+
+    /// The currently-live plan (the candidate after an accepted replan).
+    pub fn plan(&self) -> &IoPlan {
+        &self.plan
+    }
+
+    /// Every accepted change so far, in step order.
+    pub fn changes(&self) -> &[PlanChange] {
+        &self.changes
+    }
+
+    /// Distill one step's feedback into a [`MeasuredProfile`]: the drain
+    /// fraction is the durable share of enqueued frames, the compress
+    /// fraction the measured-vs-assumed throughput of the planned codec.
+    fn measured_from(&self, fb: &EngineFeedback) -> MeasuredProfile {
+        // A frame or two still in flight at the sampling instant is
+        // normal pipelining, not a bandwidth signal — only a backlog at
+        // the trigger threshold counts as a lagging drain.
+        let drain_bw_frac = if fb.frames_enqueued == 0
+            || fb.drain_backlog() < self.policy.backlog_frames.max(1)
+        {
+            1.0
+        } else {
+            fb.frames_durable as f64 / fb.frames_enqueued as f64
+        };
+        let compress_frac = match self.planner.codecs.compress_bps(self.plan.codec.value) {
+            Some(assumed)
+                if assumed > 0.0 && fb.compress_bps.is_finite() && fb.compress_bps > 0.0 =>
+            {
+                (fb.compress_bps / assumed).min(1.0)
+            }
+            _ => 1.0,
+        };
+        MeasuredProfile {
+            drain_bw_frac,
+            pfs_bw_frac: fb.pfs_bw_frac,
+            compress_frac,
+        }
+        .clamped()
+    }
+
+    /// Which triggers are out of band for this sample (empty = healthy:
+    /// the controller then does no planning work at all).
+    fn triggers(&self, fb: &EngineFeedback, m: &MeasuredProfile) -> Vec<(Trigger, String)> {
+        let mut out = Vec::new();
+        if fb.drain_backlog() >= self.policy.backlog_frames.max(1) {
+            out.push((
+                Trigger::DrainLag,
+                format!("drain_backlog={}", fb.drain_backlog()),
+            ));
+        }
+        if let Some(assumed) = self.planner.codecs.compress_bps(self.plan.codec.value) {
+            if fb.compress_bps.is_finite()
+                && fb.compress_bps > 0.0
+                && fb.compress_bps < self.policy.codec_lag_frac * assumed
+            {
+                out.push((
+                    Trigger::CodecLag,
+                    format!(
+                        "compress_bps={:.2e} assumed={:.2e}",
+                        fb.compress_bps, assumed
+                    ),
+                ));
+            }
+        }
+        if m.pfs_bw_frac < self.policy.bw_collapse_frac {
+            out.push((
+                Trigger::BandwidthCollapse,
+                format!("pfs_bw_frac={:.2}", m.pfs_bw_frac),
+            ));
+        } else if m.drain_bw_frac < self.policy.bw_collapse_frac {
+            out.push((
+                Trigger::BandwidthCollapse,
+                format!("drain_bw_frac={:.2}", m.drain_bw_frac),
+            ));
+        }
+        out
+    }
+
+    /// Digest one step's feedback.  Returns the knob delta to broadcast
+    /// and apply when a replan cleared every gate, `None` otherwise (the
+    /// overwhelmingly common case).
+    pub fn observe(&mut self, fb: &EngineFeedback) -> Result<Option<KnobUpdate>> {
+        // Live egress fractions feed the fan-out scoring even when no
+        // replan fires — the next evaluation sees the cropped
+        // subscriptions actually in force.
+        if fb.stored_bytes > 0 && !fb.egress_per_consumer.is_empty() {
+            let stored = fb.stored_bytes as f64;
+            self.planner.consumer_fracs = fb
+                .egress_per_consumer
+                .iter()
+                .map(|&b| b as f64 / stored)
+                .collect();
+        }
+
+        let m = self.measured_from(fb);
+        let triggers = self.triggers(fb, &m);
+        if triggers.is_empty() {
+            return Ok(None);
+        }
+        // Cooldown: one replan per window, and the window also amortizes
+        // the replan charge in the gain test below.
+        if let Some(last) = self.last_replan {
+            if fb.step < last + self.policy.cooldown_steps.max(1) {
+                return Ok(None);
+            }
+        }
+
+        let mp = self.planner.with_measured(&m);
+        let stay = mp.plan(self.engine.clone(), &pin_intent(&self.intent, &self.plan))?;
+        let cand = mp.plan(self.engine.clone(), &self.intent)?;
+
+        let mut diffs: Vec<(&'static str, String, String)> = Vec::new();
+        if cand.aggs_per_node.value != self.plan.aggs_per_node.value {
+            diffs.push((
+                "aggregators_per_node",
+                self.plan.aggs_per_node.value.to_string(),
+                cand.aggs_per_node.value.to_string(),
+            ));
+        }
+        if cand.codec.value != self.plan.codec.value {
+            diffs.push((
+                "codec",
+                self.plan.codec.value.name().to_string(),
+                cand.codec.value.name().to_string(),
+            ));
+        }
+        if cand.target.value != self.plan.target.value {
+            diffs.push((
+                "target",
+                target_label(self.plan.target.value).to_string(),
+                target_label(cand.target.value).to_string(),
+            ));
+        }
+        if diffs.is_empty() {
+            return Ok(None);
+        }
+
+        // Predicted gain, net of the replan's own charge amortized over
+        // the cooldown window.
+        let layout_change = cand.aggs_per_node.value != self.plan.aggs_per_node.value
+            || cand.target.value != self.plan.target.value;
+        let naggs = cand.aggs_per_node.value * self.planner.cost.hw.nodes.max(1);
+        let charge = self.planner.cost.t_replan(layout_change, naggs)
+            / self.policy.cooldown_steps.max(1) as f64;
+        let t_stay = stay.predicted.t_durable;
+        let t_cand = cand.predicted.t_durable;
+        let gain = (t_stay - t_cand - charge) / t_stay.max(1e-12);
+        if !(gain >= self.policy.min_gain) {
+            return Ok(None);
+        }
+
+        let (trigger, metric) = triggers[0].clone();
+        let mut update = KnobUpdate::default();
+        for (knob, old, new) in diffs {
+            match knob {
+                "aggregators_per_node" => update.aggs_per_node = Some(cand.aggs_per_node.value),
+                "codec" => update.operator = Some(cand.operator),
+                "target" => update.target = Some(cand.target.value),
+                _ => unreachable!(),
+            }
+            self.changes.push(PlanChange {
+                step: fb.step,
+                trigger,
+                metric: metric.clone(),
+                knob,
+                old,
+                new,
+                predicted_gain: gain,
+            });
+        }
+        // Codec moves ride along on the operator template even when the
+        // codec itself is the only delta; a target/aggs move also wants
+        // the candidate's (possibly re-chosen) operator.
+        if update.operator.is_none() && cand.operator != self.plan.operator {
+            update.operator = Some(cand.operator);
+        }
+        self.plan = cand;
+        self.last_replan = Some(fb.step);
+        Ok(Some(update))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namelist::Namelist;
+    use crate::plan::WorkloadShape;
+    use crate::sim::{CostModel, HardwareSpec};
+
+    fn planner() -> Planner {
+        Planner::new(
+            CostModel::new(HardwareSpec::paper_testbed(2)),
+            WorkloadShape::paper(),
+        )
+    }
+
+    fn intent(body: &str) -> IoIntent {
+        let nl = Namelist::parse(&format!("&time_control\n{body}\n/\n")).unwrap();
+        IoIntent::from_time_control(nl.group("time_control").unwrap()).unwrap()
+    }
+
+    fn auto_intent() -> IoIntent {
+        intent(
+            "adios2_num_aggregators = 'auto',\n adios2_compression = 'auto',\n \
+             adios2_target = 'auto',",
+        )
+    }
+
+    fn controller() -> (FeedbackController, IoPlan) {
+        let p = planner();
+        let i = auto_intent();
+        let open_loop = p.plan(EngineKind::Bp4, &i).unwrap();
+        (
+            FeedbackController::new(p, i, open_loop.clone()),
+            open_loop,
+        )
+    }
+
+    fn healthy(step: usize) -> EngineFeedback {
+        EngineFeedback {
+            step,
+            stored_bytes: 1 << 30,
+            frames_enqueued: step + 1,
+            frames_durable: step + 1,
+            ..EngineFeedback::default()
+        }
+    }
+
+    fn collapsed(step: usize) -> EngineFeedback {
+        EngineFeedback {
+            step,
+            stored_bytes: 1 << 30,
+            frames_enqueued: step + 1,
+            frames_durable: step.saturating_sub(2),
+            pfs_bw_frac: 0.25,
+            ..EngineFeedback::default()
+        }
+    }
+
+    #[test]
+    fn healthy_run_replans_zero_times_and_stamp_is_byte_identical() {
+        let (mut ctl, open_loop) = controller();
+        for step in 0..8 {
+            assert_eq!(ctl.observe(&healthy(step)).unwrap(), None);
+        }
+        assert!(ctl.changes().is_empty());
+        // The live plan is still the open-loop plan, decision table and
+        // all.
+        assert_eq!(ctl.plan().render("hist"), open_loop.render("hist"));
+        // And the BENCH provenance is byte-identical to an open-loop
+        // stamp: zero churn leaves no trace.
+        let mut adaptive = BenchReport::new("x");
+        ctl.plan().stamp(&mut adaptive);
+        stamp_changes(&mut adaptive, ctl.changes());
+        let mut open = BenchReport::new("x");
+        open_loop.stamp(&mut open);
+        assert_eq!(adaptive.to_json(), open.to_json());
+    }
+
+    #[test]
+    fn bandwidth_collapse_retargets_to_the_object_space() {
+        let (mut ctl, open_loop) = controller();
+        // Healthy lone-run CONUS plan lands on the drained burst buffer.
+        assert_eq!(
+            open_loop.target.value,
+            Target::BurstBuffer { drain: true }
+        );
+        let update = ctl.observe(&collapsed(4)).unwrap().expect("should replan");
+        assert_eq!(update.target, Some(Target::Object));
+        assert_eq!(ctl.plan().target.value, Target::Object);
+        let change = ctl
+            .changes()
+            .iter()
+            .find(|c| c.knob == "target")
+            .expect("target change recorded");
+        assert_eq!(change.step, 4);
+        assert_eq!(change.old, "burstbuffer+drain");
+        assert_eq!(change.new, "object");
+        assert!(change.predicted_gain > 0.0);
+        // Provenance renders as a JSON object naming the trigger.
+        let j = change.to_json();
+        assert!(j.contains("\"knob\": \"target\""));
+        assert!(j.contains("\"trigger\": \""));
+        // The stamped report carries the non-empty array exactly once.
+        let mut r = BenchReport::new("x");
+        ctl.plan().stamp(&mut r);
+        stamp_changes(&mut r, ctl.changes());
+        let json = r.to_json();
+        assert!(json.contains("\"plan_changes\": [{"));
+        assert_eq!(json.matches("plan_changes").count(), 1);
+    }
+
+    #[test]
+    fn cooldown_window_suppresses_consecutive_replans() {
+        let (mut ctl, _) = controller();
+        ctl.last_replan = Some(3);
+        // cooldown_steps = 3: steps 4 and 5 are inside the window even
+        // though the collapse trigger fires on every sample.
+        assert_eq!(ctl.observe(&collapsed(4)).unwrap(), None);
+        assert_eq!(ctl.observe(&collapsed(5)).unwrap(), None);
+        assert!(ctl.changes().is_empty());
+        // The window closes at last + cooldown.
+        assert!(ctl.observe(&collapsed(6)).unwrap().is_some());
+        assert!(!ctl.changes().is_empty());
+    }
+
+    #[test]
+    fn gain_under_threshold_vetoes_the_replan() {
+        let (ctl, _) = controller();
+        // gain = (t_stay − t_cand − charge)/t_stay is strictly below 1.
+        let mut ctl = ctl.with_policy(ReplanPolicy {
+            min_gain: 1.0,
+            ..ReplanPolicy::default()
+        });
+        assert_eq!(ctl.observe(&collapsed(4)).unwrap(), None);
+        assert!(ctl.changes().is_empty());
+    }
+
+    #[test]
+    fn recovered_conditions_stop_triggering_after_a_replan() {
+        let (mut ctl, _) = controller();
+        assert!(ctl.observe(&collapsed(4)).unwrap().is_some());
+        // Post-replan, healthy samples never re-enter the planner: the
+        // change log stays put.
+        let n = ctl.changes().len();
+        for step in 7..12 {
+            assert_eq!(ctl.observe(&healthy(step)).unwrap(), None);
+        }
+        assert_eq!(ctl.changes().len(), n);
+    }
+
+    #[test]
+    fn egress_ledger_updates_consumer_fractions() {
+        let p = planner();
+        let i = intent("adios2_sst_address = 'c1:1, c2:2',");
+        let plan = p.plan(EngineKind::Sst, &i).unwrap();
+        let mut ctl = FeedbackController::new(p, i, plan);
+        let fb = EngineFeedback {
+            step: 0,
+            stored_bytes: 1000,
+            egress_per_consumer: vec![250, 1000],
+            ..EngineFeedback::default()
+        };
+        assert_eq!(ctl.observe(&fb).unwrap(), None);
+        assert_eq!(ctl.planner.consumer_fracs, vec![0.25, 1.0]);
+    }
+
+    #[test]
+    fn fanout_advantage_is_plan_aware_under_cropped_subscriptions() {
+        // Two lanes per node keep the chain constant small relative to
+        // the relay's full-step rank-0 gather, so the advantage's
+        // direction under cropping is governed by the gather term.
+        let addrs = "adios2_num_aggregators = 2,\n \
+                     adios2_sst_address = 'c1:1, c2:2, c3:3, c4:4',";
+        let p = planner();
+        let full = p.plan(EngineKind::Sst, &intent(addrs)).unwrap();
+        let boxed = p
+            .clone()
+            .with_consumer_fractions(vec![0.2; 4])
+            .plan(EngineKind::Sst, &intent(addrs))
+            .unwrap();
+        // Cropped subscriptions shrink per-consumer egress 5× …
+        for (b, f) in boxed.consumers.iter().zip(&full.consumers) {
+            assert!((b.est_bytes - 0.2 * f.est_bytes).abs() < 1e-6 * f.est_bytes);
+        }
+        // … which cheapens the fan-out relative to the rank-0 relay (the
+        // relay still funnels the full step through one root), so the
+        // plan-aware advantage must rise and the predicted step cost
+        // fall.
+        assert!(
+            boxed.predicted.fanout_advantage > full.predicted.fanout_advantage,
+            "boxed {} vs full {}",
+            boxed.predicted.fanout_advantage,
+            full.predicted.fanout_advantage
+        );
+        assert!(boxed.predicted.t_write < full.predicted.t_write);
+    }
+}

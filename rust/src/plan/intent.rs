@@ -153,6 +153,11 @@ pub struct IoIntent {
     /// `0` pins direct lanes (no tree); `'auto'` lets the planner pick a
     /// branching from the consumer count; unset behaves like `0`.
     pub relay_fanout: Knob<usize>,
+    /// `adios2_adaptive_replan` / `AdaptiveReplan`: close the planning
+    /// loop — feed measured per-step drain/egress signals back into the
+    /// planner and re-resolve `'auto'` knobs between steps (DESIGN.md
+    /// §17).  Absent = open-loop (plan once, never revisit).
+    pub adaptive: Option<bool>,
     /// Operator template from the XML `<operator>` element: preserves
     /// shuffle / lossy bit-rounding settings when only the codec is
     /// (re)decided.
@@ -250,6 +255,9 @@ impl IoIntent {
         }
         if let Some(b) = tc.get_bool("adios2_sst_broker") {
             intent.sst_broker = Some(b);
+        }
+        if let Some(b) = tc.get_bool("adios2_adaptive_replan") {
+            intent.adaptive = Some(b);
         }
         if let Some(n) = tc.get_i64("adios2_sst_hello_timeout") {
             if n < 1 {
@@ -374,6 +382,9 @@ impl IoIntent {
         }
         if merged.sst_broker.is_none() && io.param("Broker").is_some() {
             merged.sst_broker = Some(io.param_bool("Broker", false)?);
+        }
+        if merged.adaptive.is_none() && io.param("AdaptiveReplan").is_some() {
+            merged.adaptive = Some(io.param_bool("AdaptiveReplan", false)?);
         }
         if merged.sst_hello_timeout.is_none() {
             if let Some(s) = io.param("HelloTimeout") {
@@ -520,6 +531,24 @@ mod tests {
         assert_eq!(m.sst_max_lanes, Some(64));
         io.params.insert("HelloTimeout".into(), "soon".into());
         assert!(IoIntent::default().merge_io_config(&io).is_err());
+    }
+
+    #[test]
+    fn adaptive_replan_parses_both_spellings() {
+        let i =
+            IoIntent::from_time_control(&tc("adios2_adaptive_replan = .true.,")).unwrap();
+        assert_eq!(i.adaptive, Some(true));
+        // Absent stays open-loop.
+        assert_eq!(IoIntent::default().adaptive, None);
+        // XML spelling fills only when the namelist is silent.
+        let mut io = IoConfig::new("hist", EngineKind::Bp4);
+        io.params.insert("AdaptiveReplan".into(), "true".into());
+        let m = IoIntent::default().merge_io_config(&io).unwrap();
+        assert_eq!(m.adaptive, Some(true));
+        let nl =
+            IoIntent::from_time_control(&tc("adios2_adaptive_replan = .false.,")).unwrap();
+        let m = nl.merge_io_config(&io).unwrap();
+        assert_eq!(m.adaptive, Some(false));
     }
 
     #[test]

@@ -18,7 +18,14 @@
 //! scoring, codec-throughput-vs-store-bandwidth) and records the decision
 //! with its provenance, which `stormio plan` prints as a dry-run table and
 //! [`IoPlan::stamp`] embeds into `BENCH_*.json` artifacts.
+//!
+//! With `adios2_adaptive_replan` the loop closes (DESIGN.md §17): the
+//! engines' measured per-step signals flow back through
+//! [`feedback::FeedbackController`], which re-resolves the `'auto'` knobs
+//! between steps under the measured testbed — hysteresis keeps a healthy
+//! run bit-identical to the open-loop path.
 
+pub mod feedback;
 pub mod intent;
 pub mod planner;
 
@@ -31,6 +38,7 @@ use crate::cluster::Comm;
 use crate::sim::CostModel;
 use crate::Result;
 
+pub use feedback::{stamp_changes, FeedbackController, PlanChange, ReplanPolicy, Trigger};
 pub use intent::{IoIntent, Knob, Origin, Setting};
 pub use planner::{
     CodecProfile, ConsumerPlan, Decision, DecisionSource, IoPlan, PlanCosts, Planner,

@@ -195,6 +195,103 @@ impl CodecProfile {
     pub fn entries(&self) -> &[(Codec, CodecThroughput)] {
         &self.entries
     }
+
+    /// The profile's assumed compress throughput for `codec` (bytes/s);
+    /// `None` for [`Codec::None`] or a codec not in the table.  The
+    /// feedback loop compares this assumption against the engine's
+    /// measured per-step throughput to detect codec lag (DESIGN.md §17).
+    pub fn compress_bps(&self, codec: Codec) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|(c, _)| *c == codec)
+            .map(|(_, t)| t.compress_bps)
+    }
+
+    /// Serialize the profile for `stormio plan --measure-out`: one JSON
+    /// object keyed by codec name.  Round-trips through
+    /// [`CodecProfile::from_json`] so one microbenchmark run can seed
+    /// many plan invocations on the same host.
+    pub fn to_json(&self) -> String {
+        let body: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(c, t)| {
+                format!(
+                    "  \"{}\": {{\"compress_bps\": {:.6e}, \"ratio\": {:.6}}}",
+                    c.name(),
+                    t.compress_bps,
+                    t.ratio
+                )
+            })
+            .collect();
+        format!("{{\n{}\n}}\n", body.join(",\n"))
+    }
+
+    /// Parse a profile written by [`CodecProfile::to_json`]
+    /// (`stormio plan --measure-in`).
+    pub fn from_json(text: &str) -> Result<CodecProfile> {
+        fn num_after(line: &str, key: &str) -> Option<f64> {
+            let i = line.find(key)? + key.len();
+            let rest = line[i..].trim_start_matches(|c: char| c == ':' || c == ' ');
+            let end = rest
+                .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+                .unwrap_or(rest.len());
+            rest[..end].parse().ok()
+        }
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let Some(rest) = line.trim_start().strip_prefix('"') else {
+                continue;
+            };
+            let Some(end) = rest.find('"') else { continue };
+            let codec = Codec::parse(&rest[..end])?;
+            match (
+                num_after(line, "\"compress_bps\""),
+                num_after(line, "\"ratio\""),
+            ) {
+                (Some(compress_bps), Some(ratio)) => {
+                    entries.push((codec, CodecThroughput { compress_bps, ratio }))
+                }
+                _ => {
+                    return Err(crate::Error::config(format!(
+                        "codec profile entry missing compress_bps/ratio: {line}"
+                    )))
+                }
+            }
+        }
+        if entries.is_empty() {
+            return Err(crate::Error::config(
+                "codec profile JSON has no codec entries",
+            ));
+        }
+        Ok(CodecProfile { entries })
+    }
+
+    /// Scale every codec's compress throughput by `frac` (clamped to
+    /// `(0, 1]`: the feedback loop only degrades the model).  Ratios are
+    /// data properties, not host properties, and stay put.
+    pub fn scaled(&self, frac: f64) -> CodecProfile {
+        let f = if frac.is_finite() {
+            frac.clamp(1e-6, 1.0)
+        } else {
+            1.0
+        };
+        CodecProfile {
+            entries: self
+                .entries
+                .iter()
+                .map(|(c, t)| {
+                    (
+                        *c,
+                        CodecThroughput {
+                            compress_bps: t.compress_bps * f,
+                            ratio: t.ratio,
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Predicted virtual costs of the resolved plan (provenance for
@@ -220,8 +317,11 @@ pub struct PlanCosts {
 #[derive(Debug, Clone)]
 pub struct ConsumerPlan {
     pub address: String,
-    /// Estimated wire bytes per step shipped to this consumer (full-step
-    /// subscriptions assumed at plan time; pushdown shrinks this live).
+    /// Estimated wire bytes per step shipped to this consumer.  At plan
+    /// time a full-step subscription is assumed; once the run is live,
+    /// the feedback loop substitutes each consumer's *measured* cropped
+    /// egress fraction ([`Planner::with_consumer_fractions`]) so replans
+    /// score the subscriptions actually in force (DESIGN.md §17).
     pub est_bytes: f64,
 }
 
@@ -448,6 +548,19 @@ pub struct Planner {
     pub cost: CostModel,
     pub shape: WorkloadShape,
     pub codecs: CodecProfile,
+    /// Live per-consumer egress fractions (wire bytes / stored step
+    /// bytes) from the fan-out ledger, indexed like the intent's address
+    /// list.  Empty = plan-time default (every consumer full-step).
+    /// Filled by the feedback loop so `fanout_advantage` and the egress
+    /// prediction score the *cropped* subscriptions actually in force
+    /// (DESIGN.md §17).
+    pub consumer_fracs: Vec<f64>,
+    /// Score the target sweep on steady-state cadence (a step cannot
+    /// retire faster than its durable landing) instead of the app-
+    /// perceived basis.  Set by [`Planner::with_measured`] when a
+    /// measured drain/PFS deficit means the pipeline is no longer hiding
+    /// the drain; always false on the open-loop path.
+    pub durable_cadence: bool,
 }
 
 impl Planner {
@@ -456,6 +569,8 @@ impl Planner {
             cost,
             shape,
             codecs: CodecProfile::paper_defaults(),
+            consumer_fracs: Vec::new(),
+            durable_cadence: false,
         }
     }
 
@@ -463,6 +578,52 @@ impl Planner {
     pub fn with_codec_profile(mut self, codecs: CodecProfile) -> Planner {
         self.codecs = codecs;
         self
+    }
+
+    /// Substitute live per-consumer egress fractions (cropped
+    /// [`crate::adios::Subscription`]s) into the fan-out scoring.
+    pub fn with_consumer_fractions(mut self, fracs: Vec<f64>) -> Planner {
+        self.consumer_fracs = fracs;
+        self
+    }
+
+    /// The cropped-egress fraction of consumer `i` (1.0 = full step).
+    fn consumer_frac(&self, i: usize) -> f64 {
+        match self.consumer_fracs.get(i) {
+            Some(f) if f.is_finite() => f.clamp(1e-6, 1.0),
+            _ => 1.0,
+        }
+    }
+
+    /// Substitute a measured testbed profile (DESIGN.md §17): bandwidth
+    /// fractions degrade the cost model, the measured codec fraction
+    /// scales the throughput table, and any drain/PFS deficit switches
+    /// the target sweep to the steady-state cadence basis.  A nominal
+    /// profile returns a planner that plans bit-identically to `self`.
+    pub fn with_measured(&self, measured: &crate::sim::MeasuredProfile) -> Planner {
+        let m = measured.clamped();
+        Planner {
+            cost: self.cost.with_measured(&m),
+            shape: self.shape,
+            codecs: self.codecs.scaled(m.compress_frac),
+            consumer_fracs: self.consumer_fracs.clone(),
+            durable_cadence: self.durable_cadence
+                || m.drain_bw_frac < 0.999
+                || m.pfs_bw_frac < 0.999,
+        }
+    }
+
+    /// Re-resolve the intent's `'auto'` knobs under the *measured*
+    /// testbed.  Explicit (namelist/XML-pinned) knobs pass through with
+    /// their original provenance — the feedback loop only ever moves
+    /// knobs the user delegated with `'auto'` (DESIGN.md §17).
+    pub fn replan(
+        &self,
+        engine: EngineKind,
+        intent: &IoIntent,
+        measured: &crate::sim::MeasuredProfile,
+    ) -> Result<IoPlan> {
+        self.with_measured(measured).plan(engine, intent)
     }
 
     /// Aggregators-per-node candidates: the divisors of `ranks_per_node`
@@ -575,6 +736,25 @@ impl Planner {
         let (_, bb) =
             p.choose_aggregators(Target::BurstBuffer { drain: true }, frames_per_outfile);
         if p.shape.writers <= 1 {
+            if p.durable_cadence {
+                // Measured-feedback regime (DESIGN.md §17): the drain is
+                // no longer hidden, so a step cannot retire faster than
+                // its durable landing.  Score every target on that
+                // cadence — the BB's perceived NVMe landing is floored by
+                // its (degraded) drain, direct PFS is already durable,
+                // and the object space (its own NVMe-backed ingest) joins
+                // the sweep as the contention-free escape hatch.
+                let nodes = p.cost.hw.nodes.max(1);
+                let bb_c = bb.max(p.cost.t_bb_drain(p.shape.step_bytes, nodes));
+                let (_, obj) = p.choose_aggregators(Target::Object, frames_per_outfile);
+                return if obj <= pfs && obj <= bb_c {
+                    Target::Object
+                } else if bb_c < pfs {
+                    Target::BurstBuffer { drain: true }
+                } else {
+                    Target::Pfs
+                };
+            }
             return if bb < pfs {
                 Target::BurstBuffer { drain: true }
             } else {
@@ -776,9 +956,10 @@ impl Planner {
         let consumers: Vec<ConsumerPlan> = intent
             .addresses
             .iter()
-            .map(|a| ConsumerPlan {
+            .enumerate()
+            .map(|(i, a)| ConsumerPlan {
                 address: a.clone(),
-                est_bytes: stored,
+                est_bytes: stored * self.consumer_frac(i),
             })
             .collect();
         let broker = intent.sst_broker.unwrap_or(false);
@@ -979,6 +1160,21 @@ mod tests {
     fn intent(body: &str) -> IoIntent {
         let nl = Namelist::parse(&format!("&time_control\n{body}\n/\n")).unwrap();
         IoIntent::from_time_control(nl.group("time_control").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn codec_profile_json_round_trips() {
+        let p = CodecProfile::paper_defaults();
+        let q = CodecProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p.entries().len(), q.entries().len());
+        for ((c1, t1), (c2, t2)) in p.entries().iter().zip(q.entries()) {
+            assert_eq!(c1, c2);
+            assert!((t1.compress_bps - t2.compress_bps).abs() <= 1e-3 * t1.compress_bps);
+            assert!((t1.ratio - t2.ratio).abs() < 1e-6);
+        }
+        // No entries / garbage is an error, not an empty profile.
+        assert!(CodecProfile::from_json("{}").is_err());
+        assert!(CodecProfile::from_json("\"zstd\": {\"ratio\": 2}").is_err());
     }
 
     #[test]

@@ -72,6 +72,57 @@ impl WriteCost {
     }
 }
 
+/// Measured degradation of the testbed relative to the model's nominal
+/// assumptions, fed back from a running engine (DESIGN.md §17).  Each
+/// field is a fraction of the nominal bandwidth actually observed,
+/// clamped to `(0, 1]` — the feedback loop only ever *degrades* the
+/// model (a store running faster than assumed never forces a replan).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeasuredProfile {
+    /// Sustained BB→PFS drain bandwidth fraction (NVMe read side).
+    pub drain_bw_frac: f64,
+    /// PFS write bandwidth fraction (cross-run contention, degraded
+    /// disks); scales both direct PFS landings and the drain's PFS leg.
+    pub pfs_bw_frac: f64,
+    /// Codec compress-throughput fraction (CPU contention on the host).
+    pub compress_frac: f64,
+}
+
+impl Default for MeasuredProfile {
+    fn default() -> Self {
+        MeasuredProfile {
+            drain_bw_frac: 1.0,
+            pfs_bw_frac: 1.0,
+            compress_frac: 1.0,
+        }
+    }
+}
+
+impl MeasuredProfile {
+    /// Clamp every fraction into `(0, 1]` (degrade-only substitution).
+    pub fn clamped(&self) -> MeasuredProfile {
+        let c = |f: f64| {
+            if f.is_finite() {
+                f.clamp(1e-6, 1.0)
+            } else {
+                1.0
+            }
+        };
+        MeasuredProfile {
+            drain_bw_frac: c(self.drain_bw_frac),
+            pfs_bw_frac: c(self.pfs_bw_frac),
+            compress_frac: c(self.compress_frac),
+        }
+    }
+
+    /// True when every measurement matches the nominal model (within a
+    /// hair) — the healthy-run case where re-planning must be a no-op.
+    pub fn is_nominal(&self) -> bool {
+        let c = self.clamped();
+        c.drain_bw_frac > 0.999 && c.pfs_bw_frac > 0.999 && c.compress_frac > 0.999
+    }
+}
+
 /// Cost-model facade over a [`HardwareSpec`].
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -81,6 +132,33 @@ pub struct CostModel {
 impl CostModel {
     pub fn new(hw: HardwareSpec) -> Self {
         CostModel { hw }
+    }
+
+    /// Substitute measured bandwidth fractions into the model: the
+    /// returned model scores every landing/drain primitive against the
+    /// *observed* testbed instead of the nominal one (DESIGN.md §17).
+    /// Nominal fractions return an identical model, so the open-loop
+    /// planner path is bit-stable through this call.
+    pub fn with_measured(&self, measured: &MeasuredProfile) -> CostModel {
+        let m = measured.clamped();
+        let mut hw = self.hw.clone();
+        hw.pfs_agg_bw *= m.pfs_bw_frac;
+        hw.pfs_stream_bw *= m.pfs_bw_frac;
+        hw.nvme_read_bw *= m.drain_bw_frac;
+        CostModel { hw }
+    }
+
+    /// One-time virtual charge of adopting a new plan between steps: a
+    /// collective agreement round, plus the MDS creates of a fresh
+    /// sub-file layout when the aggregator count (or target) moved.
+    /// Charged against the predicted gain so marginal replans never win.
+    pub fn t_replan(&self, layout_change: bool, naggs: usize) -> f64 {
+        let sync = self.t_collective_sync(1);
+        if layout_change {
+            sync + self.t_mds_creates(naggs.max(1) + 1)
+        } else {
+            sync
+        }
     }
 
     // ---- efficiencies -----------------------------------------------------
@@ -752,6 +830,48 @@ mod tests {
             last = adv;
         }
         assert!(last > 8.0, "object advantage at 16 writers: {last:.1}");
+    }
+
+    #[test]
+    fn measured_profile_substitution_degrades_only_what_it_names() {
+        let m = cm(8);
+        // Nominal fractions are the identity: the open-loop planner path
+        // must be bit-stable through with_measured.
+        let nominal = m.with_measured(&MeasuredProfile::default());
+        assert_eq!(nominal.hw.pfs_agg_bw, m.hw.pfs_agg_bw);
+        assert_eq!(nominal.hw.nvme_read_bw, m.hw.nvme_read_bw);
+        assert!(MeasuredProfile::default().is_nominal());
+        // A PFS collapse slows direct landings AND the drain's PFS leg,
+        // but leaves the object space untouched.
+        let collapsed = m.with_measured(&MeasuredProfile {
+            pfs_bw_frac: 0.25,
+            ..MeasuredProfile::default()
+        });
+        let v = 8e9;
+        assert!(collapsed.t_pfs_write(v, 8) > 3.0 * m.t_pfs_write(v, 8));
+        assert!(collapsed.t_bb_drain(v, 8) > m.t_bb_drain(v, 8));
+        assert_eq!(collapsed.t_obj_put(v, 1), m.t_obj_put(v, 1));
+        // Fractions above 1 (or garbage) clamp back to nominal: the loop
+        // never *speeds up* the model.
+        let sped = m.with_measured(&MeasuredProfile {
+            pfs_bw_frac: 4.0,
+            drain_bw_frac: f64::NAN,
+            compress_frac: 1.0,
+        });
+        assert_eq!(sped.hw.pfs_agg_bw, m.hw.pfs_agg_bw);
+        assert_eq!(sped.hw.nvme_read_bw, m.hw.nvme_read_bw);
+    }
+
+    #[test]
+    fn replan_charge_is_small_but_nonzero() {
+        let m = cm(8);
+        let knob_only = m.t_replan(false, 8);
+        let layout = m.t_replan(true, 8);
+        assert!(knob_only > 0.0);
+        assert!(layout > knob_only, "a layout change must cost extra");
+        // The charge is a between-steps hiccup, not a step's worth of
+        // I/O: far below one CONUS step on any target.
+        assert!(layout < 1.0, "replan charge {layout:.3}s too large");
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub mod cost;
 pub mod hardware;
 pub mod timeline;
 
-pub use cost::{CostModel, Phase, WriteCost};
+pub use cost::{CostModel, MeasuredProfile, Phase, WriteCost};
 pub use hardware::HardwareSpec;
 pub use timeline::{SpanKind, Timeline};
